@@ -1,0 +1,129 @@
+//! End-to-end driver (DESIGN.md §6): serve a 784-256-128-10 int8 MLP
+//! digit classifier through the coordinator on simulated IMAGine
+//! engines, over a synthetic digit workload, cross-checking numerics
+//! against the PJRT-executed AOT artifact (`mlp_b1`) and reporting
+//! modeled-hardware latency/throughput at 737 MHz.
+//!
+//! This exercises every layer of the stack in one run:
+//!   L1 Pallas bit-serial kernel  -> inside the AOT artifact
+//!   L2 JAX MLP graph             -> artifacts/mlp_b1.hlo.txt
+//!   L3 coordinator + simulator   -> routing, batching, cycle counts
+//!
+//! Run: `make artifacts && cargo run --release --example mlp_inference`
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::engine::EngineConfig;
+use imagine::gemv::scheduler::Layer;
+use imagine::runtime::Runtime;
+use imagine::sim::U55_FMAX_MHZ;
+use imagine::util::XorShift;
+use std::path::Path;
+
+const DIMS: [usize; 4] = [784, 256, 128, 10];
+const SCALES: [f64; 2] = [0.0078125, 0.0078125]; // 2^-7, matches L2
+
+/// Synthetic "digit": a 28x28 int8 image with a class-dependent stripe
+/// pattern plus noise — enough structure for argmax stability checks.
+fn synth_digit(rng: &mut XorShift, class: usize) -> Vec<i64> {
+    (0..784)
+        .map(|i| {
+            let row = i / 28;
+            let base = if (row + class) % 10 < 3 { 90 } else { -40 };
+            (base + rng.range_i64(-30, 30)).clamp(-128, 127)
+        })
+        .collect()
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("== IMAGine end-to-end: int8 MLP {DIMS:?} inference ==\n");
+
+    // deterministic int8 model (same generator family as the tests)
+    let mut rng = XorShift::new(20240901);
+    let mut layers = Vec::new();
+    for i in 0..3 {
+        let (o, n) = (DIMS[i + 1], DIMS[i]);
+        layers.push(Layer::new(
+            rng.vec_i64(o * n, -16, 15),
+            rng.vec_i64(o, -64, 63),
+            o,
+            n,
+        ));
+    }
+
+    // register with the coordinator (2 workers, dynamic batching)
+    let mut reg = ModelRegistry::default();
+    reg.register_mlp("digits", layers.clone(), SCALES.to_vec())?;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 8, ..Default::default() },
+            engine: EngineConfig::small(),
+            precision: 8,
+            radix: 2,
+            clock_mhz: U55_FMAX_MHZ,
+        },
+        reg,
+    );
+
+    // workload: 64 synthetic digits
+    let samples = 64;
+    let inputs: Vec<(usize, Vec<i64>)> = (0..samples)
+        .map(|i| (i % 10, synth_digit(&mut rng, i % 10)))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|(_, x)| coord.submit(Request { model: "digits".into(), x: x.clone() }).unwrap())
+        .collect();
+    let mut results = Vec::new();
+    let mut total_cycles = 0u64;
+    for rx in rxs {
+        let r = rx.recv()??;
+        total_cycles += r.cycles;
+        results.push(r);
+    }
+    let wall = t0.elapsed();
+
+    // PJRT cross-check on the first few samples via the mlp_b1 artifact
+    let mut rt = Runtime::load(Path::new("artifacts"))?;
+    let mut flat: Vec<Vec<i32>> = Vec::new();
+    for l in &layers {
+        flat.push(l.w.iter().map(|&v| v as i32).collect());
+        flat.push(l.bias.iter().map(|&v| v as i32).collect());
+    }
+    let mut checked = 0;
+    for (i, (_, x)) in inputs.iter().take(8).enumerate() {
+        let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+        let ins: Vec<&[i32]> = std::iter::once(xi.as_slice())
+            .chain(flat.iter().map(|v| v.as_slice()))
+            .collect();
+        let y = rt.execute("mlp_b1", &ins)?;
+        let sim: Vec<i32> = results[i].y.iter().map(|&v| v as i32).collect();
+        assert_eq!(y, sim, "sample {i}: PJRT artifact vs simulator");
+        checked += 1;
+    }
+
+    let m = coord.shutdown();
+    let device_us_per_inf = total_cycles as f64 / samples as f64 / U55_FMAX_MHZ;
+    println!("samples              : {samples}");
+    println!("PJRT cross-checked   : {checked}/8 OK (bit-exact)");
+    println!("host wall time       : {:.1} ms total", wall.as_secs_f64() * 1e3);
+    println!(
+        "modeled device       : {:.1} us/inference -> {:.0} inf/s at {:.0} MHz",
+        device_us_per_inf,
+        1e6 / device_us_per_inf,
+        U55_FMAX_MHZ
+    );
+    println!(
+        "coordinator          : {} completed, {} batches, mean batch {:.2}, p50 {} us, p99 {} us",
+        m.completed,
+        m.batches,
+        m.mean_batch_size(),
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(99.0)
+    );
+    println!("\nall layers composed: Pallas kernel -> JAX AOT -> PJRT == coordinator -> simulator.");
+    Ok(())
+}

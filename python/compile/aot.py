@@ -1,0 +1,146 @@
+"""AOT lowering: L2 graphs -> HLO *text* artifacts for the rust runtime.
+
+Run once via ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each entry point is lowered with ``return_tuple=True`` — the rust side
+unwraps with ``to_tuple1()``.  A ``manifest.json`` records every
+artifact's input/output shapes plus engine metadata (M, N, precision,
+variant, batch) so the rust coordinator can route requests by shape.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _gemv_entry(m, n, precision, variant):
+    def fn(w, x):
+        return (model.gemv_engine(w, x, precision=precision, variant=variant),)
+
+    return fn, [_spec((m, n)), _spec((n,))], (m,)
+
+
+def _gemm_entry(b, m, n, precision, variant):
+    def fn(w, xs):
+        return (model.gemm_engine(w, xs, precision=precision, variant=variant),)
+
+    return fn, [_spec((m, n)), _spec((b, n))], (b, m)
+
+
+def _mlp_entry(batch, dims, precision, variant):
+    d0, d1, d2, d3 = dims
+    shapes = [
+        (d1, d0), (d1,), (d2, d1), (d2,), (d3, d2), (d3,),
+    ]
+    if batch == 1:
+        def fn(x, w1, b1, w2, b2, w3, b3):
+            return (model.mlp(x, w1, b1, w2, b2, w3, b3,
+                              precision=precision, variant=variant),)
+
+        ins = [_spec((d0,))] + [_spec(s) for s in shapes]
+        out = (d3,)
+    else:
+        def fn(xs, w1, b1, w2, b2, w3, b3):
+            return (model.mlp_batched(xs, w1, b1, w2, b2, w3, b3,
+                                      precision=precision, variant=variant),)
+
+        ins = [_spec((batch, d0))] + [_spec(s) for s in shapes]
+        out = (batch, d3)
+    return fn, ins, out
+
+
+def build_entries():
+    """The artifact set: name -> (fn, input specs, output shape, meta)."""
+    entries = {}
+
+    def add(name, fn, ins, out, **meta):
+        entries[name] = (fn, ins, out, meta)
+
+    for d in (64, 128, 256, 512):
+        fn, ins, out = _gemv_entry(d, d, 8, "radix2")
+        add(f"gemv_{d}x{d}_p8", fn, ins, out,
+            kind="gemv", m=d, n=d, precision=8, variant="radix2")
+
+    fn, ins, out = _gemv_entry(256, 256, 8, "booth4")
+    add("gemv_256x256_p8_booth4", fn, ins, out,
+        kind="gemv", m=256, n=256, precision=8, variant="booth4")
+
+    fn, ins, out = _gemv_entry(256, 256, 4, "radix2")
+    add("gemv_256x256_p4", fn, ins, out,
+        kind="gemv", m=256, n=256, precision=4, variant="radix2")
+
+    fn, ins, out = _gemm_entry(8, 256, 256, 8, "radix2")
+    add("gemm_b8_256x256_p8", fn, ins, out,
+        kind="gemm", batch=8, m=256, n=256, precision=8, variant="radix2")
+
+    dims = model.MLP_DIMS
+    for batch in (1, 8):
+        fn, ins, out = _mlp_entry(batch, dims, 8, "radix2")
+        add(f"mlp_b{batch}", fn, ins, out,
+            kind="mlp", batch=batch, dims=list(dims), precision=8,
+            variant="radix2")
+
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    entries = build_entries()
+    names = args.only or list(entries)
+    for name in names:
+        fn, ins, out, meta = entries[name]
+        lowered = jax.jit(fn).lower(*ins)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": "i32"} for s in ins],
+            "output": {"shape": list(out), "dtype": "i32"},
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "meta": meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out_dir}/manifest.json ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

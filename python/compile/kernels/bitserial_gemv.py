@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: bit-serial GEMV as executed by the IMAGine PE array.
+
+Hardware-adaptation (DESIGN.md §3): the Alveo U55 overlay computes GEMV
+with 64K bitline PEs, each walking the operands one bit per cycle and
+popcount-accumulating partial products east->west.  On the TPU-shaped
+Pallas substrate we express the *same partial-product schedule* as
+bit-plane tensor ops:
+
+  radix-2 :  y = sum_{i<p} sum_{j<p} s_i s_j * (Wbit_i @ xbit_j) << (i+j)
+             (p*p plane-pairs — exactly the cycles*popcounts the PEs do)
+  radix-4 :  Booth-recoded activations halve the j-loop to ceil(p/2)
+             digit planes in {-2,-1,0,1,2}  (the IMAGine-slice4 variant)
+
+where s_i = -1 for the sign bit (two's complement) else +1.  BlockSpec
+tiles the M dimension so one row-block of W streams HBM->VMEM per grid
+step while x stays resident — the analogue of the matrix living in BRAM
+with the vector broadcast on the instruction bus.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is estimated from the BlockSpec VMEM
+footprint in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size: one grid step owns BM rows of W.  128 rows x 1024 cols x
+# 4B = 512 KiB i32 worst case per W tile — but the bit-planes materialized
+# inside the kernel are what matters on a real TPU; see DESIGN.md §8.
+DEFAULT_BLOCK_M = 128
+
+
+def _bitserial_kernel(w_ref, x_ref, o_ref, *, precision):
+    """Radix-2 bit-serial GEMV over one row-block.
+
+    w_ref: (BM, N) i32 (int8-ranged), x_ref: (1, N) i32, o_ref: (1, BM) i32.
+    """
+    w = w_ref[...]
+    x = x_ref[0, :]
+    bm = w.shape[0]
+    acc = jnp.zeros((bm,), jnp.int32)
+    for i in range(precision):  # weight bit-planes (BRAM read per cycle)
+        s_i = -1 if i == precision - 1 else 1
+        wb = (w >> i) & 1
+        for j in range(precision):  # activation bit-planes (serial x feed)
+            s_j = -1 if j == precision - 1 else 1
+            xb = (x >> j) & 1
+            # bitline AND + popcount-accumulate == integer dot of 0/1 planes
+            pp = jnp.dot(wb, xb)
+            acc = acc + (s_i * s_j) * (pp << (i + j))
+    o_ref[0, :] = acc
+
+
+def _booth4_kernel(w_ref, x_ref, o_ref, *, precision):
+    """Booth radix-4 bit-serial GEMV (IMAGine-slice4 PE) over one row-block.
+
+    Activations are recoded into ceil(p/2) signed digits in {-2..2}; the
+    weight side stays bit-serial.  Plane count: p * ceil(p/2) — half of
+    radix-2, matching the paper's 'radix-4 Booth' latency claim.
+    """
+    w = w_ref[...]
+    x = x_ref[0, :]
+    bm = w.shape[0]
+    ndigits = (precision + 1) // 2
+    sign = (x >> (precision - 1)) & 1
+    acc = jnp.zeros((bm,), jnp.int32)
+    for i in range(precision):  # weight bit-planes
+        s_i = -1 if i == precision - 1 else 1
+        wb = (w >> i) & 1
+        for k in range(ndigits):  # Booth digit planes
+            b_m1 = ((x >> (2 * k - 1)) & 1) if k > 0 else jnp.zeros_like(x)
+            b0 = ((x >> (2 * k)) & 1) if 2 * k < precision else sign
+            b1 = ((x >> (2 * k + 1)) & 1) if 2 * k + 1 < precision else sign
+            dk = -2 * b1 + b0 + b_m1  # in {-2,-1,0,1,2}
+            pp = jnp.dot(wb, dk)
+            acc = acc + s_i * (pp << (i + 2 * k))
+    o_ref[0, :] = acc
+
+
+def _pad_rows(w, block_m):
+    m = w.shape[0]
+    pad = (-m) % block_m
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    return w, m
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "variant", "block_m"))
+def gemv(w, x, *, precision=8, variant="radix2", block_m=DEFAULT_BLOCK_M):
+    """Bit-serial GEMV y = W @ x on the Pallas PE-array kernel.
+
+    Args:
+      w: (M, N) i32 matrix, values in [-2^(p-1), 2^(p-1)).
+      x: (N,)  i32 vector, same range.
+      precision: operand bit width p (the engine's SETP precision).
+      variant: "radix2" (default PE) or "booth4" (IMAGine-slice4 PE).
+      block_m: rows per grid step (VMEM tile height).
+    Returns:
+      (M,) i32 exact GEMV result.
+    """
+    kern = _bitserial_kernel if variant == "radix2" else _booth4_kernel
+    w = w.astype(jnp.int32)
+    x = x.astype(jnp.int32)
+    wp, m = _pad_rows(w, block_m)
+    mp, n = wp.shape
+    grid = (mp // block_m,)
+    out = pl.pallas_call(
+        functools.partial(kern, precision=precision),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, mp), jnp.int32),
+        interpret=True,
+    )(wp, x[None, :])
+    return out[0, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "variant", "block_m"))
+def gemm(w, xs, *, precision=8, variant="radix2", block_m=DEFAULT_BLOCK_M):
+    """Batched bit-serial GEMV: Y[b] = W @ X[b] (vmapped kernel).
+
+    Args: w (M, N) i32; xs (B, N) i32.  Returns (B, M) i32.
+    """
+    f = functools.partial(
+        gemv, precision=precision, variant=variant, block_m=block_m
+    )
+    return jax.vmap(lambda v: f(w, v))(xs)

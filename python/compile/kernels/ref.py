@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for the IMAGine L1 kernels.
+
+These are the *golden* definitions: an int8 GEMV is exactly
+``W.astype(i32) @ x.astype(i32)``.  The bit-serial kernels in
+``bitserial_gemv.py`` must match these bit-for-bit — that equivalence is
+the core correctness claim of the PIM array (the hardware computes the
+same partial-product schedule with bitline PEs).
+"""
+
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def gemv_ref(w, x):
+    """Reference GEMV: ``y = W @ x`` with int32 accumulation.
+
+    Args:
+      w: (M, N) integer matrix (int8-ranged values, any int dtype).
+      x: (N,)  integer vector (int8-ranged values, any int dtype).
+    Returns:
+      (M,) int32 exact result.
+    """
+    return jnp.dot(w.astype(jnp.int32), x.astype(jnp.int32))
+
+
+def gemm_ref(w, xs):
+    """Reference batched GEMV (a GEMM): ``Y[b] = W @ X[b]``.
+
+    Args:
+      w:  (M, N) integer matrix.
+      xs: (B, N) integer batch of vectors.
+    Returns:
+      (B, M) int32.
+    """
+    return jnp.dot(xs.astype(jnp.int32), w.astype(jnp.int32).T)
+
+
+def requantize_ref(acc, scale):
+    """Reference requantization: int32 accumulator -> int8-ranged int32.
+
+    Mirrors the fixed-point rescale the IMAGine front-end performs between
+    MLP layers: scale, round half away from zero, clip to int8.
+    """
+    y = acc.astype(jnp.float32) * jnp.float32(scale)
+    y = jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5)
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int32)
+
+
+def relu_ref(acc):
+    """Reference ReLU on int32 accumulators."""
+    return jnp.maximum(acc, 0)
+
+
+def mlp_ref(x, params, scales):
+    """Reference 3-layer int8 MLP with int32 accumulation.
+
+    Args:
+      x: (N0,) int8-ranged input vector.
+      params: [(W1, b1), (W2, b2), (W3, b3)] int8-ranged weights/biases
+              with Wi of shape (Ni, Ni-1) and bi of shape (Ni,).
+      scales: per-layer float requantization scales, len(params)-1 used.
+    Returns:
+      (N3,) int32 logits (last layer NOT requantized/relu'd).
+    """
+    h = x
+    last = len(params) - 1
+    for i, (w, b) in enumerate(params):
+        acc = gemv_ref(w, h) + b.astype(jnp.int32)
+        if i == last:
+            return acc
+        h = requantize_ref(relu_ref(acc), scales[i])
+    return h
+
+
+def booth_digits_ref(x, precision):
+    """Reference Booth radix-4 recoding of a two's-complement integer.
+
+    Returns digits d_k in {-2,-1,0,1,2} (shape (ceil(p/2),) + x.shape)
+    such that ``x == sum_k d_k * 4**k`` for x in [-2^(p-1), 2^(p-1)).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    ndigits = (precision + 1) // 2
+    sign_bit = (x >> (precision - 1)) & 1
+    digits = []
+    for k in range(ndigits):
+        b_m1 = ((x >> (2 * k - 1)) & 1) if k > 0 else jnp.zeros_like(x)
+        b0 = ((x >> (2 * k)) & 1) if 2 * k < precision else sign_bit
+        b1 = ((x >> (2 * k + 1)) & 1) if 2 * k + 1 < precision else sign_bit
+        digits.append(-2 * b1 + b0 + b_m1)
+    return jnp.stack(digits)

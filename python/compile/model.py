@@ -1,0 +1,83 @@
+"""L2 JAX model: the compute graphs IMAGine's front-end dispatches.
+
+Two entry-point families, both built on the L1 bit-serial kernel so the
+whole graph lowers into one HLO module:
+
+  * ``gemv_engine`` / ``gemm_engine`` — the paper's core GEMV operation
+    (optionally batched), the workload of Fig. 6.
+  * ``mlp`` — a 3-layer int8 MLP (784-256-128-10), the kind of DNN layer
+    stack the PIM-overlay papers (SPAR-2, RIMA) accelerate; used by the
+    end-to-end example.
+
+All boundary dtypes are int32 (int8-ranged values): the rust `xla` crate
+(0.1.6) has no i8 literal constructor, and the engine's accumulators are
+int32 anyway.  Requantization scales are baked in as static constants —
+on hardware they live in the front-end processor's config registers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bitserial_gemv as bsk
+from compile.kernels import ref
+
+# Default MLP geometry: a ~230K-parameter digit classifier.  Layer sizes
+# are multiples of the 12x2-tile PE geometry so the mapper packs cleanly.
+MLP_DIMS = (784, 256, 128, 10)
+MLP_SCALES = (2 ** -7, 2 ** -7)
+
+
+def gemv_engine(w, x, *, precision=8, variant="radix2"):
+    """GEMV y = W @ x on the bit-serial PE-array kernel. i32 in/out."""
+    return bsk.gemv(w, x, precision=precision, variant=variant)
+
+
+def gemm_engine(w, xs, *, precision=8, variant="radix2"):
+    """Batched GEMV Y[b] = W @ X[b]. i32 in/out."""
+    return bsk.gemm(w, xs, precision=precision, variant=variant)
+
+
+def _requant_relu(acc, scale):
+    """int32 accumulator -> ReLU -> fixed-point rescale -> int8 range."""
+    acc = jnp.maximum(acc, 0)
+    y = acc.astype(jnp.float32) * jnp.float32(scale)
+    y = jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5)  # round half away from 0
+    return jnp.clip(y, ref.INT8_MIN, ref.INT8_MAX).astype(jnp.int32)
+
+
+def mlp(x, w1, b1, w2, b2, w3, b3, *, precision=8, variant="radix2",
+        scales=MLP_SCALES):
+    """3-layer int8 MLP forward pass on the bit-serial GEMV kernel.
+
+    Args:
+      x:  (N0,) i32 int8-ranged input.
+      wi: (Ni, Ni-1) i32 weights; bi: (Ni,) i32 biases.
+    Returns:
+      (N3,) i32 logits.
+    """
+    g = functools.partial(gemv_engine, precision=precision, variant=variant)
+    h = _requant_relu(g(w1, x) + b1, scales[0])
+    h = _requant_relu(g(w2, h) + b2, scales[1])
+    return g(w3, h) + b3
+
+
+def mlp_batched(xs, w1, b1, w2, b2, w3, b3, *, precision=8,
+                variant="radix2", scales=MLP_SCALES):
+    """Batched MLP forward: xs (B, N0) -> (B, N3) i32 logits."""
+    f = functools.partial(
+        mlp, precision=precision, variant=variant, scales=scales
+    )
+    return jax.vmap(lambda v: f(v, w1, b1, w2, b2, w3, b3))(xs)
+
+
+def init_mlp_params(key, dims=MLP_DIMS):
+    """Random int8-ranged MLP parameters (i32 dtype) for tests/examples."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, kw, kb = jax.random.split(key, 3)
+        w = jax.random.randint(kw, (dims[i + 1], dims[i]), -16, 16, jnp.int32)
+        b = jax.random.randint(kb, (dims[i + 1],), -64, 64, jnp.int32)
+        params.append((w, b))
+    return params

@@ -1,0 +1,61 @@
+"""AOT pipeline tests: entry-point construction, lowering determinism,
+and manifest consistency."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.build_entries()
+
+
+def test_entry_set_is_complete(entries):
+    names = set(entries)
+    assert {"gemv_64x64_p8", "gemv_256x256_p8_booth4", "gemv_256x256_p4",
+            "gemm_b8_256x256_p8", "mlp_b1", "mlp_b8"} <= names
+
+
+def test_gemv_entry_shapes(entries):
+    fn, ins, out, meta = entries["gemv_128x128_p8"]
+    assert [tuple(s.shape) for s in ins] == [(128, 128), (128,)]
+    assert out == (128,)
+    assert meta["precision"] == 8
+
+
+def test_mlp_entry_shapes(entries):
+    _, ins, out, meta = entries["mlp_b8"]
+    assert tuple(ins[0].shape) == (8, 784)
+    assert tuple(ins[1].shape) == (256, 784)
+    assert out == (8, 10)
+    assert meta["dims"] == [784, 256, 128, 10]
+
+
+def test_lowering_is_deterministic(entries):
+    fn, ins, _, _ = entries["gemv_64x64_p8"]
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*ins))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*ins))
+    assert t1 == t2
+    assert "ENTRY" in t1  # HLO text, not a serialized proto
+
+
+def test_manifest_matches_artifacts_on_disk():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.exists(os.path.join(art, "manifest.json")):
+        pytest.skip("run `make artifacts` first")
+    with open(os.path.join(art, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest) >= 8
+    for name, e in manifest.items():
+        path = os.path.join(art, e["file"])
+        assert os.path.exists(path), name
+        assert e["output"]["dtype"] == "i32"
+        import hashlib
+        with open(path) as fh:
+            digest = hashlib.sha256(fh.read().encode()).hexdigest()
+        assert digest == e["sha256"], f"{name} artifact drifted from manifest"

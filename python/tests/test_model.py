@@ -1,0 +1,73 @@
+"""L2 model tests: MLP graph on the bit-serial kernel vs oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+DIMS = (40, 24, 16, 10)  # small geometry for fast interpret-mode tests
+
+
+def _params(seed, dims=DIMS):
+    return model.init_mlp_params(jax.random.PRNGKey(seed), dims)
+
+
+def test_mlp_matches_ref():
+    params = _params(0)
+    x = jax.random.randint(jax.random.PRNGKey(9), (DIMS[0],), -128, 128, jnp.int32)
+    flat = [t for wb in params for t in wb]
+    got = model.mlp(x, *flat, scales=model.MLP_SCALES)
+    want = ref.mlp_ref(x, params, model.MLP_SCALES)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mlp_batched_matches_per_sample():
+    params = _params(1)
+    flat = [t for wb in params for t in wb]
+    xs = jax.random.randint(jax.random.PRNGKey(3), (4, DIMS[0]), -128, 128, jnp.int32)
+    batched = model.mlp_batched(xs, *flat)
+    for b in range(xs.shape[0]):
+        single = model.mlp(xs[b], *flat)
+        np.testing.assert_array_equal(np.asarray(batched[b]), np.asarray(single))
+
+
+def test_mlp_output_shape_and_dtype():
+    params = _params(2)
+    flat = [t for wb in params for t in wb]
+    x = jnp.zeros((DIMS[0],), jnp.int32)
+    y = model.mlp(x, *flat)
+    assert y.shape == (DIMS[-1],)
+    assert y.dtype == jnp.int32
+
+
+def test_requant_relu_range():
+    acc = jnp.asarray([-(2 ** 20), -1, 0, 1, 2 ** 20], jnp.int32)
+    y = model._requant_relu(acc, 2 ** -7)
+    ynp = np.asarray(y)
+    assert ynp.min() >= 0  # relu before rescale
+    assert ynp.max() <= ref.INT8_MAX
+
+
+def test_init_mlp_params_geometry():
+    params = _params(4, model.MLP_DIMS)
+    dims = model.MLP_DIMS
+    assert len(params) == len(dims) - 1
+    for i, (w, b) in enumerate(params):
+        assert w.shape == (dims[i + 1], dims[i])
+        assert b.shape == (dims[i + 1],)
+        assert int(jnp.abs(w).max()) < 128
+
+
+@pytest.mark.parametrize("variant", ["radix2", "booth4"])
+def test_mlp_variant_equivalence(variant):
+    """Booth radix-4 PEs must give identical MLP numerics."""
+    params = _params(5)
+    flat = [t for wb in params for t in wb]
+    x = jax.random.randint(jax.random.PRNGKey(6), (DIMS[0],), -128, 128, jnp.int32)
+    got = model.mlp(x, *flat, variant=variant)
+    want = ref.mlp_ref(x, params, model.MLP_SCALES)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

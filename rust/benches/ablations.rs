@@ -1,0 +1,77 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! controller pipeline stage A, the fanout tree, Booth radix, the fold
+//! network (row replication), and coordinator weight residency.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use imagine::baselines::ImagineModel;
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::tile::{FanoutTree, PipelineStages};
+use imagine::timing::delay::ULTRASCALE_PLUS;
+use imagine::timing::SystemTiming;
+use imagine::util::bench::bench;
+use imagine::util::XorShift;
+
+fn main() {
+    println!("== ablation 1: controller pipeline stage A (Fig 3a / §V-C) ==");
+    for (label, stages) in [("without stage A", PipelineStages::NONE), ("with stage A", PipelineStages::U55_FINAL)] {
+        let t = SystemTiming::analyze(&ULTRASCALE_PLUS, stages, Some(&FanoutTree::u55_tile(31)), 384);
+        println!(
+            "{label:<16} system {:>6.0} MHz (controller {:>6.0}, fanout {:>6.0}, PIM {:>6.0})",
+            t.system_mhz(), t.controller_mhz, t.fanout_mhz, t.pim_mhz
+        );
+    }
+
+    println!("\n== ablation 2: fanout tree vs direct broadcast (§V-C iter 2-3) ==");
+    for (label, tree) in [("direct (384 sinks)", None), ("2-level fanout-4 tree", Some(FanoutTree::u55_tile(31)))] {
+        let t = SystemTiming::analyze(&ULTRASCALE_PLUS, PipelineStages::U55_FINAL, tree.as_ref(), 384);
+        println!("{label:<22} fanout path {:>6.0} MHz -> system {:>6.0} MHz", t.fanout_mhz, t.system_mhz());
+    }
+
+    println!("\n== ablation 3: Booth radix-4 vs radix-2 (IMAGine-slice4, Fig 6) ==");
+    let r2 = ImagineModel::u55();
+    let r4 = ImagineModel::u55_slice4();
+    for d in [256usize, 1024, 2048] {
+        let c2 = r2.cycle_latency(d, 8);
+        let c4 = r4.cycle_latency(d, 8);
+        println!("D={d:<5} radix-2 {c2:>8} cycles   booth-4 {c4:>8} cycles   ({:.2}x)", c2 as f64 / c4 as f64);
+    }
+
+    println!("\n== ablation 4: fold network (row replication) at small D ==");
+    // with fold (real plan) vs a hypothetical no-replication mapping
+    let config = EngineConfig::u55();
+    let with_fold = plan(&config, 64, 64, 8, 2);
+    let k_nofold = 64usize.div_ceil(config.block_cols());
+    let nofold_cycles = (k_nofold as u64) * with_fold.mac_cost()
+        + (config.block_cols() as u64 - 1) * with_fold.hop_cost();
+    println!(
+        "D=64: with fold x{} = {} cycles; without replication = {} cycles ({:.2}x worse)",
+        with_fold.fold_factor,
+        with_fold.total_cycles(),
+        nofold_cycles,
+        nofold_cycles as f64 / with_fold.total_cycles() as f64
+    );
+
+    println!("\n== ablation 5: weight residency on the serving path (§Perf L3-4) ==");
+    let cfgs = EngineConfig::small();
+    let d = 64;
+    let mut rng = XorShift::new(1);
+    let w = rng.vec_i64(d * d, -128, 127);
+    let xs: Vec<Vec<i64>> = (0..16).map(|_| rng.vec_i64(d, -128, 127)).collect();
+    let gp = GemvProgram::generate(plan(&cfgs, d, d, 8, 2));
+    let mut engine = Engine::new(cfgs);
+    let m = bench("cold: stage weights every request", 1, 10, || {
+        for x in &xs {
+            gp.execute_opts(&mut engine, &w, x, false).unwrap();
+        }
+    });
+    println!("{}", m.report());
+    gp.execute_opts(&mut engine, &w, &xs[0], false).unwrap(); // warm the spill
+    let m = bench("hot: weights resident", 1, 10, || {
+        for x in &xs {
+            gp.execute_opts(&mut engine, &w, x, true).unwrap();
+        }
+    });
+    println!("{}", m.report());
+}

@@ -1,0 +1,57 @@
+//! Bench: the simulator's hot path — bit-plane packed bit-serial ALU
+//! ops (the §Perf L3 optimization target). Reports PE-bit-ops/s.
+//!
+//! Run: `cargo bench --bench bitplane_hotpath`
+
+use imagine::pim::alu;
+use imagine::pim::PlaneBuf;
+use imagine::util::bench::{bench, black_box};
+use imagine::util::XorShift;
+
+fn filled(lanes: usize, seed: u64) -> PlaneBuf {
+    let mut b = PlaneBuf::new(1024, lanes);
+    let mut rng = XorShift::new(seed);
+    let v = rng.vec_i64(lanes, -128, 127);
+    b.write_all(0, 8, &v);
+    let v2 = rng.vec_i64(lanes, -128, 127);
+    b.write_all(32, 8, &v2);
+    b
+}
+
+fn main() {
+    println!("== bitplane ALU hot path ==");
+    for lanes in [384usize, 2304, 9216] {
+        let mut b = filled(lanes, 5);
+
+        let m = bench(&format!("mac_radix2 p8 aw32 lanes={lanes}"), 3, 25, || {
+            black_box(alu::mac_radix2(&mut b, (64, 32), (0, 8), (32, 8), false))
+        });
+        // one MAC = p*aw plane-ops x lanes bit-lanes
+        let pe_bit_ops = (8 * 32 * lanes) as f64;
+        println!(
+            "{}   [{:.2e} PE-bit-ops/s]",
+            m.report(),
+            pe_bit_ops / m.median.as_secs_f64()
+        );
+
+        let m = bench(&format!("mac_booth4 p8 aw32 lanes={lanes}"), 3, 25, || {
+            black_box(alu::mac_booth4(&mut b, (64, 32), (0, 8), (32, 8), false))
+        });
+        println!(
+            "{}   [{:.2e} PE-bit-ops/s]",
+            m.report(),
+            pe_bit_ops / 2.0 / m.median.as_secs_f64()
+        );
+
+        let m = bench(&format!("add aw32 lanes={lanes}"), 3, 25, || {
+            black_box(alu::add_sub(&mut b, (96, 32), (64, 32), (0, 8), false))
+        });
+        println!("{}", m.report());
+
+        let src = filled(lanes, 9);
+        let m = bench(&format!("accum_hop aw32 lanes={lanes}"), 3, 25, || {
+            black_box(alu::accum_from(&mut b, &src, 64, 32))
+        });
+        println!("{}", m.report());
+    }
+}

@@ -1,0 +1,71 @@
+//! Bench: coordinator throughput/latency under load — batched vs
+//! unbatched, 1 vs 4 workers (the L3 §Perf target: the coordinator must
+//! not be the bottleneck).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::util::bench::bench;
+use imagine::util::XorShift;
+
+fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64, f64) {
+    let mut rng = XorShift::new(3);
+    let mut reg = ModelRegistry::default();
+    let d = 32;
+    reg.register_gemv("m", rng.vec_i64(d * d, -32, 31), d, d).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers, batch: policy, ..Default::default() },
+        reg,
+    );
+    let xs: Vec<Vec<i64>> = (0..requests).map(|_| rng.vec_i64(d, -64, 63)).collect();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(Request { model: "m".into(), x: x.clone() }).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    (
+        requests as f64 / wall,
+        m.latency_percentile_us(50.0) as f64,
+        m.latency_percentile_us(99.0) as f64,
+    )
+}
+
+fn main() {
+    println!("== coordinator scaling ==");
+    println!(
+        "{:<28} {:>12} {:>10} {:>10}",
+        "config", "req/s", "p50 (us)", "p99 (us)"
+    );
+    for (label, workers, policy) in [
+        ("1 worker, unbatched", 1, BatchPolicy::none()),
+        ("1 worker, batch 16", 1, BatchPolicy::default()),
+        ("2 workers, batch 16", 2, BatchPolicy::default()),
+        ("4 workers, batch 16", 4, BatchPolicy::default()),
+    ] {
+        let (rps, p50, p99) = throughput(workers, policy, 256);
+        println!("{label:<28} {rps:>12.0} {p50:>10.0} {p99:>10.0}");
+    }
+
+    println!("\n== submit-path overhead (no contention) ==");
+    let mut rng = XorShift::new(4);
+    let mut reg = ModelRegistry::default();
+    reg.register_gemv("m", rng.vec_i64(16 * 16, -32, 31), 16, 16).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+        reg,
+    );
+    let x = rng.vec_i64(16, -64, 63);
+    let m = bench("submit+recv roundtrip", 5, 50, || {
+        coord
+            .call(Request { model: "m".into(), x: x.clone() })
+            .unwrap()
+            .cycles
+    });
+    println!("{}", m.report());
+    coord.shutdown();
+}

@@ -1,0 +1,74 @@
+//! Bench: Fig 6 regeneration — GEMV cycle latency + execution time for
+//! every engine model across the paper's D x precision sweep, plus
+//! wall-clock timing of the analytic models and of full cycle-accurate
+//! simulations (the simulator itself is the measured artifact here).
+//!
+//! Run: `cargo bench --bench gemv_latency`
+
+use imagine::baselines::latency::all_engines;
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::sim::U55_FMAX_MHZ;
+use imagine::util::bench::{bench, black_box};
+use imagine::util::XorShift;
+
+fn main() {
+    println!("== Fig 6: GEMV latency sweep (paper table regeneration) ==");
+    let dims = [64usize, 128, 256, 512, 1024, 2048];
+    let precisions = [4usize, 8, 16];
+    for &p in &precisions {
+        println!("\n-- {p}-bit --");
+        println!("{:<16} {}", "engine", dims.map(|d| format!("{:>12}", format!("D={d}"))).join(" "));
+        for e in all_engines() {
+            let cycles: Vec<String> = dims
+                .iter()
+                .map(|&d| format!("{:>12}", e.cycle_latency(d, p)))
+                .collect();
+            println!("{:<16} {}  cycles", e.name(), cycles.join(" "));
+            if let Some(f) = e.f_sys_mhz() {
+                let us: Vec<String> = dims
+                    .iter()
+                    .map(|&d| format!("{:>12.2}", e.cycle_latency(d, p) as f64 / f))
+                    .collect();
+                println!("{:<16} {}  us", "", us.join(" "));
+            }
+        }
+    }
+
+    println!("\n== simulator wall-clock (cycle-accurate bit-serial execution) ==");
+    let config = EngineConfig::small();
+    let mut rng = XorShift::new(11);
+    for d in [64usize, 128, 256] {
+        let w = rng.vec_i64(d * d, -128, 127);
+        let x = rng.vec_i64(d, -128, 127);
+        let gp = GemvProgram::generate(plan(&config, d, d, 8, 2));
+        let mut engine = Engine::new(config);
+        let mut sim_cycles = 0;
+        let m = bench(&format!("simulate gemv {d}x{d} p8"), 1, 5, || {
+            let r = gp.execute(&mut engine, &w, &x).unwrap();
+            sim_cycles = r.stats.cycles;
+            black_box(r.y.len())
+        });
+        println!(
+            "{}   [{} engine cycles; sim/hw ratio {:.0}x]",
+            m.report(),
+            sim_cycles,
+            m.median.as_secs_f64() * 1e6 / (sim_cycles as f64 / U55_FMAX_MHZ)
+        );
+    }
+
+    println!("\n== analytic model speed ==");
+    let engines = all_engines();
+    let m = bench("all engines x full sweep", 2, 20, || {
+        let mut acc = 0u64;
+        for e in &engines {
+            for &d in &dims {
+                for &p in &precisions {
+                    acc = acc.wrapping_add(e.cycle_latency(d, p));
+                }
+            }
+        }
+        black_box(acc)
+    });
+    println!("{}", m.report());
+}

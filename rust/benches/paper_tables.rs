@@ -1,0 +1,29 @@
+//! Bench: regenerate every paper table/figure and time the generators
+//! (Tables I-V, Figs 1/4/5, ASIC comparison). The printed artifacts are
+//! the reproduction output recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use imagine::report;
+use imagine::util::bench::{bench, black_box};
+
+fn main() {
+    println!("{}", report::all());
+
+    println!("\n== generator timing ==");
+    let m = bench("report::all()", 1, 10, || black_box(report::all().len()));
+    println!("{}", m.report());
+    for (name, f) in [
+        ("table1", report::table1 as fn() -> String),
+        ("table2", report::table2),
+        ("table3", report::table3),
+        ("table4", report::table4),
+        ("table5", report::table5),
+        ("fig1", report::fig1),
+        ("fig4", report::fig4),
+        ("fig5", report::fig5),
+    ] {
+        let m = bench(name, 1, 10, || black_box(f().len()));
+        println!("{}", m.report());
+    }
+}

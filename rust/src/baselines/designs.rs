@@ -1,0 +1,116 @@
+//! Published frequency/utilization design points (Tables I and V).
+
+/// One published PIM design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignPoint {
+    pub name: &'static str,
+    /// "Custom" (modified BRAM macro) or "Overlay" (plain fabric).
+    pub kind: &'static str,
+    pub device: &'static str,
+    /// Device BRAM Fmax (MHz).
+    pub f_bram: f64,
+    /// PIM tile Fmax (MHz); None if not reported.
+    pub f_pim: Option<f64>,
+    /// System-level Fmax (MHz); None if not reported.
+    pub f_sys: Option<f64>,
+    /// Utilization snapshot for Table V (LUT%, FF%, DSP%, BRAM%);
+    /// NaN = not reported separately.
+    pub util: Option<[f64; 4]>,
+}
+
+impl DesignPoint {
+    /// Relative PIM frequency f_PIM / f_BRAM (Table I "Rel.").
+    pub fn rel_pim(&self) -> Option<f64> {
+        self.f_pim.map(|f| f / self.f_bram)
+    }
+
+    /// Relative system frequency f_Sys / f_BRAM.
+    pub fn rel_sys(&self) -> Option<f64> {
+        self.f_sys.map(|f| f / self.f_bram)
+    }
+}
+
+/// Table I: maximum frequencies of existing FPGA-PIM designs.
+pub const TABLE1: [DesignPoint; 8] = [
+    DesignPoint { name: "CCB", kind: "Custom", device: "Stratix 10", f_bram: 1000.0, f_pim: Some(624.0), f_sys: Some(455.0), util: None },
+    DesignPoint { name: "CoMeFa-A", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(294.0), f_sys: Some(288.0), util: None },
+    DesignPoint { name: "CoMeFa-D", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(588.0), f_sys: Some(292.0), util: None },
+    DesignPoint { name: "BRAMAC-2SA", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(586.0), f_sys: None, util: None },
+    DesignPoint { name: "BRAMAC-1DA", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(500.0), f_sys: None, util: None },
+    DesignPoint { name: "M4BRAM", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(553.0), f_sys: None, util: None },
+    DesignPoint { name: "SPAR-2", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(445.0), f_sys: Some(200.0), util: None },
+    DesignPoint { name: "PiCaSO", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(737.0), f_sys: None, util: None },
+];
+
+/// Table V: utilization and frequency of PIM-based GEMV/GEMM engines.
+/// util = [LUT%, FF%, DSP%, BRAM%]; RIMA/CCB/CoMeFa report combined
+/// logic% which we store in the LUT slot (FF = NaN).
+pub const TABLE5: [DesignPoint; 9] = [
+    DesignPoint { name: "RIMA-Fast", kind: "Custom", device: "Stratix 10", f_bram: 1000.0, f_pim: None, f_sys: Some(455.0), util: Some([60.1, f64::NAN, 50.0, 55.0]) },
+    DesignPoint { name: "RIMA-Large", kind: "Custom", device: "Stratix 10", f_bram: 1000.0, f_pim: None, f_sys: Some(278.0), util: Some([89.0, f64::NAN, 50.0, 93.0]) },
+    DesignPoint { name: "CCB GEMV", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(624.0), f_sys: Some(231.0), util: Some([27.9, f64::NAN, 90.1, 91.8]) },
+    DesignPoint { name: "CoMeFa-A GEMV", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(294.0), f_sys: Some(242.0), util: Some([27.9, f64::NAN, 90.1, 91.8]) },
+    DesignPoint { name: "CoMeFa-D GEMM", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(588.0), f_sys: Some(267.0), util: Some([25.5, f64::NAN, 92.4, 86.7]) },
+    DesignPoint { name: "SPAR-2 (US+)", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(445.0), f_sys: Some(200.0), util: Some([11.3, 2.4, 0.0, 14.5]) },
+    DesignPoint { name: "SPAR-2 (V7)", kind: "Overlay", device: "Virtex-7", f_bram: 543.0, f_pim: Some(445.0), f_sys: Some(130.0), util: Some([28.5, 7.0, 0.0, 30.4]) },
+    DesignPoint { name: "IMAGine", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(737.0), f_sys: Some(737.0), util: Some([35.6, 24.8, 0.0, 100.0]) },
+    DesignPoint { name: "IMAGine-CB", kind: "Custom", device: "UltraScale+", f_bram: 737.0, f_pim: Some(737.0), f_sys: Some(737.0), util: Some([10.1, 7.2, 0.0, 100.0]) },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_relative_frequencies() {
+        // Table I "Rel." columns: CCB 62%/46%, CoMeFa-A 40%/39%,
+        // PiCaSO 100% PIM.
+        let ccb = &TABLE1[0];
+        assert!((ccb.rel_pim().unwrap() - 0.62).abs() < 0.01);
+        assert!((ccb.rel_sys().unwrap() - 0.46).abs() < 0.01);
+        let comefa_a = &TABLE1[1];
+        assert!((comefa_a.rel_pim().unwrap() - 0.40).abs() < 0.01);
+        let picaso = &TABLE1[7];
+        assert!((picaso.rel_pim().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_headline_clock_ratio() {
+        // "2.65x - 3.2x faster clock than any existing design":
+        // 737/278 = 2.65 vs the fastest comparison f_sys in Table V.
+        let imagine = TABLE5.iter().find(|d| d.name == "IMAGine").unwrap();
+        let others: Vec<f64> = TABLE5
+            .iter()
+            .filter(|d| !d.name.starts_with("IMAGine"))
+            .filter_map(|d| d.f_sys)
+            .collect();
+        let fastest = others.iter().cloned().fold(0.0, f64::max);
+        let slowest = others.iter().cloned().fold(f64::MAX, f64::min);
+        let f = imagine.f_sys.unwrap();
+        assert!((f / fastest - 1.62).abs() < 0.02); // vs RIMA-Fast @455
+        assert!(f / slowest > 5.0); // vs SPAR-2 V7 @130
+        // vs the GEMV engines the latency study compares (231..278):
+        let gemv_range = [231.0, 242.0, 267.0, 278.0, 200.0];
+        let lo = f / gemv_range.iter().cloned().fold(0.0, f64::max);
+        let hi = f / gemv_range.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(lo >= 2.64 && hi <= 3.7, "{lo} {hi}");
+    }
+
+    #[test]
+    fn imagine_rel_sys_is_100pct() {
+        let d = TABLE5.iter().find(|d| d.name == "IMAGine").unwrap();
+        assert!((d.rel_sys().unwrap() - 1.0).abs() < 1e-9);
+        assert_eq!(d.util.unwrap()[3], 100.0);
+        assert_eq!(d.util.unwrap()[2], 0.0); // 0 DSPs
+    }
+
+    #[test]
+    fn table5_rel_freqs_match_paper() {
+        // Rel. Freq column: 45.5, 27.8, 31.6, 33.2, 36.6, 27.1, ...
+        let expect = [45.5, 27.8, 31.6, 33.2, 36.6, 27.1, 23.9, 100.0, 100.0];
+        for (d, e) in TABLE5.iter().zip(expect) {
+            let rel = 100.0 * d.rel_sys().unwrap();
+            assert!((rel - e).abs() < 0.6, "{}: {rel} vs {e}", d.name);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Analytic latency model of IMAGine (and IMAGine-slice4).
+//!
+//! Thin wrapper over the mapping planner: the same `MappingPlan` that
+//! drives instruction generation also yields the cycle count, so the
+//! analytic model and the cycle-accurate simulator agree by
+//! construction for planned workloads (cross-checked end-to-end in
+//! `rust/tests/analytic_vs_sim.rs`, mirroring the paper's "latency
+//! model ... validated by running a prototype").
+
+use crate::engine::EngineConfig;
+use crate::gemv::mapper::plan;
+use crate::sim::U55_FMAX_MHZ;
+
+/// Analytic IMAGine latency model on a given engine geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct ImagineModel {
+    pub config: EngineConfig,
+    /// Booth radix: 2 = IMAGine, 4 = IMAGine-slice4.
+    pub radix: u8,
+    /// System clock (737 MHz on U55 — the whole point of the paper).
+    pub f_sys_mhz: f64,
+}
+
+impl ImagineModel {
+    /// The paper's flagship U55 build.
+    pub fn u55() -> Self {
+        ImagineModel { config: EngineConfig::u55(), radix: 2, f_sys_mhz: U55_FMAX_MHZ }
+    }
+
+    /// The Fig-6 "IMAGine-slice4" variant: Booth radix-4 PEs + 4-bit
+    /// sliced accumulation network, same clock (estimated in the paper
+    /// "assuming no effect on the clock rate").
+    pub fn u55_slice4() -> Self {
+        ImagineModel { radix: 4, ..Self::u55() }
+    }
+
+    /// GEMV cycle latency for a d x d matrix at precision p, including
+    /// pipeline fill.
+    pub fn cycle_latency(&self, d: usize, p: usize) -> u64 {
+        let pl = plan(&self.config, d, d, p, self.radix);
+        pl.total_cycles() + self.config.fill_latency()
+    }
+
+    /// Execution time in microseconds.
+    pub fn exec_us(&self, d: usize, p: usize) -> f64 {
+        self.cycle_latency(d, p) as f64 / self.f_sys_mhz
+    }
+
+    /// Peak 8-bit throughput in TOPS (§V-C: "up to 0.33 TOPS at 8-bit
+    /// precision"): every PE contributes one MAC (2 ops) per
+    /// `mac_cost` cycles at f_sys.
+    pub fn peak_tops(&self, p: usize) -> f64 {
+        let pl = plan(&self.config, self.config.pe_rows(), self.config.block_cols() * 64, p, self.radix);
+        let macs_per_sec =
+            self.config.total_pes() as f64 * self.f_sys_mhz * 1e6 / pl.mac_cost() as f64;
+        2.0 * macs_per_sec / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_grows_with_d_and_p() {
+        let m = ImagineModel::u55();
+        assert!(m.cycle_latency(512, 8) < m.cycle_latency(1024, 8));
+        assert!(m.cycle_latency(1024, 4) < m.cycle_latency(1024, 8));
+        assert!(m.cycle_latency(1024, 8) < m.cycle_latency(1024, 16));
+    }
+
+    #[test]
+    fn slice4_is_faster() {
+        let r2 = ImagineModel::u55();
+        let r4 = ImagineModel::u55_slice4();
+        for d in [64, 256, 1024] {
+            assert!(
+                r4.cycle_latency(d, 8) < r2.cycle_latency(d, 8),
+                "d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn peak_tops_matches_paper_order() {
+        // §V-C: "IMAGine can only deliver up to 0.33 TOPS at 8-bit".
+        let tops = ImagineModel::u55().peak_tops(8);
+        assert!((0.2..0.6).contains(&tops), "{tops}");
+    }
+
+    #[test]
+    fn exec_time_uses_737mhz() {
+        let m = ImagineModel::u55();
+        let c = m.cycle_latency(256, 8);
+        assert!((m.exec_us(256, 8) - c as f64 / 737.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! Published design points and analytic latency models of the
+//! competing PIM-array GEMV engines (Tables I & V, Figs 1 & 6).
+//!
+//! The paper "adopted the approach in [12] (BRAMAC) to model the
+//! block-level cycle latencies of CCB, CoMeFa, BRAMAC, and SPAR-2 using
+//! their analytical models", while "IMAGine's latency model was
+//! developed and validated by running a prototype" — here the prototype
+//! is the cycle-accurate simulator in `engine`, and
+//! `imagine_model::ImagineModel` is the analytic form validated against
+//! it (see `rust/tests/analytic_vs_sim.rs`).
+
+pub mod designs;
+pub mod latency;
+pub mod imagine_model;
+pub mod rima;
+
+pub use designs::{DesignPoint, TABLE1, TABLE5};
+pub use latency::{GemvEngineModel, all_engines, comparison_engines};
+pub use imagine_model::ImagineModel;

@@ -1,0 +1,124 @@
+//! Fig 1: RIMA's actual peak-TOPS vs ideal scaling on Stratix 10 GX2800.
+//!
+//! The paper plots RIMA's peak performance (computed from Table II of
+//! [6]: BRAM utilization x M-DPE clock frequency) against the "CCB
+//! Ideal" line — linear scaling at the degraded CCB frequency (624
+//! MHz). The gap is wasted compute capacity/memory bandwidth; the
+//! irregular actual trend comes from RIMA's system-level architecture
+//! whose achievable clock *drops* as BRAM utilization grows.
+//!
+//! Data points are digitized approximations of [6]'s configurations
+//! (anchored at the published RIMA-Fast 455 MHz and RIMA-Large
+//! 278 MHz / 93% BRAM points).
+
+use super::designs::DesignPoint;
+use crate::resources::devices::STRATIX10_GX2800;
+
+/// One RIMA configuration: (fraction of M20Ks used as CCB, system MHz).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RimaConfig {
+    pub bram_frac: f64,
+    pub f_sys_mhz: f64,
+}
+
+/// Digitized RIMA scaling series (increasing BRAM utilization; the
+/// frequency degradation with utilization is the §III observation "as
+/// the utilization of BRAMs increases the achievable system-level
+/// clock frequency decreases").
+pub const RIMA_CONFIGS: [RimaConfig; 7] = [
+    RimaConfig { bram_frac: 0.14, f_sys_mhz: 455.0 }, // RIMA-Fast
+    RimaConfig { bram_frac: 0.28, f_sys_mhz: 430.0 },
+    RimaConfig { bram_frac: 0.42, f_sys_mhz: 395.0 },
+    RimaConfig { bram_frac: 0.56, f_sys_mhz: 360.0 },
+    RimaConfig { bram_frac: 0.70, f_sys_mhz: 305.0 },
+    RimaConfig { bram_frac: 0.84, f_sys_mhz: 310.0 }, // irregular bump
+    RimaConfig { bram_frac: 0.93, f_sys_mhz: 278.0 }, // RIMA-Large
+];
+
+/// CCB's degraded-but-constant PIM frequency (the ideal-scaling slope).
+pub const CCB_FREQ_MHZ: f64 = 624.0;
+
+/// 8-bit MACs per M20K per cycle in CCB mode (bit-serial across 40
+/// bitlines, ~one 8-bit MAC per 160 cycles per bitline => amortized).
+const MACS_PER_M20K_PER_CYCLE: f64 = 40.0 / 160.0;
+
+/// Peak TOPS of `frac` of the GX2800's M20Ks clocked at `mhz`.
+pub fn tops(frac: f64, mhz: f64) -> f64 {
+    let blocks = STRATIX10_GX2800.bram as f64 * frac;
+    2.0 * blocks * MACS_PER_M20K_PER_CYCLE * mhz * 1e6 / 1e12
+}
+
+/// The Fig-1 series: (bram_frac, actual TOPS, ideal TOPS).
+pub fn fig1_series() -> Vec<(f64, f64, f64)> {
+    RIMA_CONFIGS
+        .iter()
+        .map(|c| {
+            (
+                c.bram_frac,
+                tops(c.bram_frac, c.f_sys_mhz),
+                tops(c.bram_frac, CCB_FREQ_MHZ),
+            )
+        })
+        .collect()
+}
+
+/// What IMAGine's scaling goal would give RIMA (§III-B): linear at the
+/// CCB frequency — i.e. the ideal line itself.
+pub fn ideal_at(frac: f64) -> f64 {
+    tops(frac, CCB_FREQ_MHZ)
+}
+
+/// RIMA-Fast / RIMA-Large as Table-V style design points.
+pub fn design_points() -> Vec<DesignPoint> {
+    super::designs::TABLE5
+        .iter()
+        .filter(|d| d.name.starts_with("RIMA"))
+        .copied()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_is_anchored_at_published_points() {
+        let s = RIMA_CONFIGS;
+        assert_eq!(s[0].f_sys_mhz, 455.0);
+        assert_eq!(s[6].f_sys_mhz, 278.0);
+        assert!((s[6].bram_frac - 0.93).abs() < 1e-9);
+    }
+
+    #[test]
+    fn actual_always_below_ideal() {
+        // CCB's 624 MHz bounds every achievable RIMA config.
+        for (frac, actual, ideal) in fig1_series() {
+            assert!(actual < ideal, "frac {frac}: {actual} !< {ideal}");
+        }
+    }
+
+    #[test]
+    fn gap_widens_with_utilization() {
+        // Fig 1: the wasted-capacity gap grows as BRAM use grows.
+        let s = fig1_series();
+        let gap_first = s[0].2 - s[0].1;
+        let gap_last = s[6].2 - s[6].1;
+        assert!(gap_last > 4.0 * gap_first, "{gap_first} vs {gap_last}");
+    }
+
+    #[test]
+    fn ideal_scaling_is_linear() {
+        let a = ideal_at(0.25);
+        let b = ideal_at(0.5);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trend_is_irregular() {
+        // §III: "The irregular trend is attributed to RIMA's
+        // system-level architecture" — actual TOPS is NOT monotone-
+        // smooth; the model keeps a non-monotonic frequency step.
+        let freqs: Vec<f64> = RIMA_CONFIGS.iter().map(|c| c.f_sys_mhz).collect();
+        assert!(freqs.windows(2).any(|w| w[1] > w[0]));
+    }
+}

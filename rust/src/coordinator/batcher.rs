@@ -1,0 +1,78 @@
+//! Dynamic batching policy: each worker drains its queue up to
+//! `max_batch` requests or until `window` elapses after the first
+//! arrival, then groups by model so one staged weight matrix serves
+//! the whole group (weights stay resident across the batch — the
+//! dominant cost on real hardware is re-staging them).
+
+use std::time::Duration;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Max requests gathered into one batch.
+    pub max_batch: usize,
+    /// How long to wait for more work after the first request arrives.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, window: Duration::from_micros(200) }
+    }
+}
+
+impl BatchPolicy {
+    /// No batching: every request executes alone (ablation baseline).
+    pub fn none() -> Self {
+        BatchPolicy { max_batch: 1, window: Duration::ZERO }
+    }
+}
+
+/// Group a drained batch's indices by model name, preserving arrival
+/// order inside each group. Returns (model, indices) in first-arrival
+/// order of the model.
+pub fn group_by_model<'a, T, F>(items: &'a [T], model_of: F) -> Vec<(&'a str, Vec<usize>)>
+where
+    F: Fn(&'a T) -> &'a str,
+{
+    let mut order: Vec<&str> = Vec::new();
+    let mut groups: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
+    for (i, item) in items.iter().enumerate() {
+        let m = model_of(item);
+        if !groups.contains_key(m) {
+            order.push(m);
+        }
+        groups.entry(m).or_default().push(i);
+    }
+    order
+        .into_iter()
+        .map(|m| (m, groups.remove(m).unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_preserve_order() {
+        let items = ["a", "b", "a", "c", "b", "a"];
+        let g = group_by_model(&items, |s| s);
+        assert_eq!(
+            g,
+            vec![("a", vec![0, 2, 5]), ("b", vec![1, 4]), ("c", vec![3])]
+        );
+    }
+
+    #[test]
+    fn default_policy_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 2);
+        assert!(p.window > Duration::ZERO);
+    }
+
+    #[test]
+    fn none_policy_is_unbatched() {
+        assert_eq!(BatchPolicy::none().max_batch, 1);
+    }
+}

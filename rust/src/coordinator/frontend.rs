@@ -1,0 +1,175 @@
+//! Model registry: the front-end processor's view of loaded models
+//! (weights resident in engine BRAM on hardware; host-side here, staged
+//! by the shell DMA before each batch).
+
+use crate::gemv::scheduler::Layer;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A registered model.
+#[derive(Debug, Clone)]
+pub enum Model {
+    /// A single weight matrix (m x n) served as GEMV.
+    Gemv { w: Arc<Vec<i64>>, m: usize, n: usize },
+    /// An MLP layer stack with inter-layer requantization scales.
+    Mlp { layers: Arc<Vec<Layer>>, scales: Arc<Vec<f64>> },
+}
+
+impl Model {
+    /// Input vector length the model expects.
+    pub fn input_dim(&self) -> usize {
+        match self {
+            Model::Gemv { n, .. } => *n,
+            Model::Mlp { layers, .. } => layers.first().map(|l| l.in_dim).unwrap_or(0),
+        }
+    }
+
+    /// Output vector length.
+    pub fn output_dim(&self) -> usize {
+        match self {
+            Model::Gemv { m, .. } => *m,
+            Model::Mlp { layers, .. } => layers.last().map(|l| l.out_dim).unwrap_or(0),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum RegistryError {
+    #[error("model '{0}' already registered")]
+    Duplicate(String),
+    #[error("model '{0}' not found")]
+    NotFound(String),
+    #[error("model '{name}': {what} has wrong size (expected {expected}, got {got})")]
+    Shape { name: String, what: &'static str, expected: usize, got: usize },
+}
+
+/// Thread-safe-by-cloning model registry (Arc payloads).
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Model>,
+}
+
+impl ModelRegistry {
+    pub fn register_gemv(
+        &mut self,
+        name: &str,
+        w: Vec<i64>,
+        m: usize,
+        n: usize,
+    ) -> Result<(), RegistryError> {
+        if self.models.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.into()));
+        }
+        if w.len() != m * n {
+            return Err(RegistryError::Shape {
+                name: name.into(),
+                what: "matrix",
+                expected: m * n,
+                got: w.len(),
+            });
+        }
+        self.models.insert(name.into(), Model::Gemv { w: Arc::new(w), m, n });
+        Ok(())
+    }
+
+    pub fn register_mlp(
+        &mut self,
+        name: &str,
+        layers: Vec<Layer>,
+        scales: Vec<f64>,
+    ) -> Result<(), RegistryError> {
+        if self.models.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.into()));
+        }
+        if scales.len() + 1 < layers.len() {
+            return Err(RegistryError::Shape {
+                name: name.into(),
+                what: "scales",
+                expected: layers.len() - 1,
+                got: scales.len(),
+            });
+        }
+        for pair in layers.windows(2) {
+            if pair[1].in_dim != pair[0].out_dim {
+                return Err(RegistryError::Shape {
+                    name: name.into(),
+                    what: "layer chain",
+                    expected: pair[0].out_dim,
+                    got: pair[1].in_dim,
+                });
+            }
+        }
+        self.models.insert(
+            name.into(),
+            Model::Mlp { layers: Arc::new(layers), scales: Arc::new(scales) },
+        );
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Model, RegistryError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| RegistryError::NotFound(name.into()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut r = ModelRegistry::default();
+        r.register_gemv("a", vec![0; 12], 3, 4).unwrap();
+        assert_eq!(r.get("a").unwrap().input_dim(), 4);
+        assert_eq!(r.get("a").unwrap().output_dim(), 3);
+        assert!(matches!(r.get("b"), Err(RegistryError::NotFound(_))));
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut r = ModelRegistry::default();
+        r.register_gemv("a", vec![0; 4], 2, 2).unwrap();
+        assert_eq!(
+            r.register_gemv("a", vec![0; 4], 2, 2),
+            Err(RegistryError::Duplicate("a".into()))
+        );
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let mut r = ModelRegistry::default();
+        assert!(matches!(
+            r.register_gemv("a", vec![0; 5], 2, 2),
+            Err(RegistryError::Shape { .. })
+        ));
+        let l1 = Layer::new(vec![0; 8], vec![0; 2], 2, 4);
+        let l2 = Layer::new(vec![0; 9], vec![0; 3], 3, 3); // in 3 != out 2
+        assert!(matches!(
+            r.register_mlp("m", vec![l1, l2], vec![0.5]),
+            Err(RegistryError::Shape { what: "layer chain", .. })
+        ));
+    }
+
+    #[test]
+    fn mlp_dims() {
+        let mut r = ModelRegistry::default();
+        let l1 = Layer::new(vec![0; 8], vec![0; 2], 2, 4);
+        let l2 = Layer::new(vec![0; 6], vec![0; 3], 3, 2);
+        r.register_mlp("m", vec![l1, l2], vec![0.5]).unwrap();
+        let m = r.get("m").unwrap();
+        assert_eq!((m.input_dim(), m.output_dim()), (4, 3));
+    }
+}

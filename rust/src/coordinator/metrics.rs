@@ -1,0 +1,112 @@
+//! Coordinator metrics: lock-free counters + a coarse latency
+//! histogram (power-of-two microsecond buckets).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 24; // 1us .. ~8s in powers of two
+
+/// Shared metrics sink (one per coordinator, updated by all workers).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub sim_cycles: u64,
+    pub latency_counts: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn record_latency_us(&self, us: u64) {
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            latency_counts: self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Approximate latency percentile (upper bucket bound, us).
+    pub fn latency_percentile_us(&self, pct: f64) -> u64 {
+        let total: u64 = self.latency_counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * pct / 100.0).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.latency_counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Mean requests per batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn latency_buckets_and_percentiles() {
+        let m = Metrics::default();
+        for us in [1, 2, 3, 100, 100, 100, 5000] {
+            m.record_latency_us(us);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_counts.iter().sum::<u64>(), 7);
+        let p50 = s.latency_percentile_us(50.0);
+        assert!(p50 >= 64 && p50 <= 256, "p50 {p50}");
+        assert!(s.latency_percentile_us(99.0) >= 4096);
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.batches.fetch_add(1, Ordering::Relaxed);
+        m.batched_requests.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert!((s.mean_batch_size() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_percentile_is_zero() {
+        assert_eq!(Metrics::default().snapshot().latency_percentile_us(99.0), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The L3 coordinator: an asynchronous GEMV/MLP serving front-end over
+//! a pool of simulated IMAGine engines.
+//!
+//! Requests are routed by model affinity (each worker keeps compiled
+//! `GemvProgram`s hot for its models), dynamically batched inside each
+//! worker, executed on the worker's engine, and optionally cross-
+//! checked against the PJRT golden artifacts. Built on std threads +
+//! channels (this environment has no async runtime crate; the event
+//! loop is in-repo by design — see Cargo.toml note).
+
+pub mod server;
+pub mod batcher;
+pub mod router;
+pub mod metrics;
+pub mod frontend;
+
+pub use server::{Coordinator, CoordinatorConfig, Request, Response, SubmitError};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use batcher::BatchPolicy;
+pub use frontend::ModelRegistry;

@@ -1,0 +1,62 @@
+//! Request router: model-affinity routing keeps each worker's compiled
+//! `GemvProgram` cache and staged weights hot for the models it owns.
+
+/// Routes requests to `workers` queues by model-name affinity.
+#[derive(Debug, Clone)]
+pub struct Router {
+    workers: usize,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Router { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// FNV-1a over the model name — stable across runs so a model's
+    /// programs compile on exactly one worker.
+    pub fn route(&self, model: &str) -> usize {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in model.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (h % self.workers as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let r = Router::new(4);
+        for model in ["mlp", "gemv_64", "gemv_256", "x"] {
+            let w = r.route(model);
+            assert!(w < 4);
+            assert_eq!(w, r.route(model), "stable for {model}");
+        }
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let r = Router::new(1);
+        assert_eq!(r.route("anything"), 0);
+    }
+
+    #[test]
+    fn spreads_across_workers() {
+        let r = Router::new(8);
+        let names: Vec<String> = (0..64).map(|i| format!("model-{i}")).collect();
+        let mut used = std::collections::BTreeSet::new();
+        for n in &names {
+            used.insert(r.route(n));
+        }
+        assert!(used.len() >= 4, "only {used:?}");
+    }
+}

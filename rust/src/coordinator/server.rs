@@ -1,0 +1,384 @@
+//! The coordinator server: worker pool, request lifecycle, shutdown.
+
+use super::batcher::{group_by_model, BatchPolicy};
+use super::frontend::{Model, ModelRegistry, RegistryError};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::Router;
+use crate::engine::EngineConfig;
+use crate::gemv::scheduler::GemvScheduler;
+use crate::sim::U55_FMAX_MHZ;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    pub engine: EngineConfig,
+    /// Operand precision served by the pool.
+    pub precision: usize,
+    /// Booth radix (2 or 4).
+    pub radix: u8,
+    /// Modeled hardware clock for latency reporting (MHz).
+    pub clock_mhz: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy::default(),
+            engine: EngineConfig::small(),
+            precision: 8,
+            radix: 2,
+            clock_mhz: U55_FMAX_MHZ,
+        }
+    }
+}
+
+/// A GEMV/MLP inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub model: String,
+    pub x: Vec<i64>,
+}
+
+/// The response with simulation-derived timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub y: Vec<i64>,
+    /// Engine cycles this request's execution consumed.
+    pub cycles: u64,
+    /// Modeled on-hardware time at the configured clock (us).
+    pub device_us: f64,
+    /// Wall-clock host latency through the coordinator (us).
+    pub host_us: f64,
+    /// Requests co-batched with this one (including itself).
+    pub batch_size: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("registry: {0}")]
+    Registry(#[from] RegistryError),
+    #[error("input dim mismatch for '{model}': expected {expected}, got {got}")]
+    InputDim { model: String, expected: usize, got: usize },
+    #[error("coordinator is shut down")]
+    Closed,
+    #[error("execution failed: {0}")]
+    Exec(String),
+}
+
+enum Job {
+    Run {
+        req: Request,
+        enqueued: Instant,
+        reply: Sender<Result<Response, SubmitError>>,
+    },
+    Stop,
+}
+
+/// The coordinator: routes requests to engine workers.
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    registry: ModelRegistry,
+    router: Router,
+    queues: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Build the worker pool. Models must be registered before
+    /// `start`; the registry snapshot is shared with the workers.
+    pub fn start(config: CoordinatorConfig, registry: ModelRegistry) -> Self {
+        let metrics = Arc::new(Metrics::default());
+        let router = Router::new(config.workers);
+        let mut queues = Vec::with_capacity(config.workers);
+        let mut handles = Vec::with_capacity(config.workers);
+        for wid in 0..config.workers {
+            let (tx, rx) = channel::<Job>();
+            let cfg = config.clone();
+            let reg = registry.clone();
+            let met = metrics.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("imagine-worker-{wid}"))
+                    .spawn(move || worker_loop(cfg, reg, met, rx))
+                    .expect("spawn worker"),
+            );
+            queues.push(tx);
+        }
+        Coordinator { config, registry, router, queues, handles, metrics }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// Submit a request; returns the reply channel immediately.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response, SubmitError>>, SubmitError> {
+        let model = self.registry.get(&req.model)?;
+        if model.input_dim() != req.x.len() {
+            return Err(SubmitError::InputDim {
+                model: req.model.clone(),
+                expected: model.input_dim(),
+                got: req.x.len(),
+            });
+        }
+        let (reply, rx) = channel();
+        let worker = self.router.route(&req.model);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.queues[worker]
+            .send(Job::Run { req, enqueued: Instant::now(), reply })
+            .map_err(|_| SubmitError::Closed)?;
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: Request) -> Result<Response, SubmitError> {
+        self.submit(req)?.recv().map_err(|_| SubmitError::Closed)?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        for q in &self.queues {
+            let _ = q.send(Job::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn worker_loop(
+    cfg: CoordinatorConfig,
+    registry: ModelRegistry,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Job>,
+) {
+    let mut sched = GemvScheduler::new(cfg.engine);
+    'outer: loop {
+        // block for the first job
+        let first = match rx.recv() {
+            Ok(Job::Run { req, enqueued, reply }) => (req, enqueued, reply),
+            _ => break,
+        };
+        // dynamic batching: drain up to max_batch within the window
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch.window;
+        while batch.len() < cfg.batch.max_batch {
+            let now = Instant::now();
+            let job = if cfg.batch.window.is_zero() || now >= deadline {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            };
+            match job {
+                Job::Run { req, enqueued, reply } => batch.push((req, enqueued, reply)),
+                Job::Stop => {
+                    execute_batch(&cfg, &registry, &metrics, &mut sched, batch);
+                    break 'outer;
+                }
+            }
+        }
+        execute_batch(&cfg, &registry, &metrics, &mut sched, batch);
+    }
+}
+
+fn execute_batch(
+    cfg: &CoordinatorConfig,
+    registry: &ModelRegistry,
+    metrics: &Arc<Metrics>,
+    sched: &mut GemvScheduler,
+    batch: Vec<(Request, Instant, Sender<Result<Response, SubmitError>>)>,
+) {
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batched_requests
+        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    let batch_size = batch.len();
+    for (model_name, idxs) in group_by_model(&batch, |(req, _, _)| req.model.as_str()) {
+        let model = match registry.get(model_name) {
+            Ok(m) => m.clone(),
+            Err(e) => {
+                for &i in &idxs {
+                    let _ = batch[i].2.send(Err(SubmitError::Registry(e.clone_light())));
+                }
+                metrics.failed.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                continue;
+            }
+        };
+        for &i in &idxs {
+            let (req, enqueued, reply) = &batch[i];
+            let result = run_one(cfg, &model, sched, &req.x).map(|(y, cycles)| {
+                let host_us = enqueued.elapsed().as_secs_f64() * 1e6;
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                metrics.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+                metrics.record_latency_us(host_us as u64);
+                Response {
+                    y,
+                    cycles,
+                    device_us: cycles as f64 / cfg.clock_mhz,
+                    host_us,
+                    batch_size,
+                }
+            });
+            if result.is_err() {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            let _ = reply.send(result);
+        }
+    }
+}
+
+fn run_one(
+    cfg: &CoordinatorConfig,
+    model: &Model,
+    sched: &mut GemvScheduler,
+    x: &[i64],
+) -> Result<(Vec<i64>, u64), SubmitError> {
+    match model {
+        Model::Gemv { w, m, n } => sched
+            // Arc address as the residency token: co-batched requests
+            // for the same model skip matrix staging entirely.
+            .gemv_resident(
+                std::sync::Arc::as_ptr(w) as u64, w, x, *m, *n,
+                cfg.precision, cfg.radix,
+            )
+            .map(|(y, s)| (y, s.cycles))
+            .map_err(|e| SubmitError::Exec(e.to_string())),
+        Model::Mlp { layers, scales } => sched
+            .mlp_forward(layers, x, scales, cfg.precision, cfg.radix)
+            .map(|(y, s)| (y, s.cycles))
+            .map_err(|e| SubmitError::Exec(e.to_string())),
+    }
+}
+
+impl RegistryError {
+    /// Cheap clone for fanning an error out to several requests.
+    fn clone_light(&self) -> RegistryError {
+        match self {
+            RegistryError::Duplicate(s) => RegistryError::Duplicate(s.clone()),
+            RegistryError::NotFound(s) => RegistryError::NotFound(s.clone()),
+            RegistryError::Shape { name, what, expected, got } => RegistryError::Shape {
+                name: name.clone(),
+                what,
+                expected: *expected,
+                got: *got,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn registry_with_gemv(m: usize, n: usize) -> (ModelRegistry, Vec<i64>) {
+        let mut rng = XorShift::new(1);
+        let w = rng.vec_i64(m * n, -16, 15);
+        let mut reg = ModelRegistry::default();
+        reg.register_gemv("g", w.clone(), m, n).unwrap();
+        (reg, w)
+    }
+
+    fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+        (0..m)
+            .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let (reg, w) = registry_with_gemv(16, 16);
+        let coord = Coordinator::start(CoordinatorConfig::default(), reg);
+        let mut rng = XorShift::new(2);
+        for _ in 0..4 {
+            let x = rng.vec_i64(16, -100, 100);
+            let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+            assert_eq!(resp.y, host_gemv(&w, &x, 16, 16));
+            assert!(resp.cycles > 0);
+            assert!(resp.device_us > 0.0);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let (reg, w) = registry_with_gemv(8, 8);
+        let cfg = CoordinatorConfig { workers: 3, ..Default::default() };
+        let coord = Coordinator::start(cfg, reg);
+        let mut rng = XorShift::new(3);
+        let cases: Vec<Vec<i64>> = (0..24).map(|_| rng.vec_i64(8, -50, 50)).collect();
+        let rxs: Vec<_> = cases
+            .iter()
+            .map(|x| coord.submit(Request { model: "g".into(), x: x.clone() }).unwrap())
+            .collect();
+        for (x, rx) in cases.iter().zip(rxs) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.y, host_gemv(&w, x, 8, 8));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 24);
+        assert_eq!(m.submitted, 24);
+    }
+
+    #[test]
+    fn input_dim_validated_at_submit() {
+        let (reg, _) = registry_with_gemv(8, 8);
+        let coord = Coordinator::start(CoordinatorConfig::default(), reg);
+        let err = coord.submit(Request { model: "g".into(), x: vec![0; 3] });
+        assert!(matches!(err, Err(SubmitError::InputDim { expected: 8, got: 3, .. })));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), ModelRegistry::default());
+        assert!(matches!(
+            coord.submit(Request { model: "x".into(), x: vec![] }),
+            Err(SubmitError::Registry(_))
+        ));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        let (reg, _) = registry_with_gemv(8, 8);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(50) },
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg, reg);
+        let rxs: Vec<_> = (0..8)
+            .map(|_| coord.submit(Request { model: "g".into(), x: vec![1; 8] }).unwrap())
+            .collect();
+        let mut max_batch = 0;
+        for rx in rxs {
+            max_batch = max_batch.max(rx.recv().unwrap().unwrap().batch_size);
+        }
+        let m = coord.shutdown();
+        assert!(max_batch > 1, "no batching observed");
+        assert!(m.mean_batch_size() > 1.0, "{m:?}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Engine geometry configuration.
+
+use crate::pim::PicasoVariant;
+use crate::tile::{FanoutTree, PipelineStages, TileGeom};
+
+
+/// Geometry + pipeline configuration of one IMAGine engine instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineConfig {
+    /// Tile grid: rows of tiles (vertical, adds PE rows).
+    pub tile_rows: usize,
+    /// Tile grid: columns of tiles (horizontal, adds east->west chain).
+    pub tile_cols: usize,
+    pub tile: TileGeom,
+    /// Controller pipeline stages (Fig 3(a) A/B/C).
+    pub stages: PipelineStages,
+    /// Top-level fanout tree from the input registers to the tiles.
+    pub top_fanout: FanoutTree,
+}
+
+impl EngineConfig {
+    /// Full Alveo U55 build: 168 tiles (12 x 14), 64,512 PEs, 100% of
+    /// the 2016 BRAM36 — the paper's flagship configuration.
+    pub fn u55() -> Self {
+        let tile = TileGeom::u55();
+        EngineConfig {
+            tile_rows: 12,
+            tile_cols: 14,
+            tile,
+            stages: PipelineStages::U55_FINAL,
+            top_fanout: FanoutTree {
+                levels: FanoutTree::levels_for(12 * 14, 4),
+                fanout: 4,
+                signals: crate::tile::tile::CONTROL_SIGNALS,
+            },
+        }
+    }
+
+    /// A small engine for unit tests and quick examples: 2x2 tiles.
+    pub fn small() -> Self {
+        EngineConfig { tile_rows: 2, tile_cols: 2, ..Self::u55() }
+    }
+
+    /// A single-tile engine (the §V-A tile study).
+    pub fn single_tile() -> Self {
+        EngineConfig { tile_rows: 1, tile_cols: 1, ..Self::u55() }
+    }
+
+    /// Use the custom-BRAM PiCaSO-CB block (IMAGine-CB of Table V).
+    pub fn with_variant(mut self, v: PicasoVariant) -> Self {
+        self.tile = TileGeom { block: crate::pim::BlockGeom::for_variant(v), ..self.tile };
+        self
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.tile_rows * self.tile_cols
+    }
+
+    /// Vertical PE lanes (matrix rows processed per pass).
+    pub fn pe_rows(&self) -> usize {
+        self.tile_rows * self.tile.pe_rows()
+    }
+
+    /// Horizontal block columns (the east->west accumulation chain).
+    pub fn block_cols(&self) -> usize {
+        self.tile_cols * self.tile.block_cols
+    }
+
+    pub fn total_pes(&self) -> usize {
+        self.pe_rows() * self.block_cols()
+    }
+
+    pub fn total_bram36(&self) -> u32 {
+        self.tile.bram36() * self.tiles() as u32
+    }
+
+    /// Pipeline fill latency: input regs + top fanout + controller
+    /// stages + tile fanout.
+    pub fn fill_latency(&self) -> u64 {
+        1 + self.top_fanout.latency()
+            + self.stages.depth() as u64
+            + self.tile.fanout_latency()
+    }
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self::u55()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55_is_the_paper_flagship() {
+        let c = EngineConfig::u55();
+        assert_eq!(c.tiles(), 168);
+        assert_eq!(c.total_pes(), 64_512); // "64K PEs"
+        assert_eq!(c.total_bram36(), 2016); // 100% of U55 BRAM
+    }
+
+    #[test]
+    fn small_engine_geometry() {
+        let c = EngineConfig::small();
+        assert_eq!(c.pe_rows(), 2 * 192);
+        assert_eq!(c.block_cols(), 4);
+    }
+
+    #[test]
+    fn fill_latency_composition() {
+        let c = EngineConfig::u55();
+        // 1 (input regs) + 4 (top fanout: 4^4 >= 168) + 1 (stage A) + 2
+        assert_eq!(c.fill_latency(), 1 + 4 + 1 + 2);
+    }
+}

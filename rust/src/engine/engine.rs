@@ -1,0 +1,428 @@
+//! Cycle-accurate execution of IMAGine programs.
+//!
+//! The engine is SIMD: one instruction stream drives every tile in
+//! lockstep, so simulation keeps one [`Controller`] (timing + Op-Params)
+//! and one [`PlaneBuf`] per *block column* — the granularity at which
+//! data differs (SELBLK masks columns; the east->west chain moves
+//! accumulators between columns).
+
+use crate::isa::{Instr, Opcode, Program};
+use crate::pim::{alu, PlaneBuf, RegFile, REGFILE_BITS};
+use crate::sim::{ExecStats, Trace};
+use crate::tile::controller::{Controller, ControllerError};
+use super::config::EngineConfig;
+
+/// Block-column select value meaning "all columns" (SELBLK 0x3FF).
+pub const SEL_ALL: u16 = 0x3FF;
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("controller fault: {0}\nrecent trace:\n{1}")]
+    Controller(ControllerError, String),
+    #[error("register fault: {0}")]
+    Reg(#[from] crate::pim::regfile::RegError),
+    #[error("SELBLK {0} out of range: engine has {1} block columns")]
+    BadColumn(u16, usize),
+    #[error("program not sealed with HALT")]
+    NotHalted,
+    #[error("output FIFO read past end")]
+    FifoEmpty,
+}
+
+/// A simulated IMAGine engine instance.
+pub struct Engine {
+    pub config: EngineConfig,
+    /// One register-file plane buffer per block column.
+    columns: Vec<PlaneBuf>,
+    /// Output shift-register column (paper Fig 2(a)), staged by READ.
+    shift_col: Vec<i64>,
+    /// FIFO-out: elements shifted off the top by RSHIFT.
+    fifo_out: Vec<i64>,
+    /// Currently selected block column (None = all).
+    sel: Option<usize>,
+    /// LDI staging value (sign-extended imm10).
+    staged: i64,
+    controller: Controller,
+    stats: ExecStats,
+    trace: Trace,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Self {
+        let cols = config.block_cols();
+        let lanes = config.pe_rows();
+        Engine {
+            config,
+            columns: (0..cols).map(|_| PlaneBuf::new(REGFILE_BITS, lanes)).collect(),
+            shift_col: vec![0; lanes],
+            fifo_out: Vec::new(),
+            sel: None,
+            staged: 0,
+            controller: Controller::new(config.stages),
+            stats: ExecStats::default(),
+            trace: Trace::off(),
+        }
+    }
+
+    /// Enable a bounded instruction trace (for debugging failures).
+    pub fn with_trace(mut self, cap: usize) -> Self {
+        self.trace = Trace::new(cap);
+        self
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    pub fn controller(&self) -> &Controller {
+        &self.controller
+    }
+
+    pub fn block_cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn pe_rows(&self) -> usize {
+        self.config.pe_rows()
+    }
+
+    /// Reset data, controller and stats (keep geometry).
+    pub fn reset(&mut self) {
+        let cols = self.columns.len();
+        let lanes = self.pe_rows();
+        self.columns = (0..cols).map(|_| PlaneBuf::new(REGFILE_BITS, lanes)).collect();
+        self.shift_col = vec![0; lanes];
+        self.fifo_out.clear();
+        self.sel = None;
+        self.staged = 0;
+        self.controller = Controller::new(self.config.stages);
+        self.stats = ExecStats::default();
+    }
+
+    fn selected(&self) -> std::ops::Range<usize> {
+        match self.sel {
+            Some(c) => c..c + 1,
+            None => 0..self.columns.len(),
+        }
+    }
+
+    /// Execute a sealed program to completion. Returns the run's stats.
+    pub fn execute(&mut self, prog: &Program) -> Result<ExecStats, EngineError> {
+        if !prog.is_halted() {
+            return Err(EngineError::NotHalted);
+        }
+        self.controller.restart();
+        let mut run = ExecStats {
+            fill_latency: self.config.fill_latency(),
+            cycles: self.config.fill_latency(),
+            ..ExecStats::default()
+        };
+        for instr in &prog.instrs {
+            let cycles = self
+                .controller
+                .issue(instr)
+                .map_err(|e| EngineError::Controller(e, self.trace.dump_tail(16)))?;
+            self.apply(instr)?;
+            run.record(instr.op, cycles);
+            self.trace.push(run.cycles, *instr);
+        }
+        run.plane_word_ops = self.estimate_plane_ops(&run);
+        self.stats.merge(&run);
+        Ok(run)
+    }
+
+    /// Apply one instruction's data effects.
+    fn apply(&mut self, instr: &Instr) -> Result<(), EngineError> {
+        let p = self.controller.params.precision;
+        let aw = self.controller.params.acc_width;
+        let radix = self.controller.params.radix;
+        match instr.op {
+            Opcode::Nop | Opcode::Sync | Opcode::Halt | Opcode::Setp => {}
+            Opcode::Selblk => {
+                if instr.imm == SEL_ALL {
+                    self.sel = None;
+                } else if (instr.imm as usize) < self.columns.len() {
+                    self.sel = Some(instr.imm as usize);
+                } else {
+                    return Err(EngineError::BadColumn(instr.imm, self.columns.len()));
+                }
+            }
+            Opcode::Ldi | Opcode::Write => {
+                if instr.op == Opcode::Ldi {
+                    // sign-extend the 10-bit immediate
+                    self.staged = ((instr.imm as i64) << 54) >> 54;
+                }
+                // materialize sign-extended through the 32-bit register
+                // (implicit in hardware via the ALU's sign extension)
+                let r = RegFile::resolve(instr.rd, crate::pim::REG_BITS)?;
+                let v = self.staged;
+                for c in self.selected() {
+                    self.columns[c].broadcast(r.base, r.width, v);
+                }
+            }
+            Opcode::Read => {
+                let r = RegFile::resolve(instr.rs1, aw)?;
+                self.shift_col = self.columns[0].read_all(r.base, r.width);
+            }
+            Opcode::Rshift => {
+                if self.shift_col.is_empty() {
+                    return Err(EngineError::FifoEmpty);
+                }
+                self.fifo_out.push(self.shift_col.remove(0));
+            }
+            Opcode::Mov => {
+                let d = RegFile::resolve(instr.rd, aw)?;
+                let s = RegFile::resolve(instr.rs1, aw)?;
+                for c in self.selected() {
+                    alu::mov(&mut self.columns[c], d.as_tuple(), s.as_tuple());
+                }
+            }
+            Opcode::Add | Opcode::Sub => {
+                let d = RegFile::resolve(instr.rd, aw)?;
+                let a = RegFile::resolve(instr.rs1, aw)?;
+                let b = RegFile::resolve(instr.rs2, aw)?;
+                let sub = instr.op == Opcode::Sub;
+                for c in self.selected() {
+                    alu::add_sub(&mut self.columns[c], d.as_tuple(), a.as_tuple(), b.as_tuple(), sub);
+                }
+            }
+            Opcode::Mult | Opcode::Mac => {
+                let d = RegFile::resolve(instr.rd, aw)?;
+                let a = RegFile::resolve(instr.rs1, p)?;
+                let b = RegFile::resolve(instr.rs2, p)?;
+                let clear = instr.op == Opcode::Mult;
+                // imm > 0: operand-pair pointer — the PiCaSO-IM third
+                // address register (paper §IV-D) fetches spill element
+                // pair (imm-1) into the staging registers, overlapped
+                // with the previous op (zero additional cycles).
+                let spill = instr.imm.checked_sub(1).map(|e| e as usize);
+                for c in self.selected() {
+                    if let Some(e) = spill {
+                        self.stage_spill(c, crate::gemv::mapper::SPILL_FIRST_REG, p, 2 * e, instr.rs1)?;
+                        self.stage_spill(c, crate::gemv::mapper::SPILL_FIRST_REG, p, 2 * e + 1, instr.rs2)?;
+                    }
+                    let col = &mut self.columns[c];
+                    if radix == 4 {
+                        alu::mac_booth4(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear);
+                    } else {
+                        alu::mac_radix2(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear);
+                    }
+                }
+            }
+            Opcode::Accum => {
+                let r = RegFile::resolve(instr.rd, aw)?;
+                let hops = instr.imm.max(1) as usize;
+                for _ in 0..hops {
+                    self.accum_hop(r.base, r.width);
+                }
+            }
+            Opcode::Fold => {
+                let r = RegFile::resolve(instr.rd, aw)?;
+                let level = instr.imm as usize;
+                let group = crate::pim::PES_PER_BLOCK << level;
+                for c in self.selected() {
+                    alu::fold_step(&mut self.columns[c], r.base, r.width, group);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One systolic east->west hop: every column adds the accumulator
+    /// arriving from its east neighbour, easternmost clears (it has
+    /// passed its value west).
+    fn accum_hop(&mut self, base: usize, width: usize) {
+        let n = self.columns.len();
+        for c in 0..n - 1 {
+            let (west, east) = self.columns.split_at_mut(c + 1);
+            alu::accum_from(&mut west[c], &east[0], base, width);
+            east[0].clear_planes(base, width);
+        }
+    }
+
+    /// Rough count of u64 plane-word operations this run performed in
+    /// the bitplane ALU (the simulator work metric for §Perf).
+    fn estimate_plane_ops(&self, run: &ExecStats) -> u64 {
+        let words = self.pe_rows().div_ceil(64) as u64;
+        // every busy cycle touches ~1 plane per active column
+        run.busy_cycles() * words * self.columns.len() as u64
+    }
+
+    // -- host data port (the shell DMA; not on the instruction path) ---
+
+    /// Write per-lane values into logical register `reg` of column `col`.
+    pub fn write_reg_lanes(&mut self, col: usize, reg: u8, width: usize, values: &[i64]) -> Result<(), EngineError> {
+        let r = RegFile::resolve(reg, width)?;
+        self.columns[col].write_all(r.base, r.width, values);
+        Ok(())
+    }
+
+    /// Read per-lane values of logical register `reg` in column `col`.
+    pub fn read_reg_lanes(&self, col: usize, reg: u8, width: usize) -> Result<Vec<i64>, EngineError> {
+        let r = RegFile::resolve(reg, width)?;
+        Ok(self.columns[col].read_all(r.base, r.width))
+    }
+
+    /// Write one `p`-bit matrix element to the spill region after
+    /// `first_reg` (element `idx`, all lanes given by `values`).
+    pub fn write_spill(&mut self, col: usize, first_reg: u8, p: usize, idx: usize, values: &[i64]) {
+        let a = RegFile::spill_addr(first_reg, p, idx);
+        self.columns[col].write_all(a.base, a.width, values);
+    }
+
+    /// Copy spill element `idx` into logical register `reg` — models
+    /// the PE fetching its next matrix element via the third pointer
+    /// register. Zero instruction cost: overlapped with the previous
+    /// MAC by the 3-address schedule (paper §IV-D). Only the element's
+    /// `p` planes move (the consuming MAC reads the operand at width
+    /// `p`; §Perf L3-3).
+    pub fn stage_spill(&mut self, col: usize, first_reg: u8, p: usize, idx: usize, reg: u8) -> Result<(), EngineError> {
+        let a = RegFile::spill_addr(first_reg, p, idx);
+        let r = RegFile::resolve(reg, p)?;
+        for i in 0..p {
+            self.columns[col].copy_plane(a.base + i, r.base + i);
+        }
+        Ok(())
+    }
+
+    /// Drain the FIFO-out contents accumulated by RSHIFT.
+    pub fn drain_fifo(&mut self) -> Vec<i64> {
+        std::mem::take(&mut self.fifo_out)
+    }
+
+    /// Direct accumulator readout of the west-most column (bypasses the
+    /// shift column; used by tests and the coordinator fast path).
+    pub fn read_result(&self, reg: u8, width: usize) -> Result<Vec<i64>, EngineError> {
+        self.read_reg_lanes(0, reg, width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    fn small() -> Engine {
+        Engine::new(EngineConfig::small())
+    }
+
+    #[test]
+    fn ldi_broadcasts_to_selected_column() {
+        let mut e = small();
+        let prog: Program = [
+            Instr::selblk(1),
+            Instr::ldi(2, 37),
+            Instr::selblk(SEL_ALL),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        e.execute(&prog).unwrap();
+        let v1 = e.read_reg_lanes(1, 2, 8).unwrap();
+        let v0 = e.read_reg_lanes(0, 2, 8).unwrap();
+        assert!(v1.iter().all(|&v| v == 37));
+        assert!(v0.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn ldi_sign_extends_imm10() {
+        let mut e = small();
+        // imm10 = 0x3FF = -1 as signed 10-bit
+        let prog: Program = [Instr::ldi(1, 0x3FF), Instr::halt()].into_iter().collect();
+        e.execute(&prog).unwrap();
+        assert!(e.read_reg_lanes(0, 1, 8).unwrap().iter().all(|&v| v == -1));
+    }
+
+    #[test]
+    fn write_replays_staged_value() {
+        let mut e = small();
+        let prog: Program = [
+            Instr::selblk(0),
+            Instr::ldi(1, 99),
+            Instr::selblk(2),
+            Instr::write(1, 0),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        e.execute(&prog).unwrap();
+        assert!(e.read_reg_lanes(2, 1, 8).unwrap().iter().all(|&v| v == 99));
+    }
+
+    #[test]
+    fn mac_then_accum_reduces_east_to_west() {
+        let mut e = small();
+        let lanes = e.pe_rows();
+        let cols = e.block_cols();
+        // per-column data: w = col+1, x = 2 -> product 2*(col+1)
+        for c in 0..cols {
+            e.write_reg_lanes(c, 1, 32, &vec![(c as i64) + 1; lanes]).unwrap();
+            e.write_reg_lanes(c, 2, 32, &vec![2; lanes]).unwrap();
+        }
+        let hops = (cols - 1) as u16;
+        let prog: Program = [
+            Instr::mult(4, 1, 2),
+            Instr::accum(4, hops),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        e.execute(&prog).unwrap();
+        let want: i64 = (1..=cols as i64).map(|v| 2 * v).sum();
+        let got = e.read_result(4, 32).unwrap();
+        assert!(got.iter().all(|&v| v == want), "{got:?} != {want}");
+    }
+
+    #[test]
+    fn readout_through_fifo() {
+        let mut e = small();
+        let lanes = e.pe_rows();
+        let vals: Vec<i64> = (0..lanes as i64).collect();
+        e.write_reg_lanes(0, 5, 32, &vals).unwrap();
+        let mut prog = Program::new();
+        prog.push(Instr::read(5));
+        for _ in 0..4 {
+            prog.push(Instr::rshift());
+        }
+        prog.seal();
+        e.execute(&prog).unwrap();
+        assert_eq!(e.drain_fifo(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bad_selblk_faults() {
+        let mut e = small();
+        let prog: Program = [Instr::selblk(99), Instr::halt()].into_iter().collect();
+        assert!(matches!(e.execute(&prog), Err(EngineError::BadColumn(99, _))));
+    }
+
+    #[test]
+    fn unsealed_program_rejected() {
+        let mut e = small();
+        let prog: Program = [Instr::nop()].into_iter().collect();
+        assert!(matches!(e.execute(&prog), Err(EngineError::NotHalted)));
+    }
+
+    #[test]
+    fn stats_accumulate_across_runs() {
+        let mut e = small();
+        let prog: Program = [Instr::nop(), Instr::halt()].into_iter().collect();
+        e.execute(&prog).unwrap();
+        e.reset();
+        e.execute(&prog).unwrap();
+        assert_eq!(e.stats().instrs, 2);
+    }
+
+    #[test]
+    fn spill_stage_and_mac() {
+        let mut e = small();
+        let lanes = e.pe_rows();
+        let w: Vec<i64> = (0..lanes).map(|l| (l % 11) as i64 - 5).collect();
+        for c in 0..e.block_cols() {
+            e.write_spill(c, 8, 8, 3, &w);
+            e.stage_spill(c, 8, 8, 3, 1).unwrap();
+        }
+        let got = e.read_reg_lanes(0, 1, 8).unwrap();
+        assert_eq!(got, w);
+    }
+}

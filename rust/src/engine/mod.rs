@@ -1,0 +1,9 @@
+//! The top-level IMAGine engine (paper Fig. 2(a)): a 2-D array of GEMV
+//! tiles, input registers, a fanout tree, and the output shift-register
+//! column read through FIFO-out.
+
+pub mod config;
+pub mod engine;
+
+pub use config::EngineConfig;
+pub use engine::{Engine, EngineError, SEL_ALL};

@@ -1,0 +1,341 @@
+//! Instruction generation: MappingPlan -> IMAGine programs, plus the
+//! host-side operand staging and result extraction that the shell DMA
+//! performs around them.
+
+use crate::engine::{Engine, EngineError};
+use crate::isa::{Instr, Program};
+use crate::isa::encode::params;
+use crate::sim::ExecStats;
+use super::mapper::{regs, MappingPlan, SPILL_FIRST_REG};
+
+/// A compiled GEMV: the per-chunk-pass compute programs plus the
+/// reduce/readout program, all derived from one `MappingPlan`.
+#[derive(Debug, Clone)]
+pub struct GemvProgram {
+    pub plan: MappingPlan,
+    /// One compute program per chunk pass (MULT/MAC burst).
+    pub chunk_programs: Vec<Program>,
+    /// Reduction (east->west ACCUM + replica FOLD) and readout.
+    pub reduce_program: Program,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum GemvError {
+    #[error("engine: {0}")]
+    Engine(#[from] EngineError),
+    #[error("operand shape mismatch: expected {expected}, got {got} ({what})")]
+    Shape { what: &'static str, expected: usize, got: usize },
+    #[error("operand value {0} out of range for precision {1}")]
+    Range(i64, usize),
+}
+
+/// Result of one simulated GEMV.
+#[derive(Debug, Clone)]
+pub struct GemvResult {
+    pub y: Vec<i64>,
+    pub stats: ExecStats,
+}
+
+impl GemvProgram {
+    /// Generate the instruction streams for `plan`.
+    pub fn generate(plan: MappingPlan) -> Self {
+        let setp = |prog: &mut Program| {
+            prog.push(Instr::setp(params::PRECISION, plan.precision as u16));
+            prog.push(Instr::setp(params::ACC_WIDTH, plan.acc_width as u16));
+            prog.push(Instr::setp(params::RADIX, plan.radix as u16));
+        };
+
+        let mut chunk_programs = Vec::with_capacity(plan.chunk_passes);
+        for pass in 0..plan.chunk_passes {
+            let mut prog = Program::new();
+            setp(&mut prog);
+            for e in 0..plan.k_per_pe {
+                let ptr = (e + 1) as u16; // operand-pair pointer
+                // first MAC of the first pass clears the accumulator
+                let i = if pass == 0 && e == 0 {
+                    Instr::new(crate::isa::Opcode::Mult, regs::ACC, regs::W, regs::X, ptr)
+                } else {
+                    Instr::new(crate::isa::Opcode::Mac, regs::ACC, regs::W, regs::X, ptr)
+                };
+                prog.push(i);
+            }
+            prog.push(Instr::sync());
+            prog.seal();
+            chunk_programs.push(prog);
+        }
+
+        let mut reduce = Program::new();
+        setp(&mut reduce);
+        if plan.cols_used > 1 {
+            reduce.push(Instr::accum(regs::ACC, (plan.cols_used - 1) as u16));
+        }
+        // combine row replicas: group spacing doubles per step
+        let base_level = plan.spacing_level();
+        for s in 0..plan.fold_steps() {
+            reduce.push(Instr::fold(regs::ACC, (base_level + s) as u16));
+        }
+        reduce.push(Instr::read(regs::ACC));
+        reduce.seal();
+
+        GemvProgram { plan, chunk_programs, reduce_program: reduce }
+    }
+
+    /// Host-side staging: write the w/x spill pairs for `row_pass` /
+    /// `chunk_pass` into every block column.
+    ///
+    /// Matrix row `r` (within this row pass) lives on lane
+    /// `f * replica_spacing + r` for replica `f`; its chunk elements
+    /// interleave as spill pairs (w at 2e, x at 2e+1).
+    pub fn stage_pass(
+        &self,
+        engine: &mut Engine,
+        w: &[i64],
+        x: &[i64],
+        row_pass: usize,
+        chunk_pass: usize,
+    ) -> Result<(), GemvError> {
+        self.stage_parts(engine, w, x, row_pass, chunk_pass, true)
+    }
+
+    /// Staging core. `weights`: also stage the matrix spills (skipped
+    /// on the weight-resident fast path, where the model's planes are
+    /// already in BRAM from a previous request; §Perf L3-4).
+    fn stage_parts(
+        &self,
+        engine: &mut Engine,
+        w: &[i64],
+        x: &[i64],
+        row_pass: usize,
+        chunk_pass: usize,
+        weights: bool,
+    ) -> Result<(), GemvError> {
+        let pl = &self.plan;
+        let lanes = engine.pe_rows();
+        let spacing = pl.replica_spacing();
+        let rows_base = pl.m.min(lanes);
+        let row0 = row_pass * rows_base;
+        let rows_here = rows_base.min(pl.m - row0);
+        let k_chunk = pl.k_per_pe * pl.chunk_passes; // elements per chunk
+        let k = pl.k_per_pe;
+        // lane-major staging buffers (element e of lane l at [e*lanes+l]);
+        // filled with the e-loop innermost so each matrix row is read as
+        // one contiguous slice (§Perf L3-5 — the strided row reads were
+        // the staging hot spot).
+        let mut wbuf = vec![0i64; k * lanes];
+        let mut xbuf = vec![0i64; k * lanes];
+        for c in 0..pl.cols_used.min(engine.block_cols()) {
+            if weights {
+                wbuf.fill(0);
+            }
+            xbuf.fill(0);
+            for f in 0..pl.fold_factor {
+                let g = c * pl.fold_factor + f; // chunk id
+                let j0 = g * k_chunk + chunk_pass * k;
+                if j0 >= pl.n {
+                    continue;
+                }
+                let je = (j0 + k).min(pl.n);
+                for r in 0..rows_here {
+                    let lane = f * spacing + r;
+                    if lane >= lanes {
+                        break;
+                    }
+                    if weights {
+                        let row = &w[(row0 + r) * pl.n + j0..(row0 + r) * pl.n + je];
+                        for (e, &v) in row.iter().enumerate() {
+                            wbuf[e * lanes + lane] = v;
+                        }
+                    }
+                    for (e, &v) in x[j0..je].iter().enumerate() {
+                        xbuf[e * lanes + lane] = v;
+                    }
+                }
+            }
+            for e in 0..k {
+                if weights {
+                    engine.write_spill(
+                        c, SPILL_FIRST_REG, pl.precision, 2 * e,
+                        &wbuf[e * lanes..(e + 1) * lanes],
+                    );
+                }
+                engine.write_spill(
+                    c, SPILL_FIRST_REG, pl.precision, 2 * e + 1,
+                    &xbuf[e * lanes..(e + 1) * lanes],
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute the full GEMV on `engine`: stage, compute, reduce, read.
+    pub fn execute(
+        &self,
+        engine: &mut Engine,
+        w: &[i64],
+        x: &[i64],
+    ) -> Result<GemvResult, GemvError> {
+        self.execute_opts(engine, w, x, false)
+    }
+
+    /// Whether this plan supports the weight-resident fast path (a
+    /// single pass leaves the whole matrix staged in the spill region).
+    pub fn supports_residency(&self) -> bool {
+        self.plan.row_passes == 1 && self.plan.chunk_passes == 1
+    }
+
+    /// Execute with optionally resident weights: when `resident` is
+    /// true the caller guarantees this engine last ran THIS program
+    /// with the SAME matrix, so matrix staging and the engine reset are
+    /// skipped — only the new vector's planes move (the hardware
+    /// analogue: weights stay in BRAM across a served batch).
+    pub fn execute_opts(
+        &self,
+        engine: &mut Engine,
+        w: &[i64],
+        x: &[i64],
+        resident: bool,
+    ) -> Result<GemvResult, GemvError> {
+        let pl = &self.plan;
+        let resident = resident && self.supports_residency();
+        if w.len() != pl.m * pl.n {
+            return Err(GemvError::Shape { what: "matrix", expected: pl.m * pl.n, got: w.len() });
+        }
+        if x.len() != pl.n {
+            return Err(GemvError::Shape { what: "vector", expected: pl.n, got: x.len() });
+        }
+        if !resident {
+            check_range(w, pl.precision)?;
+        }
+        check_range(x, pl.precision)?;
+        let lanes = engine.pe_rows();
+        let rows_base = pl.m.min(lanes);
+        let mut y = Vec::with_capacity(pl.m);
+        let mut stats = ExecStats::default();
+        for row_pass in 0..pl.row_passes {
+            if !resident {
+                engine.reset();
+            }
+            for (chunk_pass, prog) in self.chunk_programs.iter().enumerate() {
+                self.stage_parts(engine, w, x, row_pass, chunk_pass, !resident)?;
+                let s = engine.execute(prog)?;
+                stats.merge(&s);
+            }
+            let s = engine.execute(&self.reduce_program)?;
+            stats.merge(&s);
+            let rows_here = rows_base.min(pl.m - row_pass * rows_base);
+            let out = engine.read_result(regs::ACC, pl.acc_width)?;
+            y.extend(out.into_iter().take(rows_here));
+        }
+        Ok(GemvResult { y, stats })
+    }
+}
+
+fn check_range(vals: &[i64], p: usize) -> Result<(), GemvError> {
+    let half = 1i64 << (p - 1);
+    for &v in vals {
+        if v < -half || v >= half {
+            return Err(GemvError::Range(v, p));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::gemv::mapper::plan;
+    use crate::util::XorShift;
+
+    fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+        (0..m)
+            .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    fn run_case(m: usize, n: usize, p: usize, radix: u8, seed: u64) {
+        let config = EngineConfig::small();
+        let pl = plan(&config, m, n, p, radix);
+        let gp = GemvProgram::generate(pl);
+        let mut engine = Engine::new(config);
+        let half = 1i64 << (p - 1);
+        let mut rng = XorShift::new(seed);
+        let w = rng.vec_i64(m * n, -half, half - 1);
+        let x = rng.vec_i64(n, -half, half - 1);
+        let res = gp.execute(&mut engine, &w, &x).unwrap();
+        assert_eq!(res.y, host_gemv(&w, &x, m, n), "m={m} n={n} p={p} r={radix} plan={pl:?}");
+        assert!(res.stats.cycles > 0);
+    }
+
+    #[test]
+    fn gemv_matches_host_small() {
+        run_case(8, 8, 8, 2, 1);
+        run_case(16, 32, 8, 2, 2);
+        run_case(64, 64, 8, 2, 3);
+    }
+
+    #[test]
+    fn gemv_matches_host_booth() {
+        run_case(16, 16, 8, 4, 4);
+        run_case(64, 48, 8, 4, 5);
+    }
+
+    #[test]
+    fn gemv_matches_host_precisions() {
+        for p in [2, 4, 6, 12] {
+            run_case(24, 24, p, 2, p as u64);
+        }
+    }
+
+    #[test]
+    fn gemv_odd_shapes() {
+        run_case(7, 13, 8, 2, 7);
+        run_case(100, 57, 8, 2, 8);
+        run_case(1, 1, 8, 2, 9);
+    }
+
+    #[test]
+    fn gemv_multi_row_pass() {
+        // small() engine has 384 PE rows; m = 500 forces 2 row passes.
+        run_case(500, 16, 4, 2, 10);
+    }
+
+    #[test]
+    fn shape_errors_reported() {
+        let config = EngineConfig::small();
+        let gp = GemvProgram::generate(plan(&config, 8, 8, 8, 2));
+        let mut e = Engine::new(config);
+        assert!(matches!(
+            gp.execute(&mut e, &[0; 63], &[0; 8]),
+            Err(GemvError::Shape { .. })
+        ));
+        assert!(matches!(
+            gp.execute(&mut e, &[0; 64], &[0; 9]),
+            Err(GemvError::Shape { .. })
+        ));
+    }
+
+    #[test]
+    fn range_errors_reported() {
+        let config = EngineConfig::small();
+        let gp = GemvProgram::generate(plan(&config, 2, 2, 4, 2));
+        let mut e = Engine::new(config);
+        let w = vec![100, 0, 0, 0]; // out of 4-bit range
+        assert!(matches!(
+            gp.execute(&mut e, &w, &[0, 0]),
+            Err(GemvError::Range(100, 4))
+        ));
+    }
+
+    #[test]
+    fn program_structure() {
+        let config = EngineConfig::u55();
+        let pl = plan(&config, 1024, 1024, 8, 2);
+        let gp = GemvProgram::generate(pl);
+        assert_eq!(gp.chunk_programs.len(), pl.chunk_passes);
+        // one MULT/MAC per element per pass
+        let (_, multi) = gp.chunk_programs[0].driver_mix();
+        assert_eq!(multi, pl.k_per_pe);
+        assert!(gp.reduce_program.is_halted());
+    }
+}

@@ -1,0 +1,276 @@
+//! Matrix -> PE-array mapping planner.
+//!
+//! A D_m x D_n GEMV maps onto the engine as follows:
+//!
+//! * matrix rows -> PE rows (lanes); `row_passes` passes if D_m exceeds
+//!   the array height R;
+//! * matrix columns -> split into `cols_used * fold_factor` chunks of
+//!   `k_per_pe` elements: `cols_used` east->west block columns, each
+//!   optionally *row-replicated* `fold_factor` times when the matrix is
+//!   shorter than the array (idle PE rows take extra column chunks and
+//!   a log2(fold) binary-hopping FOLD combines them — the PiCaSO NEWS
+//!   heritage network the ISA retains);
+//! * each PE stores its w-chunk and x-chunk in its register column
+//!   (capacity bound `K_MAX = spill_bits / 2p`), `chunk_passes` passes
+//!   if the chunk exceeds capacity.
+//!
+//! Accumulation always traverses the *full* east->west chain into the
+//! left-most column (paper Fig 2: "ultimately accumulating in the
+//! left-most PE column of the left-most GEMV tile") — the chain length
+//! is fixed by the geometry, not the workload. Operands (weights, the
+//! x-chunks, biases) are DMA'd through the BRAM write ports by the
+//! shell (the engine's host data port), so vector load is
+//! plane-parallel across columns and overlaps the MAC burst.
+//! The same plan drives both the analytic latency model
+//! (`baselines::imagine_model`) and the instruction generator
+//! (`gemv::codegen`); tests in `rust/tests/` assert they agree.
+
+use crate::engine::EngineConfig;
+use crate::pim::alu::cost;
+use crate::pim::{REGFILE_BITS, REG_BITS};
+use crate::tile::params::OpParams;
+
+/// Registers reserved for working state (acc spill x2, w stage, x stage,
+/// plus 4 scratch): the spill region for matrix/vector storage starts
+/// after these.
+pub const RESERVED_REGS: usize = 8;
+/// First spill register index.
+pub const SPILL_FIRST_REG: u8 = RESERVED_REGS as u8;
+
+/// Well-known working registers used by codegen.
+pub mod regs {
+    /// Accumulator (acc_width wide, may spill into r5).
+    pub const ACC: u8 = 4;
+    /// Staged matrix element.
+    pub const W: u8 = 1;
+    /// Staged vector element.
+    pub const X: u8 = 2;
+    /// Scratch.
+    pub const TMP: u8 = 6;
+}
+
+/// A resolved mapping of one GEMV onto the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappingPlan {
+    pub m: usize,
+    pub n: usize,
+    pub precision: usize,
+    pub acc_width: usize,
+    /// Booth radix (2 or 4 — 4 is the slice4 variant).
+    pub radix: u8,
+    /// Block columns participating (1..=C).
+    pub cols_used: usize,
+    /// Row-replication factor (extra column chunks on idle PE rows).
+    pub fold_factor: usize,
+    /// Matrix elements per PE per chunk pass.
+    pub k_per_pe: usize,
+    /// Passes over the row dimension (m > R).
+    pub row_passes: usize,
+    /// Passes over the chunk dimension (k > capacity).
+    pub chunk_passes: usize,
+    /// Active PE rows per pass (m rows x fold replicas).
+    pub active_rows: usize,
+}
+
+impl MappingPlan {
+    /// Max matrix+vector elements a PE stores at precision `p`.
+    pub fn k_max(p: usize) -> usize {
+        (REGFILE_BITS - RESERVED_REGS * REG_BITS) / (2 * p)
+    }
+
+    /// Per-MAC cycle cost (incl. the multicycle driver's +1).
+    pub fn mac_cost(&self) -> u64 {
+        let c = match self.radix {
+            4 => cost::mac_booth4(self.precision, self.acc_width),
+            _ => cost::mac_radix2(self.precision, self.acc_width),
+        };
+        c + 1
+    }
+
+    /// East->west accumulation hop cost; the slice4 variant's 4-bit
+    /// sliced network pipelines the accumulator in nibbles.
+    pub fn hop_cost(&self) -> u64 {
+        if self.radix == 4 {
+            cost::accum_hop(self.acc_width.div_ceil(4) + 3)
+        } else {
+            cost::accum_hop(self.acc_width)
+        }
+    }
+
+    /// Matrix rows per replica group (lanes each replica occupies
+    /// before alignment).
+    pub fn rows_base(&self) -> usize {
+        self.active_rows / self.fold_factor
+    }
+
+    /// Lane spacing between row replicas: the smallest power-of-two
+    /// multiple of the block height (16 PEs) that holds `rows_base`,
+    /// so the ISA's FOLD (group = 16 << level) can combine replicas.
+    pub fn replica_spacing(&self) -> usize {
+        let mut s = crate::pim::PES_PER_BLOCK;
+        while s < self.rows_base() {
+            s *= 2;
+        }
+        s
+    }
+
+    /// FOLD level addressing one replica group (16 << level == spacing).
+    pub fn spacing_level(&self) -> u64 {
+        (self.replica_spacing() / crate::pim::PES_PER_BLOCK).trailing_zeros() as u64
+    }
+
+    /// FOLD steps combining the row replicas (log2(fold_factor)).
+    pub fn fold_steps(&self) -> u64 {
+        (usize::BITS - (self.fold_factor - 1).leading_zeros()) as u64
+    }
+
+    /// Cycle estimate of one chunk pass: MAC burst (the next x-chunk's
+    /// plane-parallel DMA load is double-buffered against it) +
+    /// reduction chain + replica fold.
+    pub fn pass_cycles(&self) -> u64 {
+        let compute = (self.k_per_pe as u64) * self.mac_cost();
+        // next chunk's x planes: k elements x p planes via write ports
+        let vload = (self.k_per_pe * self.precision) as u64 + 2;
+        let reduce = (self.cols_used as u64 - 1) * self.hop_cost();
+        let fold = self.fold_steps() * self.hop_cost();
+        compute.max(vload) + reduce + fold
+    }
+
+    /// Result readout: stage the accumulator column then shift one
+    /// element per cycle through FIFO-out. In steady state this
+    /// overlaps the next GEMV's MAC burst, so `total_cycles` excludes
+    /// it (the simulator measures it separately).
+    pub fn readout_cycles(&self) -> u64 {
+        self.acc_width as u64 + self.m.min(self.active_rows) as u64
+    }
+
+    /// Total cycle estimate for the whole GEMV (excluding pipeline
+    /// fill, which the engine adds once per program, and readout,
+    /// which overlaps the next request in steady state).
+    pub fn total_cycles(&self) -> u64 {
+        let passes = (self.row_passes * self.chunk_passes) as u64;
+        passes * self.pass_cycles()
+    }
+}
+
+/// Plan a `m x n` GEMV at precision `p` on `config`. The full
+/// east->west chain participates; idle PE rows take replicated column
+/// chunks combined by the FOLD network.
+pub fn plan(config: &EngineConfig, m: usize, n: usize, p: usize, radix: u8) -> MappingPlan {
+    assert!(m > 0 && n > 0, "empty GEMV");
+    assert!((2..=16).contains(&p), "precision {p}");
+    let r = config.pe_rows();
+    let cols_used = config.block_cols();
+    let aw = OpParams::exact_acc_width(p, n).min(2 * REG_BITS);
+    let k_max = MappingPlan::k_max(p).max(1);
+    let rows_active = m.min(r);
+    let row_passes = m.div_ceil(r);
+    // replica lane spacing: power-of-two multiple of the block height
+    let mut spacing = crate::pim::PES_PER_BLOCK;
+    while spacing < rows_active {
+        spacing *= 2;
+    }
+    // replicas that fit vertically x chunks the columns can absorb
+    let fold = (r / spacing).max(1).min(n.div_ceil(cols_used)).max(1);
+    let chunks = cols_used * fold;
+    let k = n.div_ceil(chunks);
+    let chunk_passes = k.div_ceil(k_max);
+    MappingPlan {
+        m,
+        n,
+        precision: p,
+        acc_width: aw,
+        radix,
+        cols_used,
+        fold_factor: fold,
+        k_per_pe: k.div_ceil(chunk_passes),
+        row_passes,
+        chunk_passes,
+        active_rows: rows_active * fold,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u55() -> EngineConfig {
+        EngineConfig::u55()
+    }
+
+    #[test]
+    fn plan_covers_all_elements() {
+        for (m, n) in [(64, 64), (100, 300), (1024, 1024), (3000, 500)] {
+            let pl = plan(&u55(), m, n, 8, 2);
+            let coverage = pl.cols_used
+                * pl.fold_factor
+                * pl.k_per_pe
+                * pl.chunk_passes;
+            assert!(coverage >= n, "{m}x{n}: covers {coverage} of {n}");
+            assert!(pl.row_passes * u55().pe_rows() >= m);
+        }
+    }
+
+    #[test]
+    fn capacity_respected() {
+        for p in [2, 4, 8, 16] {
+            let pl = plan(&u55(), 2048, 2048, p, 2);
+            assert!(pl.k_per_pe <= MappingPlan::k_max(p), "p={p}: {pl:?}");
+        }
+    }
+
+    #[test]
+    fn small_matrices_replicate_rows() {
+        // At D=64 only 64 of 2304 PE rows hold matrix rows; the planner
+        // fills idle rows with replicated column chunks (FOLD combines).
+        let pl = plan(&u55(), 64, 64, 8, 2);
+        assert_eq!(pl.cols_used, u55().block_cols(), "{pl:?}");
+        assert!(pl.fold_factor > 1, "{pl:?}");
+        assert_eq!(pl.k_per_pe, 1, "{pl:?}");
+    }
+
+    #[test]
+    fn full_chain_always_used() {
+        // Paper Fig 2: accumulation always reaches the left-most column
+        // through the whole east->west chain.
+        for d in [64, 256, 2048] {
+            let pl = plan(&u55(), d, d, 8, 2);
+            assert_eq!(pl.cols_used, u55().block_cols(), "{pl:?}");
+        }
+    }
+
+    #[test]
+    fn booth_plan_is_faster() {
+        let r2 = plan(&u55(), 1024, 1024, 8, 2);
+        let r4 = plan(&u55(), 1024, 1024, 8, 4);
+        assert!(r4.total_cycles() < r2.total_cycles());
+    }
+
+    #[test]
+    fn acc_width_grows_with_n() {
+        let small = plan(&u55(), 64, 64, 8, 2);
+        let large = plan(&u55(), 2048, 2048, 8, 2);
+        assert!(large.acc_width > small.acc_width);
+        assert!(large.acc_width <= 64);
+    }
+
+    #[test]
+    fn cycles_monotone_in_dimension() {
+        let mut prev = 0;
+        for d in [64, 128, 256, 512, 1024, 2048] {
+            let c = plan(&u55(), d, d, 8, 2).total_cycles();
+            assert!(c > prev, "d={d}: {c} <= {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn fold_steps_examples() {
+        let pl = plan(&u55(), 64, 64, 8, 2);
+        // fold_factor replicas need ceil(log2(fold)) combine steps
+        assert!(pl.fold_steps() >= 1);
+        let big = plan(&u55(), 2304, 2048, 8, 2);
+        assert_eq!(big.fold_factor, 1);
+        assert_eq!(big.fold_steps(), 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! GEMV on the IMAGine engine: matrix->array mapping, quantization,
+//! instruction codegen and the high-level scheduler.
+
+pub mod mapper;
+pub mod quant;
+pub mod codegen;
+pub mod scheduler;
+
+pub use mapper::{MappingPlan, plan};
+pub use codegen::GemvProgram;
+pub use scheduler::GemvScheduler;

@@ -1,0 +1,96 @@
+//! Fixed-point quantization utilities — the front-end processor's
+//! inter-layer rescale for MLP workloads (mirrors `model._requant_relu`
+//! in the L2 JAX graph bit-for-bit; cross-checked in the integration
+//! tests against the PJRT-executed artifact).
+
+pub const INT8_MIN: i64 = -128;
+pub const INT8_MAX: i64 = 127;
+
+/// Quantize an f64 slice to int8-ranged i64 with a power-of-two scale.
+pub fn quantize(vals: &[f64], scale: f64) -> Vec<i64> {
+    vals.iter()
+        .map(|&v| ((v * scale).round() as i64).clamp(INT8_MIN, INT8_MAX))
+        .collect()
+}
+
+/// Dequantize int values back to f64.
+pub fn dequantize(vals: &[i64], scale: f64) -> Vec<f64> {
+    vals.iter().map(|&v| v as f64 / scale).collect()
+}
+
+/// ReLU on int32-ranged accumulators.
+pub fn relu(acc: &mut [i64]) {
+    for v in acc.iter_mut() {
+        *v = (*v).max(0);
+    }
+}
+
+/// Requantize an accumulator to int8 range: scale, round half away
+/// from zero, clip — identical to the L2 graph's `_requant_relu`
+/// rescale step (jnp.round uses banker's rounding, so the graph
+/// implements half-away-from-zero explicitly; we match it).
+pub fn requantize(acc: &[i64], scale: f64) -> Vec<i64> {
+    acc.iter()
+        .map(|&v| {
+            let y = v as f64 * scale;
+            let r = y.abs().floor() + if y.abs().fract() >= 0.5 { 1.0 } else { 0.0 };
+            (r.copysign(y) as i64).clamp(INT8_MIN, INT8_MAX)
+        })
+        .collect()
+}
+
+/// Choose a power-of-two scale that maps `max_abs` near the int8 edge.
+pub fn pow2_scale_for(max_abs: f64) -> f64 {
+    if max_abs <= 0.0 {
+        return 1.0;
+    }
+    let exp = (127.0 / max_abs).log2().floor();
+    2f64.powi(exp as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_clamps_to_int8() {
+        let q = quantize(&[-10.0, 0.0, 10.0], 100.0);
+        assert_eq!(q, vec![-128, 0, 127]);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let vals = [0.5, -0.25, 0.125];
+        let q = quantize(&vals, 128.0);
+        let d = dequantize(&q, 128.0);
+        for (a, b) in vals.iter().zip(&d) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn requantize_rounds_half_away_from_zero() {
+        // 64 * 2^-7 = 0.5 -> 1;  -64 * 2^-7 = -0.5 -> -1
+        assert_eq!(requantize(&[64, -64], 0.0078125), vec![1, -1]);
+        assert_eq!(requantize(&[63, -63], 0.0078125), vec![0, 0]);
+    }
+
+    #[test]
+    fn requantize_clips() {
+        assert_eq!(requantize(&[1 << 20, -(1 << 20)], 1.0), vec![127, -128]);
+    }
+
+    #[test]
+    fn relu_zeroes_negatives() {
+        let mut v = vec![-5, 0, 7];
+        relu(&mut v);
+        assert_eq!(v, vec![0, 0, 7]);
+    }
+
+    #[test]
+    fn pow2_scale_maps_near_edge() {
+        let s = pow2_scale_for(1.0);
+        assert_eq!(s, 64.0); // 1.0 * 64 = 64 <= 127, *128 would exceed via log floor
+        assert!(1.0 * s <= 127.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! High-level workload scheduler: runs GEMV chains (MLP layers) on one
+//! simulated engine, inserting the front-end's bias/ReLU/requantize
+//! steps between layers — the IMAGine-side mirror of the L2 JAX graph.
+
+use crate::engine::{Engine, EngineConfig};
+use crate::sim::ExecStats;
+use super::codegen::{GemvError, GemvProgram};
+use super::mapper::plan;
+use super::quant;
+
+/// One MLP layer's parameters (int8-ranged i64).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Row-major (out_dim x in_dim) weights.
+    pub w: Vec<i64>,
+    pub bias: Vec<i64>,
+    pub out_dim: usize,
+    pub in_dim: usize,
+}
+
+impl Layer {
+    pub fn new(w: Vec<i64>, bias: Vec<i64>, out_dim: usize, in_dim: usize) -> Self {
+        assert_eq!(w.len(), out_dim * in_dim);
+        assert_eq!(bias.len(), out_dim);
+        Layer { w, bias, out_dim, in_dim }
+    }
+}
+
+/// A GEMV/MLP scheduler bound to one engine instance. Compiled
+/// `GemvProgram`s are cached per (m, n, p, radix) shape.
+pub struct GemvScheduler {
+    pub config: EngineConfig,
+    engine: Engine,
+    cache: std::collections::BTreeMap<(usize, usize, usize, u8), GemvProgram>,
+    /// Weight-residency token: identity of the matrix whose spill
+    /// planes are currently staged in the engine's BRAM (§Perf L3-4).
+    resident: Option<(u64, usize, usize, usize, u8)>,
+}
+
+impl GemvScheduler {
+    pub fn new(config: EngineConfig) -> Self {
+        GemvScheduler {
+            config,
+            engine: Engine::new(config),
+            cache: Default::default(),
+            resident: None,
+        }
+    }
+
+    fn program(&mut self, m: usize, n: usize, p: usize, radix: u8) -> &GemvProgram {
+        let key = (m, n, p, radix);
+        let config = &self.config;
+        self.cache
+            .entry(key)
+            .or_insert_with(|| GemvProgram::generate(plan(config, m, n, p, radix)))
+    }
+
+    /// Run one GEMV: y = W @ x (exact int32 accumulation).
+    pub fn gemv(
+        &mut self,
+        w: &[i64],
+        x: &[i64],
+        m: usize,
+        n: usize,
+        p: usize,
+        radix: u8,
+    ) -> Result<(Vec<i64>, ExecStats), GemvError> {
+        self.resident = None;
+        let prog = self.program(m, n, p, radix).clone();
+        let res = prog.execute(&mut self.engine, w, x)?;
+        Ok((res.y, res.stats))
+    }
+
+    /// Run one GEMV with weight residency: `token` identifies the
+    /// matrix (e.g. its stable allocation address). If the previous
+    /// call staged the same (token, shape) and the plan is single-pass,
+    /// the matrix planes already sit in BRAM and only the vector is
+    /// staged — the serving fast path a resident model enjoys on real
+    /// hardware.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemv_resident(
+        &mut self,
+        token: u64,
+        w: &[i64],
+        x: &[i64],
+        m: usize,
+        n: usize,
+        p: usize,
+        radix: u8,
+    ) -> Result<(Vec<i64>, ExecStats), GemvError> {
+        let key = (token, m, n, p, radix);
+        let hot = self.resident == Some(key);
+        let prog = self.program(m, n, p, radix).clone();
+        let res = prog.execute_opts(&mut self.engine, w, x, hot)?;
+        self.resident = if prog.supports_residency() { Some(key) } else { None };
+        Ok((res.y, res.stats))
+    }
+
+    /// Run an int8 MLP forward pass: per layer `acc = W@h + b`, then
+    /// (except the last layer) ReLU + requantize by `scales[i]`.
+    /// Returns the final logits and the merged engine stats.
+    pub fn mlp_forward(
+        &mut self,
+        layers: &[Layer],
+        x: &[i64],
+        scales: &[f64],
+        p: usize,
+        radix: u8,
+    ) -> Result<(Vec<i64>, ExecStats), GemvError> {
+        assert!(scales.len() + 1 >= layers.len());
+        let mut h = x.to_vec();
+        let mut stats = ExecStats::default();
+        let last = layers.len() - 1;
+        for (i, layer) in layers.iter().enumerate() {
+            let (mut acc, s) =
+                self.gemv(&layer.w, &h, layer.out_dim, layer.in_dim, p, radix)?;
+            stats.merge(&s);
+            for (a, b) in acc.iter_mut().zip(&layer.bias) {
+                *a += b;
+            }
+            if i == last {
+                return Ok((acc, stats));
+            }
+            quant::relu(&mut acc);
+            h = quant::requantize(&acc, scales[i]);
+        }
+        unreachable!("empty layer list")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn host_mlp(layers: &[Layer], x: &[i64], scales: &[f64]) -> Vec<i64> {
+        let mut h = x.to_vec();
+        let last = layers.len() - 1;
+        for (i, l) in layers.iter().enumerate() {
+            let mut acc: Vec<i64> = (0..l.out_dim)
+                .map(|r| {
+                    (0..l.in_dim).map(|j| l.w[r * l.in_dim + j] * h[j]).sum::<i64>()
+                        + l.bias[r]
+                })
+                .collect();
+            if i == last {
+                return acc;
+            }
+            quant::relu(&mut acc);
+            h = quant::requantize(&acc, scales[i]);
+        }
+        unreachable!()
+    }
+
+    fn rand_layer(rng: &mut XorShift, out_dim: usize, in_dim: usize) -> Layer {
+        Layer::new(
+            rng.vec_i64(out_dim * in_dim, -16, 15),
+            rng.vec_i64(out_dim, -64, 63),
+            out_dim,
+            in_dim,
+        )
+    }
+
+    #[test]
+    fn mlp_matches_host() {
+        let mut rng = XorShift::new(5);
+        let layers = vec![
+            rand_layer(&mut rng, 24, 40),
+            rand_layer(&mut rng, 16, 24),
+            rand_layer(&mut rng, 10, 16),
+        ];
+        let x = rng.vec_i64(40, -128, 127);
+        let scales = [0.0078125, 0.0078125];
+        let mut sched = GemvScheduler::new(EngineConfig::small());
+        let (got, stats) = sched.mlp_forward(&layers, &x, &scales, 8, 2).unwrap();
+        assert_eq!(got, host_mlp(&layers, &x, &scales));
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn gemv_cache_reuses_programs() {
+        let mut sched = GemvScheduler::new(EngineConfig::small());
+        let w = vec![1i64; 64];
+        let x = vec![2i64; 8];
+        sched.gemv(&w, &x, 8, 8, 8, 2).unwrap();
+        sched.gemv(&w, &x, 8, 8, 8, 2).unwrap();
+        assert_eq!(sched.cache.len(), 1);
+    }
+
+    #[test]
+    fn booth_mlp_identical_numerics() {
+        let mut rng = XorShift::new(9);
+        let layers = vec![rand_layer(&mut rng, 12, 20), rand_layer(&mut rng, 6, 12)];
+        let x = rng.vec_i64(20, -100, 100);
+        let scales = [0.015625];
+        let mut s2 = GemvScheduler::new(EngineConfig::small());
+        let mut s4 = GemvScheduler::new(EngineConfig::small());
+        let (y2, st2) = s2.mlp_forward(&layers, &x, &scales, 8, 2).unwrap();
+        let (y4, st4) = s4.mlp_forward(&layers, &x, &scales, 8, 4).unwrap();
+        assert_eq!(y2, y4);
+        assert!(st4.cycles < st2.cycles, "booth should be faster");
+    }
+}

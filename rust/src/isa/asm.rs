@@ -1,0 +1,161 @@
+//! A tiny textual assembler/disassembler for IMAGine programs.
+//!
+//! One instruction per line, `;` comments, mnemonics as printed by
+//! `Instr`'s `Display`. Useful for fixture programs in tests and for
+//! dumping the codegen output of `gemv::codegen` for inspection.
+
+use super::encode::{Instr, Opcode};
+use super::program::Program;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum AsmError {
+    #[error("line {line}: unknown mnemonic '{mnemonic}'")]
+    UnknownMnemonic { line: usize, mnemonic: String },
+    #[error("line {line}: bad operand '{operand}'")]
+    BadOperand { line: usize, operand: String },
+    #[error("line {line}: expected {expected} operands, got {got}")]
+    Arity { line: usize, expected: usize, got: usize },
+}
+
+fn parse_reg(tok: &str, line: usize) -> Result<u8, AsmError> {
+    let t = tok.trim();
+    let body = t
+        .strip_prefix('r')
+        .or_else(|| t.strip_prefix('p'))
+        .unwrap_or(t);
+    body.parse::<u8>()
+        .ok()
+        .filter(|&r| (r as usize) < super::NUM_REGS)
+        .ok_or_else(|| AsmError::BadOperand { line, operand: tok.to_string() })
+}
+
+fn parse_imm(tok: &str, line: usize) -> Result<u16, AsmError> {
+    let t = tok.trim();
+    let v = if let Some(hex) = t.strip_prefix("0x") {
+        u16::from_str_radix(hex, 16).ok()
+    } else {
+        t.parse::<u16>().ok()
+    };
+    v.filter(|&v| v <= super::IMM_MAX)
+        .ok_or_else(|| AsmError::BadOperand { line, operand: tok.to_string() })
+}
+
+/// Assemble a text program.
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    let mut prog = Program::new();
+    for (idx, raw_line) in src.lines().enumerate() {
+        let line = idx + 1;
+        let text = raw_line.split(';').next().unwrap_or("").trim();
+        if text.is_empty() {
+            continue;
+        }
+        let mut parts = text.splitn(2, char::is_whitespace);
+        let mnemonic = parts.next().unwrap().to_lowercase();
+        let rest = parts.next().unwrap_or("").trim();
+        let ops: Vec<&str> = if rest.is_empty() {
+            vec![]
+        } else {
+            rest.split(',').map(|s| s.trim()).collect()
+        };
+        let arity = |n: usize| -> Result<(), AsmError> {
+            if ops.len() == n {
+                Ok(())
+            } else {
+                Err(AsmError::Arity { line, expected: n, got: ops.len() })
+            }
+        };
+        let instr = match mnemonic.as_str() {
+            "nop" => { arity(0)?; Instr::nop() }
+            "sync" => { arity(0)?; Instr::sync() }
+            "halt" => { arity(0)?; Instr::halt() }
+            "rshift" => { arity(0)?; Instr::rshift() }
+            "ldi" => { arity(2)?; Instr::ldi(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            "write" => { arity(2)?; Instr::write(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            "read" => { arity(1)?; Instr::read(parse_reg(ops[0], line)?) }
+            "mov" => { arity(2)?; Instr::mov(parse_reg(ops[0], line)?, parse_reg(ops[1], line)?) }
+            "selblk" => { arity(1)?; Instr::selblk(parse_imm(ops[0], line)?) }
+            "setp" => { arity(2)?; Instr::setp(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            "add" | "sub" | "mult" | "mac" => {
+                arity(3)?;
+                let (rd, rs1, rs2) = (
+                    parse_reg(ops[0], line)?,
+                    parse_reg(ops[1], line)?,
+                    parse_reg(ops[2], line)?,
+                );
+                let op = match mnemonic.as_str() {
+                    "add" => Opcode::Add,
+                    "sub" => Opcode::Sub,
+                    "mult" => Opcode::Mult,
+                    _ => Opcode::Mac,
+                };
+                Instr::new(op, rd, rs1, rs2, 0)
+            }
+            "accum" => { arity(2)?; Instr::accum(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            "fold" => { arity(2)?; Instr::fold(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            _ => return Err(AsmError::UnknownMnemonic { line, mnemonic }),
+        };
+        prog.push(instr);
+    }
+    Ok(prog)
+}
+
+/// Disassemble a program back into text (inverse of `assemble`).
+pub fn disassemble(p: &Program) -> String {
+    let mut s = String::new();
+    for i in &p.instrs {
+        s.push_str(&i.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_text() {
+        let src = "\
+            setp p0, 8      ; precision = 8\n\
+            selblk 0x3ff\n\
+            ldi r1, 42\n\
+            mac r2, r3, r1\n\
+            accum r2, 6\n\
+            rshift\n\
+            halt\n";
+        let p = assemble(src).unwrap();
+        let q = assemble(&disassemble(&p)).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(p.len(), 7);
+        assert!(p.is_halted());
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        assert!(matches!(
+            assemble("frobnicate r1"),
+            Err(AsmError::UnknownMnemonic { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_register() {
+        assert!(matches!(assemble("mov r32, r0"), Err(AsmError::BadOperand { .. })));
+    }
+
+    #[test]
+    fn rejects_oversize_imm() {
+        assert!(matches!(assemble("ldi r0, 1024"), Err(AsmError::BadOperand { .. })));
+    }
+
+    #[test]
+    fn arity_checked() {
+        assert!(matches!(assemble("add r1, r2"), Err(AsmError::Arity { .. })));
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let p = assemble("; header\n\n  nop ; tail\n").unwrap();
+        assert_eq!(p.len(), 1);
+    }
+}

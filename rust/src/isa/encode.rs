@@ -1,0 +1,261 @@
+//! 30-bit instruction encoding/decoding.
+
+
+use std::fmt;
+
+/// Opcode field (bits 29:25). Opcodes 0..=9 dispatch to the single-cycle
+/// driver, 10..=15 to the multicycle driver (paper Fig. 3(a)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// No operation.
+    Nop = 0,
+    /// Load-immediate: broadcast `imm10` into input-register `rd` of the
+    /// selected blocks (the front-end's data path into the array).
+    Ldi = 1,
+    /// Commit the staged input register to regfile word `rd`, bit `imm10`.
+    Write = 2,
+    /// Stage regfile register `rs1` for readout.
+    Read = 3,
+    /// Register-to-register copy `rd <- rs1` (single bit-row per cycle).
+    Mov = 4,
+    /// Block-ID-based selection: mask subsequent LDI/WRITE to block
+    /// column `imm10` (0x3FF = all). PiCaSO-IM addition (paper §IV-D).
+    Selblk = 5,
+    /// Set an Op-Params word: `rd` = param index, `imm10` = value
+    /// (precision, accumulator width, Booth radix, ...).
+    Setp = 6,
+    /// Shift the output column registers up one element (FIFO-out).
+    Rshift = 7,
+    /// Barrier between front-end streams (drains the multicycle driver).
+    Sync = 8,
+    /// Stop the tile controller.
+    Halt = 9,
+    /// Bit-serial add: `rd <- rs1 + rs2` (p+1 cycles).
+    Add = 10,
+    /// Bit-serial subtract: `rd <- rs1 - rs2` (p+1 cycles).
+    Sub = 11,
+    /// Bit-serial multiply: `rd <- rs1 * rs2` (radix dependent).
+    Mult = 12,
+    /// Multiply-accumulate: `rd += rs1 * rs2` — the 3-address operation
+    /// that motivated PiCaSO-IM's extra pointer register (paper §IV-D).
+    Mac = 13,
+    /// One east->west accumulation hop: every block column adds the
+    /// accumulator arriving from its east neighbour (`rd` = accumulator
+    /// register, `imm10` = number of hops to run back-to-back).
+    Accum = 14,
+    /// Array-level fold: log-step reduction within a block column
+    /// (`rd` accumulator, `imm10` = fold level).
+    Fold = 15,
+}
+
+impl Opcode {
+    /// All opcodes in encoding order.
+    pub const ALL: [Opcode; 16] = [
+        Opcode::Nop, Opcode::Ldi, Opcode::Write, Opcode::Read,
+        Opcode::Mov, Opcode::Selblk, Opcode::Setp, Opcode::Rshift,
+        Opcode::Sync, Opcode::Halt, Opcode::Add, Opcode::Sub,
+        Opcode::Mult, Opcode::Mac, Opcode::Accum, Opcode::Fold,
+    ];
+
+    /// Whether this opcode executes on the multicycle driver.
+    pub fn is_multicycle(self) -> bool {
+        (self as u8) >= 10
+    }
+
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        Opcode::ALL.get(v as usize).copied()
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Opcode::Nop => "nop",
+            Opcode::Ldi => "ldi",
+            Opcode::Write => "write",
+            Opcode::Read => "read",
+            Opcode::Mov => "mov",
+            Opcode::Selblk => "selblk",
+            Opcode::Setp => "setp",
+            Opcode::Rshift => "rshift",
+            Opcode::Sync => "sync",
+            Opcode::Halt => "halt",
+            Opcode::Add => "add",
+            Opcode::Sub => "sub",
+            Opcode::Mult => "mult",
+            Opcode::Mac => "mac",
+            Opcode::Accum => "accum",
+            Opcode::Fold => "fold",
+        }
+    }
+}
+
+/// Op-Params indices used with `SETP` (the Op-Params module of Fig 3(a)).
+pub mod params {
+    /// Operand precision p in bits (2..=16).
+    pub const PRECISION: u8 = 0;
+    /// Accumulator width in bits (p..=32).
+    pub const ACC_WIDTH: u8 = 1;
+    /// Multiplier radix: 2 (default bit-serial) or 4 (Booth, slice4).
+    pub const RADIX: u8 = 2;
+}
+
+/// A raw 30-bit instruction word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RawInstr(pub u32);
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("instruction word {0:#010x} exceeds 30 bits")]
+    Oversize(u32),
+    #[error("field {field} value {value} out of range (max {max})")]
+    FieldRange { field: &'static str, value: u32, max: u32 },
+}
+
+/// A decoded instruction with named fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Opcode,
+    pub rd: u8,
+    pub rs1: u8,
+    pub rs2: u8,
+    pub imm: u16,
+}
+
+impl Instr {
+    pub fn new(op: Opcode, rd: u8, rs1: u8, rs2: u8, imm: u16) -> Self {
+        Instr { op, rd, rs1, rs2, imm }
+    }
+
+    // -- convenience constructors ------------------------------------
+    pub fn nop() -> Self { Self::new(Opcode::Nop, 0, 0, 0, 0) }
+    pub fn halt() -> Self { Self::new(Opcode::Halt, 0, 0, 0, 0) }
+    pub fn sync() -> Self { Self::new(Opcode::Sync, 0, 0, 0, 0) }
+    pub fn ldi(rd: u8, value: u16) -> Self { Self::new(Opcode::Ldi, rd, 0, 0, value) }
+    pub fn write(rd: u8, bit: u16) -> Self { Self::new(Opcode::Write, rd, 0, 0, bit) }
+    pub fn read(rs1: u8) -> Self { Self::new(Opcode::Read, 0, rs1, 0, 0) }
+    pub fn mov(rd: u8, rs1: u8) -> Self { Self::new(Opcode::Mov, rd, rs1, 0, 0) }
+    pub fn selblk(col: u16) -> Self { Self::new(Opcode::Selblk, 0, 0, 0, col) }
+    pub fn setp(param: u8, value: u16) -> Self { Self::new(Opcode::Setp, param, 0, 0, value) }
+    pub fn rshift() -> Self { Self::new(Opcode::Rshift, 0, 0, 0, 0) }
+    pub fn add(rd: u8, rs1: u8, rs2: u8) -> Self { Self::new(Opcode::Add, rd, rs1, rs2, 0) }
+    pub fn sub(rd: u8, rs1: u8, rs2: u8) -> Self { Self::new(Opcode::Sub, rd, rs1, rs2, 0) }
+    pub fn mult(rd: u8, rs1: u8, rs2: u8) -> Self { Self::new(Opcode::Mult, rd, rs1, rs2, 0) }
+    pub fn mac(rd: u8, rs1: u8, rs2: u8) -> Self { Self::new(Opcode::Mac, rd, rs1, rs2, 0) }
+    pub fn accum(rd: u8, hops: u16) -> Self { Self::new(Opcode::Accum, rd, 0, 0, hops) }
+    pub fn fold(rd: u8, level: u16) -> Self { Self::new(Opcode::Fold, rd, 0, 0, level) }
+
+    /// Encode to the 30-bit word.
+    pub fn encode(self) -> RawInstr {
+        let w = ((self.op as u32) << 25)
+            | ((self.rd as u32 & 0x1F) << 20)
+            | ((self.rs1 as u32 & 0x1F) << 15)
+            | ((self.rs2 as u32 & 0x1F) << 10)
+            | (self.imm as u32 & 0x3FF);
+        RawInstr(w)
+    }
+
+    /// Decode from a 30-bit word, validating every field.
+    pub fn decode(raw: RawInstr) -> Result<Instr, DecodeError> {
+        if raw.0 >> super::INSTR_BITS != 0 {
+            return Err(DecodeError::Oversize(raw.0));
+        }
+        let opv = ((raw.0 >> 25) & 0x1F) as u8;
+        let op = Opcode::from_u8(opv).ok_or(DecodeError::FieldRange {
+            field: "opcode",
+            value: opv as u32,
+            max: 15,
+        })?;
+        Ok(Instr {
+            op,
+            rd: ((raw.0 >> 20) & 0x1F) as u8,
+            rs1: ((raw.0 >> 15) & 0x1F) as u8,
+            rs2: ((raw.0 >> 10) & 0x1F) as u8,
+            imm: (raw.0 & 0x3FF) as u16,
+        })
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.op {
+            Opcode::Nop | Opcode::Sync | Opcode::Halt | Opcode::Rshift => {
+                write!(f, "{}", self.op.mnemonic())
+            }
+            Opcode::Ldi | Opcode::Write => {
+                write!(f, "{} r{}, {}", self.op.mnemonic(), self.rd, self.imm)
+            }
+            Opcode::Read => write!(f, "read r{}", self.rs1),
+            Opcode::Mov => write!(f, "mov r{}, r{}", self.rd, self.rs1),
+            Opcode::Selblk => write!(f, "selblk {}", self.imm),
+            Opcode::Setp => write!(f, "setp p{}, {}", self.rd, self.imm),
+            Opcode::Accum | Opcode::Fold => {
+                write!(f, "{} r{}, {}", self.op.mnemonic(), self.rd, self.imm)
+            }
+            _ => write!(
+                f,
+                "{} r{}, r{}, r{}",
+                self.op.mnemonic(),
+                self.rd,
+                self.rs1,
+                self.rs2
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_opcodes() {
+        for op in Opcode::ALL {
+            let i = Instr::new(op, 31, 17, 5, 0x3FF);
+            let d = Instr::decode(i.encode()).unwrap();
+            assert_eq!(i, d);
+        }
+    }
+
+    #[test]
+    fn encoding_is_30_bits() {
+        let i = Instr::new(Opcode::Fold, 31, 31, 31, 0x3FF);
+        assert!(i.encode().0 < (1 << 30));
+    }
+
+    #[test]
+    fn oversize_word_rejected() {
+        assert_eq!(
+            Instr::decode(RawInstr(1 << 30)),
+            Err(DecodeError::Oversize(1 << 30))
+        );
+    }
+
+    #[test]
+    fn multicycle_split_matches_paper() {
+        // Fig 3(a): ADD, SUB, MULT "etc." are multicycle; register writes
+        // and parameter sets are single-cycle.
+        assert!(Opcode::Add.is_multicycle());
+        assert!(Opcode::Mac.is_multicycle());
+        assert!(Opcode::Accum.is_multicycle());
+        assert!(!Opcode::Ldi.is_multicycle());
+        assert!(!Opcode::Setp.is_multicycle());
+    }
+
+    #[test]
+    fn field_masking() {
+        // Fields beyond their width must not leak into neighbours.
+        let i = Instr::new(Opcode::Add, 0xFF, 0xFF, 0xFF, 0xFFFF);
+        let d = Instr::decode(i.encode()).unwrap();
+        assert_eq!(d.rd, 31);
+        assert_eq!(d.rs1, 31);
+        assert_eq!(d.rs2, 31);
+        assert_eq!(d.imm, 0x3FF);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Instr::mac(2, 3, 4).to_string(), "mac r2, r3, r4");
+        assert_eq!(Instr::selblk(7).to_string(), "selblk 7");
+        assert_eq!(Instr::halt().to_string(), "halt");
+    }
+}

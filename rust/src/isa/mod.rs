@@ -1,0 +1,31 @@
+//! The IMAGine 30-bit instruction set.
+//!
+//! The paper (§IV-C) fixes the instruction *width* (30 bits) and the
+//! split into a single-cycle and a multicycle driver, but not the field
+//! encoding; DESIGN.md §4 records our concretization:
+//!
+//! ```text
+//!  29    25 24   20 19   15 14   10 9        0
+//! +--------+-------+-------+-------+----------+
+//! | opcode |  rd   |  rs1  |  rs2  |  imm10   |
+//! +--------+-------+-------+-------+----------+
+//! ```
+//!
+//! `rd/rs1/rs2` address 32 logical registers in each PE's BRAM register
+//! column; `imm10` carries broadcast data (LDI), block ids (SELBLK),
+//! parameter words (SETP) or hop counts (ACCUM).
+
+pub mod encode;
+pub mod asm;
+pub mod program;
+
+pub use encode::{Instr, Opcode, RawInstr, DecodeError};
+pub use program::Program;
+pub use asm::{assemble, disassemble};
+
+/// Number of logical registers addressable per PE.
+pub const NUM_REGS: usize = 32;
+/// Instruction word width in bits (paper §IV-C).
+pub const INSTR_BITS: u32 = 30;
+/// Maximum value of the 10-bit immediate field.
+pub const IMM_MAX: u16 = 0x3FF;

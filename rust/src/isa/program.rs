@@ -1,0 +1,109 @@
+//! Instruction stream container — what the front-end processor sends to
+//! the tile array through the input registers.
+
+use super::encode::{Instr, Opcode, RawInstr};
+
+
+/// A program: an ordered instruction stream, terminated by HALT.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Program { instrs: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: Instr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn extend(&mut self, it: impl IntoIterator<Item = Instr>) -> &mut Self {
+        self.instrs.extend(it);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Whether the stream is properly terminated.
+    pub fn is_halted(&self) -> bool {
+        matches!(self.instrs.last(), Some(i) if i.op == Opcode::Halt)
+    }
+
+    /// Append HALT if missing.
+    pub fn seal(&mut self) -> &mut Self {
+        if !self.is_halted() {
+            self.push(Instr::halt());
+        }
+        self
+    }
+
+    /// Encode to raw 30-bit words (stored in u32).
+    pub fn encode(&self) -> Vec<RawInstr> {
+        self.instrs.iter().map(|i| i.encode()).collect()
+    }
+
+    /// Decode from raw words.
+    pub fn decode(words: &[RawInstr]) -> Result<Self, super::DecodeError> {
+        let instrs = words
+            .iter()
+            .map(|&w| Instr::decode(w))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Program { instrs })
+    }
+
+    /// Count instructions per driver class: (single_cycle, multicycle).
+    pub fn driver_mix(&self) -> (usize, usize) {
+        let multi = self.instrs.iter().filter(|i| i.op.is_multicycle()).count();
+        (self.instrs.len() - multi, multi)
+    }
+}
+
+impl FromIterator<Instr> for Program {
+    fn from_iter<T: IntoIterator<Item = Instr>>(iter: T) -> Self {
+        Program { instrs: iter.into_iter().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_appends_halt_once() {
+        let mut p = Program::new();
+        p.push(Instr::nop()).seal().seal();
+        assert!(p.is_halted());
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p: Program = [
+            Instr::setp(0, 8),
+            Instr::mac(2, 3, 4),
+            Instr::accum(2, 6),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let q = Program::decode(&p.encode()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn driver_mix_counts() {
+        let p: Program = [Instr::ldi(0, 1), Instr::mac(1, 2, 3), Instr::halt()]
+            .into_iter()
+            .collect();
+        assert_eq!(p.driver_mix(), (2, 1));
+    }
+}

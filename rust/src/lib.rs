@@ -1,0 +1,16 @@
+//! IMAGine: An In-Memory Accelerated GEMV Engine Overlay — reproduction.
+//!
+//! Cycle-accurate simulator + analytical models of the FPL 2024 paper.
+pub mod isa;
+pub mod pim;
+pub mod tile;
+pub mod engine;
+pub mod sim;
+pub mod timing;
+pub mod resources;
+pub mod baselines;
+pub mod gemv;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod util;

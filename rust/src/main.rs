@@ -1,0 +1,193 @@
+//! IMAGine CLI — the leader entrypoint.
+//!
+//! ```text
+//! imagine reproduce [all|table1|table2|table3|table4|table5|fig1|fig4|fig5|fig6|asic]
+//! imagine gemv --m 256 --n 256 --precision 8 [--booth] [--verify]
+//! imagine serve --requests 64 --workers 2 [--batch 16]
+//! imagine devices
+//! imagine model --d 1024 --precision 8      # analytic latency point
+//! ```
+
+use imagine::baselines::latency::{all_engines, comparison_engines};
+use imagine::baselines::ImagineModel;
+use imagine::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request,
+};
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::report;
+use imagine::runtime::Runtime;
+use imagine::sim::U55_FMAX_MHZ;
+use imagine::util::cli::Args;
+use imagine::util::XorShift;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("gemv") => cmd_gemv(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("devices") => cmd_devices(),
+        Some("model") => cmd_model(&args),
+        _ => {
+            eprintln!(
+                "usage: imagine <reproduce|gemv|serve|devices|model> [options]\n\
+                 see rust/src/main.rs header for details"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_reproduce(args: &Args) -> i32 {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let out = match what {
+        "all" => report::all(),
+        "table1" => report::table1(),
+        "table2" => report::table2(),
+        "table3" => report::table3(),
+        "table4" => report::table4(),
+        "table5" => report::table5(),
+        "fig1" => report::fig1(),
+        "fig4" => report::fig4(),
+        "fig5" => report::fig5(),
+        "fig6" => report::fig6(&[64, 128, 256, 512, 1024, 2048], &[4, 8, 16]),
+        "asic" => report::asic_comparison(),
+        other => {
+            eprintln!("unknown artifact '{other}'");
+            return 2;
+        }
+    };
+    println!("{out}");
+    0
+}
+
+fn cmd_gemv(args: &Args) -> i32 {
+    let m = args.get_usize("m", 256);
+    let n = args.get_usize("n", 256);
+    let p = args.get_usize("precision", 8);
+    let radix = if args.has("booth") { 4 } else { 2 };
+    let config = if args.has("small") { EngineConfig::small() } else { EngineConfig::u55() };
+    println!("IMAGine GEMV {m}x{n} @ {p}-bit, radix-{radix}");
+    let pl = plan(&config, m, n, p, radix);
+    println!("plan: {pl:?}");
+    let gp = GemvProgram::generate(pl);
+    let mut engine = Engine::new(config);
+    let mut rng = XorShift::new(args.get_usize("seed", 42) as u64);
+    let half = 1i64 << (p - 1);
+    let w = rng.vec_i64(m * n, -half, half - 1);
+    let x = rng.vec_i64(n, -half, half - 1);
+    let res = match gp.execute(&mut engine, &w, &x) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("execution failed: {e}");
+            return 1;
+        }
+    };
+    let host: Vec<i64> = (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect();
+    let ok = res.y == host;
+    println!(
+        "cycles = {} ({:.2} us @ {:.0} MHz)   host check: {}",
+        res.stats.cycles,
+        res.stats.exec_us(U55_FMAX_MHZ),
+        U55_FMAX_MHZ,
+        if ok { "OK" } else { "MISMATCH" }
+    );
+    if args.has("verify") {
+        match Runtime::load(Path::new("artifacts")) {
+            Ok(mut rt) => match rt.manifest.find_gemv(m, n, p, if radix == 4 { "booth4" } else { "radix2" }) {
+                Some(meta) => {
+                    let name = meta.name.clone();
+                    match rt.gemv_i64(&name, &w, &x) {
+                        Ok(y) => println!(
+                            "PJRT artifact '{}' check: {}",
+                            name,
+                            if y == res.y { "OK" } else { "MISMATCH" }
+                        ),
+                        Err(e) => eprintln!("PJRT execution failed: {e}"),
+                    }
+                }
+                None => println!("no AOT artifact for this shape; skipping PJRT check"),
+            },
+            Err(e) => eprintln!("artifact load failed ({e}); run `make artifacts`"),
+        }
+    }
+    if ok { 0 } else { 1 }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let requests = args.get_usize("requests", 64);
+    let workers = args.get_usize("workers", 2);
+    let batch = args.get_usize("batch", 16);
+    let d = args.get_usize("d", 64);
+    let mut reg = ModelRegistry::default();
+    let mut rng = XorShift::new(7);
+    reg.register_gemv("demo", rng.vec_i64(d * d, -64, 63), d, d).unwrap();
+    let cfg = CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { max_batch: batch, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, reg);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            coord
+                .submit(Request { model: "demo".into(), x: rng.vec_i64(d, -64, 63) })
+                .unwrap()
+        })
+        .collect();
+    let mut device_us = 0.0;
+    for rx in rxs {
+        device_us += rx.recv().unwrap().unwrap().device_us;
+    }
+    let wall = t0.elapsed();
+    let m = coord.shutdown();
+    println!(
+        "{requests} requests on {workers} workers: wall {:.1} ms, modeled device time {:.1} us total",
+        wall.as_secs_f64() * 1e3,
+        device_us
+    );
+    println!(
+        "completed={} failed={} batches={} mean_batch={:.2} p50={}us p99={}us",
+        m.completed,
+        m.failed,
+        m.batches,
+        m.mean_batch_size(),
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(99.0)
+    );
+    (m.failed > 0) as i32
+}
+
+fn cmd_devices() -> i32 {
+    println!("{}", report::table4());
+    0
+}
+
+fn cmd_model(args: &Args) -> i32 {
+    let d = args.get_usize("d", 1024);
+    let p = args.get_usize("precision", 8);
+    println!("analytic latency, D={d}, {p}-bit:");
+    for e in all_engines() {
+        let c = e.cycle_latency(d, p);
+        match e.exec_us(d, p) {
+            Some(us) => println!("  {:<16} {:>10} cycles  {:>10.2} us", e.name(), c, us),
+            None => println!("  {:<16} {:>10} cycles          (no fSys)", e.name(), c),
+        }
+    }
+    let im = ImagineModel::u55();
+    println!(
+        "IMAGine wins execution time over {} engines at this point",
+        comparison_engines()
+            .iter()
+            .filter(|e| !e.name().starts_with("IMAGine"))
+            .filter(|e| e.exec_us(d, p).unwrap() > im.exec_us(d, p))
+            .count()
+    );
+    0
+}

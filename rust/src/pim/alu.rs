@@ -1,0 +1,453 @@
+//! The bit-serial ALU: the exact bit-level schedule the PiCaSO PEs run.
+//!
+//! Every op walks bit-planes the way the hardware walks BRAM addresses:
+//! one plane per cycle through a full-adder (`sum = a^b^c`,
+//! `carry = ab | c(a^b)`), with multiply as masked conditional add/sub
+//! (the multiplier bit / Booth digit of each PE masks its own lane).
+//! Cycle costs returned by each op are the costs used by the tile
+//! controller's multicycle driver and mirrored by the analytic model in
+//! `baselines::imagine_model` (calibration-tested against each other).
+
+use super::bitplane::PlaneBuf;
+
+/// Two's-complement sign-extended bit `i` of a `width`-bit register.
+#[inline]
+fn ext_plane<'a>(buf: &'a PlaneBuf, base: usize, width: usize, i: usize) -> &'a [u64] {
+    buf.plane(base + i.min(width - 1))
+}
+
+/// `dst = a ± b` over all lanes (ripple-carry, one plane per cycle).
+///
+/// Operands are sign-extended from their widths; `dst` may alias a
+/// source register (the hardware reads before it writes each address).
+/// Returns the cycle cost: `dst_w + 1`.
+pub fn add_sub(
+    buf: &mut PlaneBuf,
+    dst: (usize, usize),
+    a: (usize, usize),
+    b: (usize, usize),
+    subtract: bool,
+) -> u64 {
+    let words = buf.words();
+    let (dst_base, dst_w) = dst;
+    let (a_base, a_w) = a;
+    let (b_base, b_w) = b;
+    assert!(a_w > 0 && b_w > 0 && dst_w > 0);
+    // Cache source sign planes: dst may overwrite them mid-ripple.
+    let a_sign: Vec<u64> = buf.plane(a_base + a_w - 1).to_vec();
+    let b_sign: Vec<u64> = buf.plane(b_base + b_w - 1).to_vec();
+    let mut carry = vec![if subtract { !0u64 } else { 0 }; words];
+    let mut sum = vec![0u64; words];
+    for i in 0..dst_w {
+        {
+            let ap = if i < a_w { buf.plane(a_base + i) } else { &a_sign[..] };
+            let bp = if i < b_w { buf.plane(b_base + i) } else { &b_sign[..] };
+            for w in 0..words {
+                let (av, bv) = (ap[w], bp[w] ^ if subtract { !0 } else { 0 });
+                let c = carry[w];
+                sum[w] = av ^ bv ^ c;
+                carry[w] = (av & bv) | (c & (av ^ bv));
+            }
+        }
+        buf.plane_mut(dst_base + i).copy_from_slice(&sum);
+    }
+    mask_reg_tail(buf, dst_base, dst_w);
+    (dst_w as u64) + 1
+}
+
+/// `acc += w * x` (or `acc = w * x` if `clear`) — radix-2 bit-serial.
+///
+/// For each multiplier bit `j` (LSB first): lanes whose `x_j` is set add
+/// `w << j` into the accumulator window `[j, acc_w)`; the final bit
+/// (`j = p-1`, the sign) conditionally *subtracts* (two's complement).
+/// `acc` must not alias `w`/`x`. Returns the cycle cost
+/// `Σ_j (acc_w - j + 1)` — the schedule the multicycle driver runs.
+pub fn mac_radix2(
+    buf: &mut PlaneBuf,
+    acc: (usize, usize),
+    wreg: (usize, usize),
+    xreg: (usize, usize),
+    clear: bool,
+) -> u64 {
+    let (acc_base, acc_w) = acc;
+    let (w_base, p_w) = wreg;
+    let (x_base, p_x) = xreg;
+    assert_disjoint(acc, wreg, "acc/w");
+    assert_disjoint(acc, xreg, "acc/x");
+    if clear {
+        buf.clear_planes(acc_base, acc_w);
+    }
+    let words = buf.words();
+    // Cache the multiplicand's planes once (sign-extended to acc_w):
+    // the accumulator is disjoint, so the cache cannot go stale, and
+    // the inner ripple can then borrow the acc plane mutably in place
+    // (§Perf L3-2).
+    let wext = cache_ext_planes(buf, w_base, p_w, acc_w);
+    let mut cycles = 0u64;
+    let mut mask = vec![0u64; words];
+    let mut carry = vec![0u64; words];
+    for j in 0..p_x {
+        mask.copy_from_slice(buf.plane(x_base + j));
+        let subtract = j == p_x - 1; // sign bit of the multiplier
+        let win = acc_w.saturating_sub(j);
+        let sub_mask = if subtract { !0u64 } else { 0 };
+        for (w, c) in carry.iter_mut().enumerate() {
+            *c = if subtract { mask[w] } else { 0 };
+        }
+        for i in 0..win {
+            let vp = &wext[i * words..(i + 1) * words];
+            let acc_p = buf.plane_mut(acc_base + j + i);
+            for w in 0..words {
+                let eff = (vp[w] ^ sub_mask) & mask[w];
+                let a = acc_p[w];
+                let c = carry[w];
+                acc_p[w] = a ^ eff ^ c;
+                carry[w] = (a & eff) | (c & (a ^ eff));
+            }
+        }
+        cycles += win as u64 + 1;
+    }
+    mask_reg_tail(buf, acc_base, acc_w);
+    cycles
+}
+
+/// Copy `width` sign-extended planes of a register into a contiguous
+/// scratch buffer (plane i at `[i*words, (i+1)*words)`).
+fn cache_ext_planes(buf: &PlaneBuf, base: usize, reg_w: usize, width: usize) -> Vec<u64> {
+    let words = buf.words();
+    let mut out = vec![0u64; width * words];
+    for i in 0..width {
+        out[i * words..(i + 1) * words]
+            .copy_from_slice(ext_plane(buf, base, reg_w, i));
+    }
+    out
+}
+
+/// `acc += w * x` — Booth radix-4 (the IMAGine-slice4 PE).
+///
+/// The multiplier is recoded into `ceil(p/2)` signed digits in
+/// {-2,-1,0,1,2}; each digit conditionally adds `0, ±w, ±2w` at window
+/// `2k`. Halves the pass count vs radix-2 — the paper's Fig 6
+/// IMAGine-slice4 latency advantage.
+pub fn mac_booth4(
+    buf: &mut PlaneBuf,
+    acc: (usize, usize),
+    wreg: (usize, usize),
+    xreg: (usize, usize),
+    clear: bool,
+) -> u64 {
+    let (acc_base, acc_w) = acc;
+    let (w_base, p_w) = wreg;
+    let (x_base, p_x) = xreg;
+    assert_disjoint(acc, wreg, "acc/w");
+    assert_disjoint(acc, xreg, "acc/x");
+    if clear {
+        buf.clear_planes(acc_base, acc_w);
+    }
+    let words = buf.words();
+    let ndigits = p_x.div_ceil(2);
+    let sign: Vec<u64> = buf.plane(x_base + p_x - 1).to_vec();
+    let wext = cache_ext_planes(buf, w_base, p_w, acc_w);
+    let mut cycles = 0u64;
+    let (mut sel1, mut sel2, mut neg) =
+        (vec![0u64; words], vec![0u64; words], vec![0u64; words]);
+    let mut carry = vec![0u64; words];
+    for k in 0..ndigits {
+        {
+            let zero = vec![0u64; words];
+            let bm1 = if k == 0 { &zero[..] } else { buf.plane(x_base + 2 * k - 1) };
+            let b0 = if 2 * k < p_x { buf.plane(x_base + 2 * k) } else { &sign[..] };
+            let b1 = if 2 * k + 1 < p_x { buf.plane(x_base + 2 * k + 1) } else { &sign[..] };
+            for w in 0..words {
+                let (m1, z0, z1) = (bm1[w], b0[w], b1[w]);
+                sel1[w] = z0 ^ m1; // |d| == 1
+                sel2[w] = (z1 & !z0 & !m1) | (!z1 & z0 & m1); // |d| == 2
+                neg[w] = z1 & !(z0 & m1); // d < 0
+            }
+        }
+        let j = 2 * k;
+        let win = acc_w.saturating_sub(j);
+        carry.copy_from_slice(&neg); // +1 where negated
+        for i in 0..win {
+            let v1 = &wext[i * words..(i + 1) * words];
+            let v2 = if i == 0 { None } else { Some(&wext[(i - 1) * words..i * words]) };
+            let acc_p = buf.plane_mut(acc_base + j + i);
+            for w in 0..words {
+                let two_w = v2.map_or(0, |p| p[w]);
+                let bit = (sel1[w] & v1[w]) | (sel2[w] & two_w);
+                let eff = bit ^ neg[w];
+                let a = acc_p[w];
+                let c = carry[w];
+                acc_p[w] = a ^ eff ^ c;
+                carry[w] = (a & eff) | (c & (a ^ eff));
+            }
+        }
+        cycles += win as u64 + 2; // +1 param step, +1 digit decode
+    }
+    mask_reg_tail(buf, acc_base, acc_w);
+    cycles
+}
+
+/// One east->west accumulation hop: `dst_col.reg += src_col.reg`.
+///
+/// In hardware the east column streams its accumulator one bit per
+/// cycle into the west column's ALU; with the 3-address pointer added
+/// in PiCaSO-IM the stream overlaps the add (paper §IV-D), costing
+/// `width + 2` cycles.
+pub fn accum_from(
+    dst: &mut PlaneBuf,
+    src: &PlaneBuf,
+    base: usize,
+    width: usize,
+) -> u64 {
+    assert_eq!(dst.lanes(), src.lanes(), "column lane mismatch");
+    let words = dst.words();
+    let mut carry = vec![0u64; words];
+    for i in 0..width {
+        let sp = src.plane(base + i);
+        let dp = dst.plane_mut(base + i);
+        for w in 0..words {
+            let (a, b, c) = (dp[w], sp[w], carry[w]);
+            dp[w] = a ^ b ^ c;
+            carry[w] = (a & b) | (c & (a ^ b));
+        }
+    }
+    width as u64 + 2
+}
+
+/// One binary-hopping fold step inside a column: every group of
+/// `2*group_lanes` lanes adds its upper half into its lower half.
+/// (The PiCaSO NEWS-network heritage op — kept for the ablation bench.)
+pub fn fold_step(
+    buf: &mut PlaneBuf,
+    base: usize,
+    width: usize,
+    group_lanes: usize,
+) -> u64 {
+    let mut shifted = buf.clone();
+    shifted.shift_lanes_down(base, width, group_lanes);
+    accum_from(buf, &shifted, base, width)
+}
+
+/// `dst = src` register copy (`width` cycles — one bit-row per cycle).
+pub fn mov(buf: &mut PlaneBuf, dst: (usize, usize), src: (usize, usize)) -> u64 {
+    let width = dst.1.min(src.1);
+    for i in 0..width {
+        if src.0 + i == dst.0 + i {
+            continue;
+        }
+        let v = buf.plane(src.0 + i).to_vec();
+        buf.plane_mut(dst.0 + i).copy_from_slice(&v);
+    }
+    // sign-extend into any remaining dst planes
+    if dst.1 > width {
+        let sign = buf.plane(src.0 + src.1 - 1).to_vec();
+        for i in width..dst.1 {
+            buf.plane_mut(dst.0 + i).copy_from_slice(&sign);
+        }
+    }
+    dst.1 as u64
+}
+
+fn assert_disjoint(a: (usize, usize), b: (usize, usize), what: &str) {
+    let a_end = a.0 + a.1;
+    let b_end = b.0 + b.1;
+    assert!(
+        a_end <= b.0 || b_end <= a.0,
+        "register windows must not alias ({what}): {a:?} vs {b:?}"
+    );
+}
+
+fn mask_reg_tail(buf: &mut PlaneBuf, base: usize, width: usize) {
+    let lanes = buf.lanes();
+    if lanes % 64 == 0 {
+        return;
+    }
+    // Re-zero tail lanes that ripple ops may have polluted via the
+    // all-ones subtract masks.
+    let keep = (1u64 << (lanes % 64)) - 1;
+    let words = buf.words();
+    for p in base..base + width {
+        buf.plane_mut(p)[words - 1] &= keep;
+    }
+}
+
+/// Cycle-cost formulas (shared with the analytic latency model).
+pub mod cost {
+    /// ADD/SUB over a `w`-bit destination.
+    pub fn add(w: usize) -> u64 {
+        w as u64 + 1
+    }
+    /// Radix-2 MAC: p masked adds over shrinking windows.
+    pub fn mac_radix2(p: usize, acc_w: usize) -> u64 {
+        (0..p).map(|j| (acc_w.saturating_sub(j)) as u64 + 1).sum()
+    }
+    /// Booth radix-4 MAC: ceil(p/2) digit adds.
+    pub fn mac_booth4(p: usize, acc_w: usize) -> u64 {
+        (0..p.div_ceil(2))
+            .map(|k| (acc_w.saturating_sub(2 * k)) as u64 + 2)
+            .sum()
+    }
+    /// One east->west accumulation hop of a `w`-bit accumulator.
+    pub fn accum_hop(w: usize) -> u64 {
+        w as u64 + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(lanes: usize) -> PlaneBuf {
+        PlaneBuf::new(1024, lanes)
+    }
+
+    #[test]
+    fn add_matches_scalar() {
+        let mut b = mk(150);
+        let av: Vec<i64> = (0..150).map(|i| (i as i64 * 37 % 255) - 127).collect();
+        let bv: Vec<i64> = (0..150).map(|i| (i as i64 * 91 % 255) - 127).collect();
+        b.write_all(0, 8, &av);
+        b.write_all(8, 8, &bv);
+        let c = add_sub(&mut b, (16, 16), (0, 8), (8, 8), false);
+        assert_eq!(c, 17);
+        let got = b.read_all(16, 16);
+        for l in 0..150 {
+            assert_eq!(got[l], av[l] + bv[l], "lane {l}");
+        }
+    }
+
+    #[test]
+    fn sub_matches_scalar() {
+        let mut b = mk(70);
+        let av: Vec<i64> = (0..70).map(|i| i as i64 - 35).collect();
+        let bv: Vec<i64> = (0..70).map(|i| 3 * (i as i64 % 20) - 30).collect();
+        b.write_all(0, 8, &av);
+        b.write_all(8, 8, &bv);
+        add_sub(&mut b, (16, 16), (0, 8), (8, 8), true);
+        let got = b.read_all(16, 16);
+        for l in 0..70 {
+            assert_eq!(got[l], av[l] - bv[l], "lane {l}");
+        }
+    }
+
+    #[test]
+    fn add_alias_dst_eq_a() {
+        let mut b = mk(64);
+        let av: Vec<i64> = (0..64).map(|i| i as i64 - 32).collect();
+        let bv: Vec<i64> = (0..64).map(|i| 2 * (i as i64) - 64).collect();
+        b.write_all(0, 16, &av);
+        b.write_all(16, 8, &bv);
+        add_sub(&mut b, (0, 16), (0, 16), (16, 8), false);
+        let got = b.read_all(0, 16);
+        for l in 0..64 {
+            assert_eq!(got[l], av[l] + bv[l], "lane {l}");
+        }
+    }
+
+    fn mac_case(variant: &str, p: usize, lanes: usize, seed: i64) {
+        let mut b = mk(lanes);
+        let half = 1i64 << (p - 1);
+        let wv: Vec<i64> = (0..lanes).map(|i| ((i as i64 * 7 + seed) % (2 * half)) - half).collect();
+        let xv: Vec<i64> = (0..lanes).map(|i| ((i as i64 * 13 + seed * 3) % (2 * half)) - half).collect();
+        let a0: Vec<i64> = (0..lanes).map(|i| (i as i64 * 5 - 100) % 1000).collect();
+        b.write_all(0, p, &wv);
+        b.write_all(32, p, &xv);
+        b.write_all(64, 32, &a0);
+        let cycles = match variant {
+            "radix2" => mac_radix2(&mut b, (64, 32), (0, p), (32, p), false),
+            _ => mac_booth4(&mut b, (64, 32), (0, p), (32, p), false),
+        };
+        assert!(cycles > 0);
+        let got = b.read_all(64, 32);
+        for l in 0..lanes {
+            let want = a0[l] + wv[l] * xv[l];
+            assert_eq!(got[l], want, "{variant} p={p} lane {l}: {}*{}+{}", wv[l], xv[l], a0[l]);
+        }
+    }
+
+    #[test]
+    fn mac_radix2_matches_scalar() {
+        for p in [2, 3, 4, 8] {
+            mac_case("radix2", p, 130, 11);
+        }
+    }
+
+    #[test]
+    fn mac_booth4_matches_scalar() {
+        for p in [2, 3, 4, 8] {
+            mac_case("booth4", p, 130, 23);
+        }
+    }
+
+    #[test]
+    fn mac_extreme_operands() {
+        let mut b = mk(6);
+        let wv = vec![-128i64, -128, 127, 127, -1, 0];
+        let xv = vec![-128i64, 127, -128, 127, -1, -128];
+        b.write_all(0, 8, &wv);
+        b.write_all(8, 8, &xv);
+        b.clear_planes(64, 32);
+        mac_radix2(&mut b, (64, 32), (0, 8), (8, 8), false);
+        let got = b.read_all(64, 32);
+        for l in 0..6 {
+            assert_eq!(got[l], wv[l] * xv[l], "lane {l}");
+        }
+        // booth
+        b.clear_planes(64, 32);
+        mac_booth4(&mut b, (64, 32), (0, 8), (8, 8), false);
+        let got = b.read_all(64, 32);
+        for l in 0..6 {
+            assert_eq!(got[l], wv[l] * xv[l], "booth lane {l}");
+        }
+    }
+
+    #[test]
+    fn booth_cost_is_cheaper() {
+        assert!(cost::mac_booth4(8, 24) < cost::mac_radix2(8, 24));
+    }
+
+    #[test]
+    fn accum_from_adds_columns() {
+        let mut west = mk(100);
+        let mut east = mk(100);
+        let wv: Vec<i64> = (0..100).map(|i| i as i64 * 11 - 550).collect();
+        let ev: Vec<i64> = (0..100).map(|i| i as i64 * -7 + 350).collect();
+        west.write_all(64, 24, &wv);
+        east.write_all(64, 24, &ev);
+        let c = accum_from(&mut west, &east, 64, 24);
+        assert_eq!(c, 26);
+        let got = west.read_all(64, 24);
+        for l in 0..100 {
+            assert_eq!(got[l], wv[l] + ev[l], "lane {l}");
+        }
+    }
+
+    #[test]
+    fn fold_step_reduces_groups() {
+        let mut b = mk(128);
+        let v: Vec<i64> = (0..128).map(|i| i as i64).collect();
+        b.write_all(0, 24, &v);
+        fold_step(&mut b, 0, 24, 64);
+        let got = b.read_all(0, 24);
+        for l in 0..64 {
+            assert_eq!(got[l], (l + (l + 64)) as i64, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn mov_copies_and_sign_extends() {
+        let mut b = mk(64);
+        let v: Vec<i64> = (0..64).map(|i| i as i64 - 32).collect();
+        b.write_all(0, 8, &v);
+        mov(&mut b, (32, 16), (0, 8));
+        assert_eq!(b.read_all(32, 16), v);
+    }
+
+    #[test]
+    #[should_panic(expected = "alias")]
+    fn mac_rejects_aliasing() {
+        let mut b = mk(64);
+        mac_radix2(&mut b, (0, 32), (16, 8), (40, 8), false);
+    }
+}

@@ -1,0 +1,284 @@
+//! Bit-plane storage: the BRAM contents of one block column.
+//!
+//! A *plane* is one bit position across all PE lanes, stored as packed
+//! `u64` words (lane `l` lives at word `l / 64`, bit `l % 64`). This is
+//! the transpose of how a CPU would store the values and exactly how the
+//! BRAM stores them: one bitline per PE, one address per bit.
+
+/// Packed bit-plane buffer: `depth` planes × `lanes` PE lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlaneBuf {
+    depth: usize,
+    lanes: usize,
+    words: usize,
+    /// Flattened storage: plane `p` occupies `data[p*words .. (p+1)*words]`.
+    data: Vec<u64>,
+}
+
+impl PlaneBuf {
+    /// Allocate an all-zero buffer with `depth` bit-planes × `lanes` PEs.
+    pub fn new(depth: usize, lanes: usize) -> Self {
+        assert!(depth > 0 && lanes > 0, "empty PlaneBuf");
+        let words = lanes.div_ceil(64);
+        PlaneBuf { depth, lanes, words, data: vec![0; depth * words] }
+    }
+
+    pub fn depth(&self) -> usize { self.depth }
+    pub fn lanes(&self) -> usize { self.lanes }
+    pub fn words(&self) -> usize { self.words }
+
+    #[inline]
+    pub fn plane(&self, p: usize) -> &[u64] {
+        debug_assert!(p < self.depth, "plane {p} out of {}", self.depth);
+        &self.data[p * self.words..(p + 1) * self.words]
+    }
+
+    #[inline]
+    pub fn plane_mut(&mut self, p: usize) -> &mut [u64] {
+        debug_assert!(p < self.depth, "plane {p} out of {}", self.depth);
+        &mut self.data[p * self.words..(p + 1) * self.words]
+    }
+
+    /// Mutable access to two distinct planes at once (for in-place ops).
+    #[inline]
+    pub fn planes_mut2(&mut self, a: usize, b: usize) -> (&mut [u64], &mut [u64]) {
+        assert_ne!(a, b);
+        let w = self.words;
+        let (lo, hi) = (a.min(b), a.max(b));
+        let (head, tail) = self.data.split_at_mut(hi * w);
+        let pa = &mut head[lo * w..lo * w + w];
+        let pb = &mut tail[..w];
+        if a < b { (pa, pb) } else { (pb, pa) }
+    }
+
+    /// Read one lane's bit from plane `p`.
+    #[inline]
+    pub fn get_bit(&self, p: usize, lane: usize) -> bool {
+        debug_assert!(lane < self.lanes);
+        (self.plane(p)[lane / 64] >> (lane % 64)) & 1 == 1
+    }
+
+    /// Write one lane's bit in plane `p`.
+    #[inline]
+    pub fn set_bit(&mut self, p: usize, lane: usize, v: bool) {
+        debug_assert!(lane < self.lanes);
+        let w = &mut self.plane_mut(p)[lane / 64];
+        let m = 1u64 << (lane % 64);
+        if v { *w |= m } else { *w &= !m }
+    }
+
+    /// Copy plane `src` over plane `dst` without allocating.
+    pub fn copy_plane(&mut self, src: usize, dst: usize) {
+        if src == dst {
+            return;
+        }
+        let (d, s) = self.planes_mut2(dst, src);
+        d.copy_from_slice(s);
+    }
+
+    /// Zero the planes `[base, base+width)`.
+    pub fn clear_planes(&mut self, base: usize, width: usize) {
+        for p in base..base + width {
+            self.plane_mut(p).fill(0);
+        }
+    }
+
+    /// Read lane `lane`'s two's-complement value from planes
+    /// `[base, base+width)` (LSB at `base`).
+    pub fn read_lane(&self, base: usize, width: usize, lane: usize) -> i64 {
+        assert!(width <= 64 && width > 0);
+        let mut v: u64 = 0;
+        for i in 0..width {
+            if self.get_bit(base + i, lane) {
+                v |= 1 << i;
+            }
+        }
+        // sign-extend from `width` bits
+        let shift = 64 - width as u32;
+        ((v << shift) as i64) >> shift
+    }
+
+    /// Write `value` (two's complement, `width` bits) into lane `lane`.
+    pub fn write_lane(&mut self, base: usize, width: usize, lane: usize, value: i64) {
+        assert!(width <= 64 && width > 0);
+        for i in 0..width {
+            self.set_bit(base + i, lane, (value >> i) & 1 == 1);
+        }
+    }
+
+    /// Write the same `value` into ALL lanes (BRAM broadcast write: the
+    /// same bit-row pattern is driven on every bitline, one plane/cycle).
+    pub fn broadcast(&mut self, base: usize, width: usize, value: i64) {
+        for i in 0..width {
+            let fill = if (value >> i) & 1 == 1 { !0u64 } else { 0 };
+            self.plane_mut(base + i).fill(fill);
+        }
+        self.mask_tail(base, width);
+    }
+
+    /// Read all lanes of a register as a vector of values.
+    ///
+    /// Plane-major gather: for each bit-plane, scatter its words' bits
+    /// into the value vector (64 lanes per word read — ~20x faster than
+    /// per-lane `read_lane`, §Perf L3-1).
+    pub fn read_all(&self, base: usize, width: usize) -> Vec<i64> {
+        assert!(width <= 64 && width > 0);
+        let mut out = vec![0u64; self.lanes];
+        for i in 0..width {
+            let plane = self.plane(base + i);
+            for (wi, &word) in plane.iter().enumerate() {
+                if word == 0 {
+                    continue;
+                }
+                let lane0 = wi * 64;
+                let top = (self.lanes - lane0).min(64);
+                let mut bits = word;
+                while bits != 0 {
+                    let l = bits.trailing_zeros() as usize;
+                    if l >= top {
+                        break;
+                    }
+                    out[lane0 + l] |= 1 << i;
+                    bits &= bits - 1;
+                }
+            }
+        }
+        // sign-extend from `width` bits
+        let shift = 64 - width as u32;
+        out.into_iter()
+            .map(|v| ((v << shift) as i64) >> shift)
+            .collect()
+    }
+
+    /// Write per-lane values (slice length must equal `lanes`).
+    ///
+    /// Plane-major word assembly: build each plane's packed words from
+    /// bit `i` of 64 values at a time instead of per-lane `set_bit`
+    /// (the host-staging hot path, §Perf L3-1).
+    pub fn write_all(&mut self, base: usize, width: usize, values: &[i64]) {
+        assert_eq!(values.len(), self.lanes);
+        assert!(width <= 64 && width > 0);
+        let words = self.words;
+        // word-major: load each value once, scatter its bits into a
+        // local plane-word stripe (cache-friendly transpose)
+        let mut stripe = vec![0u64; width];
+        for wi in 0..words {
+            let lane0 = wi * 64;
+            let chunk = &values[lane0..values.len().min(lane0 + 64)];
+            stripe.fill(0);
+            for (l, &v) in chunk.iter().enumerate() {
+                for (i, s) in stripe.iter_mut().enumerate() {
+                    *s |= (((v >> i) & 1) as u64) << l;
+                }
+            }
+            for (i, &s) in stripe.iter().enumerate() {
+                self.data[(base + i) * words + wi] = s;
+            }
+        }
+    }
+
+    /// Zero the unused high bits of the last word in each plane of a
+    /// register window (keeps lane-population invariants exact).
+    fn mask_tail(&mut self, base: usize, width: usize) {
+        let rem = self.lanes % 64;
+        if rem == 0 {
+            return;
+        }
+        let mask = (1u64 << rem) - 1;
+        let w = self.words;
+        for p in base..base + width {
+            self.plane_mut(p)[w - 1] &= mask;
+        }
+    }
+
+    /// Shift a register window *down* by `k` lanes (lane `l` receives
+    /// lane `l+k`), zero-filling the top — the within-column hop of the
+    /// binary-hopping fold network.
+    pub fn shift_lanes_down(&mut self, base: usize, width: usize, k: usize) {
+        if k == 0 {
+            return;
+        }
+        let (wshift, bshift) = (k / 64, (k % 64) as u32);
+        let words = self.words;
+        let mut tmp = vec![0u64; words];
+        for p in base..base + width {
+            {
+                let src = self.plane(p);
+                for i in 0..words {
+                    let lo = src.get(i + wshift).copied().unwrap_or(0);
+                    let hi = if bshift == 0 {
+                        0
+                    } else {
+                        src.get(i + wshift + 1).copied().unwrap_or(0) << (64 - bshift)
+                    };
+                    tmp[i] = (lo >> bshift) | hi;
+                }
+            }
+            self.plane_mut(p).copy_from_slice(&tmp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_lane_roundtrip() {
+        let mut b = PlaneBuf::new(64, 100);
+        for (lane, v) in [(0usize, 0i64), (1, 1), (63, -1), (64, 127), (99, -128)] {
+            b.write_lane(8, 8, lane, v);
+            assert_eq!(b.read_lane(8, 8, lane), v, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn sign_extension_on_read() {
+        let mut b = PlaneBuf::new(16, 3);
+        b.write_lane(0, 4, 1, -3); // 0b1101
+        assert_eq!(b.read_lane(0, 4, 1), -3);
+        assert_eq!(b.read_lane(0, 3, 1), -3 & 7i64 | !0 << 3); // 0b101 = -3 in 3 bits
+    }
+
+    #[test]
+    fn broadcast_hits_every_lane() {
+        let mut b = PlaneBuf::new(32, 130);
+        b.broadcast(4, 8, -77);
+        assert!(b.read_all(4, 8).iter().all(|&v| v == -77));
+    }
+
+    #[test]
+    fn broadcast_masks_tail_bits() {
+        let mut b = PlaneBuf::new(8, 70); // 2 words, 6 tail lanes used
+        b.broadcast(0, 8, -1);
+        // all bits beyond lane 69 must be zero
+        assert_eq!(b.plane(0)[1] >> 6, 0);
+    }
+
+    #[test]
+    fn shift_lanes_down_moves_values() {
+        let mut b = PlaneBuf::new(8, 200);
+        let vals: Vec<i64> = (0..200).map(|l| (l % 120) as i64 - 60).collect();
+        b.write_all(0, 8, &vals);
+        b.shift_lanes_down(0, 8, 70);
+        let got = b.read_all(0, 8);
+        for l in 0..130 {
+            assert_eq!(got[l], vals[l + 70], "lane {l}");
+        }
+        for l in 130..200 {
+            assert_eq!(got[l], 0, "zero-fill lane {l}");
+        }
+    }
+
+    #[test]
+    fn planes_mut2_disjoint() {
+        let mut b = PlaneBuf::new(4, 64);
+        {
+            let (a, c) = b.planes_mut2(1, 3);
+            a[0] = 7;
+            c[0] = 9;
+        }
+        assert_eq!(b.plane(1)[0], 7);
+        assert_eq!(b.plane(3)[0], 9);
+    }
+}

@@ -1,0 +1,106 @@
+//! PiCaSO-IM block: geometry, configuration and per-block resource cost.
+//!
+//! A block is one BRAM18 plus its bitline PEs and datapath (registerfile,
+//! OpMux, ALU). The paper's §IV-D modifications to PiCaSO-F:
+//!   * NEWS network -> simple east->west movement (modelled in
+//!     `alu::accum_from` + the engine's column chain),
+//!   * block-ID-based selection (SELBLK; modelled in the engine),
+//!   * a third pointer register so accumulation overlaps movement
+//!     (reflected in `alu::cost::accum_hop` = w + 2 rather than 2w).
+//!
+//! The struct here carries the *architecture* description used by the
+//! resource/timing models; the bit-level math lives in `alu`.
+
+
+
+/// Which PIM realization a block uses (paper §IV-D / Table V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PicasoVariant {
+    /// Overlay on plain BRAM + fabric LUTs (the U55 implementation).
+    Overlay,
+    /// Hypothetical custom-BRAM tile (PiCaSO-CB): registerfile, OpMux
+    /// and ALU folded into the BRAM macro; ~1/3 the fabric LUTs.
+    CustomBram,
+}
+
+/// Geometry and per-block resource cost of a PiCaSO-IM block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockGeom {
+    /// Bit-serial PEs per block (bitlines of one BRAM36).
+    pub pes: usize,
+    /// Register column depth per PE in bits (BRAM36 depth).
+    pub regfile_bits: usize,
+    /// LUTs per block (overlay datapath; calibrated to Table III:
+    /// 2736 LUTs / 24 blocks = 114).
+    pub luts: u32,
+    /// FFs per block (3096 / 24 = 129).
+    pub ffs: u32,
+    /// BRAM18 per block (2 blocks share one BRAM36; Table III counts a
+    /// 12x2 tile as 12 BRAM36).
+    pub bram18: u32,
+}
+
+impl BlockGeom {
+    /// The U55 overlay block used throughout the paper.
+    pub fn overlay() -> Self {
+        BlockGeom { pes: super::PES_PER_BLOCK, regfile_bits: super::REGFILE_BITS, luts: 114, ffs: 129, bram18: 1 }
+    }
+
+    /// PiCaSO-CB: datapath absorbed into the BRAM tile; only the glue
+    /// (selection + pointer regs) stays in fabric. Calibrated so a
+    /// 100%-BRAM U55 build reproduces Table V's IMAGine-CB row
+    /// (10.1% LUT, 7.2% FF).
+    pub fn custom_bram() -> Self {
+        BlockGeom { luts: 28, ffs: 14, ..Self::overlay() }
+    }
+
+    pub fn for_variant(v: PicasoVariant) -> Self {
+        match v {
+            PicasoVariant::Overlay => Self::overlay(),
+            PicasoVariant::CustomBram => Self::custom_bram(),
+        }
+    }
+
+    /// Matrix-element capacity of one PE at precision `p`, after
+    /// reserving `reserved_regs` working registers (acc/temp/x staging).
+    pub fn pe_capacity(&self, p: usize, reserved_regs: usize) -> usize {
+        let avail = self.regfile_bits - reserved_regs * crate::pim::REG_BITS;
+        avail / p
+    }
+}
+
+impl Default for BlockGeom {
+    fn default() -> Self {
+        Self::overlay()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlay_matches_table3_tile() {
+        // Table III: a 12x2 tile's PIM array = 2736 LUT, 3096 FF, 12
+        // BRAM36 (= 24 BRAM18, one per block).
+        let g = BlockGeom::overlay();
+        assert_eq!(g.luts * 24, 2736);
+        assert_eq!(g.ffs * 24, 3096);
+        assert_eq!(g.bram18 * 24 / 2, 12);
+    }
+
+    #[test]
+    fn custom_bram_is_much_smaller() {
+        let o = BlockGeom::overlay();
+        let c = BlockGeom::custom_bram();
+        assert!(c.luts * 3 < o.luts);
+        assert_eq!(c.pes, o.pes);
+    }
+
+    #[test]
+    fn pe_capacity_example() {
+        let g = BlockGeom::overlay();
+        // 8 reserved regs -> 768 planes -> 96 8-bit elements
+        assert_eq!(g.pe_capacity(8, 8), 96);
+    }
+}

@@ -1,0 +1,32 @@
+//! The PIM substrate: PiCaSO-IM blocks simulated bit-exactly.
+//!
+//! The hardware computes with one bit-serial PE per BRAM bitline; the
+//! simulator packs 64 PEs into each `u64` word and executes the *same*
+//! bit-serial schedule with bitwise ops (ripple full-adders, Booth digit
+//! selection, masked conditional add/sub). This is both bit-exact — the
+//! ALU walks the identical two's-complement bit recurrence — and fast
+//! (64 lanes per instruction; see EXPERIMENTS.md §Perf).
+//!
+//! Layout: one [`PlaneBuf`] per engine *block column* holds the register
+//! files of all PE rows in that column: `depth` bit-planes × `lanes` PEs.
+//! A block is one BRAM18 (1024 deep) with 16 bitline PEs — the Table III
+//! tile (12×2 blocks) then counts 12 BRAM36 and 384 PEs, and a
+//! 100%-BRAM U55 build reaches 2016×32 = 64,512 PEs ("64K", Table IV).
+//! Each PE owns a 1024-bit register column = 32 logical registers × 32
+//! bits ([`regfile`]).
+
+pub mod bitplane;
+pub mod alu;
+pub mod regfile;
+pub mod block;
+
+pub use bitplane::PlaneBuf;
+pub use regfile::{RegFile, RegAddr};
+pub use block::{BlockGeom, PicasoVariant};
+
+/// Bits of BRAM depth per PE register column (BRAM18 depth).
+pub const REGFILE_BITS: usize = 1024;
+/// Bits per logical register (REGFILE_BITS / NUM_REGS).
+pub const REG_BITS: usize = 32;
+/// Bit-serial PEs per PiCaSO block (bitlines of one BRAM18).
+pub const PES_PER_BLOCK: usize = 16;

@@ -1,0 +1,120 @@
+//! Logical register map over the BRAM bit-column.
+//!
+//! Each PE owns a 1024-bit column (BRAM36 depth); the ISA's 5-bit
+//! register fields address 32 logical registers of 32 bits each:
+//! register `r` occupies planes `[32r, 32r+32)`. The *effective* width
+//! of an operand is set by Op-Params (`SETP precision/acc_width`), so a
+//! logical register can hold a p-bit operand (LSB-aligned) or serve as
+//! raw matrix storage via `spill` addressing.
+
+use super::{REGFILE_BITS, REG_BITS};
+
+
+/// A resolved register window: base plane + effective width in bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegAddr {
+    pub base: usize,
+    pub width: usize,
+}
+
+impl RegAddr {
+    pub fn as_tuple(self) -> (usize, usize) {
+        (self.base, self.width)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum RegError {
+    #[error("register r{0} out of range (0..32)")]
+    BadReg(u8),
+    #[error("width {width} at r{reg} overflows the 1024-bit column")]
+    Overflow { reg: u8, width: usize },
+}
+
+/// The register map of one PE column (identical for every PE — SIMD).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RegFile;
+
+impl RegFile {
+    /// Resolve logical register `r` with effective width `width` bits.
+    /// Wide operands (e.g. a 64-bit accumulator with `acc_width` > 32)
+    /// spill into the *following* register slots, which codegen must
+    /// leave free.
+    pub fn resolve(r: u8, width: usize) -> Result<RegAddr, RegError> {
+        if r as usize >= super::super::isa::NUM_REGS {
+            return Err(RegError::BadReg(r));
+        }
+        let base = r as usize * REG_BITS;
+        if base + width > REGFILE_BITS {
+            return Err(RegError::Overflow { reg: r, width });
+        }
+        Ok(RegAddr { base, width })
+    }
+
+    /// Number of registers a `width`-bit operand occupies.
+    pub fn slots(width: usize) -> usize {
+        width.div_ceil(REG_BITS)
+    }
+
+    /// Capacity check: how many `p`-bit matrix elements fit in the
+    /// registers `[first, 32)` if each element is packed LSB-aligned in
+    /// its own plane run (dense spill packing, `p` planes per element).
+    pub fn spill_capacity(first_reg: u8, p: usize) -> usize {
+        let planes = REGFILE_BITS - (first_reg as usize) * REG_BITS;
+        planes / p
+    }
+
+    /// Plane base of the `idx`-th spilled `p`-bit element after `first_reg`.
+    pub fn spill_addr(first_reg: u8, p: usize, idx: usize) -> RegAddr {
+        let base = (first_reg as usize) * REG_BITS + idx * p;
+        debug_assert!(base + p <= REGFILE_BITS);
+        RegAddr { base, width: p }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_basic() {
+        let a = RegFile::resolve(3, 8).unwrap();
+        assert_eq!((a.base, a.width), (96, 8));
+    }
+
+    #[test]
+    fn resolve_rejects_high_reg() {
+        assert_eq!(RegFile::resolve(32, 8), Err(RegError::BadReg(32)));
+    }
+
+    #[test]
+    fn resolve_rejects_overflow() {
+        assert!(matches!(
+            RegFile::resolve(31, 64),
+            Err(RegError::Overflow { .. })
+        ));
+        assert!(RegFile::resolve(30, 64).is_ok());
+    }
+
+    #[test]
+    fn wide_acc_spills_two_slots() {
+        assert_eq!(RegFile::slots(32), 1);
+        assert_eq!(RegFile::slots(33), 2);
+        assert_eq!(RegFile::slots(64), 2);
+    }
+
+    #[test]
+    fn spill_capacity_counts_elements() {
+        // from r8: 24 regs * 32 bits = 768 planes; 96 8-bit elements
+        assert_eq!(RegFile::spill_capacity(8, 8), 96);
+        assert_eq!(RegFile::spill_capacity(8, 16), 48);
+    }
+
+    #[test]
+    fn spill_addr_is_dense() {
+        let a = RegFile::spill_addr(8, 8, 0);
+        let b = RegFile::spill_addr(8, 8, 1);
+        assert_eq!(a.base, 256);
+        assert_eq!(b.base, 264);
+    }
+}

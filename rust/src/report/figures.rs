@@ -1,0 +1,134 @@
+//! Figure regenerators (Figs 1, 4, 5, 6) as aligned text series / CSV.
+
+use crate::baselines::latency::all_engines;
+use crate::baselines::rima;
+use crate::resources::{engine_utilization, DEVICES, SynthMode};
+use crate::timing::FloorplanSim;
+use crate::tile::TileGeom;
+
+/// Fig 1: RIMA actual vs ideal TOPS on Stratix 10 GX2800.
+pub fn fig1() -> String {
+    let mut s = String::from("BRAM%  | actual TOPS | ideal TOPS | wasted\n");
+    for (frac, actual, ideal) in rima::fig1_series() {
+        s.push_str(&format!(
+            "{:>5.0}% | {:>11.2} | {:>10.2} | {:>5.1}%\n",
+            frac * 100.0,
+            actual,
+            ideal,
+            100.0 * (ideal - actual) / ideal
+        ));
+    }
+    s
+}
+
+/// Fig 4: resource usage at 100% BRAM-as-PIM across the Table IV
+/// devices (the relaxed 100 MHz study).
+pub fn fig4() -> String {
+    let tile = TileGeom::u55();
+    let mut s = String::from("ID    | Tiles | PEs    | LUT%  | FF%   | CtrlSet% | BRAM%\n");
+    for d in &DEVICES {
+        let u = engine_utilization(d, &tile, SynthMode::Relaxed);
+        s.push_str(&format!(
+            "{:<5} | {:>5} | {:>5}K | {:>5.1} | {:>5.1} | {:>8.1} | {:>5.1}\n",
+            u.device_id,
+            u.tiles,
+            u.pes / 1000,
+            u.lut_pct,
+            u.ff_pct,
+            u.ctrl_set_pct,
+            u.bram_pct,
+        ));
+    }
+    s
+}
+
+/// Fig 5: the floorplanning / timing-closure iteration trajectory.
+pub fn fig5() -> String {
+    let sim = FloorplanSim::u55();
+    let mut s = String::from(
+        "iteration    | action                              | critical path (ns) | slack (ns) | where\n",
+    );
+    for it in sim.run() {
+        s.push_str(&format!(
+            "{:<12} | {:<35} | {:>18.3} | {:>10.3} | {}\n",
+            it.name,
+            it.action,
+            it.critical_path,
+            it.slack,
+            it.critical_in,
+        ));
+    }
+    s.push_str(&format!("final clock: {:.0} MHz\n", sim.final_mhz()));
+    s
+}
+
+/// Fig 6: GEMV cycle latency (a) and execution time (b) for all
+/// engines over `dims` x `precisions`.
+pub fn fig6(dims: &[usize], precisions: &[usize]) -> String {
+    let engines = all_engines();
+    let mut s = String::new();
+    for &p in precisions {
+        s.push_str(&format!("\n-- precision {p}-bit --\n"));
+        s.push_str(&format!("{:<16}", "engine"));
+        for &d in dims {
+            s.push_str(&format!(" | {:>12}", format!("D={d}")));
+        }
+        s.push_str("\n(a) cycle latency\n");
+        for e in &engines {
+            s.push_str(&format!("{:<16}", e.name()));
+            for &d in dims {
+                s.push_str(&format!(" | {:>12}", e.cycle_latency(d, p)));
+            }
+            s.push('\n');
+        }
+        s.push_str("(b) execution time (us)\n");
+        for e in &engines {
+            if e.f_sys_mhz().is_none() {
+                continue; // BRAMAC: no reported system clock
+            }
+            s.push_str(&format!("{:<16}", e.name()));
+            for &d in dims {
+                s.push_str(&format!(" | {:>12.2}", e.exec_us(d, p).unwrap()));
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_has_anchored_endpoints() {
+        let f = fig1();
+        assert!(f.contains("14%") || f.contains(" 14%"));
+        assert!(f.contains("93%"));
+    }
+
+    #[test]
+    fn fig4_all_devices_present() {
+        let f = fig4();
+        for d in &DEVICES {
+            assert!(f.contains(d.id), "{}", d.id);
+        }
+        assert!(f.contains("100.0") || f.contains(" 99.")); // BRAM%
+    }
+
+    #[test]
+    fn fig5_trajectory_rendered() {
+        let f = fig5();
+        assert!(f.contains("-0.52"));
+        assert!(f.contains("737"));
+    }
+
+    #[test]
+    fn fig6_has_both_panels() {
+        let f = fig6(&[64, 256], &[8]);
+        assert!(f.contains("(a) cycle latency"));
+        assert!(f.contains("(b) execution time"));
+        assert!(f.contains("IMAGine-slice4"));
+        assert!(!f.is_empty());
+    }
+}

@@ -1,0 +1,128 @@
+//! The Table IV device representatives (plus the competitors'
+//! evaluation platforms), with BRAM capacity, LUT-to-BRAM ratio and the
+//! datasheet BRAM Fmax used throughout the paper.
+
+/// FPGA family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Virtex7,
+    UltraScalePlus,
+    /// Intel Arria 10 (CCB/CoMeFa/BRAMAC evaluation platform).
+    Arria10,
+    /// Intel Stratix 10 (RIMA evaluation platform).
+    Stratix10,
+}
+
+/// One device entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    /// Part number, e.g. "xcu55c-fsvh-2".
+    pub part: &'static str,
+    /// Short ID used in Fig 4 ("U55", "V7-a", ...).
+    pub id: &'static str,
+    pub family: Family,
+    /// BRAM36-equivalent block count (M20K count for Intel parts).
+    pub bram: u32,
+    /// LUT-to-BRAM ratio (Table IV "Ratio"; ALM-to-M20K for Intel).
+    pub lut_per_bram: u32,
+    /// Datasheet BRAM Fmax in MHz ([20]-[22]).
+    pub bram_fmax_mhz: f64,
+}
+
+impl Device {
+    /// Total LUTs (= ratio × BRAM count, how Table IV is derived).
+    pub fn luts(&self) -> u64 {
+        self.bram as u64 * self.lut_per_bram as u64
+    }
+
+    /// FF capacity (2 FF per LUT in AMD CLBs).
+    pub fn ffs(&self) -> u64 {
+        self.luts() * 2
+    }
+
+    /// Max PEs utilizing all BRAMs as PIMs (Table IV "Max PE#"):
+    /// 32 bit-serial PEs per BRAM36 (16 per BRAM18).
+    pub fn max_pes(&self) -> u64 {
+        self.bram as u64 * 32
+    }
+}
+
+/// The nine Table IV representatives, in table order.
+pub const DEVICES: [Device; 9] = [
+    Device { part: "xcu55c-fsvh-2", id: "U55", family: Family::UltraScalePlus, bram: 2016, lut_per_bram: 646, bram_fmax_mhz: 737.0 },
+    Device { part: "xc7vx330tffg-2", id: "V7-a", family: Family::Virtex7, bram: 750, lut_per_bram: 272, bram_fmax_mhz: 543.0 },
+    Device { part: "xc7vx485tffg-2", id: "V7-b", family: Family::Virtex7, bram: 1030, lut_per_bram: 295, bram_fmax_mhz: 543.0 },
+    Device { part: "xc7v2000tfhg-2", id: "V7-c", family: Family::Virtex7, bram: 1292, lut_per_bram: 946, bram_fmax_mhz: 543.0 },
+    Device { part: "xc7vx1140tflg-2", id: "V7-d", family: Family::Virtex7, bram: 1880, lut_per_bram: 379, bram_fmax_mhz: 543.0 },
+    Device { part: "xcvu3p-ffvc-3", id: "US-a", family: Family::UltraScalePlus, bram: 720, lut_per_bram: 547, bram_fmax_mhz: 737.0 },
+    Device { part: "xcvu23p-vsva-3", id: "US-b", family: Family::UltraScalePlus, bram: 2112, lut_per_bram: 488, bram_fmax_mhz: 737.0 },
+    Device { part: "xcvu19p-fsvb-2", id: "US-c", family: Family::UltraScalePlus, bram: 2160, lut_per_bram: 1892, bram_fmax_mhz: 737.0 },
+    Device { part: "xcvu29p-figd-3", id: "US-d", family: Family::UltraScalePlus, bram: 2688, lut_per_bram: 643, bram_fmax_mhz: 737.0 },
+];
+
+/// RIMA's platform: Stratix 10 GX2800 (1 GHz M20K Fmax [22]).
+pub const STRATIX10_GX2800: Device = Device {
+    part: "1SG280",
+    id: "S10",
+    family: Family::Stratix10,
+    bram: 11721,
+    lut_per_bram: 80,
+    bram_fmax_mhz: 1000.0,
+};
+
+/// CCB/CoMeFa/BRAMAC platform: Arria 10 GX900 (730 MHz M20K Fmax).
+pub const ARRIA10_GX900: Device = Device {
+    part: "10AX090",
+    id: "A10",
+    family: Family::Arria10,
+    bram: 2423,
+    lut_per_bram: 140,
+    bram_fmax_mhz: 730.0,
+};
+
+/// Look up a Table IV device by its short ID.
+pub fn device_by_id(id: &str) -> Option<&'static Device> {
+    DEVICES.iter().find(|d| d.id.eq_ignore_ascii_case(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_max_pe_counts() {
+        // Table IV "Max PE#" column (reported rounded to K).
+        let expect = [
+            ("U55", 64), ("V7-a", 24), ("V7-b", 32), ("V7-c", 41),
+            ("V7-d", 60), ("US-a", 23), ("US-b", 67), ("US-c", 69),
+            ("US-d", 86),
+        ];
+        for (id, k) in expect {
+            let d = device_by_id(id).unwrap();
+            let pes_k = d.max_pes() as f64 / 1000.0; // paper rounds to K
+            assert!(
+                (pes_k - k as f64).abs() < 1.0,
+                "{id}: {pes_k:.1}K vs {k}K"
+            );
+        }
+    }
+
+    #[test]
+    fn u55_has_64k_pes_and_full_luts() {
+        let u55 = device_by_id("U55").unwrap();
+        assert_eq!(u55.max_pes(), 64_512);
+        assert_eq!(u55.luts(), 1_302_336); // ~1.3M LUTs on xcu55c
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(device_by_id("us-c").is_some());
+        assert!(device_by_id("nope").is_none());
+    }
+
+    #[test]
+    fn intel_platforms_present() {
+        assert_eq!(STRATIX10_GX2800.bram_fmax_mhz, 1000.0);
+        assert_eq!(ARRIA10_GX900.bram_fmax_mhz, 730.0);
+    }
+}

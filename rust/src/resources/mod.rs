@@ -1,0 +1,8 @@
+//! Device database (Table IV) and the resource-utilization model behind
+//! Table III, Fig 4 and Table V.
+
+pub mod devices;
+pub mod utilization;
+
+pub use devices::{Device, Family, DEVICES, device_by_id};
+pub use utilization::{Utilization, SynthMode, engine_utilization};

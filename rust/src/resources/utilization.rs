@@ -1,0 +1,154 @@
+//! Post-implementation utilization model (Fig 4, Table V).
+//!
+//! Utilization = per-tile component costs (calibrated to Table III) ×
+//! the tile count that uses 100% of a device's BRAM, divided by the
+//! device's capacity. Two synthesis modes:
+//!
+//! * `Relaxed` — the Fig-4 study: 100 MHz target, no retiming pressure;
+//!   Vivado packs the datapath ~33% denser (LUT combining, no pipeline
+//!   replication). The 0.67 factor reproduces every utilization claim
+//!   in §V-B: U55 ≈ 25%, V7-a ≈ 60%, US-a/b ≈ 30%, US-c < 10%.
+//! * `Final` — the 737 MHz U55 implementation of Table V: full datapath
+//!   cost, minus the LUTs Vivado still shares across blocks (0.95),
+//!   reproducing 35.6% LUT / 24.8% FF.
+
+use super::devices::Device;
+use crate::tile::TileGeom;
+
+/// LUT packing factor for the relaxed (100 MHz, Fig 4) study.
+pub const RELAXED_LUT_FACTOR: f64 = 0.67;
+/// LUT packing factor for the timing-closed (737 MHz, Table V) build.
+pub const FINAL_LUT_FACTOR: f64 = 0.95;
+
+/// Synthesis mode of the utilization model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthMode {
+    /// Fig-4 study: 100 MHz, focus on logic capacity only.
+    Relaxed,
+    /// Table-V final implementation at BRAM Fmax.
+    Final,
+}
+
+impl SynthMode {
+    fn lut_factor(self) -> f64 {
+        match self {
+            SynthMode::Relaxed => RELAXED_LUT_FACTOR,
+            SynthMode::Final => FINAL_LUT_FACTOR,
+        }
+    }
+}
+
+/// Utilization report for one engine build on one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Utilization {
+    pub device_id: &'static str,
+    pub tiles: u32,
+    pub pes: u64,
+    pub lut_pct: f64,
+    pub ff_pct: f64,
+    pub bram_pct: f64,
+    pub dsp_pct: f64,
+    /// Control-set utilization: unique (clock, CE, SR) groups each tile
+    /// needs vs the device's control-set capacity (1 per 8 LUTs).
+    pub ctrl_set_pct: f64,
+}
+
+/// Distinct control sets per tile: the controller FSM plus one per
+/// fanout level and two per block (write-enable + clock-enable groups).
+/// Calibrated to the §V-B "6% control set utilization" on U55.
+fn control_sets_per_tile(tile: &TileGeom) -> u64 {
+    4 + tile.fanout.levels as u64 + 2 * tile.blocks() as u64
+}
+
+/// Utilization of a 100%-BRAM IMAGine build on `dev`.
+pub fn engine_utilization(dev: &Device, tile: &TileGeom, mode: SynthMode) -> Utilization {
+    let tiles = dev.bram / tile.bram36();
+    let cost = tile.cost();
+    let luts_used = cost.luts as f64 * tiles as f64 * mode.lut_factor();
+    let ffs_used = cost.ffs as f64 * tiles as f64;
+    let bram_used = (tiles * tile.bram36()) as f64;
+    let ctrl_used = control_sets_per_tile(tile) * tiles as u64;
+    let ctrl_capacity = dev.luts() as f64 / 8.0;
+    Utilization {
+        device_id: dev.id,
+        tiles,
+        pes: tiles as u64 * tile.pes() as u64,
+        lut_pct: 100.0 * luts_used / dev.luts() as f64,
+        ff_pct: 100.0 * ffs_used / dev.ffs() as f64,
+        bram_pct: 100.0 * bram_used / dev.bram as f64,
+        dsp_pct: 0.0,
+        ctrl_set_pct: 100.0 * ctrl_used as f64 / ctrl_capacity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::devices::device_by_id;
+
+    fn util(id: &str, mode: SynthMode) -> Utilization {
+        engine_utilization(device_by_id(id).unwrap(), &TileGeom::u55(), mode)
+    }
+
+    #[test]
+    fn fig4_u55_about_25pct_logic() {
+        let u = util("U55", SynthMode::Relaxed);
+        assert!((u.lut_pct - 25.0).abs() < 2.0, "{u:?}");
+        assert!(u.ctrl_set_pct < 8.0, "{u:?}"); // "6% control set"
+        assert_eq!(u.pes, 64_512);
+    }
+
+    #[test]
+    fn fig4_v7a_about_60pct_logic() {
+        let u = util("V7-a", SynthMode::Relaxed);
+        assert!((u.lut_pct - 60.0).abs() < 3.0, "{u:?}");
+        assert_eq!(u.pes / 1024, 23); // 62 tiles * 384 = 23808 ~ 24K
+    }
+
+    #[test]
+    fn fig4_usa_usb_about_30pct_logic() {
+        for id in ["US-a", "US-b"] {
+            let u = util(id, SynthMode::Relaxed);
+            assert!((25.0..36.0).contains(&u.lut_pct), "{u:?}");
+        }
+    }
+
+    #[test]
+    fn fig4_usc_below_10pct_logic() {
+        let u = util("US-c", SynthMode::Relaxed);
+        assert!(u.lut_pct < 10.0, "{u:?}");
+    }
+
+    #[test]
+    fn fig4_all_devices_reach_100pct_bram() {
+        // §V-B: "IMAGine scaled up to 100% of available BRAM in all the
+        // representative devices" — within one tile's worth of BRAMs.
+        for d in &crate::resources::devices::DEVICES {
+            let u = engine_utilization(d, &TileGeom::u55(), SynthMode::Relaxed);
+            assert!(u.bram_pct > 98.0, "{}: {:.1}%", d.id, u.bram_pct);
+            assert!(u.lut_pct < 100.0, "{}: must fit", d.id);
+        }
+    }
+
+    #[test]
+    fn table5_final_utilization() {
+        let u = util("U55", SynthMode::Final);
+        // Table V IMAGine row: 35.6% LUT, 24.8% FF, 100% BRAM, 0 DSP.
+        assert!((u.lut_pct - 35.6).abs() < 0.5, "{u:?}");
+        assert!((u.ff_pct - 24.8).abs() < 0.5, "{u:?}");
+        assert!(u.bram_pct > 99.9);
+        assert_eq!(u.dsp_pct, 0.0);
+    }
+
+    #[test]
+    fn table5_custom_bram_utilization() {
+        let u = engine_utilization(
+            device_by_id("U55").unwrap(),
+            &TileGeom::u55_custom_bram(),
+            SynthMode::Final,
+        );
+        // Table V IMAGine-CB row: 10.1% LUT, 7.2% FF.
+        assert!((u.lut_pct - 10.1).abs() < 0.7, "{u:?}");
+        assert!((u.ff_pct - 7.2).abs() < 0.7, "{u:?}");
+    }
+}

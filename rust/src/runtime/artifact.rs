@@ -1,0 +1,173 @@
+//! AOT artifact manifest: shapes, dtypes and engine metadata of every
+//! lowered HLO module (written by `python/compile/aot.py`).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("manifest field missing or malformed: {0}")]
+    Field(String),
+    #[error("unknown artifact '{0}'")]
+    Unknown(String),
+}
+
+/// Engine metadata of one artifact (mirrors aot.py's `meta`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+    /// "gemv" | "gemm" | "mlp".
+    pub kind: String,
+    pub precision: usize,
+    pub variant: String,
+    /// GEMV dims (m, n) when kind != mlp.
+    pub m: Option<usize>,
+    pub n: Option<usize>,
+    /// Batch size (gemm/mlp).
+    pub batch: Option<usize>,
+    /// MLP layer dims.
+    pub dims: Vec<usize>,
+}
+
+/// The parsed manifest.json.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+fn field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, ManifestError> {
+    j.get(key)
+        .ok_or_else(|| ManifestError::Field(format!("{ctx}.{key}")))
+}
+
+fn shape_of(j: &Json, ctx: &str) -> Result<Vec<usize>, ManifestError> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .ok_or_else(|| ManifestError::Field(format!("{ctx}: shape")))
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let root = Json::parse(&text)?;
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| ManifestError::Field("root object".into()))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in obj {
+            let inputs = field(e, "inputs", name)?
+                .as_arr()
+                .ok_or_else(|| ManifestError::Field(format!("{name}.inputs")))?
+                .iter()
+                .map(|i| shape_of(field(i, "shape", name)?, name))
+                .collect::<Result<Vec<_>, _>>()?;
+            let output = shape_of(field(field(e, "output", name)?, "shape", name)?, name)?;
+            let meta = field(e, "meta", name)?;
+            let get_usize = |k: &str| meta.get(k).and_then(|v| v.as_usize());
+            let dims = meta
+                .get("dims")
+                .and_then(|d| d.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default();
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(
+                        field(e, "file", name)?
+                            .as_str()
+                            .ok_or_else(|| ManifestError::Field(format!("{name}.file")))?,
+                    ),
+                    input_shapes: inputs,
+                    output_shape: output,
+                    kind: meta
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("gemv")
+                        .to_string(),
+                    precision: get_usize("precision").unwrap_or(8),
+                    variant: meta
+                        .get("variant")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("radix2")
+                        .to_string(),
+                    m: get_usize("m"),
+                    n: get_usize("n"),
+                    batch: get_usize("batch"),
+                    dims,
+                },
+            );
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta, ManifestError> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| ManifestError::Unknown(name.to_string()))
+    }
+
+    /// Find a GEMV artifact matching (m, n, precision, variant).
+    pub fn find_gemv(&self, m: usize, n: usize, p: usize, variant: &str) -> Option<&ArtifactMeta> {
+        self.entries.values().find(|a| {
+            a.kind == "gemv"
+                && a.m == Some(m)
+                && a.n == Some(n)
+                && a.precision == p
+                && a.variant == variant
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&repo_artifacts()).expect("run `make artifacts` first");
+        assert!(m.entries.len() >= 8, "{:?}", m.entries.keys());
+        let g = m.get("gemv_64x64_p8").unwrap();
+        assert_eq!(g.input_shapes, vec![vec![64, 64], vec![64]]);
+        assert_eq!(g.output_shape, vec![64]);
+        assert_eq!((g.m, g.n, g.precision), (Some(64), Some(64), 8));
+        assert!(g.file.exists());
+    }
+
+    #[test]
+    fn find_gemv_by_shape() {
+        let m = Manifest::load(&repo_artifacts()).unwrap();
+        assert!(m.find_gemv(256, 256, 8, "radix2").is_some());
+        assert!(m.find_gemv(256, 256, 8, "booth4").is_some());
+        assert!(m.find_gemv(3, 3, 8, "radix2").is_none());
+    }
+
+    #[test]
+    fn mlp_entry_has_dims() {
+        let m = Manifest::load(&repo_artifacts()).unwrap();
+        let mlp = m.get("mlp_b1").unwrap();
+        assert_eq!(mlp.dims, vec![784, 256, 128, 10]);
+        assert_eq!(mlp.input_shapes.len(), 7); // x + 3x(w, b)
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::load(&repo_artifacts()).unwrap();
+        assert!(matches!(m.get("nope"), Err(ManifestError::Unknown(_))));
+    }
+}

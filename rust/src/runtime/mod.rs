@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`
+//! produced once by `python/compile/aot.py`) and executes them on the
+//! XLA CPU client — the golden numeric backend the coordinator uses to
+//! cross-check the PIM simulator. Python is never on this path.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use pjrt::Runtime;

@@ -1,0 +1,170 @@
+//! The PJRT execution wrapper: HLO text -> compiled executable ->
+//! i32 in / i32 out calls (adapting /opt/xla-example/load_hlo).
+//!
+//! Artifacts were lowered with `return_tuple=True`, so results unwrap
+//! with `to_tuple1()`. Executables compile on first use and are cached
+//! for the life of the runtime (one compiled executable per model
+//! variant, as the architecture prescribes).
+
+use super::artifact::{ArtifactMeta, Manifest, ManifestError};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("manifest: {0}")]
+    Manifest(#[from] ManifestError),
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("artifact '{name}' expects {expected} inputs, got {got}")]
+    Arity { name: String, expected: usize, got: usize },
+    #[error("artifact '{name}' input {index}: expected {expected} elements, got {got}")]
+    InputShape { name: String, index: usize, expected: usize, got: usize },
+}
+
+/// The PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn compile(&mut self, meta: &ArtifactMeta) -> Result<(), RuntimeError> {
+        if self.cache.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().expect("utf-8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(meta.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with i32 inputs (row-major flattened,
+    /// one slice per parameter). Returns the flattened i32 output.
+    pub fn execute(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>, RuntimeError> {
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.input_shapes.len() {
+            return Err(RuntimeError::Arity {
+                name: name.into(),
+                expected: meta.input_shapes.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            let expected: usize = shape.iter().product();
+            if data.len() != expected {
+                return Err(RuntimeError::InputShape {
+                    name: name.into(),
+                    index: i,
+                    expected,
+                    got: data.len(),
+                });
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        self.compile(&meta)?;
+        let exe = self.cache.get(&meta.name).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // return_tuple=True lowering
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Convenience: run a GEMV artifact on i64 host data (int8-ranged).
+    pub fn gemv_i64(
+        &mut self,
+        name: &str,
+        w: &[i64],
+        x: &[i64],
+    ) -> Result<Vec<i64>, RuntimeError> {
+        let wi: Vec<i32> = w.iter().map(|&v| v as i32).collect();
+        let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+        Ok(self
+            .execute(name, &[&wi, &xi])?
+            .into_iter()
+            .map(|v| v as i64)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+    use std::path::PathBuf;
+
+    fn artifacts() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn gemv_artifact_matches_host() {
+        let mut rt = Runtime::load(&artifacts()).unwrap();
+        let mut rng = XorShift::new(42);
+        let w: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let x: Vec<i32> = (0..64).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let y = rt.execute("gemv_64x64_p8", &[&w, &x]).unwrap();
+        let want: Vec<i32> = (0..64)
+            .map(|r| (0..64).map(|j| w[r * 64 + j] * x[j]).sum())
+            .collect();
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn executable_cache_reused() {
+        let mut rt = Runtime::load(&artifacts()).unwrap();
+        let w = vec![1i32; 64 * 64];
+        let x = vec![1i32; 64];
+        rt.execute("gemv_64x64_p8", &[&w, &x]).unwrap();
+        rt.execute("gemv_64x64_p8", &[&w, &x]).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn input_validation() {
+        let mut rt = Runtime::load(&artifacts()).unwrap();
+        let w = vec![0i32; 10];
+        let x = vec![0i32; 64];
+        assert!(matches!(
+            rt.execute("gemv_64x64_p8", &[&w, &x]),
+            Err(RuntimeError::InputShape { .. })
+        ));
+        assert!(matches!(
+            rt.execute("gemv_64x64_p8", &[&x]),
+            Err(RuntimeError::Arity { .. })
+        ));
+    }
+
+    #[test]
+    fn booth_artifact_same_numerics() {
+        let mut rt = Runtime::load(&artifacts()).unwrap();
+        let mut rng = XorShift::new(7);
+        let w: Vec<i64> = rng.vec_i64(256 * 256, -128, 127);
+        let x: Vec<i64> = rng.vec_i64(256, -128, 127);
+        let y2 = rt.gemv_i64("gemv_256x256_p8", &w, &x).unwrap();
+        let y4 = rt.gemv_i64("gemv_256x256_p8_booth4", &w, &x).unwrap();
+        assert_eq!(y2, y4);
+    }
+}

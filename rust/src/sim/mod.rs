@@ -1,0 +1,33 @@
+//! Simulation accounting: cycle statistics and instruction tracing.
+
+pub mod stats;
+pub mod trace;
+
+pub use stats::ExecStats;
+pub use trace::Trace;
+
+/// BRAM Fmax of the Alveo U55 (-2 speed grade), MHz — the paper's
+/// achieved system clock (§V, [21]).
+pub const U55_FMAX_MHZ: f64 = 737.0;
+
+/// Convert a cycle count to seconds at `mhz`.
+pub fn cycles_to_secs(cycles: u64, mhz: f64) -> f64 {
+    cycles as f64 / (mhz * 1e6)
+}
+
+/// Convert a cycle count to microseconds at `mhz`.
+pub fn cycles_to_us(cycles: u64, mhz: f64) -> f64 {
+    cycles_to_secs(cycles, mhz) * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_time_conversions() {
+        // 737 cycles at 737 MHz = 1 us
+        assert!((cycles_to_us(737, U55_FMAX_MHZ) - 1.0).abs() < 1e-12);
+        assert!((cycles_to_secs(737_000_000, U55_FMAX_MHZ) - 1.0).abs() < 1e-9);
+    }
+}

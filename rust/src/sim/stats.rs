@@ -1,0 +1,91 @@
+//! Execution statistics collected by the engine.
+
+use crate::isa::Opcode;
+
+
+/// Per-run cycle/instruction statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExecStats {
+    /// Total cycles including pipeline fill.
+    pub cycles: u64,
+    /// Pipeline fill latency component.
+    pub fill_latency: u64,
+    /// Instructions retired.
+    pub instrs: u64,
+    /// Cycles spent per opcode class.
+    pub cycles_by_op: [u64; 16],
+    /// Instructions per opcode class.
+    pub count_by_op: [u64; 16],
+    /// u64-word plane operations executed by the bitplane ALU (the
+    /// simulator's own work metric, used by the §Perf harness).
+    pub plane_word_ops: u64,
+}
+
+impl ExecStats {
+    pub fn record(&mut self, op: Opcode, cycles: u64) {
+        self.cycles += cycles;
+        self.instrs += 1;
+        self.cycles_by_op[op as usize] += cycles;
+        self.count_by_op[op as usize] += 1;
+    }
+
+    pub fn cycles_for(&self, op: Opcode) -> u64 {
+        self.cycles_by_op[op as usize]
+    }
+
+    pub fn count_for(&self, op: Opcode) -> u64 {
+        self.count_by_op[op as usize]
+    }
+
+    /// Busy (non-fill) cycles.
+    pub fn busy_cycles(&self) -> u64 {
+        self.cycles - self.fill_latency
+    }
+
+    /// Execution time in microseconds at `mhz`.
+    pub fn exec_us(&self, mhz: f64) -> f64 {
+        super::cycles_to_us(self.cycles, mhz)
+    }
+
+    /// Merge another run's stats (for batched workloads).
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.cycles += other.cycles;
+        self.fill_latency += other.fill_latency;
+        self.instrs += other.instrs;
+        self.plane_word_ops += other.plane_word_ops;
+        for i in 0..16 {
+            self.cycles_by_op[i] += other.cycles_by_op[i];
+            self.count_by_op[i] += other.count_by_op[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let mut s = ExecStats::default();
+        s.record(Opcode::Mac, 100);
+        s.record(Opcode::Mac, 50);
+        s.record(Opcode::Nop, 1);
+        assert_eq!(s.cycles, 151);
+        assert_eq!(s.instrs, 3);
+        assert_eq!(s.cycles_for(Opcode::Mac), 150);
+        assert_eq!(s.count_for(Opcode::Mac), 2);
+    }
+
+    #[test]
+    fn merge_adds_fields() {
+        let mut a = ExecStats::default();
+        a.record(Opcode::Add, 9);
+        let mut b = ExecStats::default();
+        b.record(Opcode::Add, 1);
+        b.fill_latency = 8;
+        a.merge(&b);
+        assert_eq!(a.cycles, 10);
+        assert_eq!(a.count_for(Opcode::Add), 2);
+        assert_eq!(a.fill_latency, 8);
+    }
+}

@@ -1,0 +1,85 @@
+//! Optional bounded instruction trace (debugging / failure analysis).
+
+use crate::isa::Instr;
+use std::collections::VecDeque;
+
+/// A bounded ring of the most recent `(cycle, instruction)` retirements.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    cap: usize,
+    ring: VecDeque<(u64, Instr)>,
+}
+
+impl Trace {
+    pub fn new(cap: usize) -> Self {
+        Trace { cap, ring: VecDeque::with_capacity(cap.min(4096)) }
+    }
+
+    /// A disabled trace (records nothing).
+    pub fn off() -> Self {
+        Self::new(0)
+    }
+
+    pub fn push(&mut self, cycle: u64, instr: Instr) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((cycle, instr));
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, Instr)> {
+        self.ring.iter()
+    }
+
+    /// Render the tail of the trace for error reports.
+    pub fn dump_tail(&self, n: usize) -> String {
+        self.ring
+            .iter()
+            .rev()
+            .take(n)
+            .rev()
+            .map(|(c, i)| format!("  @{c}: {i}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_ring_drops_oldest() {
+        let mut t = Trace::new(2);
+        t.push(1, Instr::nop());
+        t.push(2, Instr::sync());
+        t.push(3, Instr::halt());
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.iter().next().unwrap().0, 2);
+    }
+
+    #[test]
+    fn off_trace_records_nothing() {
+        let mut t = Trace::off();
+        t.push(1, Instr::nop());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn dump_tail_formats() {
+        let mut t = Trace::new(8);
+        t.push(5, Instr::halt());
+        assert!(t.dump_tail(4).contains("@5: halt"));
+    }
+}

@@ -1,0 +1,236 @@
+//! The tile controller (paper Fig. 3(a)).
+//!
+//! A 30-bit instruction arrives from the input registers and is executed
+//! by either the *single-cycle driver* (one instruction per cycle) or
+//! the *multicycle driver* (ADD/SUB/MULT/... over several cycles, plus
+//! one extra cycle to load parameters from the Op-Params module),
+//! selected by a 2-state driver-selection FSM. Optional pipeline stages
+//! A/B/C localize timing paths (enabled stage A is what closed timing at
+//! 737 MHz in iteration 2 of §V-C).
+
+use crate::isa::{Instr, Opcode};
+use crate::pim::alu::cost;
+use crate::tile::params::{OpParams, ParamError};
+
+
+/// Which optional controller pipeline stages are enabled (Fig. 3(a)
+/// dashed lines A, B, C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineStages {
+    pub a: bool,
+    pub b: bool,
+    pub c: bool,
+}
+
+impl PipelineStages {
+    pub const NONE: PipelineStages = PipelineStages { a: false, b: false, c: false };
+    /// The configuration that met 737 MHz on U55 (§V-C iteration 2+).
+    pub const U55_FINAL: PipelineStages = PipelineStages { a: true, b: false, c: false };
+
+    pub fn depth(self) -> u32 {
+        self.a as u32 + self.b as u32 + self.c as u32
+    }
+}
+
+/// Driver-selection FSM state (paper: "2-state driver-selection FSM").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverState {
+    /// Issuing through the single-cycle driver.
+    Single,
+    /// Multicycle driver busy for the contained remaining cycles.
+    Multi { remaining: u64 },
+}
+
+/// Timing/decode model of one tile controller. All tiles run in SIMD
+/// lockstep, so one instance times the whole array.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    pub stages: PipelineStages,
+    pub params: OpParams,
+    pub state: DriverState,
+    /// Cycles consumed since reset (including multicycle busy time).
+    pub cycles: u64,
+    /// Instructions retired per driver: (single, multi).
+    pub retired: (u64, u64),
+    halted: bool,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ControllerError {
+    #[error("op-params: {0}")]
+    Param(#[from] ParamError),
+    #[error("instruction after HALT: {0}")]
+    AfterHalt(String),
+}
+
+impl Controller {
+    pub fn new(stages: PipelineStages) -> Self {
+        Controller {
+            stages,
+            params: OpParams::default(),
+            state: DriverState::Single,
+            cycles: 0,
+            retired: (0, 0),
+            halted: false,
+        }
+    }
+
+    pub fn is_halted(&self) -> bool {
+        self.halted
+    }
+
+    /// Clear HALT and the driver FSM for the next instruction stream
+    /// (Op-Params persist across streams — they are config registers).
+    pub fn restart(&mut self) {
+        self.halted = false;
+        self.state = DriverState::Single;
+    }
+
+    /// Cycle cost of `instr` under the current Op-Params (the schedule
+    /// the multicycle driver would sequence), excluding the +1 Op-Params
+    /// load the driver spends on multicycle entry.
+    pub fn op_cost(&self, instr: &Instr) -> u64 {
+        let p = self.params.precision;
+        let aw = self.params.acc_width;
+        match instr.op {
+            Opcode::Nop | Opcode::Selblk | Opcode::Setp | Opcode::Sync
+            | Opcode::Halt | Opcode::Rshift => 1,
+            // LDI streams p bit-planes of broadcast data into the
+            // selected column's staging register.
+            Opcode::Ldi => p as u64,
+            // WRITE commits the staged register (p planes); READ stages
+            // an accumulator for readout (acc_width planes).
+            Opcode::Write => p as u64,
+            Opcode::Read => aw as u64,
+            Opcode::Mov => aw as u64,
+            Opcode::Add | Opcode::Sub => cost::add(aw),
+            Opcode::Mult | Opcode::Mac => match self.params.radix {
+                4 => cost::mac_booth4(p, aw),
+                _ => cost::mac_radix2(p, aw),
+            },
+            // radix-4 configs pair with the 4-bit sliced accumulation
+            // network (IMAGine-slice4): the hop streams nibbles.
+            Opcode::Accum => {
+                let hop = if self.params.radix == 4 {
+                    cost::accum_hop(aw.div_ceil(4) + 3)
+                } else {
+                    cost::accum_hop(aw)
+                };
+                (instr.imm.max(1) as u64) * hop
+            }
+            Opcode::Fold => {
+                let hop = if self.params.radix == 4 {
+                    cost::accum_hop(aw.div_ceil(4) + 3)
+                } else {
+                    cost::accum_hop(aw)
+                };
+                hop
+            }
+        }
+    }
+
+    /// Account one instruction: advances the cycle counter and the
+    /// driver FSM; applies SETP to the Op-Params module. Returns the
+    /// cycles this instruction occupied the controller.
+    pub fn issue(&mut self, instr: &Instr) -> Result<u64, ControllerError> {
+        if self.halted {
+            return Err(ControllerError::AfterHalt(instr.to_string()));
+        }
+        if instr.op == Opcode::Setp {
+            self.params.set(instr.rd, instr.imm)?;
+        }
+        if instr.op == Opcode::Halt {
+            self.halted = true;
+        }
+        let cost = if instr.op.is_multicycle() {
+            // +1: the multicycle driver's parameter-load cycle (Fig 3a).
+            let c = self.op_cost(instr) + 1;
+            self.state = DriverState::Multi { remaining: 0 };
+            self.retired.1 += 1;
+            c
+        } else {
+            self.state = DriverState::Single;
+            self.retired.0 += 1;
+            self.op_cost(instr)
+        };
+        self.cycles += cost;
+        Ok(cost)
+    }
+
+    /// Fixed pipeline-fill latency before the first instruction reaches
+    /// the PEs: top input register + enabled controller stages (the tile
+    /// fanout tree adds its own; see `FanoutTree::latency`).
+    pub fn fill_latency(&self) -> u64 {
+        1 + self.stages.depth() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn single_cycle_ops_cost_one() {
+        let mut c = Controller::new(PipelineStages::U55_FINAL);
+        for i in [Instr::nop(), Instr::selblk(1), Instr::setp(0, 8), Instr::sync()] {
+            assert_eq!(c.issue(&i).unwrap(), 1, "{i}");
+        }
+        assert_eq!(c.retired, (4, 0));
+    }
+
+    #[test]
+    fn multicycle_adds_param_load_cycle() {
+        let mut c = Controller::new(PipelineStages::NONE);
+        let add_cost = c.issue(&Instr::add(1, 2, 3)).unwrap();
+        assert_eq!(add_cost, cost::add(32) + 1);
+        assert!(matches!(c.state, DriverState::Multi { .. }));
+    }
+
+    #[test]
+    fn setp_changes_costs() {
+        let mut c = Controller::new(PipelineStages::NONE);
+        c.issue(&Instr::setp(0, 4)).unwrap(); // p = 4
+        c.issue(&Instr::setp(1, 12)).unwrap(); // acc = 12
+        let m = c.issue(&Instr::mac(4, 8, 12)).unwrap();
+        assert_eq!(m, cost::mac_radix2(4, 12) + 1);
+        c.issue(&Instr::setp(2, 4)).unwrap(); // booth
+        let b = c.issue(&Instr::mac(4, 8, 12)).unwrap();
+        assert_eq!(b, cost::mac_booth4(4, 12) + 1);
+        assert!(b < m);
+    }
+
+    #[test]
+    fn accum_scales_with_hops() {
+        let mut c = Controller::new(PipelineStages::NONE);
+        let one = c.op_cost(&Instr::accum(1, 1));
+        let six = c.op_cost(&Instr::accum(1, 6));
+        assert_eq!(six, 6 * one);
+    }
+
+    #[test]
+    fn halt_stops_issue() {
+        let mut c = Controller::new(PipelineStages::NONE);
+        c.issue(&Instr::halt()).unwrap();
+        assert!(c.is_halted());
+        assert!(matches!(
+            c.issue(&Instr::nop()),
+            Err(ControllerError::AfterHalt(_))
+        ));
+    }
+
+    #[test]
+    fn bad_setp_is_reported() {
+        let mut c = Controller::new(PipelineStages::NONE);
+        assert!(matches!(
+            c.issue(&Instr::setp(0, 1)),
+            Err(ControllerError::Param(_))
+        ));
+    }
+
+    #[test]
+    fn fill_latency_counts_stages() {
+        assert_eq!(Controller::new(PipelineStages::NONE).fill_latency(), 1);
+        assert_eq!(Controller::new(PipelineStages::U55_FINAL).fill_latency(), 2);
+    }
+}

@@ -1,0 +1,107 @@
+//! Parameterized fanout trees (paper Fig. 2: "the fanout tree is
+//! parameterized to be adjusted during implementation"; §V-C iteration 3
+//! chose 2 levels of fanout 4 between controller and PIM array).
+//!
+//! The tree is pure pipeline registers (Table III: 615 FF, 0 LUT): it
+//! costs FFs and adds fill latency, and bounds the per-net fanout load
+//! that the timing model checks against the net budget.
+
+
+
+/// A pipelined fanout tree distributing `signals` control wires to
+/// `sinks` endpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FanoutTree {
+    /// Pipeline levels (registered stages).
+    pub levels: u32,
+    /// Branching factor per level.
+    pub fanout: u32,
+    /// Number of distributed control signals (replicated per branch).
+    pub signals: u32,
+}
+
+impl FanoutTree {
+    /// The U55 tile tree from §V-C: 2 levels × fanout 4.
+    pub fn u55_tile(signals: u32) -> Self {
+        FanoutTree { levels: 2, fanout: 4, signals }
+    }
+
+    /// Endpoints reachable: fanout^levels.
+    pub fn capacity(&self) -> u64 {
+        (self.fanout as u64).pow(self.levels)
+    }
+
+    /// Whether the tree covers `sinks` endpoints.
+    pub fn covers(&self, sinks: u64) -> bool {
+        self.capacity() >= sinks
+    }
+
+    /// Minimum levels of a `fanout`-ary tree covering `sinks`.
+    pub fn levels_for(sinks: u64, fanout: u32) -> u32 {
+        let mut levels = 0;
+        let mut reach = 1u64;
+        while reach < sinks {
+            reach = reach.saturating_mul(fanout as u64);
+            levels += 1;
+        }
+        levels
+    }
+
+    /// Pipeline fill latency added by the tree (one cycle per level).
+    pub fn latency(&self) -> u64 {
+        self.levels as u64
+    }
+
+    /// FF cost: every internal node registers all signals.
+    /// Σ_{l=1..levels} fanout^l replicas.
+    pub fn ff_cost(&self) -> u64 {
+        let mut nodes = 0u64;
+        let mut width = 1u64;
+        for _ in 0..self.levels {
+            width *= self.fanout as u64;
+            nodes += width;
+        }
+        nodes * self.signals as u64
+    }
+
+    /// Worst per-net electrical fanout (what the timing model loads
+    /// against the net budget).
+    pub fn max_net_fanout(&self) -> u32 {
+        self.fanout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55_tree_covers_a_12x2_tile() {
+        // 24 block endpoints need fanout capacity >= 24; 4^2 = 16 covers
+        // the 12 block-rows per column side (the tile splits the tree
+        // per column; see TileGeom::fanout_trees).
+        let t = FanoutTree::u55_tile(26);
+        assert_eq!(t.capacity(), 16);
+        assert!(t.covers(12));
+    }
+
+    #[test]
+    fn levels_for_examples() {
+        assert_eq!(FanoutTree::levels_for(1, 4), 0);
+        assert_eq!(FanoutTree::levels_for(4, 4), 1);
+        assert_eq!(FanoutTree::levels_for(17, 4), 3);
+        assert_eq!(FanoutTree::levels_for(64, 4), 3);
+    }
+
+    #[test]
+    fn ff_cost_counts_all_nodes() {
+        let t = FanoutTree { levels: 2, fanout: 4, signals: 3 };
+        // nodes = 4 + 16 = 20; * 3 signals = 60
+        assert_eq!(t.ff_cost(), 60);
+    }
+
+    #[test]
+    fn latency_is_levels() {
+        assert_eq!(FanoutTree::u55_tile(1).latency(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! The GEMV tile: FSM controller + 12×2 PIM block array + fanout tree
+//! (paper Fig. 2(b), Fig. 3(a), Table III).
+
+pub mod controller;
+pub mod fanout;
+pub mod tile;
+pub mod params;
+
+pub use controller::{Controller, DriverState, PipelineStages};
+pub use fanout::FanoutTree;
+pub use params::OpParams;
+pub use tile::TileGeom;

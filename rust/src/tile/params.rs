@@ -1,0 +1,108 @@
+//! The Op-Params module (paper Fig. 3(a)): the parameter registers the
+//! multicycle driver loads before executing ADD/SUB/MULT/MAC/ACCUM.
+
+use crate::isa::encode::params;
+
+
+/// Parameter state set through `SETP`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpParams {
+    /// Operand precision p in bits (2..=16).
+    pub precision: usize,
+    /// Accumulator width in bits (p..=64, spills across register slots).
+    pub acc_width: usize,
+    /// Multiplier radix: 2 (default) or 4 (Booth, IMAGine-slice4).
+    pub radix: u8,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ParamError {
+    #[error("unknown op-param index {0}")]
+    UnknownIndex(u8),
+    #[error("precision {0} out of range 2..=16")]
+    BadPrecision(u16),
+    #[error("accumulator width {0} out of range (precision..=64)")]
+    BadAccWidth(u16),
+    #[error("radix {0} unsupported (2 or 4)")]
+    BadRadix(u16),
+}
+
+impl Default for OpParams {
+    fn default() -> Self {
+        OpParams { precision: 8, acc_width: 32, radix: 2 }
+    }
+}
+
+impl OpParams {
+    /// Apply one `SETP` instruction.
+    pub fn set(&mut self, index: u8, value: u16) -> Result<(), ParamError> {
+        match index {
+            params::PRECISION => {
+                if !(2..=16).contains(&value) {
+                    return Err(ParamError::BadPrecision(value));
+                }
+                self.precision = value as usize;
+                self.acc_width = self.acc_width.max(self.precision);
+                Ok(())
+            }
+            params::ACC_WIDTH => {
+                if (value as usize) < self.precision || value > 64 {
+                    return Err(ParamError::BadAccWidth(value));
+                }
+                self.acc_width = value as usize;
+                Ok(())
+            }
+            params::RADIX => {
+                if value != 2 && value != 4 {
+                    return Err(ParamError::BadRadix(value));
+                }
+                self.radix = value as u8;
+                Ok(())
+            }
+            other => Err(ParamError::UnknownIndex(other)),
+        }
+    }
+
+    /// Accumulator width needed for an exact D-long dot product of
+    /// p-bit operands: 2p-1 product bits + log2(D) growth + sign.
+    pub fn exact_acc_width(p: usize, dot_len: usize) -> usize {
+        let growth = usize::BITS as usize - dot_len.max(1).leading_zeros() as usize;
+        (2 * p + growth).min(64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let p = OpParams::default();
+        assert_eq!((p.precision, p.acc_width, p.radix), (8, 32, 2));
+    }
+
+    #[test]
+    fn set_validates_ranges() {
+        let mut p = OpParams::default();
+        assert!(p.set(params::PRECISION, 1).is_err());
+        assert!(p.set(params::PRECISION, 16).is_ok());
+        assert!(p.set(params::ACC_WIDTH, 8).is_err()); // < precision 16
+        assert!(p.set(params::ACC_WIDTH, 48).is_ok());
+        assert!(p.set(params::RADIX, 3).is_err());
+        assert!(p.set(params::RADIX, 4).is_ok());
+        assert!(p.set(9, 0).is_err());
+    }
+
+    #[test]
+    fn precision_raise_bumps_acc() {
+        let mut p = OpParams { precision: 4, acc_width: 4, radix: 2 };
+        p.set(params::PRECISION, 12).unwrap();
+        assert_eq!(p.acc_width, 12);
+    }
+
+    #[test]
+    fn exact_acc_width_grows_with_dot_len() {
+        assert_eq!(OpParams::exact_acc_width(8, 1024), 16 + 11);
+        assert!(OpParams::exact_acc_width(16, 1 << 40) <= 64);
+    }
+}

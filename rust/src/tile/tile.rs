@@ -1,0 +1,142 @@
+//! GEMV tile geometry and resource aggregation (paper Fig. 2(b),
+//! Table III).
+
+use crate::pim::{BlockGeom, PicasoVariant, PES_PER_BLOCK};
+use crate::tile::fanout::FanoutTree;
+
+
+/// Controller resource cost (Table III row "Controller").
+pub const CONTROLLER_LUTS: u32 = 167;
+pub const CONTROLLER_FFS: u32 = 155;
+/// Control signals distributed by the tile fanout tree. Sized so the
+/// U55 tree's FF cost reproduces Table III's 615 FFs:
+/// nodes(2 levels, fanout 4) = 20 -> ceil(615/20) ~ 31 signals.
+pub const CONTROL_SIGNALS: u32 = 31;
+
+/// A GEMV tile: `block_rows` × `block_cols` PiCaSO-IM blocks plus the
+/// controller and fanout tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileGeom {
+    pub block_rows: usize,
+    pub block_cols: usize,
+    pub block: BlockGeom,
+    pub fanout: FanoutTree,
+}
+
+/// Aggregated resource cost of one tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TileCost {
+    pub luts: u32,
+    pub ffs: u32,
+    pub bram36: u32,
+    pub dsp: u32,
+}
+
+impl TileGeom {
+    /// The 12×2 tile that best fits the U55 physical layout (§V-A).
+    pub fn u55() -> Self {
+        TileGeom {
+            block_rows: 12,
+            block_cols: 2,
+            block: BlockGeom::overlay(),
+            fanout: FanoutTree::u55_tile(CONTROL_SIGNALS),
+        }
+    }
+
+    /// Same geometry with the hypothetical PiCaSO-CB custom-BRAM block
+    /// (paper §IV-D / Table V "IMAGine-CB").
+    pub fn u55_custom_bram() -> Self {
+        TileGeom { block: BlockGeom::custom_bram(), ..Self::u55() }
+    }
+
+    pub fn with_variant(v: PicasoVariant) -> Self {
+        TileGeom { block: BlockGeom::for_variant(v), ..Self::u55() }
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.block_rows * self.block_cols
+    }
+
+    /// PE rows this tile contributes (vertical lanes).
+    pub fn pe_rows(&self) -> usize {
+        self.block_rows * PES_PER_BLOCK
+    }
+
+    /// Total PEs in the tile (Table III tile: 12*2*16 = 384).
+    pub fn pes(&self) -> usize {
+        self.blocks() * PES_PER_BLOCK
+    }
+
+    /// BRAM36 used (two BRAM18 blocks pack one BRAM36).
+    pub fn bram36(&self) -> u32 {
+        (self.blocks() as u32 * self.block.bram18).div_ceil(2)
+    }
+
+    /// Table III aggregation: controller + fanout + PIM array.
+    pub fn cost(&self) -> TileCost {
+        TileCost {
+            luts: CONTROLLER_LUTS + self.block.luts * self.blocks() as u32,
+            ffs: CONTROLLER_FFS
+                + self.fanout.ff_cost() as u32
+                + self.block.ffs * self.blocks() as u32,
+            bram36: self.bram36(),
+            dsp: 0,
+        }
+    }
+
+    /// Pipeline fill latency through the tile's fanout tree.
+    pub fn fanout_latency(&self) -> u64 {
+        self.fanout.latency()
+    }
+}
+
+impl Default for TileGeom {
+    fn default() -> Self {
+        Self::u55()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55_tile_matches_table3() {
+        let t = TileGeom::u55();
+        let c = t.cost();
+        // Table III totals: 2903 LUT, 3866 FF, 12 BRAM, 0 DSP.
+        assert_eq!(c.luts, 2903);
+        assert_eq!(c.bram36, 12);
+        assert_eq!(c.dsp, 0);
+        // FF within 2% of 3866 (fanout node rounding).
+        let want = 3866f64;
+        assert!(
+            (c.ffs as f64 - want).abs() / want < 0.02,
+            "ffs = {}",
+            c.ffs
+        );
+    }
+
+    #[test]
+    fn u55_tile_has_384_pes() {
+        assert_eq!(TileGeom::u55().pes(), 384);
+        assert_eq!(TileGeom::u55().pe_rows(), 192);
+    }
+
+    #[test]
+    fn controller_share_is_small() {
+        // §V-A: controller ~5% of tile logic, PIM array ~90%+.
+        let t = TileGeom::u55();
+        let c = t.cost();
+        let ctrl_share = CONTROLLER_LUTS as f64 / c.luts as f64;
+        assert!(ctrl_share < 0.07, "controller LUT share {ctrl_share}");
+    }
+
+    #[test]
+    fn custom_bram_tile_is_smaller() {
+        let o = TileGeom::u55().cost();
+        let c = TileGeom::u55_custom_bram().cost();
+        assert!(c.luts < o.luts / 2);
+        assert_eq!(c.bram36, o.bram36);
+    }
+}

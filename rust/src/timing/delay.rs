@@ -1,0 +1,123 @@
+//! The Table II delay database: average delays of a 1-level logic path
+//! in AMD Virtex-7 and UltraScale+ devices (ns), and the derived
+//! net-budget feasibility argument of §III-A.
+
+/// Per-device-family delay parameters (Table II, ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelayModel {
+    pub family: &'static str,
+    /// Clock-to-Q delay of flip-flops.
+    pub clk2q: f64,
+    /// LUT cell delay (one logic level).
+    pub lut: f64,
+    /// FF setup time.
+    pub setup: f64,
+    /// BRAM pulse-width requirement = clock period at BRAM Fmax.
+    pub bram_period: f64,
+    /// Minimum delay of a net through one switchbox.
+    pub sb_min: f64,
+}
+
+/// Virtex-7 row of Table II.
+pub const VIRTEX7: DelayModel = DelayModel {
+    family: "Virtex-7",
+    clk2q: 0.290,
+    lut: 0.340,
+    setup: 0.255,
+    bram_period: 1.839,
+    sb_min: 0.272,
+};
+
+/// UltraScale+ row of Table II.
+pub const ULTRASCALE_PLUS: DelayModel = DelayModel {
+    family: "UltraScale+",
+    clk2q: 0.087,
+    lut: 0.150,
+    setup: 0.098,
+    bram_period: 1.356,
+    sb_min: 0.102,
+};
+
+impl DelayModel {
+    /// Total cell delay of a 1-level path (Table II "Total").
+    pub fn total_cell(&self) -> f64 {
+        self.clk2q + self.lut + self.setup
+    }
+
+    /// Net budget at BRAM Fmax (Table II "Net Budget").
+    pub fn net_budget(&self) -> f64 {
+        self.bram_period - self.total_cell()
+    }
+
+    /// Path delay of `levels` LUT levels with one `net` ns route per
+    /// level (the §III-A feasibility calculation).
+    pub fn path_delay(&self, levels: u32, net_per_level: f64) -> f64 {
+        self.clk2q + self.setup + levels as f64 * (self.lut + net_per_level)
+    }
+
+    /// Max LUT depth that closes timing at the BRAM Fmax assuming
+    /// minimum (switchbox) net delays — the paper's "at least two LUTs
+    /// deep" claim.
+    pub fn max_levels_at_bram_fmax(&self) -> u32 {
+        let mut levels = 0;
+        while self.path_delay(levels + 1, self.sb_min) <= self.bram_period {
+            levels += 1;
+        }
+        levels
+    }
+
+    /// BRAM Fmax in MHz implied by the pulse-width requirement.
+    pub fn bram_fmax_mhz(&self) -> f64 {
+        1000.0 / self.bram_period
+    }
+
+    /// Frequency (MHz) of a path with `levels` logic levels and
+    /// `net_per_level` ns of routing per level.
+    pub fn path_fmax_mhz(&self, levels: u32, net_per_level: f64) -> f64 {
+        1000.0 / self.path_delay(levels, net_per_level)
+    }
+}
+
+/// Typical *routed* net delay per level used by the closure model —
+/// calibrated so a 4-level UltraScale+ path reproduces the §V-C
+/// iteration-1 slack of -0.52 ns at the 1.356 ns target
+/// (0.185 + 4·(0.150+0.273) = 1.877 ns; slack = -0.521).
+pub const NET_TYPICAL: f64 = 0.273;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_totals_match_paper() {
+        assert!((VIRTEX7.total_cell() - 0.885).abs() < 1e-9);
+        assert!((ULTRASCALE_PLUS.total_cell() - 0.335).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_net_budgets_match_paper() {
+        assert!((VIRTEX7.net_budget() - 0.954).abs() < 1e-9);
+        assert!((ULTRASCALE_PLUS.net_budget() - 1.021).abs() < 1e-9);
+    }
+
+    #[test]
+    fn at_least_two_lut_levels_feasible() {
+        // §III-A: "feasible to design at least two LUTs deep logic paths
+        // clocking at the BRAM Fmax" on both families.
+        assert!(VIRTEX7.max_levels_at_bram_fmax() >= 2);
+        assert!(ULTRASCALE_PLUS.max_levels_at_bram_fmax() >= 2);
+    }
+
+    #[test]
+    fn bram_fmax_values() {
+        assert!((ULTRASCALE_PLUS.bram_fmax_mhz() - 737.46).abs() < 0.1);
+        assert!((VIRTEX7.bram_fmax_mhz() - 543.77).abs() < 0.1);
+    }
+
+    #[test]
+    fn iteration1_slack_calibration() {
+        let path = ULTRASCALE_PLUS.path_delay(4, NET_TYPICAL);
+        let slack = ULTRASCALE_PLUS.bram_period - path;
+        assert!((slack + 0.52).abs() < 0.01, "slack = {slack}");
+    }
+}

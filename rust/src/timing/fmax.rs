@@ -1,0 +1,124 @@
+//! Achievable system-frequency solver.
+//!
+//! Composes the Table II delay database with a design's pipeline
+//! configuration to predict each component's Fmax and the system clock —
+//! the model behind Table III's 890/737 MHz split and the ablations in
+//! `report`.
+
+use super::delay::{DelayModel, NET_TYPICAL};
+use crate::tile::{FanoutTree, PipelineStages};
+
+/// High-fanout net delay model: a net driving `fanout` sinks pays the
+/// switchbox minimum plus a logarithmic spreading cost. Calibrated so a
+/// 384-sink control broadcast on US+ reproduces the §V-C iteration-2
+/// slack of -0.38 ns (0.102 + 0.151·log2(384) = 1.399 ns route).
+pub fn net_delay(d: &DelayModel, fanout: u32) -> f64 {
+    let spread = 0.151 * (fanout.max(1) as f64).log2();
+    d.sb_min + spread
+}
+
+/// Component frequencies of a configured engine (MHz).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemTiming {
+    /// Controller critical path (Fig 3(a); 4 levels unpipelined, 2 with
+    /// stage A).
+    pub controller_mhz: f64,
+    /// Control-distribution path through the fanout tree.
+    pub fanout_mhz: f64,
+    /// PIM array (bounded by the BRAM pulse width).
+    pub pim_mhz: f64,
+}
+
+impl SystemTiming {
+    /// Analyze a configuration on a device family.
+    ///
+    /// `tree`: the tile fanout tree (None = direct high-fanout nets to
+    /// all `sinks` endpoints, the §V-C iteration-2 situation).
+    pub fn analyze(
+        d: &DelayModel,
+        stages: PipelineStages,
+        tree: Option<&FanoutTree>,
+        sinks: u32,
+    ) -> SystemTiming {
+        // Controller: 4 logic levels; stage A splits it into 2+2.
+        let ctrl_levels = if stages.a { 2 } else { 4 };
+        let controller_mhz = d.path_fmax_mhz(ctrl_levels, NET_TYPICAL);
+        // Fanout: with a tree each stage drives `fanout` sinks; without,
+        // one net drives them all.
+        let per_stage_fanout = match tree {
+            Some(t) => t.fanout.max(1),
+            None => sinks.max(1),
+        };
+        let fanout_path = d.clk2q + d.setup + net_delay(d, per_stage_fanout);
+        let fanout_mhz = 1000.0 / fanout_path;
+        SystemTiming {
+            controller_mhz,
+            fanout_mhz,
+            pim_mhz: d.bram_fmax_mhz(),
+        }
+    }
+
+    /// System clock = slowest component.
+    pub fn system_mhz(&self) -> f64 {
+        self.controller_mhz.min(self.fanout_mhz).min(self.pim_mhz)
+    }
+
+    /// Whether the design clocks at the BRAM Fmax (the paper's goal).
+    pub fn meets_bram_fmax(&self, d: &DelayModel) -> bool {
+        self.system_mhz() + 1e-9 >= d.bram_fmax_mhz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::delay::ULTRASCALE_PLUS;
+
+    fn u55_final() -> SystemTiming {
+        SystemTiming::analyze(
+            &ULTRASCALE_PLUS,
+            PipelineStages::U55_FINAL,
+            Some(&FanoutTree::u55_tile(31)),
+            384,
+        )
+    }
+
+    #[test]
+    fn final_config_meets_bram_fmax() {
+        let t = u55_final();
+        assert!(t.meets_bram_fmax(&ULTRASCALE_PLUS), "{t:?}");
+        assert!((t.system_mhz() - 737.46).abs() < 0.5);
+    }
+
+    #[test]
+    fn controller_with_stage_a_hits_890() {
+        // Table III: controller + fanout pass timing at 890 MHz.
+        let t = u55_final();
+        assert!(t.controller_mhz > 890.0, "controller {}", t.controller_mhz);
+        assert!(t.fanout_mhz > 890.0, "fanout {}", t.fanout_mhz);
+    }
+
+    #[test]
+    fn unpipelined_controller_limits_system() {
+        let t = SystemTiming::analyze(
+            &ULTRASCALE_PLUS,
+            PipelineStages::NONE,
+            Some(&FanoutTree::u55_tile(31)),
+            384,
+        );
+        assert!(!t.meets_bram_fmax(&ULTRASCALE_PLUS));
+        assert!(t.system_mhz() < 600.0);
+    }
+
+    #[test]
+    fn direct_broadcast_fails_timing() {
+        // §V-C iteration 2: control nets to 384 PEs without a tree fail.
+        let t = SystemTiming::analyze(
+            &ULTRASCALE_PLUS,
+            PipelineStages::U55_FINAL,
+            None,
+            384,
+        );
+        assert!(t.fanout_mhz < ULTRASCALE_PLUS.bram_fmax_mhz());
+    }
+}

@@ -1,0 +1,11 @@
+//! Timing models: per-element delay database (Table II), achievable-
+//! frequency solver, and the Fig-5 floorplanning/timing-closure
+//! iteration simulator.
+
+pub mod delay;
+pub mod fmax;
+pub mod floorplan;
+
+pub use delay::DelayModel;
+pub use fmax::SystemTiming;
+pub use floorplan::{FloorplanSim, Iteration};

@@ -1,0 +1,82 @@
+//! Minimal benchmark timer (offline stand-in for `criterion`): warmup +
+//! N timed iterations, reporting min/median/mean throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Measurement {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+
+    /// Items-per-second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12.3} us   mean {:>12.3} us   min {:>12.3} us ({} iters)",
+            self.name,
+            self.median.as_secs_f64() * 1e6,
+            self.mean.as_secs_f64() * 1e6,
+            self.min.as_secs_f64() * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / iters;
+    Measurement { name: name.to_string(), iters, min, median, mean }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let m = bench("noop", 1, 9, || 1 + 1);
+        assert_eq!(m.iters, 9);
+        assert!(m.min <= m.median);
+        assert!(m.report().contains("noop"));
+    }
+
+    #[test]
+    fn throughput_scales() {
+        let m = bench("sleepless", 0, 3, || std::thread::sleep(Duration::from_millis(1)));
+        let t = m.throughput(1000.0);
+        assert!(t > 0.0 && t < 1_100_000.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal CLI argument parser (offline stand-in for `clap`): positional
+//! subcommand + `--flag[=| ]value` options + `--switch` booleans.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.switches.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["reproduce", "fig6", "--precision", "8", "--size=256"]);
+        assert_eq!(a.subcommand(), Some("reproduce"));
+        assert_eq!(a.positional[1], "fig6");
+        assert_eq!(a.get_usize("precision", 0), 8);
+        assert_eq!(a.get_usize("size", 0), 256);
+    }
+
+    #[test]
+    fn switches_vs_options() {
+        let a = parse(&["run", "--verbose", "--n", "4", "--dry-run"]);
+        assert!(a.has("verbose"));
+        assert!(a.has("dry-run"));
+        assert_eq!(a.get_usize("n", 0), 4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("f", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,112 @@
+//! Deterministic RNG + a tiny property-testing driver (offline stand-in
+//! for `proptest`; used by the `rust/tests/prop_*.rs` suites).
+
+/// xorshift64* — fast, deterministic, good enough for test-case
+/// generation (NOT cryptographic).
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        XorShift { state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + self.below(span) as i64
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// A vector of `n` values in `[lo, hi]`.
+    pub fn vec_i64(&mut self, n: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..n).map(|_| self.range_i64(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` generated property cases; panics with the failing seed so
+/// the case can be replayed exactly.
+pub fn run_prop<F: FnMut(&mut XorShift)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B9));
+        let mut rng = XorShift::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut r = XorShift::new(7);
+        for _ in 0..1000 {
+            let v = r.range_i64(-128, 127);
+            assert!((-128..=127).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_covers_small_domain() {
+        let mut r = XorShift::new(3);
+        let mut seen = [false; 8];
+        for _ in 0..200 {
+            seen[r.below(8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn run_prop_executes_all_cases() {
+        let mut n = 0;
+        run_prop("count", 17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+}

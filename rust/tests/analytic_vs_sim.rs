@@ -1,0 +1,90 @@
+//! The paper's validation methodology, reproduced: "IMAGine's latency
+//! model was developed and validated by running a prototype" (§V-E).
+//! Here the cycle-accurate simulator is the prototype; the analytic
+//! `MappingPlan::total_cycles` must track its measured cycle counts.
+
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::isa::Opcode;
+use imagine::util::XorShift;
+
+/// Cycles the simulator spends beyond the plan's model: pipeline fills
+/// (one per executed program), SETP/SYNC/HALT framing, and the READ
+/// readout the plan deliberately excludes (steady-state overlap).
+fn overhead(config: &EngineConfig, gp: &GemvProgram) -> u64 {
+    let programs = (gp.plan.row_passes * (gp.plan.chunk_passes + 1)) as u64;
+    let fills = programs * config.fill_latency();
+    let framing = programs * 5; // 3 SETP + SYNC/HALT per program
+    let readout = (gp.plan.row_passes * gp.plan.acc_width) as u64;
+    fills + framing + readout
+}
+
+fn check(m: usize, n: usize, p: usize, radix: u8, tolerance: f64) {
+    let config = EngineConfig::small();
+    let pl = plan(&config, m, n, p, radix);
+    let gp = GemvProgram::generate(pl);
+    let mut engine = Engine::new(config);
+    let mut rng = XorShift::new((m * n * p) as u64);
+    let half = 1i64 << (p - 1);
+    let w = rng.vec_i64(m * n, -half, half - 1);
+    let x = rng.vec_i64(n, -half, half - 1);
+    let res = gp.execute(&mut engine, &w, &x).unwrap();
+
+    let analytic = pl.total_cycles();
+    let measured = res.stats.cycles;
+    let adjusted = measured.saturating_sub(overhead(&config, &gp));
+    let rel = (analytic as f64 - adjusted as f64).abs() / adjusted.max(1) as f64;
+    assert!(
+        rel < tolerance,
+        "m={m} n={n} p={p} r={radix}: analytic {analytic} vs measured {measured} \
+         (adjusted {adjusted}), rel err {rel:.3}\nplan: {pl:?}"
+    );
+}
+
+#[test]
+fn analytic_matches_simulator_radix2() {
+    for (m, n) in [(16, 16), (64, 64), (128, 96), (200, 300)] {
+        check(m, n, 8, 2, 0.05);
+    }
+}
+
+#[test]
+fn analytic_matches_simulator_booth4() {
+    for (m, n) in [(32, 32), (64, 128)] {
+        check(m, n, 8, 4, 0.05);
+    }
+}
+
+#[test]
+fn analytic_matches_simulator_precisions() {
+    for p in [4, 12, 16] {
+        check(48, 48, p, 2, 0.05);
+    }
+}
+
+#[test]
+fn analytic_matches_multi_pass() {
+    // row passes (m > 384 on small engine) and chunk passes (k > cap)
+    check(500, 64, 8, 2, 0.05);
+    check(64, 3000, 8, 2, 0.08);
+}
+
+#[test]
+fn mac_cycles_dominate_as_planned() {
+    // The plan's premise: the MAC burst dominates per-pass cycles for
+    // compute-bound shapes.
+    let config = EngineConfig::small();
+    let pl = plan(&config, 256, 512, 8, 2);
+    let gp = GemvProgram::generate(pl);
+    let mut engine = Engine::new(config);
+    let mut rng = XorShift::new(77);
+    let w = rng.vec_i64(256 * 512, -128, 127);
+    let x = rng.vec_i64(512, -128, 127);
+    let res = gp.execute(&mut engine, &w, &x).unwrap();
+    let mac = res.stats.cycles_for(Opcode::Mac) + res.stats.cycles_for(Opcode::Mult);
+    assert!(
+        mac * 2 > res.stats.cycles,
+        "MAC cycles {mac} of total {}",
+        res.stats.cycles
+    );
+}

@@ -1,0 +1,131 @@
+//! Failure injection: every layer must reject malformed input with a
+//! typed error, never a panic or a silent wrong answer.
+
+use imagine::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::engine::{Engine, EngineConfig, SEL_ALL};
+use imagine::isa::{assemble, Instr, Program, RawInstr};
+use imagine::runtime::Manifest;
+use imagine::util::Json;
+
+#[test]
+fn engine_rejects_unsealed_program() {
+    let mut e = Engine::new(EngineConfig::small());
+    let p: Program = [Instr::nop()].into_iter().collect();
+    assert!(e.execute(&p).is_err());
+}
+
+#[test]
+fn engine_rejects_bad_column_select() {
+    let mut e = Engine::new(EngineConfig::small());
+    let p: Program = [Instr::selblk(500), Instr::halt()].into_iter().collect();
+    assert!(e.execute(&p).is_err());
+    // but SEL_ALL is always valid
+    let p: Program = [Instr::selblk(SEL_ALL), Instr::halt()].into_iter().collect();
+    e.reset();
+    assert!(e.execute(&p).is_ok());
+}
+
+#[test]
+fn engine_rejects_instructions_after_halt() {
+    let mut e = Engine::new(EngineConfig::small());
+    let p: Program = [Instr::halt(), Instr::nop(), Instr::halt()].into_iter().collect();
+    assert!(e.execute(&p).is_err());
+}
+
+#[test]
+fn engine_rejects_wide_acc_overflowing_regfile() {
+    let mut e = Engine::new(EngineConfig::small());
+    // acc_width 64 spills into the next slot; register 31 has no next
+    let p: Program = [
+        Instr::setp(0, 16),
+        Instr::setp(1, 64),
+        Instr::add(31, 1, 2),
+        Instr::halt(),
+    ]
+    .into_iter()
+    .collect();
+    assert!(e.execute(&p).is_err());
+}
+
+#[test]
+fn engine_rejects_fifo_underflow() {
+    let mut e = Engine::new(EngineConfig::small());
+    let p: Program = [
+        Instr::read(4),
+        Instr::rshift(),
+        Instr::halt(),
+    ]
+    .into_iter()
+    .collect();
+    assert!(e.execute(&p).is_ok());
+    // shift past the column depth
+    let mut over = Program::new();
+    over.push(Instr::read(4));
+    for _ in 0..=e.pe_rows() {
+        over.push(Instr::rshift());
+    }
+    over.seal();
+    e.reset();
+    assert!(e.execute(&over).is_err());
+}
+
+#[test]
+fn decoder_rejects_oversize_words() {
+    assert!(Instr::decode(RawInstr(u32::MAX)).is_err());
+    assert!(Instr::decode(RawInstr(1 << 30)).is_err());
+}
+
+#[test]
+fn assembler_reports_line_numbers() {
+    let err = assemble("nop\nbogus r1\n").unwrap_err();
+    assert!(err.to_string().contains("line 2"), "{err}");
+}
+
+#[test]
+fn setp_validation_faults_the_engine() {
+    let mut e = Engine::new(EngineConfig::small());
+    for bad in [
+        Instr::setp(0, 1),    // precision < 2
+        Instr::setp(0, 17),   // precision > 16
+        Instr::setp(2, 3),    // radix not 2/4
+        Instr::setp(9, 1),    // unknown param
+    ] {
+        let p: Program = [bad, Instr::halt()].into_iter().collect();
+        assert!(e.execute(&p).is_err(), "{bad}");
+        e.reset();
+    }
+}
+
+#[test]
+fn coordinator_survives_bad_requests_mixed_with_good() {
+    let mut reg = ModelRegistry::default();
+    reg.register_gemv("g", vec![1; 16], 4, 4).unwrap();
+    let coord = Coordinator::start(CoordinatorConfig::default(), reg);
+    // bad: unknown model / wrong dims — rejected synchronously
+    assert!(coord.submit(Request { model: "nope".into(), x: vec![1; 4] }).is_err());
+    assert!(coord.submit(Request { model: "g".into(), x: vec![1; 3] }).is_err());
+    // good requests still served afterwards
+    let r = coord.call(Request { model: "g".into(), x: vec![1; 4] }).unwrap();
+    assert_eq!(r.y, vec![4; 4]);
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0); // invalid ones never reached a worker
+}
+
+#[test]
+fn manifest_rejects_malformed_json() {
+    let dir = std::env::temp_dir().join(format!("imagine-bad-manifest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"a": {"inputs": 5}}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn json_parser_never_accepts_garbage() {
+    for bad in ["", "{", "[1,", "\"unterminated", "truex", "1..2", "{\"a\":}"] {
+        assert!(Json::parse(bad).is_err(), "{bad:?}");
+    }
+}

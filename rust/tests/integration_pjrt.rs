@@ -1,0 +1,113 @@
+//! Cross-backend integration: the cycle-accurate IMAGine simulator,
+//! the host reference, and the PJRT-executed AOT artifacts (L1 Pallas
+//! bit-serial kernel inside the L2 JAX graph) must agree bit-for-bit.
+//! Requires `make artifacts`.
+
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::scheduler::{GemvScheduler, Layer};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::runtime::Runtime;
+use imagine::util::XorShift;
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn sim_gemv(d: usize, radix: u8, w: &[i64], x: &[i64]) -> Vec<i64> {
+    let config = EngineConfig::small();
+    let gp = GemvProgram::generate(plan(&config, d, d, 8, radix));
+    let mut engine = Engine::new(config);
+    gp.execute(&mut engine, w, x).unwrap().y
+}
+
+#[test]
+fn gemv_artifacts_match_simulator() {
+    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let mut rng = XorShift::new(100);
+    for d in [64usize, 128, 256] {
+        let w = rng.vec_i64(d * d, -128, 127);
+        let x = rng.vec_i64(d, -128, 127);
+        let pjrt = rt.gemv_i64(&format!("gemv_{d}x{d}_p8"), &w, &x).unwrap();
+        let sim = sim_gemv(d, 2, &w, &x);
+        assert_eq!(pjrt, sim, "d={d}");
+    }
+}
+
+#[test]
+fn booth_artifact_matches_booth_simulator() {
+    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let mut rng = XorShift::new(101);
+    let d = 256;
+    let w = rng.vec_i64(d * d, -128, 127);
+    let x = rng.vec_i64(d, -128, 127);
+    let pjrt = rt.gemv_i64("gemv_256x256_p8_booth4", &w, &x).unwrap();
+    let sim = sim_gemv(d, 4, &w, &x);
+    assert_eq!(pjrt, sim);
+}
+
+#[test]
+fn p4_artifact_matches_simulator() {
+    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let mut rng = XorShift::new(102);
+    let d = 256;
+    let w = rng.vec_i64(d * d, -8, 7);
+    let x = rng.vec_i64(d, -8, 7);
+    let pjrt = rt.gemv_i64("gemv_256x256_p4", &w, &x).unwrap();
+    let config = EngineConfig::small();
+    let gp = GemvProgram::generate(plan(&config, d, d, 4, 2));
+    let mut engine = Engine::new(config);
+    let sim = gp.execute(&mut engine, &w, &x).unwrap().y;
+    assert_eq!(pjrt, sim);
+}
+
+#[test]
+fn gemm_batch_artifact_matches_per_vector_sim() {
+    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let mut rng = XorShift::new(103);
+    let (b, d) = (8usize, 256usize);
+    let w = rng.vec_i64(d * d, -128, 127);
+    let xs: Vec<Vec<i64>> = (0..b).map(|_| rng.vec_i64(d, -128, 127)).collect();
+    let wi: Vec<i32> = w.iter().map(|&v| v as i32).collect();
+    let xf: Vec<i32> = xs.iter().flatten().map(|&v| v as i32).collect();
+    let out = rt.execute("gemm_b8_256x256_p8", &[&wi, &xf]).unwrap();
+    for (i, x) in xs.iter().enumerate() {
+        let sim = sim_gemv(d, 2, &w, x);
+        let got: Vec<i64> = out[i * d..(i + 1) * d].iter().map(|&v| v as i64).collect();
+        assert_eq!(got, sim, "batch row {i}");
+    }
+}
+
+#[test]
+fn mlp_artifact_matches_scheduler() {
+    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let dims = [784usize, 256, 128, 10];
+    let scales = [0.0078125f64, 0.0078125];
+    let mut rng = XorShift::new(104);
+    let mut layers = Vec::new();
+    let mut flat: Vec<Vec<i32>> = Vec::new();
+    for i in 0..3 {
+        let (o, n) = (dims[i + 1], dims[i]);
+        let w = rng.vec_i64(o * n, -16, 15);
+        let b = rng.vec_i64(o, -64, 63);
+        flat.push(w.iter().map(|&v| v as i32).collect());
+        flat.push(b.iter().map(|&v| v as i32).collect());
+        layers.push(Layer::new(w, b, o, n));
+    }
+    let x = rng.vec_i64(784, -128, 127);
+    let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+    let ins: Vec<&[i32]> = std::iter::once(xi.as_slice())
+        .chain(flat.iter().map(|v| v.as_slice()))
+        .collect();
+    let pjrt = rt.execute("mlp_b1", &ins).unwrap();
+
+    let mut sched = GemvScheduler::new(EngineConfig::small());
+    let (sim, _) = sched.mlp_forward(&layers, &x, &scales, 8, 2).unwrap();
+    let sim32: Vec<i32> = sim.iter().map(|&v| v as i32).collect();
+    assert_eq!(pjrt, sim32);
+}
+
+#[test]
+fn runtime_reports_missing_artifacts_dir() {
+    assert!(Runtime::load(Path::new("/nonexistent/dir")).is_err());
+}

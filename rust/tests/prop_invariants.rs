@@ -1,0 +1,180 @@
+//! Property-based invariants (in-repo `run_prop` driver — proptest is
+//! unavailable offline): bit-plane ALU == two's-complement arithmetic,
+//! ISA encode/decode total, mapper coverage, GEMV == host reference,
+//! coordinator request/response integrity.
+
+use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::{plan, GemvProgram, MappingPlan};
+use imagine::isa::{Instr, RawInstr};
+use imagine::pim::{alu, PlaneBuf};
+use imagine::util::rng::{run_prop, XorShift};
+
+#[test]
+fn prop_bitplane_add_sub_exact() {
+    run_prop("add/sub == i64", 40, |rng| {
+        let lanes = rng.range(1, 300);
+        let wa = rng.range(2, 16);
+        let wb = rng.range(2, 16);
+        let wd = rng.range(wa.max(wb), 33);
+        let mut b = PlaneBuf::new(128, lanes);
+        let av = rng.vec_i64(lanes, -(1 << (wa - 1)), (1 << (wa - 1)) - 1);
+        let bv = rng.vec_i64(lanes, -(1 << (wb - 1)), (1 << (wb - 1)) - 1);
+        b.write_all(0, wa, &av);
+        b.write_all(16, wb, &bv);
+        let sub = rng.bool();
+        alu::add_sub(&mut b, (40, wd), (0, wa), (16, wb), sub);
+        let got = b.read_all(40, wd);
+        for l in 0..lanes {
+            let want = if sub { av[l] - bv[l] } else { av[l] + bv[l] };
+            // result is exact when it fits wd bits
+            if want >= -(1 << (wd - 1)) && want < (1 << (wd - 1)) {
+                assert_eq!(got[l], want, "lane {l} wa={wa} wb={wb} wd={wd} sub={sub}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bitplane_mac_exact() {
+    run_prop("mac == i64 (both radices)", 30, |rng| {
+        let lanes = rng.range(1, 200);
+        let p = rng.range(2, 12);
+        let half = 1i64 << (p - 1);
+        let mut b = PlaneBuf::new(128, lanes);
+        let wv = rng.vec_i64(lanes, -half, half - 1);
+        let xv = rng.vec_i64(lanes, -half, half - 1);
+        let acc0 = rng.vec_i64(lanes, -(1 << 20), 1 << 20);
+        b.write_all(0, p, &wv);
+        b.write_all(16, p, &xv);
+        b.write_all(48, 32, &acc0);
+        if rng.bool() {
+            alu::mac_radix2(&mut b, (48, 32), (0, p), (16, p), false);
+        } else {
+            alu::mac_booth4(&mut b, (48, 32), (0, p), (16, p), false);
+        }
+        let got = b.read_all(48, 32);
+        for l in 0..lanes {
+            assert_eq!(got[l], acc0[l] + wv[l] * xv[l], "lane {l} p={p}");
+        }
+    });
+}
+
+#[test]
+fn prop_isa_decode_total() {
+    run_prop("decode(encode(i)) == i, decode never panics", 200, |rng| {
+        // round-trip of arbitrary valid instructions
+        let i = Instr::new(
+            *rng.pick(&imagine::isa::Opcode::ALL),
+            rng.range(0, 31) as u8,
+            rng.range(0, 31) as u8,
+            rng.range(0, 31) as u8,
+            rng.range(0, 1023) as u16,
+        );
+        assert_eq!(Instr::decode(i.encode()).unwrap(), i);
+        // arbitrary 32-bit words either decode or error, never panic
+        let raw = RawInstr(rng.next_u64() as u32);
+        let _ = Instr::decode(raw);
+    });
+}
+
+#[test]
+fn prop_mapping_covers_matrix() {
+    run_prop("mapping covers every column exactly", 60, |rng| {
+        let config = EngineConfig::u55();
+        let m = rng.range(1, 4000);
+        let n = rng.range(1, 4000);
+        let p = *rng.pick(&[2usize, 4, 8, 16]);
+        let pl = plan(&config, m, n, p, if rng.bool() { 2 } else { 4 });
+        // capacity
+        assert!(pl.k_per_pe <= MappingPlan::k_max(p), "{pl:?}");
+        // coverage
+        let chunks = pl.cols_used * pl.fold_factor;
+        assert!(chunks * pl.k_per_pe * pl.chunk_passes >= n, "{pl:?}");
+        assert!(pl.row_passes * config.pe_rows() >= m, "{pl:?}");
+        // replicas fit in the array (spacing only meaningful with folds)
+        if pl.fold_factor > 1 {
+            assert!(pl.fold_factor * pl.replica_spacing() <= config.pe_rows(), "{pl:?}");
+        }
+        // accumulator wide enough for the worst dot product
+        let worst = (n as f64).log2() + 2.0 * p as f64;
+        assert!(pl.acc_width as f64 + 1.0 >= worst.min(64.0), "{pl:?}");
+    });
+}
+
+#[test]
+fn prop_gemv_simulator_exact() {
+    run_prop("simulated GEMV == host reference", 12, |rng| {
+        let m = rng.range(1, 96);
+        let n = rng.range(1, 96);
+        let p = *rng.pick(&[4usize, 8]);
+        let radix = if rng.bool() { 2 } else { 4 };
+        let half = 1i64 << (p - 1);
+        let config = EngineConfig::small();
+        let gp = GemvProgram::generate(plan(&config, m, n, p, radix));
+        let mut engine = Engine::new(config);
+        let w = rng.vec_i64(m * n, -half, half - 1);
+        let x = rng.vec_i64(n, -half, half - 1);
+        let res = gp.execute(&mut engine, &w, &x).unwrap();
+        let host: Vec<i64> = (0..m)
+            .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+            .collect();
+        assert_eq!(res.y, host, "m={m} n={n} p={p} radix={radix}");
+    });
+}
+
+#[test]
+fn prop_coordinator_preserves_request_response_mapping() {
+    // Every submitted request gets exactly its own answer, regardless
+    // of batching, worker count, or model mix.
+    let mut rng = XorShift::new(1234);
+    let mut reg = ModelRegistry::default();
+    let w1 = rng.vec_i64(8 * 8, -32, 31);
+    let w2 = rng.vec_i64(4 * 8, -32, 31);
+    reg.register_gemv("a", w1.clone(), 8, 8).unwrap();
+    reg.register_gemv("b", w2.clone(), 4, 8).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 3,
+            batch: BatchPolicy { max_batch: 4, ..Default::default() },
+            ..Default::default()
+        },
+        reg,
+    );
+    let host = |w: &[i64], x: &[i64], m: usize| -> Vec<i64> {
+        (0..m).map(|r| (0..8).map(|j| w[r * 8 + j] * x[j]).sum()).collect()
+    };
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..60 {
+        let x = rng.vec_i64(8, -64, 63);
+        let (model, m, w) = if i % 2 == 0 { ("a", 8, &w1) } else { ("b", 4, &w2) };
+        expected.push(host(w, &x, m));
+        rxs.push(coord.submit(Request { model: model.into(), x }).unwrap());
+    }
+    for (want, rx) in expected.into_iter().zip(rxs) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.y, want);
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 60);
+    assert_eq!(m.submitted, 60);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn prop_fold_preserves_sum() {
+    run_prop("fold network conserves the column sum", 30, |rng| {
+        let lanes = 256;
+        let mut b = PlaneBuf::new(64, lanes);
+        let v = rng.vec_i64(lanes, -1000, 1000);
+        b.write_all(0, 32, &v);
+        let group = 16usize << rng.range(0, 3);
+        alu::fold_step(&mut b, 0, 32, group);
+        let got = b.read_all(0, 32);
+        // each surviving group head holds its pair sum
+        for l in 0..lanes - group {
+            assert_eq!(got[l], v[l] + v[l + group], "lane {l} group {group}");
+        }
+    });
+}
