@@ -1,12 +1,19 @@
 //! Bench: the simulator's hot path — bit-plane packed bit-serial ALU
-//! ops (the §Perf L3 optimization target). Reports PE-bit-ops/s.
+//! ops (the §Perf L3 optimization target), plus the column-parallel
+//! engine dispatch (serial vs worker-pool execution of a MAC-heavy
+//! program across block columns). Reports PE-bit-ops/s and emits the
+//! headline numbers into `BENCH_engine.json` (schema: docs/PERF.md).
 //!
 //! Run: `cargo bench --bench bitplane_hotpath`
+//! (`BENCH_SMOKE=1` for the reduced CI run.)
 
-use imagine::pim::alu;
+use imagine::engine::{Engine, EngineConfig};
+use imagine::isa::encode::params;
+use imagine::isa::{Instr, Program};
+use imagine::pim::alu::{self, AluScratch};
 use imagine::pim::PlaneBuf;
-use imagine::util::bench::{bench, black_box};
-use imagine::util::XorShift;
+use imagine::util::bench::{bench, black_box, smoke, BenchSink};
+use imagine::util::{Json, XorShift};
 
 fn filled(lanes: usize, seed: u64) -> PlaneBuf {
     let mut b = PlaneBuf::new(1024, lanes);
@@ -18,12 +25,38 @@ fn filled(lanes: usize, seed: u64) -> PlaneBuf {
     b
 }
 
+/// A MAC-burst program shaped like a GEMV chunk pass (the engine's
+/// dominant instruction mix): one clearing MULT then MACs.
+fn mac_program(macs: usize) -> Program {
+    let mut prog = Program::new();
+    prog.push(Instr::setp(params::PRECISION, 8));
+    prog.push(Instr::setp(params::ACC_WIDTH, 32));
+    prog.push(Instr::mult(4, 1, 2));
+    for _ in 1..macs {
+        prog.push(Instr::mac(4, 1, 2));
+    }
+    prog.seal();
+    prog
+}
+
+/// Fill the MAC operand registers of every column.
+fn stage_operands(e: &mut Engine, seed: u64) {
+    let lanes = e.pe_rows();
+    let mut rng = XorShift::new(seed);
+    for c in 0..e.block_cols() {
+        e.write_reg_lanes(c, 1, 8, &rng.vec_i64(lanes, -128, 127)).unwrap();
+        e.write_reg_lanes(c, 2, 8, &rng.vec_i64(lanes, -128, 127)).unwrap();
+    }
+}
+
 fn main() {
+    let (warm, iters) = if smoke() { (1, 3) } else { (3, 25) };
+
     println!("== bitplane ALU hot path ==");
     for lanes in [384usize, 2304, 9216] {
         let mut b = filled(lanes, 5);
 
-        let m = bench(&format!("mac_radix2 p8 aw32 lanes={lanes}"), 3, 25, || {
+        let m = bench(&format!("mac_radix2 p8 aw32 lanes={lanes}"), warm, iters, || {
             black_box(alu::mac_radix2(&mut b, (64, 32), (0, 8), (32, 8), false))
         });
         // one MAC = p*aw plane-ops x lanes bit-lanes
@@ -34,7 +67,16 @@ fn main() {
             pe_bit_ops / m.median.as_secs_f64()
         );
 
-        let m = bench(&format!("mac_booth4 p8 aw32 lanes={lanes}"), 3, 25, || {
+        let mut scratch = AluScratch::default();
+        let m = bench(
+            &format!("mac_radix2 (reused scratch) lanes={lanes}"),
+            warm,
+            iters,
+            || black_box(alu::mac_radix2_with(&mut b, (64, 32), (0, 8), (32, 8), false, &mut scratch)),
+        );
+        println!("{}", m.report());
+
+        let m = bench(&format!("mac_booth4 p8 aw32 lanes={lanes}"), warm, iters, || {
             black_box(alu::mac_booth4(&mut b, (64, 32), (0, 8), (32, 8), false))
         });
         println!(
@@ -43,15 +85,64 @@ fn main() {
             pe_bit_ops / 2.0 / m.median.as_secs_f64()
         );
 
-        let m = bench(&format!("add aw32 lanes={lanes}"), 3, 25, || {
+        let m = bench(&format!("add aw32 lanes={lanes}"), warm, iters, || {
             black_box(alu::add_sub(&mut b, (96, 32), (64, 32), (0, 8), false))
         });
         println!("{}", m.report());
 
         let src = filled(lanes, 9);
-        let m = bench(&format!("accum_hop aw32 lanes={lanes}"), 3, 25, || {
+        let m = bench(&format!("accum_hop aw32 lanes={lanes}"), warm, iters, || {
             black_box(alu::accum_from(&mut b, &src, 64, 32))
         });
         println!("{}", m.report());
     }
+
+    // -- column-parallel engine dispatch ------------------------------
+    // The acceptance scenario: a MAC-heavy program on a 9216-lane x
+    // 8-column engine, serial (1 thread) vs the worker pool.
+    println!("\n== column-parallel engine (9216 lanes x 8 block columns) ==");
+    let cfg = EngineConfig { tile_rows: 48, tile_cols: 4, ..EngineConfig::u55() };
+    assert_eq!((cfg.pe_rows(), cfg.block_cols()), (9216, 8));
+    let macs = if smoke() { 4 } else { 16 };
+    let prog = mac_program(macs);
+
+    let mut serial = Engine::with_threads(cfg, 1);
+    stage_operands(&mut serial, 21);
+    let ms = bench("engine mac-burst, serial", warm, iters, || {
+        black_box(serial.execute(&prog).unwrap().cycles)
+    });
+    println!("{}", ms.report());
+
+    let mut parallel = Engine::new(cfg);
+    stage_operands(&mut parallel, 21);
+    let threads = parallel.threads();
+    let mp = bench(
+        &format!("engine mac-burst, {threads} threads"),
+        warm,
+        iters,
+        || black_box(parallel.execute(&prog).unwrap().cycles),
+    );
+    println!("{}", mp.report());
+
+    let speedup = ms.median.as_secs_f64() / mp.median.as_secs_f64();
+    println!("column-parallel speedup: {speedup:.2}x with {threads} threads");
+
+    // anchor at the workspace root regardless of the bench's cwd
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    let mut sink = BenchSink::load(path);
+    sink.set(
+        "bitplane_hotpath",
+        Json::obj([
+            ("lanes", Json::num(9216.0)),
+            ("block_cols", Json::num(8.0)),
+            ("macs_per_program", Json::num(macs as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("serial_us", Json::num(ms.per_iter_us())),
+            ("parallel_us", Json::num(mp.per_iter_us())),
+            ("speedup", Json::num(speedup)),
+            ("smoke", Json::Bool(smoke())),
+        ]),
+    );
+    sink.save().expect("write BENCH_engine.json");
+    println!("recorded -> BENCH_engine.json");
 }

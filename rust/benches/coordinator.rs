@@ -1,12 +1,104 @@
-//! Bench: coordinator throughput/latency under load — batched vs
-//! unbatched, 1 vs 4 workers (the L3 §Perf target: the coordinator must
-//! not be the bottleneck).
+//! Bench: serving throughput — (1) the scheduler-level fused GEMV
+//! batch path (`gemv_batch`) against the naive per-request `gemv()`
+//! loop it replaced, (2) coordinator end-to-end throughput with
+//! batching+grouping vs unbatched under a multi-model workload, and
+//! (3) worker scaling / submit-path overhead. Headline numbers go to
+//! `BENCH_engine.json` (schema: docs/PERF.md).
 //!
 //! Run: `cargo bench --bench coordinator`
+//! (`BENCH_SMOKE=1` for the reduced CI run.)
 
 use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
-use imagine::util::bench::bench;
-use imagine::util::XorShift;
+use imagine::engine::EngineConfig;
+use imagine::gemv::GemvScheduler;
+use imagine::util::bench::{bench, black_box, smoke, BenchSink};
+use imagine::util::{Json, XorShift};
+
+/// The serving-shaped model for the batch study: single-pass on a
+/// 384-lane x 16-column engine, so weights can stay resident and the
+/// dominant unbatched cost is re-staging the 192x768 matrix.
+const M: usize = 192;
+const N: usize = 768;
+const P: usize = 8;
+
+fn batch_engine_config() -> EngineConfig {
+    EngineConfig { tile_rows: 2, tile_cols: 8, ..EngineConfig::u55() }
+}
+
+/// Measure one serving strategy at batch size `batch`, returning
+/// us/request. `fused == false`: the naive per-request `gemv()` loop
+/// (every request re-stages the matrix — the pre-fusion coordinator
+/// inner loop; per-request cost is batch-independent, so one run
+/// serves as the baseline for every batch size). `fused == true`: one
+/// `gemv_batch` per iteration with a fresh residency token, so each
+/// batch pays exactly one cold staging, like a batch arriving for a
+/// newly activated model.
+fn sched_batch_run(batch: usize, fused: bool, warm: u32, iters: u32) -> f64 {
+    let cfg = batch_engine_config();
+    let mut rng = XorShift::new(17);
+    let half = 1i64 << (P - 1);
+    let w = rng.vec_i64(M * N, -half, half - 1);
+    let xs: Vec<Vec<i64>> = (0..batch).map(|_| rng.vec_i64(N, -half, half - 1)).collect();
+    let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+
+    let mut sched = GemvScheduler::new(cfg);
+    let mut token = 0u64;
+    let kind = if fused { "fused gemv_batch" } else { "naive gemv() loop" };
+    let m = bench(&format!("{kind}, batch {batch}"), warm, iters, || {
+        let mut sum = 0u64;
+        if fused {
+            token += 1;
+            for r in sched.gemv_batch(token, &w, &xrefs, M, N, P, 2) {
+                let (y, s) = r.unwrap();
+                sum += s.cycles + y[0].unsigned_abs();
+            }
+        } else {
+            for x in &xrefs {
+                let (y, s) = sched.gemv(&w, x, M, N, P, 2).unwrap();
+                sum += s.cycles + y[0].unsigned_abs();
+            }
+        }
+        black_box(sum)
+    });
+    println!("{}", m.report());
+    m.per_iter_us() / batch as f64
+}
+
+/// Coordinator end-to-end: requests alternating over two models, with
+/// and without dynamic batching (grouping clusters same-model requests
+/// so staged weights are shared). Returns requests/s.
+fn coord_two_model(policy: BatchPolicy, requests: usize) -> f64 {
+    let mut rng = XorShift::new(23);
+    let half = 1i64 << (P - 1);
+    let mut reg = ModelRegistry::default();
+    reg.register_gemv("a", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
+    reg.register_gemv("b", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            batch: policy,
+            engine: batch_engine_config(),
+            ..Default::default()
+        },
+        reg,
+    );
+    let xs: Vec<Vec<i64>> = (0..requests).map(|_| rng.vec_i64(N, -half, half - 1)).collect();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let model = if i % 2 == 0 { "a" } else { "b" };
+            coord.submit(Request { model: model.into(), x: x.clone() }).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    requests as f64 / wall
+}
 
 fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64, f64) {
     let mut rng = XorShift::new(3);
@@ -36,18 +128,38 @@ fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64
 }
 
 fn main() {
-    println!("== coordinator scaling ==");
+    let (warm, iters) = if smoke() { (1, 3) } else { (2, 15) };
+
+    println!("== batched GEMV serving: fused vs per-request staging ({M}x{N} @ {P}-bit) ==");
+    let cold = sched_batch_run(8, false, warm, iters);
+    let fused8 = sched_batch_run(8, true, warm, iters);
+    let fused16 = sched_batch_run(16, true, warm, iters);
+    let speedup8 = cold / fused8;
+    let speedup16 = cold / fused16;
+    println!("per-request: cold {cold:.0} us   batch8 fused {fused8:.0} us ({speedup8:.2}x)   batch16 fused {fused16:.0} us ({speedup16:.2}x)");
+
+    println!("\n== coordinator end-to-end: 2 models alternating, 1 worker ==");
+    let reqs = if smoke() { 16 } else { 64 };
+    let unbatched = coord_two_model(BatchPolicy::none(), reqs);
+    let batched = coord_two_model(
+        BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(20) },
+        reqs,
+    );
+    println!("unbatched {unbatched:>8.0} req/s   batch 8 {batched:>8.0} req/s   ({:.2}x)", batched / unbatched);
+
+    println!("\n== coordinator scaling (32x32 model) ==");
     println!(
         "{:<28} {:>12} {:>10} {:>10}",
         "config", "req/s", "p50 (us)", "p99 (us)"
     );
+    let reqs = if smoke() { 32 } else { 256 };
     for (label, workers, policy) in [
         ("1 worker, unbatched", 1, BatchPolicy::none()),
         ("1 worker, batch 16", 1, BatchPolicy::default()),
         ("2 workers, batch 16", 2, BatchPolicy::default()),
         ("4 workers, batch 16", 4, BatchPolicy::default()),
     ] {
-        let (rps, p50, p99) = throughput(workers, policy, 256);
+        let (rps, p50, p99) = throughput(workers, policy, reqs);
         println!("{label:<28} {rps:>12.0} {p50:>10.0} {p99:>10.0}");
     }
 
@@ -60,7 +172,7 @@ fn main() {
         reg,
     );
     let x = rng.vec_i64(16, -64, 63);
-    let m = bench("submit+recv roundtrip", 5, 50, || {
+    let m = bench("submit+recv roundtrip", if smoke() { 1 } else { 5 }, if smoke() { 5 } else { 50 }, || {
         coord
             .call(Request { model: "m".into(), x: x.clone() })
             .unwrap()
@@ -68,4 +180,25 @@ fn main() {
     });
     println!("{}", m.report());
     coord.shutdown();
+
+    // anchor at the workspace root regardless of the bench's cwd
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    let mut sink = BenchSink::load(path);
+    sink.set(
+        "coordinator",
+        Json::obj([
+            ("gemv_m", Json::num(M as f64)),
+            ("gemv_n", Json::num(N as f64)),
+            ("precision", Json::num(P as f64)),
+            ("cold_us_per_req", Json::num(cold)),
+            ("batch8_fused_us_per_req", Json::num(fused8)),
+            ("batch8_speedup", Json::num(speedup8)),
+            ("batch16_speedup", Json::num(speedup16)),
+            ("coord_2model_unbatched_reqps", Json::num(unbatched)),
+            ("coord_2model_batch8_reqps", Json::num(batched)),
+            ("smoke", Json::Bool(smoke())),
+        ]),
+    );
+    sink.save().expect("write BENCH_engine.json");
+    println!("\nrecorded -> BENCH_engine.json");
 }

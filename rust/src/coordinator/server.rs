@@ -166,7 +166,11 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     rx: Receiver<Job>,
 ) {
-    let mut sched = GemvScheduler::new(cfg.engine);
+    // Split the machine's thread budget across the worker pool so N
+    // workers don't each spawn a full-machine column pool and contend.
+    let threads = (crate::util::ThreadPool::default_threads() / cfg.workers.max(1)).max(1);
+    let engine = crate::engine::Engine::with_threads(cfg.engine, threads);
+    let mut sched = GemvScheduler::from_engine(cfg.engine, engine);
     'outer: loop {
         // block for the first job
         let first = match rx.recv() {
@@ -224,9 +228,39 @@ fn execute_batch(
                 continue;
             }
         };
-        for &i in &idxs {
-            let (req, enqueued, reply) = &batch[i];
-            let result = run_one(cfg, &model, sched, &req.x).map(|(y, cycles)| {
+        // Run the group's engine work. GEMV groups go through the fused
+        // batch path: the matrix is staged once (or is already resident
+        // from a previous batch — the Arc address is the residency
+        // token) and the group's vectors stream through the compiled
+        // program without re-staging.
+        let results: Vec<Result<(Vec<i64>, u64), SubmitError>> = match &model {
+            Model::Gemv { w, m, n } => {
+                let xs: Vec<&[i64]> = idxs.iter().map(|&i| batch[i].0.x.as_slice()).collect();
+                sched
+                    .gemv_batch(
+                        std::sync::Arc::as_ptr(w) as u64, w, &xs, *m, *n,
+                        cfg.precision, cfg.radix,
+                    )
+                    .into_iter()
+                    .map(|r| {
+                        r.map(|(y, s)| (y, s.cycles))
+                            .map_err(|e| SubmitError::Exec(e.to_string()))
+                    })
+                    .collect()
+            }
+            Model::Mlp { layers, scales } => idxs
+                .iter()
+                .map(|&i| {
+                    sched
+                        .mlp_forward(layers, &batch[i].0.x, scales, cfg.precision, cfg.radix)
+                        .map(|(y, s)| (y, s.cycles))
+                        .map_err(|e| SubmitError::Exec(e.to_string()))
+                })
+                .collect(),
+        };
+        for (&i, result) in idxs.iter().zip(results) {
+            let (_, enqueued, reply) = &batch[i];
+            let result = result.map(|(y, cycles)| {
                 let host_us = enqueued.elapsed().as_secs_f64() * 1e6;
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 metrics.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
@@ -244,29 +278,6 @@ fn execute_batch(
             }
             let _ = reply.send(result);
         }
-    }
-}
-
-fn run_one(
-    cfg: &CoordinatorConfig,
-    model: &Model,
-    sched: &mut GemvScheduler,
-    x: &[i64],
-) -> Result<(Vec<i64>, u64), SubmitError> {
-    match model {
-        Model::Gemv { w, m, n } => sched
-            // Arc address as the residency token: co-batched requests
-            // for the same model skip matrix staging entirely.
-            .gemv_resident(
-                std::sync::Arc::as_ptr(w) as u64, w, x, *m, *n,
-                cfg.precision, cfg.radix,
-            )
-            .map(|(y, s)| (y, s.cycles))
-            .map_err(|e| SubmitError::Exec(e.to_string())),
-        Model::Mlp { layers, scales } => sched
-            .mlp_forward(layers, x, scales, cfg.precision, cfg.radix)
-            .map(|(y, s)| (y, s.cycles))
-            .map_err(|e| SubmitError::Exec(e.to_string())),
     }
 }
 

@@ -1,0 +1,195 @@
+//! The engine's block columns as a data-parallel array.
+//!
+//! Columns are the natural parallel unit of the simulator: every
+//! instruction applies the same bit-serial schedule to each selected
+//! column's [`PlaneBuf`], and columns only interact in the explicit
+//! reduction barriers (ACCUM's east->west hops, FOLD, READ). The
+//! `ColumnArray` owns the per-column buffers plus one [`AluScratch`]
+//! per column and dispatches independent column work across a lazily
+//! created [`ThreadPool`] — the paper's "every block column computes
+//! simultaneously" claim, applied to the simulator's own hot path.
+//!
+//! Dispatch policy: parallel execution only pays when the per-dispatch
+//! pool synchronization is small against the plane-word work, so small
+//! engines (unit tests) stay on the serial path and big arrays go wide.
+//! Thread count comes from the caller (engine builder / `IMAGINE_THREADS`,
+//! see docs/PERF.md); results are bit-identical either way because each
+//! column's data is disjoint and every op is deterministic.
+
+use crate::pim::alu::AluScratch;
+use crate::pim::PlaneBuf;
+use crate::util::ThreadPool;
+use std::ops::Range;
+
+/// Minimum total plane words across the selected columns before a
+/// dispatch goes parallel (below this the condvar wake costs more than
+/// the bit-plane work it distributes).
+const PAR_MIN_WORDS: usize = 256;
+
+/// Per-column buffers + scratch with a worker pool for parallel ops.
+pub struct ColumnArray {
+    cols: Vec<PlaneBuf>,
+    scratch: Vec<AluScratch>,
+    /// Requested worker threads (1 = always serial).
+    threads: usize,
+    /// Lazily spawned so serial engines never pay thread creation.
+    pool: Option<ThreadPool>,
+    /// Plane words per column (cached for the dispatch heuristic).
+    words: usize,
+}
+
+/// Raw-pointer wrapper so disjoint per-column `&mut` access can cross
+/// the pool's `Fn` boundary.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl ColumnArray {
+    pub fn new(cols: usize, depth: usize, lanes: usize, threads: usize) -> Self {
+        assert!(cols > 0);
+        let bufs: Vec<PlaneBuf> = (0..cols).map(|_| PlaneBuf::new(depth, lanes)).collect();
+        let words = bufs[0].words();
+        ColumnArray {
+            scratch: vec![AluScratch::default(); cols],
+            cols: bufs,
+            threads: threads.max(1),
+            pool: None,
+            words,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Worker threads this array may use (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn buf(&self, c: usize) -> &PlaneBuf {
+        &self.cols[c]
+    }
+
+    pub fn buf_mut(&mut self, c: usize) -> &mut PlaneBuf {
+        &mut self.cols[c]
+    }
+
+    pub fn bufs(&self) -> &[PlaneBuf] {
+        &self.cols
+    }
+
+    /// Zero every column in place (keeps allocations, pool and scratch).
+    pub fn clear(&mut self) {
+        for b in &mut self.cols {
+            b.clear_all();
+        }
+    }
+
+    /// Adjacent column pair for the east->west accumulation barrier:
+    /// `(west = cols[c], east = cols[c + 1])` plus the west scratch.
+    pub fn hop_pair_mut(&mut self, c: usize) -> (&mut PlaneBuf, &mut PlaneBuf, &mut AluScratch) {
+        let (west, east) = self.cols.split_at_mut(c + 1);
+        (&mut west[c], &mut east[0], &mut self.scratch[c])
+    }
+
+    /// Column buffer together with its scratch (serial callers).
+    pub fn buf_scratch_mut(&mut self, c: usize) -> (&mut PlaneBuf, &mut AluScratch) {
+        (&mut self.cols[c], &mut self.scratch[c])
+    }
+
+    /// Apply `f` to every column in `sel`, in parallel when the work is
+    /// wide enough. `f` receives `(column index, buffer, scratch)` and
+    /// must only touch that column (the engine's ops do by
+    /// construction — columns are SIMD-independent between barriers).
+    pub fn for_each<F>(&mut self, sel: Range<usize>, f: F)
+    where
+        F: Fn(usize, &mut PlaneBuf, &mut AluScratch) + Sync,
+    {
+        let n = sel.len();
+        let parallel = self.threads > 1 && n > 1 && n * self.words >= PAR_MIN_WORDS;
+        if !parallel {
+            for c in sel {
+                f(c, &mut self.cols[c], &mut self.scratch[c]);
+            }
+            return;
+        }
+        if self.pool.is_none() {
+            // keep one slot for the submitting thread, which participates
+            self.pool = Some(ThreadPool::new((self.threads - 1).min(self.cols.len() - 1)));
+        }
+        let cols_ptr = SendPtr(self.cols.as_mut_ptr());
+        let scr_ptr = SendPtr(self.scratch.as_mut_ptr());
+        let base = sel.start;
+        let pool = self.pool.as_ref().unwrap();
+        pool.run(n, &|i| {
+            let c = base + i;
+            // SAFETY: the pool hands out each index exactly once, and
+            // `sel` indexes are in-bounds and distinct, so every worker
+            // gets exclusive access to its column's buffer and scratch.
+            let col = unsafe { &mut *cols_ptr.0.add(c) };
+            let scr = unsafe { &mut *scr_ptr.0.add(c) };
+            f(c, col, scr);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_small_arrays_apply_in_order() {
+        // 4 cols x 2 words < PAR_MIN_WORDS -> serial path
+        let mut ca = ColumnArray::new(4, 64, 100, 8);
+        ca.for_each(1..3, |c, buf, _| {
+            buf.broadcast(0, 8, c as i64);
+        });
+        assert!(ca.buf(0).read_all(0, 8).iter().all(|&v| v == 0));
+        assert!(ca.buf(1).read_all(0, 8).iter().all(|&v| v == 1));
+        assert!(ca.buf(2).read_all(0, 8).iter().all(|&v| v == 2));
+        assert!(ca.buf(3).read_all(0, 8).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn parallel_dispatch_matches_serial() {
+        // 8 cols x 80 words crosses the threshold -> pool engages
+        let lanes = 80 * 64;
+        let mut par = ColumnArray::new(8, 64, lanes, 4);
+        let mut ser = ColumnArray::new(8, 64, lanes, 1);
+        let vals: Vec<i64> = (0..lanes).map(|l| (l % 251) as i64 - 125).collect();
+        for ca in [&mut par, &mut ser] {
+            ca.for_each(0..8, |c, buf, s| {
+                buf.write_all(0, 8, &vals);
+                buf.broadcast(32, 8, c as i64 - 3);
+                crate::pim::alu::mac_radix2_with(buf, (64, 32), (0, 8), (32, 8), true, s);
+            });
+        }
+        assert_eq!(par.bufs(), ser.bufs());
+        let got = par.buf(5).read_all(64, 32);
+        for l in 0..lanes {
+            assert_eq!(got[l], vals[l] * 2, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn clear_zeroes_in_place() {
+        let mut ca = ColumnArray::new(2, 32, 64, 1);
+        ca.buf_mut(1).broadcast(0, 8, -1);
+        ca.clear();
+        assert!(ca.buf(1).read_all(0, 8).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn hop_pair_borrows_disjoint() {
+        let mut ca = ColumnArray::new(3, 32, 64, 1);
+        ca.buf_mut(2).broadcast(0, 8, 7);
+        let (west, east, s) = ca.hop_pair_mut(1);
+        crate::pim::alu::accum_from_with(west, east, 0, 8, s);
+        assert!(ca.buf(1).read_all(0, 8).iter().all(|&v| v == 7));
+    }
+}

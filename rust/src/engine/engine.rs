@@ -5,11 +5,23 @@
 //! and one [`PlaneBuf`] per *block column* — the granularity at which
 //! data differs (SELBLK masks columns; the east->west chain moves
 //! accumulators between columns).
+//!
+//! Execution is column-parallel: the per-column data effects of
+//! LDI/WRITE/MOV/ADD/SUB/MULT/MAC are dispatched across a worker pool
+//! by [`ColumnArray`] (columns are independent between barriers), while
+//! ACCUM/FOLD/READ — the ops that move data *between* columns or off
+//! the array — stay sequential barriers. Cycle accounting is unchanged:
+//! the controller times the SIMD instruction stream, so stats are
+//! bit-identical to a single-threaded run (asserted by the
+//! `prop_invariants` equivalence property).
 
 use crate::isa::{Instr, Opcode, Program};
 use crate::pim::{alu, PlaneBuf, RegFile, REGFILE_BITS};
 use crate::sim::{ExecStats, Trace};
 use crate::tile::controller::{Controller, ControllerError};
+use crate::util::ThreadPool;
+use std::collections::VecDeque;
+use super::column_array::ColumnArray;
 use super::config::EngineConfig;
 
 /// Block-column select value meaning "all columns" (SELBLK 0x3FF).
@@ -32,10 +44,13 @@ pub enum EngineError {
 /// A simulated IMAGine engine instance.
 pub struct Engine {
     pub config: EngineConfig,
-    /// One register-file plane buffer per block column.
-    columns: Vec<PlaneBuf>,
+    /// One register-file plane buffer per block column, with the
+    /// worker pool that runs them data-parallel.
+    columns: ColumnArray,
     /// Output shift-register column (paper Fig 2(a)), staged by READ.
-    shift_col: Vec<i64>,
+    /// RSHIFT drains from the front — a deque so the per-element cost
+    /// is O(1) instead of the old `Vec::remove(0)` O(lanes).
+    shift_col: VecDeque<i64>,
     /// FIFO-out: elements shifted off the top by RSHIFT.
     fifo_out: Vec<i64>,
     /// Currently selected block column (None = all).
@@ -48,13 +63,20 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build with the default worker-thread budget (`IMAGINE_THREADS`,
+    /// falling back to the machine's available parallelism).
     pub fn new(config: EngineConfig) -> Self {
+        Self::with_threads(config, ThreadPool::default_threads())
+    }
+
+    /// Build with an explicit worker-thread budget (1 = fully serial).
+    pub fn with_threads(config: EngineConfig, threads: usize) -> Self {
         let cols = config.block_cols();
         let lanes = config.pe_rows();
         Engine {
             config,
-            columns: (0..cols).map(|_| PlaneBuf::new(REGFILE_BITS, lanes)).collect(),
-            shift_col: vec![0; lanes],
+            columns: ColumnArray::new(cols, REGFILE_BITS, lanes, threads),
+            shift_col: VecDeque::from(vec![0; lanes]),
             fifo_out: Vec::new(),
             sel: None,
             staged: 0,
@@ -86,12 +108,22 @@ impl Engine {
         self.config.pe_rows()
     }
 
-    /// Reset data, controller and stats (keep geometry).
+    /// Worker threads the column dispatch may use (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.columns.threads()
+    }
+
+    /// The per-column plane buffers (used by the parallel-vs-serial
+    /// equivalence tests; state inspection only).
+    pub fn columns(&self) -> &[PlaneBuf] {
+        self.columns.bufs()
+    }
+
+    /// Reset data, controller and stats (keep geometry and pool).
     pub fn reset(&mut self) {
-        let cols = self.columns.len();
         let lanes = self.pe_rows();
-        self.columns = (0..cols).map(|_| PlaneBuf::new(REGFILE_BITS, lanes)).collect();
-        self.shift_col = vec![0; lanes];
+        self.columns.clear();
+        self.shift_col = VecDeque::from(vec![0; lanes]);
         self.fifo_out.clear();
         self.sel = None;
         self.staged = 0;
@@ -156,35 +188,36 @@ impl Engine {
                 // (implicit in hardware via the ALU's sign extension)
                 let r = RegFile::resolve(instr.rd, crate::pim::REG_BITS)?;
                 let v = self.staged;
-                for c in self.selected() {
-                    self.columns[c].broadcast(r.base, r.width, v);
-                }
+                let sel = self.selected();
+                self.columns.for_each(sel, |_, col, _| {
+                    col.broadcast(r.base, r.width, v);
+                });
             }
             Opcode::Read => {
                 let r = RegFile::resolve(instr.rs1, aw)?;
-                self.shift_col = self.columns[0].read_all(r.base, r.width);
+                self.shift_col = self.columns.buf(0).read_all(r.base, r.width).into();
             }
             Opcode::Rshift => {
-                if self.shift_col.is_empty() {
-                    return Err(EngineError::FifoEmpty);
-                }
-                self.fifo_out.push(self.shift_col.remove(0));
+                let v = self.shift_col.pop_front().ok_or(EngineError::FifoEmpty)?;
+                self.fifo_out.push(v);
             }
             Opcode::Mov => {
                 let d = RegFile::resolve(instr.rd, aw)?;
                 let s = RegFile::resolve(instr.rs1, aw)?;
-                for c in self.selected() {
-                    alu::mov(&mut self.columns[c], d.as_tuple(), s.as_tuple());
-                }
+                let sel = self.selected();
+                self.columns.for_each(sel, |_, col, scratch| {
+                    alu::mov_with(col, d.as_tuple(), s.as_tuple(), scratch);
+                });
             }
             Opcode::Add | Opcode::Sub => {
                 let d = RegFile::resolve(instr.rd, aw)?;
                 let a = RegFile::resolve(instr.rs1, aw)?;
                 let b = RegFile::resolve(instr.rs2, aw)?;
                 let sub = instr.op == Opcode::Sub;
-                for c in self.selected() {
-                    alu::add_sub(&mut self.columns[c], d.as_tuple(), a.as_tuple(), b.as_tuple(), sub);
-                }
+                let sel = self.selected();
+                self.columns.for_each(sel, |_, col, scratch| {
+                    alu::add_sub_with(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), sub, scratch);
+                });
             }
             Opcode::Mult | Opcode::Mac => {
                 let d = RegFile::resolve(instr.rd, aw)?;
@@ -196,18 +229,19 @@ impl Engine {
                 // pair (imm-1) into the staging registers, overlapped
                 // with the previous op (zero additional cycles).
                 let spill = instr.imm.checked_sub(1).map(|e| e as usize);
-                for c in self.selected() {
+                let first = crate::gemv::mapper::SPILL_FIRST_REG;
+                let sel = self.selected();
+                self.columns.for_each(sel, |_, col, scratch| {
                     if let Some(e) = spill {
-                        self.stage_spill(c, crate::gemv::mapper::SPILL_FIRST_REG, p, 2 * e, instr.rs1)?;
-                        self.stage_spill(c, crate::gemv::mapper::SPILL_FIRST_REG, p, 2 * e + 1, instr.rs2)?;
+                        stage_spill_planes(col, first, p, 2 * e, a.base);
+                        stage_spill_planes(col, first, p, 2 * e + 1, b.base);
                     }
-                    let col = &mut self.columns[c];
                     if radix == 4 {
-                        alu::mac_booth4(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear);
+                        alu::mac_booth4_with(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear, scratch);
                     } else {
-                        alu::mac_radix2(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear);
+                        alu::mac_radix2_with(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear, scratch);
                     }
-                }
+                });
             }
             Opcode::Accum => {
                 let r = RegFile::resolve(instr.rd, aw)?;
@@ -221,7 +255,7 @@ impl Engine {
                 let level = instr.imm as usize;
                 let group = crate::pim::PES_PER_BLOCK << level;
                 for c in self.selected() {
-                    alu::fold_step(&mut self.columns[c], r.base, r.width, group);
+                    alu::fold_step(self.columns.buf_mut(c), r.base, r.width, group);
                 }
             }
         }
@@ -230,13 +264,14 @@ impl Engine {
 
     /// One systolic east->west hop: every column adds the accumulator
     /// arriving from its east neighbour, easternmost clears (it has
-    /// passed its value west).
+    /// passed its value west). A sequential barrier by design — each
+    /// hop's west column must observe the previous hop's result.
     fn accum_hop(&mut self, base: usize, width: usize) {
         let n = self.columns.len();
         for c in 0..n - 1 {
-            let (west, east) = self.columns.split_at_mut(c + 1);
-            alu::accum_from(&mut west[c], &east[0], base, width);
-            east[0].clear_planes(base, width);
+            let (west, east, scratch) = self.columns.hop_pair_mut(c);
+            alu::accum_from_with(west, east, base, width, scratch);
+            east.clear_planes(base, width);
         }
     }
 
@@ -253,21 +288,39 @@ impl Engine {
     /// Write per-lane values into logical register `reg` of column `col`.
     pub fn write_reg_lanes(&mut self, col: usize, reg: u8, width: usize, values: &[i64]) -> Result<(), EngineError> {
         let r = RegFile::resolve(reg, width)?;
-        self.columns[col].write_all(r.base, r.width, values);
+        self.columns.buf_mut(col).write_all(r.base, r.width, values);
         Ok(())
     }
 
     /// Read per-lane values of logical register `reg` in column `col`.
     pub fn read_reg_lanes(&self, col: usize, reg: u8, width: usize) -> Result<Vec<i64>, EngineError> {
         let r = RegFile::resolve(reg, width)?;
-        Ok(self.columns[col].read_all(r.base, r.width))
+        Ok(self.columns.buf(col).read_all(r.base, r.width))
     }
 
     /// Write one `p`-bit matrix element to the spill region after
     /// `first_reg` (element `idx`, all lanes given by `values`).
     pub fn write_spill(&mut self, col: usize, first_reg: u8, p: usize, idx: usize, values: &[i64]) {
         let a = RegFile::spill_addr(first_reg, p, idx);
-        self.columns[col].write_all(a.base, a.width, values);
+        self.columns.buf_mut(col).write_all(a.base, a.width, values);
+    }
+
+    /// Write the same `value` into lanes `[lane0, lane0+count)` of one
+    /// spill element — the vector-staging fast path: an x-chunk element
+    /// is identical across the matrix rows of a replica group, so the
+    /// host drives it as a masked word-fill per plane (§Perf).
+    pub fn write_spill_lanes(
+        &mut self,
+        col: usize,
+        first_reg: u8,
+        p: usize,
+        idx: usize,
+        value: i64,
+        lane0: usize,
+        count: usize,
+    ) {
+        let a = RegFile::spill_addr(first_reg, p, idx);
+        self.columns.buf_mut(col).broadcast_lanes(a.base, a.width, value, lane0, count);
     }
 
     /// Copy spill element `idx` into logical register `reg` — models
@@ -277,11 +330,8 @@ impl Engine {
     /// `p` planes move (the consuming MAC reads the operand at width
     /// `p`; §Perf L3-3).
     pub fn stage_spill(&mut self, col: usize, first_reg: u8, p: usize, idx: usize, reg: u8) -> Result<(), EngineError> {
-        let a = RegFile::spill_addr(first_reg, p, idx);
         let r = RegFile::resolve(reg, p)?;
-        for i in 0..p {
-            self.columns[col].copy_plane(a.base + i, r.base + i);
-        }
+        stage_spill_planes(self.columns.buf_mut(col), first_reg, p, idx, r.base);
         Ok(())
     }
 
@@ -294,6 +344,16 @@ impl Engine {
     /// shift column; used by tests and the coordinator fast path).
     pub fn read_result(&self, reg: u8, width: usize) -> Result<Vec<i64>, EngineError> {
         self.read_reg_lanes(0, reg, width)
+    }
+}
+
+/// Copy spill element `idx` (`p` planes) into the register window at
+/// `dst_base` — the per-column body of [`Engine::stage_spill`], also
+/// run inside the parallel MULT/MAC dispatch.
+fn stage_spill_planes(col: &mut PlaneBuf, first_reg: u8, p: usize, idx: usize, dst_base: usize) {
+    let a = RegFile::spill_addr(first_reg, p, idx);
+    for i in 0..p {
+        col.copy_plane(a.base + i, dst_base + i);
     }
 }
 
@@ -424,5 +484,34 @@ mod tests {
         }
         let got = e.read_reg_lanes(0, 1, 8).unwrap();
         assert_eq!(got, w);
+    }
+
+    #[test]
+    fn forced_serial_engine_matches_default() {
+        let cfg = EngineConfig::small();
+        let mut a = Engine::new(cfg);
+        let mut b = Engine::with_threads(cfg, 1);
+        assert_eq!(b.threads(), 1);
+        let lanes = a.pe_rows();
+        let vals: Vec<i64> = (0..lanes).map(|l| (l % 200) as i64 - 100).collect();
+        for e in [&mut a, &mut b] {
+            for c in 0..e.block_cols() {
+                e.write_reg_lanes(c, 1, 8, &vals).unwrap();
+                e.write_reg_lanes(c, 2, 8, &vals).unwrap();
+            }
+        }
+        let prog: Program = [
+            Instr::mult(4, 1, 2),
+            Instr::mac(4, 1, 2),
+            Instr::add(6, 4, 4),
+            Instr::accum(6, 3),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let sa = a.execute(&prog).unwrap();
+        let sb = b.execute(&prog).unwrap();
+        assert_eq!(sa, sb);
+        assert_eq!(a.columns(), b.columns());
     }
 }

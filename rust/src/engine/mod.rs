@@ -3,7 +3,9 @@
 //! column read through FIFO-out.
 
 pub mod config;
+pub mod column_array;
 pub mod engine;
 
+pub use column_array::ColumnArray;
 pub use config::EngineConfig;
 pub use engine::{Engine, EngineError, SEL_ALL};

@@ -100,6 +100,17 @@ impl GemvProgram {
     /// Staging core. `weights`: also stage the matrix spills (skipped
     /// on the weight-resident fast path, where the model's planes are
     /// already in BRAM from a previous request; §Perf L3-4).
+    ///
+    /// Matrix staging is lane-major scatter into a staging buffer
+    /// (element e of lane l at [e*lanes+l], e-loop innermost so each
+    /// matrix row is read as one contiguous slice; §Perf L3-5). Vector
+    /// staging takes a word-level broadcast fast path instead: an
+    /// x-chunk element repeats across every matrix row of its replica
+    /// group, so it is one masked word-fill per plane rather than a
+    /// per-lane scatter (§Perf — this is the per-request cost that
+    /// survives on the weight-resident serving path). Lanes outside the
+    /// broadcast ranges keep whatever the last engine reset left (zero
+    /// weights), which contributes exactly 0 to every accumulator.
     fn stage_parts(
         &self,
         engine: &mut Engine,
@@ -117,17 +128,11 @@ impl GemvProgram {
         let rows_here = rows_base.min(pl.m - row0);
         let k_chunk = pl.k_per_pe * pl.chunk_passes; // elements per chunk
         let k = pl.k_per_pe;
-        // lane-major staging buffers (element e of lane l at [e*lanes+l]);
-        // filled with the e-loop innermost so each matrix row is read as
-        // one contiguous slice (§Perf L3-5 — the strided row reads were
-        // the staging hot spot).
-        let mut wbuf = vec![0i64; k * lanes];
-        let mut xbuf = vec![0i64; k * lanes];
+        let mut wbuf = if weights { vec![0i64; k * lanes] } else { Vec::new() };
         for c in 0..pl.cols_used.min(engine.block_cols()) {
             if weights {
                 wbuf.fill(0);
             }
-            xbuf.fill(0);
             for f in 0..pl.fold_factor {
                 let g = c * pl.fold_factor + f; // chunk id
                 let j0 = g * k_chunk + chunk_pass * k;
@@ -135,33 +140,32 @@ impl GemvProgram {
                     continue;
                 }
                 let je = (j0 + k).min(pl.n);
-                for r in 0..rows_here {
-                    let lane = f * spacing + r;
-                    if lane >= lanes {
-                        break;
-                    }
-                    if weights {
+                let lane0 = f * spacing;
+                if lane0 >= lanes {
+                    continue;
+                }
+                let count = rows_here.min(lanes - lane0);
+                if weights {
+                    for r in 0..count {
                         let row = &w[(row0 + r) * pl.n + j0..(row0 + r) * pl.n + je];
                         for (e, &v) in row.iter().enumerate() {
-                            wbuf[e * lanes + lane] = v;
+                            wbuf[e * lanes + lane0 + r] = v;
                         }
                     }
-                    for (e, &v) in x[j0..je].iter().enumerate() {
-                        xbuf[e * lanes + lane] = v;
-                    }
+                }
+                for (e, &v) in x[j0..je].iter().enumerate() {
+                    engine.write_spill_lanes(
+                        c, SPILL_FIRST_REG, pl.precision, 2 * e + 1, v, lane0, count,
+                    );
                 }
             }
-            for e in 0..k {
-                if weights {
+            if weights {
+                for e in 0..k {
                     engine.write_spill(
                         c, SPILL_FIRST_REG, pl.precision, 2 * e,
                         &wbuf[e * lanes..(e + 1) * lanes],
                     );
                 }
-                engine.write_spill(
-                    c, SPILL_FIRST_REG, pl.precision, 2 * e + 1,
-                    &xbuf[e * lanes..(e + 1) * lanes],
-                );
             }
         }
         Ok(())

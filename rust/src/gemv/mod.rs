@@ -8,4 +8,4 @@ pub mod scheduler;
 
 pub use mapper::{MappingPlan, plan};
 pub use codegen::GemvProgram;
-pub use scheduler::GemvScheduler;
+pub use scheduler::{GemvOutcome, GemvScheduler};

@@ -26,6 +26,9 @@ impl Layer {
     }
 }
 
+/// One GEMV outcome: the result vector and the run's engine stats.
+pub type GemvOutcome = Result<(Vec<i64>, ExecStats), GemvError>;
+
 /// A GEMV/MLP scheduler bound to one engine instance. Compiled
 /// `GemvProgram`s are cached per (m, n, p, radix) shape.
 pub struct GemvScheduler {
@@ -39,9 +42,14 @@ pub struct GemvScheduler {
 
 impl GemvScheduler {
     pub fn new(config: EngineConfig) -> Self {
+        Self::from_engine(config, Engine::new(config))
+    }
+
+    /// Build over a pre-configured engine (e.g. a forced-serial one).
+    pub fn from_engine(config: EngineConfig, engine: Engine) -> Self {
         GemvScheduler {
             config,
-            engine: Engine::new(config),
+            engine,
             cache: Default::default(),
             resident: None,
         }
@@ -94,6 +102,47 @@ impl GemvScheduler {
         let res = prog.execute_opts(&mut self.engine, w, x, hot)?;
         self.resident = if prog.supports_residency() { Some(key) } else { None };
         Ok((res.y, res.stats))
+    }
+
+    /// Run a fused multi-vector GEMV: stage the matrix once, then
+    /// stream each of `xs` through the compiled program without
+    /// re-staging. The first vector pays matrix staging (unless `token`
+    /// is already resident from a previous call); later vectors reuse
+    /// the staged planes — the work-sharing a co-batched request group
+    /// gets on real hardware, where weights stay in BRAM across the
+    /// batch. Multi-pass shapes (no residency) fall back to per-vector
+    /// staging with identical results. Each vector gets its own
+    /// outcome, so one out-of-range request fails alone.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemv_batch(
+        &mut self,
+        token: u64,
+        w: &[i64],
+        xs: &[&[i64]],
+        m: usize,
+        n: usize,
+        p: usize,
+        radix: u8,
+    ) -> Vec<GemvOutcome> {
+        let prog = self.program(m, n, p, radix).clone();
+        let supports = prog.supports_residency();
+        let key = (token, m, n, p, radix);
+        let mut out = Vec::with_capacity(xs.len());
+        for &x in xs {
+            let hot = supports && self.resident == Some(key);
+            match prog.execute_opts(&mut self.engine, w, x, hot) {
+                Ok(res) => {
+                    self.resident = if supports { Some(key) } else { None };
+                    out.push(Ok((res.y, res.stats)));
+                }
+                Err(e) => {
+                    // a failed run may have left partial state behind
+                    self.resident = None;
+                    out.push(Err(e));
+                }
+            }
+        }
+        out
     }
 
     /// Run an int8 MLP forward pass: per layer `acc = W@h + b`, then

@@ -7,13 +7,52 @@
 //! Cycle costs returned by each op are the costs used by the tile
 //! controller's multicycle driver and mirrored by the analytic model in
 //! `baselines::imagine_model` (calibration-tested against each other).
+//!
+//! Each op has a `_with` variant taking an [`AluScratch`]: the engine
+//! owns one scratch per block column so the inner loops never allocate
+//! (§Perf: the per-call `Vec` scratch was a hot-path cost and would
+//! serialize columns on the allocator lock under the column-parallel
+//! dispatch). The plain-named wrappers allocate a fresh scratch and are
+//! kept for tests/benches and one-off callers.
 
 use super::bitplane::PlaneBuf;
+
+/// Reusable plane-word scratch for the ALU inner loops. All buffers are
+/// (re)sized on use; contents never carry meaning across calls.
+#[derive(Debug, Clone, Default)]
+pub struct AluScratch {
+    /// Cached a-operand sign plane (add/sub), mov sign plane.
+    sa: Vec<u64>,
+    /// Cached b-operand / multiplier sign plane.
+    sb: Vec<u64>,
+    /// Ripple-carry plane.
+    carry: Vec<u64>,
+    /// Sum staging plane (add/sub); constant-zero plane (booth digit 0).
+    sum: Vec<u64>,
+    /// Multiplier-bit mask (radix-2) / `|d|==1` select (booth).
+    mask: Vec<u64>,
+    /// `|d|==2` select (booth).
+    sel2: Vec<u64>,
+    /// `d<0` select (booth).
+    neg: Vec<u64>,
+    /// Sign-extended multiplicand planes, `acc_w * words` long.
+    wext: Vec<u64>,
+}
 
 /// Two's-complement sign-extended bit `i` of a `width`-bit register.
 #[inline]
 fn ext_plane<'a>(buf: &'a PlaneBuf, base: usize, width: usize, i: usize) -> &'a [u64] {
     buf.plane(base + i.min(width - 1))
+}
+
+/// Fill `out` with `width` sign-extended planes of a register (plane i
+/// at `[i*words, (i+1)*words)`), reusing the scratch allocation.
+fn fill_ext_planes(buf: &PlaneBuf, base: usize, reg_w: usize, width: usize, out: &mut Vec<u64>) {
+    let words = buf.words();
+    out.resize(width * words, 0);
+    for i in 0..width {
+        out[i * words..(i + 1) * words].copy_from_slice(ext_plane(buf, base, reg_w, i));
+    }
 }
 
 /// `dst = a ± b` over all lanes (ripple-carry, one plane per cycle).
@@ -28,28 +67,43 @@ pub fn add_sub(
     b: (usize, usize),
     subtract: bool,
 ) -> u64 {
+    add_sub_with(buf, dst, a, b, subtract, &mut AluScratch::default())
+}
+
+/// [`add_sub`] against caller-owned scratch (allocation-free).
+pub fn add_sub_with(
+    buf: &mut PlaneBuf,
+    dst: (usize, usize),
+    a: (usize, usize),
+    b: (usize, usize),
+    subtract: bool,
+    s: &mut AluScratch,
+) -> u64 {
     let words = buf.words();
     let (dst_base, dst_w) = dst;
     let (a_base, a_w) = a;
     let (b_base, b_w) = b;
     assert!(a_w > 0 && b_w > 0 && dst_w > 0);
     // Cache source sign planes: dst may overwrite them mid-ripple.
-    let a_sign: Vec<u64> = buf.plane(a_base + a_w - 1).to_vec();
-    let b_sign: Vec<u64> = buf.plane(b_base + b_w - 1).to_vec();
-    let mut carry = vec![if subtract { !0u64 } else { 0 }; words];
-    let mut sum = vec![0u64; words];
+    s.sa.resize(words, 0);
+    s.sa.copy_from_slice(buf.plane(a_base + a_w - 1));
+    s.sb.resize(words, 0);
+    s.sb.copy_from_slice(buf.plane(b_base + b_w - 1));
+    s.carry.resize(words, 0);
+    s.carry.fill(if subtract { !0u64 } else { 0 });
+    s.sum.resize(words, 0);
     for i in 0..dst_w {
         {
-            let ap = if i < a_w { buf.plane(a_base + i) } else { &a_sign[..] };
-            let bp = if i < b_w { buf.plane(b_base + i) } else { &b_sign[..] };
+            let ap = if i < a_w { buf.plane(a_base + i) } else { &s.sa[..] };
+            let bp = if i < b_w { buf.plane(b_base + i) } else { &s.sb[..] };
             for w in 0..words {
                 let (av, bv) = (ap[w], bp[w] ^ if subtract { !0 } else { 0 });
-                let c = carry[w];
-                sum[w] = av ^ bv ^ c;
-                carry[w] = (av & bv) | (c & (av ^ bv));
+                let c = s.carry[w];
+                s.sum[w] = av ^ bv ^ c;
+                s.carry[w] = (av & bv) | (c & (av ^ bv));
             }
         }
-        buf.plane_mut(dst_base + i).copy_from_slice(&sum);
+        buf.plane_mut(dst_base + i).copy_from_slice(&s.sum);
     }
     mask_reg_tail(buf, dst_base, dst_w);
     (dst_w as u64) + 1
@@ -69,6 +123,18 @@ pub fn mac_radix2(
     xreg: (usize, usize),
     clear: bool,
 ) -> u64 {
+    mac_radix2_with(buf, acc, wreg, xreg, clear, &mut AluScratch::default())
+}
+
+/// [`mac_radix2`] against caller-owned scratch (allocation-free).
+pub fn mac_radix2_with(
+    buf: &mut PlaneBuf,
+    acc: (usize, usize),
+    wreg: (usize, usize),
+    xreg: (usize, usize),
+    clear: bool,
+    s: &mut AluScratch,
+) -> u64 {
     let (acc_base, acc_w) = acc;
     let (w_base, p_w) = wreg;
     let (x_base, p_x) = xreg;
@@ -82,45 +148,33 @@ pub fn mac_radix2(
     // the accumulator is disjoint, so the cache cannot go stale, and
     // the inner ripple can then borrow the acc plane mutably in place
     // (§Perf L3-2).
-    let wext = cache_ext_planes(buf, w_base, p_w, acc_w);
+    fill_ext_planes(buf, w_base, p_w, acc_w, &mut s.wext);
+    s.mask.resize(words, 0);
+    s.carry.resize(words, 0);
     let mut cycles = 0u64;
-    let mut mask = vec![0u64; words];
-    let mut carry = vec![0u64; words];
     for j in 0..p_x {
-        mask.copy_from_slice(buf.plane(x_base + j));
+        s.mask.copy_from_slice(buf.plane(x_base + j));
         let subtract = j == p_x - 1; // sign bit of the multiplier
         let win = acc_w.saturating_sub(j);
         let sub_mask = if subtract { !0u64 } else { 0 };
-        for (w, c) in carry.iter_mut().enumerate() {
-            *c = if subtract { mask[w] } else { 0 };
+        for (c, m) in s.carry.iter_mut().zip(&s.mask) {
+            *c = if subtract { *m } else { 0 };
         }
         for i in 0..win {
-            let vp = &wext[i * words..(i + 1) * words];
+            let vp = &s.wext[i * words..(i + 1) * words];
             let acc_p = buf.plane_mut(acc_base + j + i);
             for w in 0..words {
-                let eff = (vp[w] ^ sub_mask) & mask[w];
+                let eff = (vp[w] ^ sub_mask) & s.mask[w];
                 let a = acc_p[w];
-                let c = carry[w];
+                let c = s.carry[w];
                 acc_p[w] = a ^ eff ^ c;
-                carry[w] = (a & eff) | (c & (a ^ eff));
+                s.carry[w] = (a & eff) | (c & (a ^ eff));
             }
         }
         cycles += win as u64 + 1;
     }
     mask_reg_tail(buf, acc_base, acc_w);
     cycles
-}
-
-/// Copy `width` sign-extended planes of a register into a contiguous
-/// scratch buffer (plane i at `[i*words, (i+1)*words)`).
-fn cache_ext_planes(buf: &PlaneBuf, base: usize, reg_w: usize, width: usize) -> Vec<u64> {
-    let words = buf.words();
-    let mut out = vec![0u64; width * words];
-    for i in 0..width {
-        out[i * words..(i + 1) * words]
-            .copy_from_slice(ext_plane(buf, base, reg_w, i));
-    }
-    out
 }
 
 /// `acc += w * x` — Booth radix-4 (the IMAGine-slice4 PE).
@@ -136,6 +190,18 @@ pub fn mac_booth4(
     xreg: (usize, usize),
     clear: bool,
 ) -> u64 {
+    mac_booth4_with(buf, acc, wreg, xreg, clear, &mut AluScratch::default())
+}
+
+/// [`mac_booth4`] against caller-owned scratch (allocation-free).
+pub fn mac_booth4_with(
+    buf: &mut PlaneBuf,
+    acc: (usize, usize),
+    wreg: (usize, usize),
+    xreg: (usize, usize),
+    clear: bool,
+    s: &mut AluScratch,
+) -> u64 {
     let (acc_base, acc_w) = acc;
     let (w_base, p_w) = wreg;
     let (x_base, p_x) = xreg;
@@ -146,40 +212,43 @@ pub fn mac_booth4(
     }
     let words = buf.words();
     let ndigits = p_x.div_ceil(2);
-    let sign: Vec<u64> = buf.plane(x_base + p_x - 1).to_vec();
-    let wext = cache_ext_planes(buf, w_base, p_w, acc_w);
+    s.sb.resize(words, 0);
+    s.sb.copy_from_slice(buf.plane(x_base + p_x - 1));
+    fill_ext_planes(buf, w_base, p_w, acc_w, &mut s.wext);
+    s.mask.resize(words, 0);
+    s.sel2.resize(words, 0);
+    s.neg.resize(words, 0);
+    s.carry.resize(words, 0);
+    // constant-zero plane standing in for bit -1 of the multiplier
+    s.sum.clear();
+    s.sum.resize(words, 0);
     let mut cycles = 0u64;
-    let (mut sel1, mut sel2, mut neg) =
-        (vec![0u64; words], vec![0u64; words], vec![0u64; words]);
-    let mut carry = vec![0u64; words];
     for k in 0..ndigits {
         {
-            let zero = vec![0u64; words];
-            let bm1 = if k == 0 { &zero[..] } else { buf.plane(x_base + 2 * k - 1) };
-            let b0 = if 2 * k < p_x { buf.plane(x_base + 2 * k) } else { &sign[..] };
-            let b1 = if 2 * k + 1 < p_x { buf.plane(x_base + 2 * k + 1) } else { &sign[..] };
+            let bm1 = if k == 0 { &s.sum[..] } else { buf.plane(x_base + 2 * k - 1) };
+            let b0 = if 2 * k < p_x { buf.plane(x_base + 2 * k) } else { &s.sb[..] };
+            let b1 = if 2 * k + 1 < p_x { buf.plane(x_base + 2 * k + 1) } else { &s.sb[..] };
             for w in 0..words {
                 let (m1, z0, z1) = (bm1[w], b0[w], b1[w]);
-                sel1[w] = z0 ^ m1; // |d| == 1
-                sel2[w] = (z1 & !z0 & !m1) | (!z1 & z0 & m1); // |d| == 2
-                neg[w] = z1 & !(z0 & m1); // d < 0
+                s.mask[w] = z0 ^ m1; // |d| == 1
+                s.sel2[w] = (z1 & !z0 & !m1) | (!z1 & z0 & m1); // |d| == 2
+                s.neg[w] = z1 & !(z0 & m1); // d < 0
             }
         }
         let j = 2 * k;
         let win = acc_w.saturating_sub(j);
-        carry.copy_from_slice(&neg); // +1 where negated
+        s.carry.copy_from_slice(&s.neg); // +1 where negated
         for i in 0..win {
-            let v1 = &wext[i * words..(i + 1) * words];
-            let v2 = if i == 0 { None } else { Some(&wext[(i - 1) * words..i * words]) };
+            let v1 = &s.wext[i * words..(i + 1) * words];
             let acc_p = buf.plane_mut(acc_base + j + i);
             for w in 0..words {
-                let two_w = v2.map_or(0, |p| p[w]);
-                let bit = (sel1[w] & v1[w]) | (sel2[w] & two_w);
-                let eff = bit ^ neg[w];
+                let two_w = if i == 0 { 0 } else { s.wext[(i - 1) * words + w] };
+                let bit = (s.mask[w] & v1[w]) | (s.sel2[w] & two_w);
+                let eff = bit ^ s.neg[w];
                 let a = acc_p[w];
-                let c = carry[w];
+                let c = s.carry[w];
                 acc_p[w] = a ^ eff ^ c;
-                carry[w] = (a & eff) | (c & (a ^ eff));
+                s.carry[w] = (a & eff) | (c & (a ^ eff));
             }
         }
         cycles += win as u64 + 2; // +1 param step, +1 digit decode
@@ -200,16 +269,28 @@ pub fn accum_from(
     base: usize,
     width: usize,
 ) -> u64 {
+    accum_from_with(dst, src, base, width, &mut AluScratch::default())
+}
+
+/// [`accum_from`] against caller-owned scratch (allocation-free).
+pub fn accum_from_with(
+    dst: &mut PlaneBuf,
+    src: &PlaneBuf,
+    base: usize,
+    width: usize,
+    s: &mut AluScratch,
+) -> u64 {
     assert_eq!(dst.lanes(), src.lanes(), "column lane mismatch");
     let words = dst.words();
-    let mut carry = vec![0u64; words];
+    s.carry.resize(words, 0);
+    s.carry.fill(0);
     for i in 0..width {
         let sp = src.plane(base + i);
         let dp = dst.plane_mut(base + i);
         for w in 0..words {
-            let (a, b, c) = (dp[w], sp[w], carry[w]);
+            let (a, b, c) = (dp[w], sp[w], s.carry[w]);
             dp[w] = a ^ b ^ c;
-            carry[w] = (a & b) | (c & (a ^ b));
+            s.carry[w] = (a & b) | (c & (a ^ b));
         }
     }
     width as u64 + 2
@@ -231,19 +312,27 @@ pub fn fold_step(
 
 /// `dst = src` register copy (`width` cycles — one bit-row per cycle).
 pub fn mov(buf: &mut PlaneBuf, dst: (usize, usize), src: (usize, usize)) -> u64 {
+    mov_with(buf, dst, src, &mut AluScratch::default())
+}
+
+/// [`mov`] against caller-owned scratch (allocation-free).
+pub fn mov_with(
+    buf: &mut PlaneBuf,
+    dst: (usize, usize),
+    src: (usize, usize),
+    s: &mut AluScratch,
+) -> u64 {
     let width = dst.1.min(src.1);
     for i in 0..width {
-        if src.0 + i == dst.0 + i {
-            continue;
-        }
-        let v = buf.plane(src.0 + i).to_vec();
-        buf.plane_mut(dst.0 + i).copy_from_slice(&v);
+        buf.copy_plane(src.0 + i, dst.0 + i);
     }
     // sign-extend into any remaining dst planes
     if dst.1 > width {
-        let sign = buf.plane(src.0 + src.1 - 1).to_vec();
+        let words = buf.words();
+        s.sa.resize(words, 0);
+        s.sa.copy_from_slice(buf.plane(src.0 + src.1 - 1));
         for i in width..dst.1 {
-            buf.plane_mut(dst.0 + i).copy_from_slice(&sign);
+            buf.plane_mut(dst.0 + i).copy_from_slice(&s.sa);
         }
     }
     dst.1 as u64
@@ -399,6 +488,33 @@ mod tests {
         let got = b.read_all(64, 32);
         for l in 0..6 {
             assert_eq!(got[l], wv[l] * xv[l], "booth lane {l}");
+        }
+    }
+
+    #[test]
+    fn shared_scratch_across_mixed_ops_is_clean() {
+        // One scratch reused across different ops and widths must give
+        // the same answers as fresh scratch every call.
+        let mut s = AluScratch::default();
+        let lanes = 130;
+        let mut b = mk(lanes);
+        let wv: Vec<i64> = (0..lanes).map(|i| (i as i64 % 23) - 11).collect();
+        let xv: Vec<i64> = (0..lanes).map(|i| (i as i64 % 17) - 8).collect();
+        b.write_all(0, 8, &wv);
+        b.write_all(32, 8, &xv);
+        mac_radix2_with(&mut b, (64, 32), (0, 8), (32, 8), true, &mut s);
+        add_sub_with(&mut b, (96, 16), (0, 8), (32, 8), true, &mut s);
+        mac_booth4_with(&mut b, (128, 24), (0, 8), (32, 8), true, &mut s);
+        mov_with(&mut b, (160, 16), (0, 8), &mut s);
+        let mac = b.read_all(64, 32);
+        let sub = b.read_all(96, 16);
+        let booth = b.read_all(128, 24);
+        let moved = b.read_all(160, 16);
+        for l in 0..lanes {
+            assert_eq!(mac[l], wv[l] * xv[l], "mac lane {l}");
+            assert_eq!(sub[l], wv[l] - xv[l], "sub lane {l}");
+            assert_eq!(booth[l], wv[l] * xv[l], "booth lane {l}");
+            assert_eq!(moved[l], wv[l], "mov lane {l}");
         }
     }
 

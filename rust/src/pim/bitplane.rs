@@ -83,6 +83,11 @@ impl PlaneBuf {
         }
     }
 
+    /// Zero the whole buffer in place (engine reset without realloc).
+    pub fn clear_all(&mut self) {
+        self.data.fill(0);
+    }
+
     /// Read lane `lane`'s two's-complement value from planes
     /// `[base, base+width)` (LSB at `base`).
     pub fn read_lane(&self, base: usize, width: usize, lane: usize) -> i64 {
@@ -114,6 +119,45 @@ impl PlaneBuf {
             self.plane_mut(base + i).fill(fill);
         }
         self.mask_tail(base, width);
+    }
+
+    /// Write the same `value` into lanes `[lane0, lane0+count)` only,
+    /// leaving other lanes of the window untouched — the vector-staging
+    /// hot path: an x-chunk element is identical across every matrix
+    /// row of a replica group, so the host DMA drives it as one masked
+    /// word-fill per plane instead of per-lane scatter writes (§Perf).
+    pub fn broadcast_lanes(
+        &mut self,
+        base: usize,
+        width: usize,
+        value: i64,
+        lane0: usize,
+        count: usize,
+    ) {
+        let end = (lane0 + count).min(self.lanes);
+        if lane0 >= end {
+            return;
+        }
+        let (w0, w1) = (lane0 / 64, (end - 1) / 64);
+        debug_assert!(w1 < self.words);
+        for i in 0..width {
+            let bit = (value >> i) & 1 == 1;
+            let plane = self.plane_mut(base + i);
+            for (w, word) in plane.iter_mut().enumerate().take(w1 + 1).skip(w0) {
+                let lo = lane0.max(w * 64) - w * 64;
+                let hi = end.min(w * 64 + 64) - w * 64;
+                let mask = if hi - lo == 64 {
+                    !0u64
+                } else {
+                    ((1u64 << (hi - lo)) - 1) << lo
+                };
+                if bit {
+                    *word |= mask;
+                } else {
+                    *word &= !mask;
+                }
+            }
+        }
     }
 
     /// Read all lanes of a register as a vector of values.
@@ -245,6 +289,38 @@ mod tests {
         let mut b = PlaneBuf::new(32, 130);
         b.broadcast(4, 8, -77);
         assert!(b.read_all(4, 8).iter().all(|&v| v == -77));
+    }
+
+    #[test]
+    fn broadcast_lanes_touches_only_the_range() {
+        let mut b = PlaneBuf::new(16, 200);
+        let vals: Vec<i64> = (0..200).map(|l| (l % 50) as i64 - 25).collect();
+        b.write_all(0, 8, &vals);
+        b.broadcast_lanes(0, 8, -9, 70, 75); // lanes 70..145
+        let got = b.read_all(0, 8);
+        for l in 0..200 {
+            let want = if (70..145).contains(&l) { -9 } else { vals[l] };
+            assert_eq!(got[l], want, "lane {l}");
+        }
+        // word-aligned and full-word spans
+        b.broadcast_lanes(0, 8, 42, 64, 64);
+        let got = b.read_all(0, 8);
+        for l in 64..128 {
+            assert_eq!(got[l], 42, "lane {l}");
+        }
+        // clamped at the lane count, zero count is a no-op
+        b.broadcast_lanes(0, 8, 1, 199, 50);
+        assert_eq!(b.read_all(0, 8)[199], 1);
+        b.broadcast_lanes(0, 8, 7, 10, 0);
+        assert_ne!(b.read_all(0, 8)[10], 7);
+    }
+
+    #[test]
+    fn clear_all_zeroes_every_plane() {
+        let mut b = PlaneBuf::new(8, 70);
+        b.broadcast(0, 8, -1);
+        b.clear_all();
+        assert!(b.read_all(0, 8).iter().all(|&v| v == 0));
     }
 
     #[test]

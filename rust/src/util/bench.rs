@@ -1,6 +1,11 @@
 //! Minimal benchmark timer (offline stand-in for `criterion`): warmup +
-//! N timed iterations, reporting min/median/mean throughput.
+//! N timed iterations, reporting min/median/mean throughput, plus a
+//! merge-writing JSON sink so benches record results in the repo's perf
+//! trajectory (`BENCH_*.json`, schema in docs/PERF.md).
 
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -59,6 +64,41 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: u32, iters: u32, mut f: F) 
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Smoke-mode check for CI: `BENCH_SMOKE=1` makes benches run a reduced
+/// iteration count (just enough to emit a valid `BENCH_*.json`).
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A merge-writing sink for benchmark JSON: multiple benches share one
+/// file, each owning a top-level section. Loading tolerates a missing
+/// or corrupt file (sections from other benches are preserved only if
+/// the file parses).
+pub struct BenchSink {
+    path: PathBuf,
+    root: BTreeMap<String, Json>,
+}
+
+impl BenchSink {
+    pub fn load(path: &str) -> BenchSink {
+        let root = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
+        BenchSink { path: PathBuf::from(path), root }
+    }
+
+    /// Replace this bench's top-level section.
+    pub fn set(&mut self, section: &str, value: Json) {
+        self.root.insert(section.to_string(), value);
+    }
+
+    pub fn save(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, format!("{}\n", Json::Obj(self.root.clone())))
+    }
 }
 
 #[cfg(test)]

@@ -1,12 +1,14 @@
 //! In-repo substrates for what a framework would normally pull from
 //! crates.io — this environment is offline (see Cargo.toml note), so the
-//! JSON parser, RNG/property-test driver, CLI parser and bench timer are
-//! built here from scratch.
+//! JSON parser, RNG/property-test driver, CLI parser, bench timer and
+//! worker pool are built here from scratch.
 
 pub mod json;
 pub mod rng;
 pub mod cli;
 pub mod bench;
+pub mod pool;
 
 pub use json::Json;
 pub use rng::XorShift;
+pub use pool::ThreadPool;

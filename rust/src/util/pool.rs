@@ -1,0 +1,259 @@
+//! A small persistent worker pool (offline stand-in for `rayon`): the
+//! engine's block columns are data-parallel, so the hot path needs a
+//! parallel-for whose per-dispatch cost is a condvar wake, not a thread
+//! spawn. Workers are long-lived; each dispatch hands them one
+//! type-erased job and indices are claimed with an atomic counter so
+//! uneven columns load-balance.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One parallel-for dispatch: workers claim indices `0..len` from
+/// `next` and call `f(i)`; each index is executed exactly once.
+///
+/// `f` borrows the submitter's stack. The lifetime is erased to
+/// `'static` when the job is built; this is sound because
+/// [`ThreadPool::run`] does not return until every worker has finished
+/// the job and dropped its `Arc<Job>`, so the borrow never dangles
+/// while reachable.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    len: usize,
+    next: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct State {
+    /// Current job, if one is in flight.
+    job: Option<Arc<Job>>,
+    /// Bumped once per dispatch so each worker joins each job once.
+    epoch: u64,
+    /// Workers that have not yet finished the current job.
+    running: usize,
+    stop: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work: Condvar,
+    /// The submitter waits here for `running == 0`.
+    done: Condvar,
+}
+
+/// A fixed-size pool executing one parallel-for at a time.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` threads (at least 1).
+    pub fn new(workers: usize) -> ThreadPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, running: 0, stop: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("imagine-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles }
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Thread count requested via `IMAGINE_THREADS`, defaulting to the
+    /// machine's available parallelism (see docs/PERF.md).
+    pub fn default_threads() -> usize {
+        match std::env::var("IMAGINE_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) => n.max(1),
+            None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    /// Run `f(i)` for every `i in 0..len` across the pool, blocking
+    /// until all indices completed. The calling thread participates in
+    /// the scan, so a pool of N workers applies N+1 threads. Distinct
+    /// indices run concurrently — `f` must only touch data disjoint per
+    /// index (or shared immutably).
+    pub fn run(&self, len: usize, f: &(dyn Fn(usize) + Sync)) {
+        if len == 0 {
+            return;
+        }
+        // SAFETY: lifetime erasure only — `run` joins the job (waits for
+        // `running == 0`, at which point every worker has dropped its
+        // Arc) before returning, so `f` outlives all uses.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            f: f_static,
+            len,
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "overlapping ThreadPool::run");
+            st.job = Some(job.clone());
+            st.epoch = st.epoch.wrapping_add(1);
+            st.running = self.handles.len();
+            self.shared.work.notify_all();
+        }
+        run_job(&job);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.running > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        let panicked = job.panicked.load(Ordering::Relaxed);
+        drop(job);
+        if panicked {
+            panic!("ThreadPool job panicked in a worker");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stop = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim-and-execute until the job's index space is exhausted.
+fn run_job(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.len {
+            break;
+        }
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.f)(i)));
+        if r.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.stop {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(j) = st.job.clone() {
+                        seen = st.epoch;
+                        break j;
+                    }
+                }
+                st = sh.work.wait(st).unwrap();
+            }
+        };
+        run_job(&job);
+        // Drop our Arc before reporting done: once `running` hits 0 the
+        // submitter may invalidate the borrow the job's `f` points at.
+        drop(job);
+        let mut st = sh.state.lock().unwrap();
+        st.running -= 1;
+        if st.running == 0 {
+            sh.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn mutates_disjoint_slices() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 64];
+        {
+            struct SendPtr(*mut u64);
+            unsafe impl Send for SendPtr {}
+            unsafe impl Sync for SendPtr {}
+            let p = SendPtr(data.as_mut_ptr());
+            pool.run(64, &|i| {
+                // SAFETY: each index is claimed exactly once.
+                unsafe { *p.0.add(i) = i as u64 * 3 };
+            });
+        }
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+    }
+
+    #[test]
+    fn sequential_dispatches_reuse_workers() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(10, &|i| {
+                total.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 45);
+    }
+
+    #[test]
+    fn empty_run_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.run(0, &|_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(ThreadPool::default_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // the pool stays usable afterwards
+        let n = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+}

@@ -1,0 +1,137 @@
+//! Batched GEMV semantics: the fused `gemv_batch` path must be
+//! observationally identical to independent `gemv` calls (results AND
+//! per-request cycle accounting), across residency hits, multi-pass
+//! fallback shapes and per-request failures — and the coordinator must
+//! surface correct per-request batch_size/cycles under concurrent
+//! batched submission.
+
+use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::engine::EngineConfig;
+use imagine::gemv::GemvScheduler;
+use imagine::util::XorShift;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+fn check_batch_equals_loop(m: usize, n: usize, p: usize, radix: u8, vectors: usize, seed: u64) {
+    let config = EngineConfig::small();
+    let half = 1i64 << (p - 1);
+    let mut rng = XorShift::new(seed);
+    let w = rng.vec_i64(m * n, -half, half - 1);
+    let xs: Vec<Vec<i64>> = (0..vectors).map(|_| rng.vec_i64(n, -half, half - 1)).collect();
+    let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+
+    let mut looped = GemvScheduler::new(config);
+    let solo: Vec<(Vec<i64>, u64)> = xs
+        .iter()
+        .map(|x| {
+            let (y, s) = looped.gemv(&w, x, m, n, p, radix).unwrap();
+            (y, s.cycles)
+        })
+        .collect();
+
+    let mut fused = GemvScheduler::new(config);
+    let batched = fused.gemv_batch(0xBEEF, &w, &xrefs, m, n, p, radix);
+    assert_eq!(batched.len(), vectors);
+    for (i, (r, x)) in batched.into_iter().zip(&xs).enumerate() {
+        let (y, s) = r.unwrap_or_else(|e| panic!("vector {i}: {e}"));
+        assert_eq!(y, host_gemv(&w, x, m, n), "vector {i} result");
+        assert_eq!((y.len(), s.cycles), (m, solo[i].1), "vector {i} cycles");
+    }
+}
+
+#[test]
+fn batch_matches_independent_calls_single_pass() {
+    // single-pass shape: residency makes vectors 2..B hot
+    check_batch_equals_loop(48, 96, 8, 2, 6, 1);
+    check_batch_equals_loop(48, 96, 8, 4, 4, 2);
+}
+
+#[test]
+fn batch_matches_independent_calls_multi_pass() {
+    // k > PE capacity forces chunk passes -> no residency, per-vector
+    // staging fallback must still be exact
+    check_batch_equals_loop(8, 5000, 8, 2, 3, 3);
+    // m > lanes forces row passes
+    check_batch_equals_loop(500, 16, 4, 2, 3, 4);
+}
+
+#[test]
+fn batch_residency_spans_batches() {
+    let config = EngineConfig::small();
+    let (m, n) = (32, 64);
+    let mut rng = XorShift::new(9);
+    let w = rng.vec_i64(m * n, -100, 100);
+    let mut sched = GemvScheduler::new(config);
+    for round in 0..3 {
+        let xs: Vec<Vec<i64>> = (0..4).map(|_| rng.vec_i64(n, -100, 100)).collect();
+        let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+        // same token every round: rounds 2/3 start hot
+        for (r, x) in sched.gemv_batch(42, &w, &xrefs, m, n, 8, 2).into_iter().zip(&xs) {
+            assert_eq!(r.unwrap().0, host_gemv(&w, x, m, n), "round {round}");
+        }
+    }
+}
+
+#[test]
+fn batch_reports_per_request_range_errors() {
+    let config = EngineConfig::small();
+    let (m, n) = (16, 16);
+    let mut rng = XorShift::new(5);
+    let w = rng.vec_i64(m * n, -100, 100);
+    let good1 = rng.vec_i64(n, -100, 100);
+    let bad = vec![1000i64; n]; // out of 8-bit range
+    let good2 = rng.vec_i64(n, -100, 100);
+    let xrefs: Vec<&[i64]> = vec![&good1, &bad, &good2];
+    let mut sched = GemvScheduler::new(config);
+    let out = sched.gemv_batch(1, &w, &xrefs, m, n, 8, 2);
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].as_ref().unwrap().0, host_gemv(&w, &good1, m, n));
+    assert!(out[1].is_err(), "out-of-range vector must fail alone");
+    assert_eq!(out[2].as_ref().unwrap().0, host_gemv(&w, &good2, m, n));
+}
+
+#[test]
+fn coordinator_batched_responses_carry_cycles_and_batch_size() {
+    let (m, n) = (24, 48);
+    let mut rng = XorShift::new(11);
+    let w = rng.vec_i64(m * n, -32, 31);
+    let mut reg = ModelRegistry::default();
+    reg.register_gemv("g", w.clone(), m, n).unwrap();
+
+    // reference cycle count for this shape (deterministic simulation)
+    let mut sched = GemvScheduler::new(EngineConfig::small());
+    let x0 = rng.vec_i64(n, -64, 63);
+    let (_, ref_stats) = sched.gemv(&w, &x0, m, n, 8, 2).unwrap();
+
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(50) },
+            ..Default::default()
+        },
+        reg,
+    );
+    let xs: Vec<Vec<i64>> = (0..8).map(|_| rng.vec_i64(n, -64, 63)).collect();
+    let rxs: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(Request { model: "g".into(), x: x.clone() }).unwrap())
+        .collect();
+    let mut max_batch = 0;
+    for (x, rx) in xs.iter().zip(rxs) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.y, host_gemv(&w, x, m, n));
+        assert_eq!(resp.cycles, ref_stats.cycles, "fused cycles must equal solo cycles");
+        assert!((1..=8).contains(&resp.batch_size), "{}", resp.batch_size);
+        assert!(resp.device_us > 0.0);
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed, 0);
+    assert!(max_batch > 1, "no batching observed");
+    assert!(snap.mean_batch_size() > 1.0);
+}
