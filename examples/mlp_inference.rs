@@ -52,7 +52,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
 
     // register with the coordinator (2 workers, dynamic batching)
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     reg.register_mlp("digits", layers.clone(), SCALES.to_vec())?;
     let coord = Coordinator::start(
         CoordinatorConfig {

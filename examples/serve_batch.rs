@@ -11,7 +11,7 @@ use std::time::Instant;
 
 fn run(policy: BatchPolicy, label: &str) {
     let mut rng = XorShift::new(99);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     reg.register_gemv("encoder", rng.vec_i64(128 * 64, -32, 31), 128, 64).unwrap();
     reg.register_gemv("decoder", rng.vec_i64(64 * 128, -32, 31), 64, 128).unwrap();
 

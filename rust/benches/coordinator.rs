@@ -70,7 +70,7 @@ fn sched_batch_run(batch: usize, fused: bool, warm: u32, iters: u32) -> f64 {
 fn coord_two_model(policy: BatchPolicy, requests: usize) -> f64 {
     let mut rng = XorShift::new(23);
     let half = 1i64 << (P - 1);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     reg.register_gemv("a", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
     reg.register_gemv("b", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
     let coord = Coordinator::start(
@@ -100,9 +100,41 @@ fn coord_two_model(policy: BatchPolicy, requests: usize) -> f64 {
     requests as f64 / wall
 }
 
+/// End-to-end throughput for an oversized model (multi-pass on one
+/// engine): the worker transparently promotes it to the sharded pool,
+/// so co-batched requests enjoy per-shard residency.
+fn coord_sharded_model(requests: usize) -> f64 {
+    let mut rng = XorShift::new(31);
+    let half = 1i64 << (P - 1);
+    let (m, n) = (768, 256);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("big", rng.vec_i64(m * n, -half, half - 1), m, n).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(20) },
+            engine: batch_engine_config(),
+            ..Default::default()
+        },
+        reg,
+    );
+    let xs: Vec<Vec<i64>> = (0..requests).map(|_| rng.vec_i64(n, -half, half - 1)).collect();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(Request { model: "big".into(), x: x.clone() }).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    requests as f64 / wall
+}
+
 fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64, f64) {
     let mut rng = XorShift::new(3);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     let d = 32;
     reg.register_gemv("m", rng.vec_i64(d * d, -32, 31), d, d).unwrap();
     let coord = Coordinator::start(
@@ -147,6 +179,10 @@ fn main() {
     );
     println!("unbatched {unbatched:>8.0} req/s   batch 8 {batched:>8.0} req/s   ({:.2}x)", batched / unbatched);
 
+    println!("\n== coordinator end-to-end: oversized 768x256 model (sharded promotion) ==");
+    let sharded_reqps = coord_sharded_model(if smoke() { 8 } else { 32 });
+    println!("sharded model {sharded_reqps:>8.0} req/s");
+
     println!("\n== coordinator scaling (32x32 model) ==");
     println!(
         "{:<28} {:>12} {:>10} {:>10}",
@@ -165,7 +201,7 @@ fn main() {
 
     println!("\n== submit-path overhead (no contention) ==");
     let mut rng = XorShift::new(4);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     reg.register_gemv("m", rng.vec_i64(16 * 16, -32, 31), 16, 16).unwrap();
     let coord = Coordinator::start(
         CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
@@ -196,6 +232,7 @@ fn main() {
             ("batch16_speedup", Json::num(speedup16)),
             ("coord_2model_unbatched_reqps", Json::num(unbatched)),
             ("coord_2model_batch8_reqps", Json::num(batched)),
+            ("coord_sharded_768x256_reqps", Json::num(sharded_reqps)),
             ("smoke", Json::Bool(smoke())),
         ]),
     );

@@ -1,0 +1,138 @@
+//! Bench: sharded multi-engine GEMV vs the single-engine multi-pass
+//! path for an oversized model (more matrix rows than one engine's
+//! lanes). The single-engine path re-stages spill planes for every
+//! request; the sharded pool stages each row-shard once per batch —
+//! or not at all when the model is already resident from the previous
+//! batch — and runs shards in parallel. Wall time and the
+//! `plane_word_ops` work metric (which counts host staging DMA words)
+//! both go to `BENCH_engine.json` (schema: docs/PERF.md).
+//!
+//! Run: `cargo bench --bench sharded`
+//! (`BENCH_SMOKE=1` for the reduced CI run.)
+
+use imagine::engine::EngineConfig;
+use imagine::gemv::{plan, plan_shards, GemvOutcome, GemvScheduler, ShardedScheduler};
+use imagine::util::bench::{bench, black_box, smoke, BenchSink};
+use imagine::util::{Json, XorShift};
+
+/// Oversized serving shape: 768 rows on a 384-lane x 16-column engine
+/// is 2 row passes solo (no residency) and exactly 2 resident shards.
+const M: usize = 768;
+const N: usize = 768;
+const P: usize = 8;
+const BATCH: usize = 8;
+
+fn engine_config() -> EngineConfig {
+    EngineConfig { tile_rows: 2, tile_cols: 8, ..EngineConfig::u55() }
+}
+
+fn batch_plane_ops(out: Vec<GemvOutcome>) -> u64 {
+    out.into_iter().map(|r| r.unwrap().1.plane_word_ops).sum()
+}
+
+fn main() {
+    let cfg = engine_config();
+    let full = plan(&cfg, M, N, P, 2);
+    assert!(!full.is_single_pass(), "bench shape must be multi-pass solo");
+    let sp = plan_shards(&cfg, M, N, P, 2).expect("bench shape must shard");
+    assert!(sp.resident_on(&cfg), "shards must be resident");
+
+    let mut rng = XorShift::new(29);
+    let half = 1i64 << (P - 1);
+    let w = rng.vec_i64(M * N, -half, half - 1);
+    let xs: Vec<Vec<i64>> = (0..BATCH).map(|_| rng.vec_i64(N, -half, half - 1)).collect();
+    let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+
+    println!("== sharded GEMV: {M}x{N} @ {P}-bit, batch {BATCH}, K = {} shards ==", sp.k());
+
+    let mut single = GemvScheduler::new(cfg);
+    let mut sharded = ShardedScheduler::new(cfg);
+
+    // correctness first: the two paths must agree bit-for-bit
+    let host: Vec<i64> = (0..M)
+        .map(|r| (0..N).map(|j| w[r * N + j] * xs[0][j]).sum())
+        .collect();
+    let y_single = single.gemv(&w, &xs[0], M, N, P, 2).unwrap().0;
+    let y_sharded = sharded.run_plan(&sp, 1, &w, &xrefs)[0].as_ref().unwrap().0.clone();
+    assert_eq!(y_single, host);
+    assert_eq!(y_sharded, host);
+
+    // work metric: one batch each (the simulator is deterministic)
+    let single_ops: u64 = xrefs
+        .iter()
+        .map(|x| single.gemv(&w, x, M, N, P, 2).unwrap().1.plane_word_ops)
+        .sum();
+    let cold_ops = batch_plane_ops(sharded.run_plan(&sp, 2, &w, &xrefs));
+    let resident_ops = batch_plane_ops(sharded.run_plan(&sp, 2, &w, &xrefs));
+    println!(
+        "plane_word_ops/batch: single {single_ops}   sharded cold {cold_ops}   sharded resident {resident_ops}"
+    );
+    assert!(resident_ops < single_ops, "residency must cut re-staging work");
+
+    // wall time
+    let (warm, iters) = if smoke() { (1, 3) } else { (2, 11) };
+    let m1 = bench("single engine, multi-pass batch", warm, iters, || {
+        let mut sum = 0u64;
+        for x in &xrefs {
+            let (y, s) = single.gemv(&w, x, M, N, P, 2).unwrap();
+            sum += s.cycles + y[0].unsigned_abs();
+        }
+        black_box(sum)
+    });
+    println!("{}", m1.report());
+
+    let mut cold_token = 100u64;
+    let m2 = bench("sharded pool, cold batch", warm, iters, || {
+        cold_token += 1; // fresh token: every batch pays shard staging
+        let mut sum = 0u64;
+        for r in sharded.run_plan(&sp, cold_token, &w, &xrefs) {
+            let (y, s) = r.unwrap();
+            sum += s.cycles + y[0].unsigned_abs();
+        }
+        black_box(sum)
+    });
+    println!("{}", m2.report());
+
+    let m3 = bench("sharded pool, resident batch", warm, iters, || {
+        let mut sum = 0u64;
+        for r in sharded.run_plan(&sp, 7, &w, &xrefs) {
+            let (y, s) = r.unwrap();
+            sum += s.cycles + y[0].unsigned_abs();
+        }
+        black_box(sum)
+    });
+    println!("{}", m3.report());
+
+    let single_us = m1.per_iter_us() / BATCH as f64;
+    let cold_us = m2.per_iter_us() / BATCH as f64;
+    let resident_us = m3.per_iter_us() / BATCH as f64;
+    println!(
+        "per-request: single {single_us:.0} us   sharded cold {cold_us:.0} us ({:.2}x)   sharded resident {resident_us:.0} us ({:.2}x)",
+        single_us / cold_us,
+        single_us / resident_us,
+    );
+
+    // anchor at the workspace root regardless of the bench's cwd
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    let mut sink = BenchSink::load(path);
+    sink.set(
+        "sharded",
+        Json::obj([
+            ("gemv_m", Json::num(M as f64)),
+            ("gemv_n", Json::num(N as f64)),
+            ("precision", Json::num(P as f64)),
+            ("batch", Json::num(BATCH as f64)),
+            ("k_shards", Json::num(sp.k() as f64)),
+            ("single_us_per_req", Json::num(single_us)),
+            ("sharded_cold_us_per_req", Json::num(cold_us)),
+            ("sharded_resident_us_per_req", Json::num(resident_us)),
+            ("resident_speedup", Json::num(single_us / resident_us)),
+            ("single_plane_ops_per_batch", Json::num(single_ops as f64)),
+            ("sharded_cold_plane_ops_per_batch", Json::num(cold_ops as f64)),
+            ("sharded_resident_plane_ops_per_batch", Json::num(resident_ops as f64)),
+            ("smoke", Json::Bool(smoke())),
+        ]),
+    );
+    sink.save().expect("write BENCH_engine.json");
+    println!("\nrecorded -> BENCH_engine.json");
+}

@@ -28,25 +28,28 @@ impl BatchPolicy {
     }
 }
 
-/// Group a drained batch's indices by model name, preserving arrival
-/// order inside each group. Returns (model, indices) in first-arrival
-/// order of the model.
-pub fn group_by_model<'a, T, F>(items: &'a [T], model_of: F) -> Vec<(&'a str, Vec<usize>)>
+/// Group a drained batch's indices by an ordered key, preserving
+/// arrival order inside each group. Returns (key, indices) in
+/// first-arrival order of the key. The coordinator keys on the model
+/// *id* carried by each request, so two registrations sharing a name
+/// (a model swapped mid-flight) never fuse into one group.
+pub fn group_by_key<'a, T, K, F>(items: &'a [T], key_of: F) -> Vec<(K, Vec<usize>)>
 where
-    F: Fn(&'a T) -> &'a str,
+    K: Ord + Copy,
+    F: Fn(&'a T) -> K,
 {
-    let mut order: Vec<&str> = Vec::new();
-    let mut groups: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
+    let mut order: Vec<K> = Vec::new();
+    let mut groups: std::collections::BTreeMap<K, Vec<usize>> = Default::default();
     for (i, item) in items.iter().enumerate() {
-        let m = model_of(item);
-        if !groups.contains_key(m) {
-            order.push(m);
+        let k = key_of(item);
+        if !groups.contains_key(&k) {
+            order.push(k);
         }
-        groups.entry(m).or_default().push(i);
+        groups.entry(k).or_default().push(i);
     }
     order
         .into_iter()
-        .map(|m| (m, groups.remove(m).unwrap()))
+        .map(|k| (k, groups.remove(&k).unwrap()))
         .collect()
 }
 
@@ -57,11 +60,18 @@ mod tests {
     #[test]
     fn groups_preserve_order() {
         let items = ["a", "b", "a", "c", "b", "a"];
-        let g = group_by_model(&items, |s| s);
+        let g = group_by_key(&items, |s: &&str| *s);
         assert_eq!(
             g,
             vec![("a", vec![0, 2, 5]), ("b", vec![1, 4]), ("c", vec![3])]
         );
+    }
+
+    #[test]
+    fn groups_by_numeric_key() {
+        let items = [10u64, 20, 10, 30];
+        let g = group_by_key(&items, |&v| v);
+        assert_eq!(g, vec![(10, vec![0, 2]), (20, vec![1]), (30, vec![3])]);
     }
 
     #[test]

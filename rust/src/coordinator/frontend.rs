@@ -1,21 +1,54 @@
 //! Model registry: the front-end processor's view of loaded models
 //! (weights resident in engine BRAM on hardware; host-side here, staged
 //! by the shell DMA before each batch).
+//!
+//! The registry is shared by handle (`Arc<RwLock<..>>`): the clone a
+//! coordinator's workers hold sees registrations and removals made
+//! after `start`, which is what lets models be dropped and replaced on
+//! a live serving pool.
+//!
+//! Every registration is stamped with a **monotonic model id** from a
+//! process-wide counter. The id is the weight-residency token threaded
+//! through `gemv_resident`/`gemv_batch`. The previous token —
+//! `Arc::as_ptr(w)` — had an ABA hole: drop a model, register another
+//! of the same shape, and the allocator may hand the new weights the
+//! old allocation address, so a scheduler that still held the stale
+//! matrix resident would report "hot", skip staging, and serve results
+//! from the dead model. Ids are never reused, so a recycled allocation
+//! can never alias a previous model's residency.
 
 use crate::gemv::scheduler::Layer;
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Process-wide model-id source; ids are unique across all registries
+/// and all time, so residency tokens can never suffer allocation ABA.
+static NEXT_MODEL_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_model_id() -> u64 {
+    NEXT_MODEL_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// A registered model.
 #[derive(Debug, Clone)]
 pub enum Model {
     /// A single weight matrix (m x n) served as GEMV.
-    Gemv { w: Arc<Vec<i64>>, m: usize, n: usize },
+    Gemv { id: u64, w: Arc<Vec<i64>>, m: usize, n: usize },
     /// An MLP layer stack with inter-layer requantization scales.
-    Mlp { layers: Arc<Vec<Layer>>, scales: Arc<Vec<f64>> },
+    Mlp { id: u64, layers: Arc<Vec<Layer>>, scales: Arc<Vec<f64>> },
 }
 
 impl Model {
+    /// Registry-assigned monotonic id — the weight-residency token.
+    /// Unique per registration: re-registering a model (even same name
+    /// and shape) gets a fresh id, so schedulers re-stage.
+    pub fn id(&self) -> u64 {
+        match self {
+            Model::Gemv { id, .. } | Model::Mlp { id, .. } => *id,
+        }
+    }
+
     /// Input vector length the model expects.
     pub fn input_dim(&self) -> usize {
         match self {
@@ -43,22 +76,30 @@ pub enum RegistryError {
     Shape { name: String, what: &'static str, expected: usize, got: usize },
 }
 
-/// Thread-safe-by-cloning model registry (Arc payloads).
+/// Thread-safe, shared-by-handle model registry (clones share the same
+/// map; model payloads are `Arc`s, so lookups hand out cheap clones).
 #[derive(Debug, Clone, Default)]
 pub struct ModelRegistry {
-    models: BTreeMap<String, Model>,
+    models: Arc<RwLock<BTreeMap<String, Model>>>,
 }
 
 impl ModelRegistry {
     pub fn register_gemv(
-        &mut self,
+        &self,
         name: &str,
         w: Vec<i64>,
         m: usize,
         n: usize,
     ) -> Result<(), RegistryError> {
-        if self.models.contains_key(name) {
-            return Err(RegistryError::Duplicate(name.into()));
+        // a 0 x n (or m x 0) model would panic the mapping planner on
+        // a worker thread; reject it at the front door
+        if m == 0 || n == 0 {
+            return Err(RegistryError::Shape {
+                name: name.into(),
+                what: "matrix dims",
+                expected: 1,
+                got: 0,
+            });
         }
         if w.len() != m * n {
             return Err(RegistryError::Shape {
@@ -68,18 +109,30 @@ impl ModelRegistry {
                 got: w.len(),
             });
         }
-        self.models.insert(name.into(), Model::Gemv { w: Arc::new(w), m, n });
+        let mut models = self.models.write().unwrap();
+        if models.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.into()));
+        }
+        models.insert(
+            name.into(),
+            Model::Gemv { id: next_model_id(), w: Arc::new(w), m, n },
+        );
         Ok(())
     }
 
     pub fn register_mlp(
-        &mut self,
+        &self,
         name: &str,
         layers: Vec<Layer>,
         scales: Vec<f64>,
     ) -> Result<(), RegistryError> {
-        if self.models.contains_key(name) {
-            return Err(RegistryError::Duplicate(name.into()));
+        if layers.is_empty() {
+            return Err(RegistryError::Shape {
+                name: name.into(),
+                what: "layers",
+                expected: 1,
+                got: 0,
+            });
         }
         if scales.len() + 1 < layers.len() {
             return Err(RegistryError::Shape {
@@ -87,6 +140,14 @@ impl ModelRegistry {
                 what: "scales",
                 expected: layers.len() - 1,
                 got: scales.len(),
+            });
+        }
+        if layers.iter().any(|l| l.in_dim == 0 || l.out_dim == 0) {
+            return Err(RegistryError::Shape {
+                name: name.into(),
+                what: "layer dims",
+                expected: 1,
+                got: 0,
             });
         }
         for pair in layers.windows(2) {
@@ -99,29 +160,48 @@ impl ModelRegistry {
                 });
             }
         }
-        self.models.insert(
+        let mut models = self.models.write().unwrap();
+        if models.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.into()));
+        }
+        models.insert(
             name.into(),
-            Model::Mlp { layers: Arc::new(layers), scales: Arc::new(scales) },
+            Model::Mlp { id: next_model_id(), layers: Arc::new(layers), scales: Arc::new(scales) },
         );
         Ok(())
     }
 
-    pub fn get(&self, name: &str) -> Result<&Model, RegistryError> {
+    /// Drop a model. Requests already holding a `Model` clone finish
+    /// against the old weights; later lookups fail `NotFound`. The
+    /// removed model is returned (its `Arc`s keep the weights alive
+    /// until the caller drops them).
+    pub fn unregister(&self, name: &str) -> Result<Model, RegistryError> {
         self.models
-            .get(name)
+            .write()
+            .unwrap()
+            .remove(name)
             .ok_or_else(|| RegistryError::NotFound(name.into()))
     }
 
-    pub fn names(&self) -> Vec<&str> {
-        self.models.keys().map(|s| s.as_str()).collect()
+    pub fn get(&self, name: &str) -> Result<Model, RegistryError> {
+        self.models
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RegistryError::NotFound(name.into()))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.models.len()
+        self.models.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.models.read().unwrap().is_empty()
     }
 }
 
@@ -131,7 +211,7 @@ mod tests {
 
     #[test]
     fn register_and_lookup() {
-        let mut r = ModelRegistry::default();
+        let r = ModelRegistry::default();
         r.register_gemv("a", vec![0; 12], 3, 4).unwrap();
         assert_eq!(r.get("a").unwrap().input_dim(), 4);
         assert_eq!(r.get("a").unwrap().output_dim(), 3);
@@ -140,7 +220,7 @@ mod tests {
 
     #[test]
     fn duplicate_rejected() {
-        let mut r = ModelRegistry::default();
+        let r = ModelRegistry::default();
         r.register_gemv("a", vec![0; 4], 2, 2).unwrap();
         assert_eq!(
             r.register_gemv("a", vec![0; 4], 2, 2),
@@ -150,7 +230,7 @@ mod tests {
 
     #[test]
     fn bad_shapes_rejected() {
-        let mut r = ModelRegistry::default();
+        let r = ModelRegistry::default();
         assert!(matches!(
             r.register_gemv("a", vec![0; 5], 2, 2),
             Err(RegistryError::Shape { .. })
@@ -165,11 +245,57 @@ mod tests {
 
     #[test]
     fn mlp_dims() {
-        let mut r = ModelRegistry::default();
+        let r = ModelRegistry::default();
         let l1 = Layer::new(vec![0; 8], vec![0; 2], 2, 4);
         let l2 = Layer::new(vec![0; 6], vec![0; 3], 3, 2);
         r.register_mlp("m", vec![l1, l2], vec![0.5]).unwrap();
         let m = r.get("m").unwrap();
         assert_eq!((m.input_dim(), m.output_dim()), (4, 3));
+    }
+
+    #[test]
+    fn zero_dim_models_rejected() {
+        // regression: a 0-dim model registered fine and then panicked
+        // the serving worker inside the mapping planner
+        let r = ModelRegistry::default();
+        assert!(matches!(
+            r.register_gemv("z", vec![], 0, 4),
+            Err(RegistryError::Shape { what: "matrix dims", .. })
+        ));
+        assert!(matches!(
+            r.register_gemv("z", vec![], 4, 0),
+            Err(RegistryError::Shape { what: "matrix dims", .. })
+        ));
+        let l = Layer::new(vec![], vec![], 0, 0);
+        assert!(matches!(
+            r.register_mlp("z", vec![l], vec![]),
+            Err(RegistryError::Shape { what: "layer dims", .. })
+        ));
+    }
+
+    #[test]
+    fn clones_share_one_map() {
+        let a = ModelRegistry::default();
+        let b = a.clone();
+        a.register_gemv("late", vec![0; 4], 2, 2).unwrap();
+        assert_eq!(b.get("late").unwrap().input_dim(), 2);
+        b.unregister("late").unwrap();
+        assert!(a.get("late").is_err());
+    }
+
+    #[test]
+    fn model_ids_are_unique_and_never_recycled() {
+        // regression for the residency-token ABA: re-registering at the
+        // same name/shape (whose weight Arc may land on the recycled
+        // allocation) must still produce a fresh token
+        let r = ModelRegistry::default();
+        r.register_gemv("g", vec![0; 16], 4, 4).unwrap();
+        let id1 = r.get("g").unwrap().id();
+        r.unregister("g").unwrap();
+        r.register_gemv("g", vec![1; 16], 4, 4).unwrap();
+        let id2 = r.get("g").unwrap().id();
+        assert_ne!(id1, id2, "recycled registration must get a fresh id");
+        r.register_gemv("h", vec![0; 16], 4, 4).unwrap();
+        assert_ne!(r.get("h").unwrap().id(), id2);
     }
 }

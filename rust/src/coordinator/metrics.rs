@@ -11,7 +11,13 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Queue drains (one drain may hold several models' requests).
     pub batches: AtomicU64,
+    /// Per-model fused groups executed (the co-batching unit: a group
+    /// runs back-to-back on one engine; a GEMV group shares one staged
+    /// weight matrix).
+    pub groups: AtomicU64,
+    /// Requests in executed fused groups (pairs with `groups`).
     pub batched_requests: AtomicU64,
     pub sim_cycles: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
@@ -24,6 +30,7 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
+    pub groups: u64,
     pub batched_requests: u64,
     pub sim_cycles: u64,
     pub latency_counts: Vec<u64>,
@@ -41,6 +48,7 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            groups: self.groups.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             latency_counts: self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
@@ -66,12 +74,15 @@ impl MetricsSnapshot {
         1u64 << BUCKETS
     }
 
-    /// Mean requests per batch.
+    /// Mean requests per *fused group* — the co-batching that actually
+    /// shares staged weights. A drained batch mixing several models
+    /// executes as one group per model, so dividing by drains
+    /// over-reported co-batching; groups are the honest denominator.
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batches == 0 {
+        if self.groups == 0 {
             0.0
         } else {
-            self.batched_requests as f64 / self.batches as f64
+            self.batched_requests as f64 / self.groups as f64
         }
     }
 }
@@ -99,10 +110,23 @@ mod tests {
         let m = Metrics::default();
         m.submitted.fetch_add(3, Ordering::Relaxed);
         m.batches.fetch_add(1, Ordering::Relaxed);
+        m.groups.fetch_add(1, Ordering::Relaxed);
         m.batched_requests.fetch_add(3, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
         assert!((s.mean_batch_size() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_batch_size_uses_fused_groups() {
+        // one drain of 8 requests split 4+4 across two models must
+        // report a mean group of 4, not 8
+        let m = Metrics::default();
+        m.batches.fetch_add(1, Ordering::Relaxed);
+        m.groups.fetch_add(2, Ordering::Relaxed);
+        m.batched_requests.fetch_add(8, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.mean_batch_size() - 4.0).abs() < 1e-9, "{s:?}");
     }
 
     #[test]

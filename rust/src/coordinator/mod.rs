@@ -1,12 +1,16 @@
 //! The L3 coordinator: an asynchronous GEMV/MLP serving front-end over
 //! a pool of simulated IMAGine engines.
 //!
-//! Requests are routed by model affinity (each worker keeps compiled
-//! `GemvProgram`s hot for its models), dynamically batched inside each
-//! worker, executed on the worker's engine, and optionally cross-
-//! checked against the PJRT golden artifacts. Built on std threads +
-//! channels (this environment has no async runtime crate; the event
-//! loop is in-repo by design — see Cargo.toml note).
+//! Requests are dispatched to the least-loaded worker (model-affinity
+//! tiebreak keeps compiled `GemvProgram`s and staged weights hot on an
+//! idle pool), dynamically batched inside each worker, executed on the
+//! worker's engine — or, for models whose mapping is multi-pass on one
+//! engine, on the worker's sharded engine pool
+//! (`gemv::sharded::ShardedScheduler`, per-shard weight residency) —
+//! and optionally cross-checked against the PJRT golden artifacts.
+//! Built on std threads + channels (this environment has no async
+//! runtime crate; the event loop is in-repo by design — see Cargo.toml
+//! note).
 
 pub mod server;
 pub mod batcher;

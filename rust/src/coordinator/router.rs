@@ -1,31 +1,98 @@
-//! Request router: model-affinity routing keeps each worker's compiled
-//! `GemvProgram` cache and staged weights hot for the models it owns.
+//! Request router: least-loaded dispatch with model-affinity tiebreak.
+//!
+//! Pure name-hash affinity (the old policy) keeps each worker's
+//! compiled `GemvProgram` cache and staged weights hot for the models
+//! it owns — but it pins a hot model to one worker while the rest of
+//! the pool idles. The router now tracks outstanding requests per
+//! worker and dispatches to the least-loaded queue, breaking ties in
+//! favour of the model's affinity worker: an idle pool still serves
+//! every model from its home worker (caches and residency stay hot),
+//! and a traffic spike on one model spills onto idle workers instead
+//! of queueing behind itself.
 
-/// Routes requests to `workers` queues by model-name affinity.
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Routes requests to `workers` queues; clones share load counters.
 #[derive(Debug, Clone)]
 pub struct Router {
     workers: usize,
+    /// Outstanding (queued + in-flight) requests per worker.
+    loads: Arc<Vec<AtomicU64>>,
 }
 
 impl Router {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
-        Router { workers }
+        Router {
+            workers,
+            loads: Arc::new((0..workers).map(|_| AtomicU64::new(0)).collect()),
+        }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// FNV-1a over the model name — stable across runs so a model's
-    /// programs compile on exactly one worker.
-    pub fn route(&self, model: &str) -> usize {
+    /// FNV-1a over the model name — stable across runs, so each model
+    /// has a deterministic home worker whose program cache and staged
+    /// weights favour it.
+    pub fn affinity(&self, model: &str) -> usize {
         let mut h: u64 = 0xcbf29ce484222325;
         for b in model.as_bytes() {
             h ^= *b as u64;
             h = h.wrapping_mul(0x100000001b3);
         }
         (h % self.workers as u64) as usize
+    }
+
+    /// Outstanding-load headroom the affinity worker is allowed over
+    /// the least-loaded queue before a request spills away from home.
+    /// Zero would scatter a steadily loaded model across the pool and
+    /// thrash each scheduler's single-slot weight residency; one keeps
+    /// a model home (staged weights + program cache hot) until its
+    /// queue is measurably deeper than the idlest worker's.
+    const AFFINITY_SLACK: u64 = 1;
+
+    /// Pick the worker for one request and account for it: the model's
+    /// affinity worker while its backlog is within
+    /// [`AFFINITY_SLACK`](Self::AFFINITY_SLACK) of the least-loaded
+    /// queue, otherwise the least-loaded queue (lowest index wins
+    /// equal loads). The chosen worker's load is incremented; pair
+    /// every `dispatch` with a [`Router::complete`] once the request
+    /// is answered (or abandoned).
+    pub fn dispatch(&self, model: &str) -> usize {
+        let affinity = self.affinity(model);
+        let aff_load = self.loads[affinity].load(Ordering::Relaxed);
+        let mut best = affinity;
+        let mut best_load = aff_load;
+        for (w, load) in self.loads.iter().enumerate() {
+            let load = load.load(Ordering::Relaxed);
+            if load < best_load {
+                best = w;
+                best_load = load;
+            }
+        }
+        if aff_load <= best_load + Self::AFFINITY_SLACK {
+            best = affinity;
+        }
+        self.loads[best].fetch_add(1, Ordering::Relaxed);
+        best
+    }
+
+    /// Mark `n` requests on `worker` as finished.
+    pub fn complete_n(&self, worker: usize, n: u64) {
+        self.loads[worker].fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Mark one request on `worker` as finished.
+    pub fn complete(&self, worker: usize) {
+        self.complete_n(worker, 1);
+    }
+
+    /// Current outstanding load of `worker` (diagnostics/tests).
+    pub fn load(&self, worker: usize) -> u64 {
+        self.loads[worker].load(Ordering::Relaxed)
     }
 }
 
@@ -34,29 +101,69 @@ mod tests {
     use super::*;
 
     #[test]
-    fn routing_is_stable_and_in_range() {
+    fn affinity_is_stable_and_in_range() {
         let r = Router::new(4);
         for model in ["mlp", "gemv_64", "gemv_256", "x"] {
-            let w = r.route(model);
+            let w = r.affinity(model);
             assert!(w < 4);
-            assert_eq!(w, r.route(model), "stable for {model}");
+            assert_eq!(w, r.affinity(model), "stable for {model}");
         }
     }
 
     #[test]
     fn single_worker_takes_all() {
         let r = Router::new(1);
-        assert_eq!(r.route("anything"), 0);
+        assert_eq!(r.affinity("anything"), 0);
+        assert_eq!(r.dispatch("anything"), 0);
     }
 
     #[test]
-    fn spreads_across_workers() {
+    fn affinity_spreads_across_workers() {
         let r = Router::new(8);
         let names: Vec<String> = (0..64).map(|i| format!("model-{i}")).collect();
         let mut used = std::collections::BTreeSet::new();
         for n in &names {
-            used.insert(r.route(n));
+            used.insert(r.affinity(n));
         }
         assert!(used.len() >= 4, "only {used:?}");
+    }
+
+    #[test]
+    fn idle_pool_dispatches_to_affinity_worker() {
+        let r = Router::new(4);
+        let w = r.dispatch("m");
+        assert_eq!(w, r.affinity("m"), "tie must favour the home worker");
+        r.complete(w);
+        assert_eq!(r.load(w), 0);
+    }
+
+    #[test]
+    fn hot_model_spills_to_idle_workers() {
+        // regression: FNV pinning sent every request of a hot model to
+        // one queue while the rest of the pool idled — once the home
+        // queue is past the slack, the rest of the pool must be used
+        let r = Router::new(4);
+        let used: std::collections::BTreeSet<usize> =
+            (0..8).map(|_| r.dispatch("hot")).collect();
+        assert_eq!(used.len(), 4, "outstanding load must spread: {used:?}");
+        let total: u64 = (0..4).map(|w| r.load(w)).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn dispatch_sticks_home_within_slack_then_spills() {
+        let r = Router::new(3);
+        let home = r.affinity("m");
+        // within the slack the model stays home (residency hot)...
+        let first = r.dispatch("m");
+        let second = r.dispatch("m");
+        assert_eq!((first, second), (home, home));
+        // ...past it, the backlog spills to an idle worker
+        let third = r.dispatch("m");
+        assert_ne!(third, home, "deep home backlog must spill");
+        r.complete(first);
+        r.complete(second);
+        r.complete_n(third, 1);
+        assert_eq!(r.dispatch("m"), home, "drained pool goes home again");
     }
 }

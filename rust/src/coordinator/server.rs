@@ -1,11 +1,13 @@
 //! The coordinator server: worker pool, request lifecycle, shutdown.
 
-use super::batcher::{group_by_model, BatchPolicy};
+use super::batcher::{group_by_key, BatchPolicy};
 use super::frontend::{Model, ModelRegistry, RegistryError};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::Router;
 use crate::engine::EngineConfig;
+use crate::gemv::mapper::plan_shards;
 use crate::gemv::scheduler::GemvScheduler;
+use crate::gemv::sharded::ShardedScheduler;
 use crate::sim::U55_FMAX_MHZ;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -51,13 +53,22 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub y: Vec<i64>,
-    /// Engine cycles this request's execution consumed.
+    /// Engine cycles this request's execution consumed (summed across
+    /// shard engines for a sharded model; shards run concurrently).
     pub cycles: u64,
-    /// Modeled on-hardware time at the configured clock (us).
+    /// Modeled on-hardware time at the configured clock (us). For a
+    /// sharded model this is the critical-path estimate: summed cycles
+    /// divided by the shard concurrency (balanced shards run in
+    /// lockstep-similar time).
     pub device_us: f64,
     /// Wall-clock host latency through the coordinator (us).
     pub host_us: f64,
-    /// Requests co-batched with this one (including itself).
+    /// Requests fused with this one into its model's execution group
+    /// (including itself) — the group executes back-to-back on one
+    /// engine, and for a GEMV model it shares one staged matrix (MLP
+    /// groups are co-scheduled but still stage per request). A drained
+    /// batch mixing models executes one group per model, so this is
+    /// NOT the whole drain size.
     pub batch_size: usize,
 }
 
@@ -73,12 +84,21 @@ pub enum SubmitError {
     Exec(String),
 }
 
+/// One accepted request in flight to a worker. The `Model` resolved at
+/// submit time rides along, so the request is served by exactly the
+/// registration it was validated against — a model unregistered or
+/// swapped under the same name mid-flight cannot change (or fail) an
+/// already accepted request, and the carried `Arc`s keep its weights
+/// alive until the reply is sent.
+struct Pending {
+    req: Request,
+    model: Model,
+    enqueued: Instant,
+    reply: Sender<Result<Response, SubmitError>>,
+}
+
 enum Job {
-    Run {
-        req: Request,
-        enqueued: Instant,
-        reply: Sender<Result<Response, SubmitError>>,
-    },
+    Run(Pending),
     Stop,
 }
 
@@ -93,8 +113,9 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build the worker pool. Models must be registered before
-    /// `start`; the registry snapshot is shared with the workers.
+    /// Build the worker pool. The registry handle is shared with the
+    /// workers: models registered (or unregistered) after `start` are
+    /// visible to the live pool.
     pub fn start(config: CoordinatorConfig, registry: ModelRegistry) -> Self {
         let metrics = Arc::new(Metrics::default());
         let router = Router::new(config.workers);
@@ -103,12 +124,12 @@ impl Coordinator {
         for wid in 0..config.workers {
             let (tx, rx) = channel::<Job>();
             let cfg = config.clone();
-            let reg = registry.clone();
             let met = metrics.clone();
+            let rtr = router.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("imagine-worker-{wid}"))
-                    .spawn(move || worker_loop(cfg, reg, met, rx))
+                    .spawn(move || worker_loop(cfg, met, rtr, wid, rx))
                     .expect("spawn worker"),
             );
             queues.push(tx);
@@ -120,8 +141,17 @@ impl Coordinator {
         &self.config
     }
 
+    /// The shared registry handle (register/unregister models on the
+    /// live pool through it).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
     /// Submit a request; returns the reply channel immediately.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response, SubmitError>>, SubmitError> {
+    pub fn submit(
+        &self,
+        req: Request,
+    ) -> Result<Receiver<Result<Response, SubmitError>>, SubmitError> {
         let model = self.registry.get(&req.model)?;
         if model.input_dim() != req.x.len() {
             return Err(SubmitError::InputDim {
@@ -131,11 +161,13 @@ impl Coordinator {
             });
         }
         let (reply, rx) = channel();
-        let worker = self.router.route(&req.model);
+        let worker = self.router.dispatch(&req.model);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.queues[worker]
-            .send(Job::Run { req, enqueued: Instant::now(), reply })
-            .map_err(|_| SubmitError::Closed)?;
+        let pending = Pending { req, model, enqueued: Instant::now(), reply };
+        if self.queues[worker].send(Job::Run(pending)).is_err() {
+            self.router.complete(worker);
+            return Err(SubmitError::Closed);
+        }
         Ok(rx)
     }
 
@@ -148,7 +180,8 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Drain and stop all workers.
+    /// Drain and stop all workers. Every request accepted by `submit`
+    /// before this call is answered before its worker exits.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         for q in &self.queues {
             let _ = q.send(Job::Stop);
@@ -160,21 +193,38 @@ impl Coordinator {
     }
 }
 
+/// Per-worker execution state: the single-engine scheduler plus a
+/// lazily built sharded pool for models whose mapping is multi-pass on
+/// one engine.
+struct WorkerState {
+    sched: GemvScheduler,
+    sharded: Option<ShardedScheduler>,
+    /// Column-thread budget this worker was given (the sharded pool
+    /// reuses it as its fan-out width).
+    threads: usize,
+}
+
 fn worker_loop(
     cfg: CoordinatorConfig,
-    registry: ModelRegistry,
     metrics: Arc<Metrics>,
+    router: Router,
+    wid: usize,
     rx: Receiver<Job>,
 ) {
     // Split the machine's thread budget across the worker pool so N
     // workers don't each spawn a full-machine column pool and contend.
     let threads = (crate::util::ThreadPool::default_threads() / cfg.workers.max(1)).max(1);
     let engine = crate::engine::Engine::with_threads(cfg.engine, threads);
-    let mut sched = GemvScheduler::from_engine(cfg.engine, engine);
+    let mut state = WorkerState {
+        sched: GemvScheduler::from_engine(cfg.engine, engine),
+        sharded: None,
+        threads,
+    };
     'outer: loop {
         // block for the first job
         let first = match rx.recv() {
-            Ok(Job::Run { req, enqueued, reply }) => (req, enqueued, reply),
+            Ok(Job::Run(p)) => p,
+            // Stop sentinel or closed queue: fall through to the drain
             _ => break,
         };
         // dynamic batching: drain up to max_batch within the window
@@ -194,53 +244,85 @@ fn worker_loop(
                 }
             };
             match job {
-                Job::Run { req, enqueued, reply } => batch.push((req, enqueued, reply)),
+                Job::Run(p) => batch.push(p),
                 Job::Stop => {
-                    execute_batch(&cfg, &registry, &metrics, &mut sched, batch);
+                    execute_batch(&cfg, &metrics, &router, wid, &mut state, batch);
                     break 'outer;
                 }
             }
         }
-        execute_batch(&cfg, &registry, &metrics, &mut sched, batch);
+        execute_batch(&cfg, &metrics, &router, wid, &mut state, batch);
+    }
+    // Drain-after-stop: requests accepted before shutdown can still sit
+    // behind the Stop sentinel (e.g. submitted while the final batch
+    // executed). Exiting without answering them would turn accepted
+    // submits into `Closed` errors, so run everything still queued.
+    let mut rest = Vec::new();
+    while let Ok(job) = rx.try_recv() {
+        if let Job::Run(p) = job {
+            rest.push(p);
+        }
+    }
+    let chunk = cfg.batch.max_batch.max(1);
+    while !rest.is_empty() {
+        let take = rest.len().min(chunk);
+        let batch: Vec<_> = rest.drain(..take).collect();
+        execute_batch(&cfg, &metrics, &router, wid, &mut state, batch);
     }
 }
 
 fn execute_batch(
     cfg: &CoordinatorConfig,
-    registry: &ModelRegistry,
     metrics: &Arc<Metrics>,
-    sched: &mut GemvScheduler,
-    batch: Vec<(Request, Instant, Sender<Result<Response, SubmitError>>)>,
+    router: &Router,
+    wid: usize,
+    state: &mut WorkerState,
+    batch: Vec<Pending>,
 ) {
+    let drained = batch.len() as u64;
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .batched_requests
-        .fetch_add(batch.len() as u64, Ordering::Relaxed);
-    let batch_size = batch.len();
-    for (model_name, idxs) in group_by_model(&batch, |(req, _, _)| req.model.as_str()) {
-        let model = match registry.get(model_name) {
-            Ok(m) => m.clone(),
-            Err(e) => {
-                for &i in &idxs {
-                    let _ = batch[i].2.send(Err(SubmitError::Registry(e.clone_light())));
-                }
-                metrics.failed.fetch_add(idxs.len() as u64, Ordering::Relaxed);
-                continue;
-            }
-        };
+    // Group by model *id* (not name): two registrations sharing a name
+    // must never fuse, each request runs against the model it was
+    // validated with at submit time.
+    for (_, idxs) in group_by_key(&batch, |p| p.model.id()) {
+        let model = &batch[idxs[0]].model;
+        metrics.groups.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_requests.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+        // The co-batching unit: this group executes back-to-back on one
+        // engine; for a GEMV model it shares one staged matrix.
+        let group_size = idxs.len();
         // Run the group's engine work. GEMV groups go through the fused
         // batch path: the matrix is staged once (or is already resident
-        // from a previous batch — the Arc address is the residency
-        // token) and the group's vectors stream through the compiled
-        // program without re-staging.
-        let results: Vec<Result<(Vec<i64>, u64), SubmitError>> = match &model {
-            Model::Gemv { w, m, n } => {
-                let xs: Vec<&[i64]> = idxs.iter().map(|&i| batch[i].0.x.as_slice()).collect();
-                sched
-                    .gemv_batch(
-                        std::sync::Arc::as_ptr(w) as u64, w, &xs, *m, *n,
-                        cfg.precision, cfg.radix,
-                    )
+        // from a previous batch — the registry-assigned model id is the
+        // residency token) and the group's vectors stream through the
+        // compiled program without re-staging. A model whose mapping is
+        // multi-pass on one engine — too many rows for the lanes, or
+        // too long a column chunk for the spill capacity — would get no
+        // residency at all, so it promotes to the sharded pool:
+        // row-shards sized by `plan_shards` run in parallel, each
+        // resident on its own pool member.
+        // shards of one request run concurrently on the pool, so the
+        // modeled latency is the summed cycles over the concurrency
+        let mut concurrency = 1usize;
+        let results: Vec<Result<(Vec<i64>, u64), SubmitError>> = match model {
+            Model::Gemv { id, w, m, n } => {
+                let xs: Vec<&[i64]> = idxs.iter().map(|&i| batch[i].req.x.as_slice()).collect();
+                let outcomes = match plan_shards(&cfg.engine, *m, *n, cfg.precision, cfg.radix) {
+                    Some(sp) => {
+                        concurrency = sp.k();
+                        let (engine_cfg, threads) = (cfg.engine, state.threads);
+                        state
+                            .sharded
+                            .get_or_insert_with(|| {
+                                ShardedScheduler::with_threads(engine_cfg, threads, 1)
+                            })
+                            .run_plan(&sp, *id, w, &xs)
+                    }
+                    None => state
+                        .sched
+                        .gemv_batch(*id, w, &xs, *m, *n, cfg.precision, cfg.radix),
+                };
+                outcomes
                     .into_iter()
                     .map(|r| {
                         r.map(|(y, s)| (y, s.cycles))
@@ -248,53 +330,39 @@ fn execute_batch(
                     })
                     .collect()
             }
-            Model::Mlp { layers, scales } => idxs
+            Model::Mlp { layers, scales, .. } => idxs
                 .iter()
                 .map(|&i| {
-                    sched
-                        .mlp_forward(layers, &batch[i].0.x, scales, cfg.precision, cfg.radix)
+                    state
+                        .sched
+                        .mlp_forward(layers, &batch[i].req.x, scales, cfg.precision, cfg.radix)
                         .map(|(y, s)| (y, s.cycles))
                         .map_err(|e| SubmitError::Exec(e.to_string()))
                 })
                 .collect(),
         };
         for (&i, result) in idxs.iter().zip(results) {
-            let (_, enqueued, reply) = &batch[i];
+            let pending = &batch[i];
             let result = result.map(|(y, cycles)| {
-                let host_us = enqueued.elapsed().as_secs_f64() * 1e6;
+                let host_us = pending.enqueued.elapsed().as_secs_f64() * 1e6;
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 metrics.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
                 metrics.record_latency_us(host_us as u64);
                 Response {
                     y,
                     cycles,
-                    device_us: cycles as f64 / cfg.clock_mhz,
+                    device_us: cycles as f64 / (cfg.clock_mhz * concurrency as f64),
                     host_us,
-                    batch_size,
+                    batch_size: group_size,
                 }
             });
             if result.is_err() {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
             }
-            let _ = reply.send(result);
+            let _ = pending.reply.send(result);
         }
     }
-}
-
-impl RegistryError {
-    /// Cheap clone for fanning an error out to several requests.
-    fn clone_light(&self) -> RegistryError {
-        match self {
-            RegistryError::Duplicate(s) => RegistryError::Duplicate(s.clone()),
-            RegistryError::NotFound(s) => RegistryError::NotFound(s.clone()),
-            RegistryError::Shape { name, what, expected, got } => RegistryError::Shape {
-                name: name.clone(),
-                what,
-                expected: *expected,
-                got: *got,
-            },
-        }
-    }
+    router.complete_n(wid, drained);
 }
 
 #[cfg(test)]
@@ -305,7 +373,7 @@ mod tests {
     fn registry_with_gemv(m: usize, n: usize) -> (ModelRegistry, Vec<i64>) {
         let mut rng = XorShift::new(1);
         let w = rng.vec_i64(m * n, -16, 15);
-        let mut reg = ModelRegistry::default();
+        let reg = ModelRegistry::default();
         reg.register_gemv("g", w.clone(), m, n).unwrap();
         (reg, w)
     }
@@ -391,5 +459,124 @@ mod tests {
         let m = coord.shutdown();
         assert!(max_batch > 1, "no batching observed");
         assert!(m.mean_batch_size() > 1.0, "{m:?}");
+    }
+
+    #[test]
+    fn mixed_model_batch_reports_fused_group_size() {
+        // regression: batch_size reported the whole drained batch, so a
+        // drain mixing two models over-reported co-batching — the fused
+        // unit is the per-model group
+        let mut rng = XorShift::new(31);
+        let reg = ModelRegistry::default();
+        let wa = rng.vec_i64(8 * 8, -16, 15);
+        let wb = rng.vec_i64(8 * 8, -16, 15);
+        reg.register_gemv("a", wa, 8, 8).unwrap();
+        reg.register_gemv("b", wb, 8, 8).unwrap();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    window: std::time::Duration::from_millis(500),
+                },
+                ..Default::default()
+            },
+            reg,
+        );
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                let model = if i % 2 == 0 { "a" } else { "b" };
+                coord
+                    .submit(Request { model: model.into(), x: vec![1; 8] })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            // 4 requests per model: a group can never exceed that, even
+            // when the whole 8-request drain lands in one batch
+            assert!(resp.batch_size <= 4, "over-reported: {}", resp.batch_size);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 8);
+        assert!(m.groups >= 2, "{m:?}");
+        assert!(m.mean_batch_size() <= 4.0 + 1e-9, "{m:?}");
+    }
+
+    #[test]
+    fn recycled_weight_allocation_is_not_served_stale() {
+        // regression for the residency-token ABA: drop a model, register
+        // a different one at the same name/shape (its Arc may reuse the
+        // freed allocation address — the old Arc::as_ptr token would
+        // then claim "hot" and serve the dead model's weights)
+        let (m, n) = (16, 16);
+        let mut rng = XorShift::new(41);
+        let reg = ModelRegistry::default();
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+            reg.clone(),
+        );
+        let x = rng.vec_i64(n, -64, 63);
+        // several recycle rounds: at least one is likely to reuse the
+        // allocation, and every round must serve the *current* weights
+        for round in 0..6 {
+            let w = rng.vec_i64(m * n, -16, 15);
+            reg.register_gemv("g", w.clone(), m, n).unwrap();
+            let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+            assert_eq!(resp.y, host_gemv(&w, &x, m, n), "round {round}: stale weights served");
+            reg.unregister("g").unwrap();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_every_accepted_submit() {
+        // regression: a worker that saw Stop exited without draining
+        // Run jobs still queued, turning accepted submits into Closed
+        let (reg, w) = registry_with_gemv(8, 8);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 2, window: std::time::Duration::ZERO },
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg, reg);
+        let mut rng = XorShift::new(43);
+        let cases: Vec<Vec<i64>> = (0..40).map(|_| rng.vec_i64(8, -50, 50)).collect();
+        let rxs: Vec<_> = cases
+            .iter()
+            .map(|x| coord.submit(Request { model: "g".into(), x: x.clone() }).unwrap())
+            .collect();
+        let snap = coord.shutdown();
+        for (x, rx) in cases.iter().zip(rxs) {
+            let resp = rx.recv().expect("accepted submit must be answered").unwrap();
+            assert_eq!(resp.y, host_gemv(&w, x, 8, 8));
+        }
+        assert_eq!(snap.completed, 40, "{snap:?}");
+        assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn oversized_model_served_through_sharded_pool() {
+        // 768 rows on the 384-lane small() engine: multi-pass solo, so
+        // the worker must promote it to the sharded path — and results
+        // must stay bit-identical to the host reference
+        let (m, n) = (768, 48);
+        let mut rng = XorShift::new(47);
+        let w = rng.vec_i64(m * n, -16, 15);
+        let reg = ModelRegistry::default();
+        reg.register_gemv("big", w.clone(), m, n).unwrap();
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            reg,
+        );
+        for _ in 0..3 {
+            let x = rng.vec_i64(n, -64, 63);
+            let resp = coord.call(Request { model: "big".into(), x: x.clone() }).unwrap();
+            assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+            assert!(resp.cycles > 0);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.failed, 0);
     }
 }

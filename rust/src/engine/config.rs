@@ -81,6 +81,14 @@ impl EngineConfig {
             + self.stages.depth() as u64
             + self.tile.fanout_latency()
     }
+
+    /// Total bits of PE register-column storage backed by this
+    /// engine's BRAMs — the per-engine weight-residency budget the
+    /// shard planner (`gemv::mapper::plan_shards`) packs row-shards
+    /// against.
+    pub fn bram_budget_bits(&self) -> u64 {
+        self.total_pes() as u64 * crate::pim::REGFILE_BITS as u64
+    }
 }
 
 impl Default for EngineConfig {
@@ -106,6 +114,15 @@ mod tests {
         let c = EngineConfig::small();
         assert_eq!(c.pe_rows(), 2 * 192);
         assert_eq!(c.block_cols(), 4);
+    }
+
+    #[test]
+    fn bram_budget_scales_with_geometry() {
+        let small = EngineConfig::small().bram_budget_bits();
+        let full = EngineConfig::u55().bram_budget_bits();
+        assert!(small > 0);
+        // 168 tiles vs 4: the budget scales with the PE count
+        assert_eq!(full / small, (168 / 4) as u64);
     }
 
     #[test]

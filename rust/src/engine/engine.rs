@@ -57,6 +57,11 @@ pub struct Engine {
     sel: Option<usize>,
     /// LDI staging value (sign-extended imm10).
     staged: i64,
+    /// Plane words written through the host data port since the last
+    /// program run — the shell-DMA staging work (§Perf). Folded into
+    /// the next run's `plane_word_ops`, so weight residency (skipped
+    /// matrix staging) shows up in the work metric.
+    staged_words: u64,
     controller: Controller,
     stats: ExecStats,
     trace: Trace,
@@ -80,6 +85,7 @@ impl Engine {
             fifo_out: Vec::new(),
             sel: None,
             staged: 0,
+            staged_words: 0,
             controller: Controller::new(config.stages),
             stats: ExecStats::default(),
             trace: Trace::off(),
@@ -127,6 +133,7 @@ impl Engine {
         self.fifo_out.clear();
         self.sel = None;
         self.staged = 0;
+        self.staged_words = 0;
         self.controller = Controller::new(self.config.stages);
         self.stats = ExecStats::default();
     }
@@ -158,7 +165,10 @@ impl Engine {
             run.record(instr.op, cycles);
             self.trace.push(run.cycles, *instr);
         }
-        run.plane_word_ops = self.estimate_plane_ops(&run);
+        // staging words accumulated since the last run count against
+        // this one: on hardware the staging DMA overlaps/precedes the
+        // burst it feeds
+        run.plane_word_ops = self.estimate_plane_ops(&run) + std::mem::take(&mut self.staged_words);
         self.stats.merge(&run);
         Ok(run)
     }
@@ -285,9 +295,31 @@ impl Engine {
 
     // -- host data port (the shell DMA; not on the instruction path) ---
 
+    /// Plane words a full-lane write of `width` planes touches.
+    fn full_write_words(&self, width: usize) -> u64 {
+        (width * self.pe_rows().div_ceil(64)) as u64
+    }
+
+    /// Plane words a masked fill of lanes `[lane0, lane0+count)` over
+    /// `width` planes touches.
+    fn masked_write_words(&self, width: usize, lane0: usize, count: usize) -> u64 {
+        if count == 0 {
+            return 0;
+        }
+        (width * ((lane0 + count).div_ceil(64) - lane0 / 64)) as u64
+    }
+
     /// Write per-lane values into logical register `reg` of column `col`.
-    pub fn write_reg_lanes(&mut self, col: usize, reg: u8, width: usize, values: &[i64]) -> Result<(), EngineError> {
+    pub fn write_reg_lanes(
+        &mut self,
+        col: usize,
+        reg: u8,
+        width: usize,
+        values: &[i64],
+    ) -> Result<(), EngineError> {
         let r = RegFile::resolve(reg, width)?;
+        let words = self.full_write_words(r.width);
+        self.staged_words += words;
         self.columns.buf_mut(col).write_all(r.base, r.width, values);
         Ok(())
     }
@@ -302,6 +334,8 @@ impl Engine {
     /// `first_reg` (element `idx`, all lanes given by `values`).
     pub fn write_spill(&mut self, col: usize, first_reg: u8, p: usize, idx: usize, values: &[i64]) {
         let a = RegFile::spill_addr(first_reg, p, idx);
+        let words = self.full_write_words(a.width);
+        self.staged_words += words;
         self.columns.buf_mut(col).write_all(a.base, a.width, values);
     }
 
@@ -320,6 +354,8 @@ impl Engine {
         count: usize,
     ) {
         let a = RegFile::spill_addr(first_reg, p, idx);
+        let words = self.masked_write_words(a.width, lane0, count);
+        self.staged_words += words;
         self.columns.buf_mut(col).broadcast_lanes(a.base, a.width, value, lane0, count);
     }
 

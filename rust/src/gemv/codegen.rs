@@ -27,6 +27,8 @@ pub enum GemvError {
     Shape { what: &'static str, expected: usize, got: usize },
     #[error("operand value {0} out of range for precision {1}")]
     Range(i64, usize),
+    #[error("empty model: no layers to run")]
+    EmptyModel,
 }
 
 /// Result of one simulated GEMV.
@@ -184,7 +186,7 @@ impl GemvProgram {
     /// Whether this plan supports the weight-resident fast path (a
     /// single pass leaves the whole matrix staged in the spill region).
     pub fn supports_residency(&self) -> bool {
-        self.plan.row_passes == 1 && self.plan.chunk_passes == 1
+        self.plan.is_single_pass()
     }
 
     /// Execute with optionally resident weights: when `resident` is
@@ -329,6 +331,29 @@ mod tests {
             gp.execute(&mut e, &w, &[0, 0]),
             Err(GemvError::Range(100, 4))
         ));
+    }
+
+    #[test]
+    fn resident_execution_skips_staging_work() {
+        // the §Perf work metric must show residency: a hot run moves
+        // only the vector planes, so its plane_word_ops drop
+        let config = EngineConfig::small();
+        let gp = GemvProgram::generate(plan(&config, 32, 32, 8, 2));
+        assert!(gp.supports_residency());
+        let mut e = Engine::new(config);
+        let mut rng = XorShift::new(77);
+        let w = rng.vec_i64(32 * 32, -100, 100);
+        let x = rng.vec_i64(32, -100, 100);
+        let cold = gp.execute_opts(&mut e, &w, &x, false).unwrap();
+        let hot = gp.execute_opts(&mut e, &w, &x, true).unwrap();
+        assert_eq!(cold.y, hot.y);
+        assert_eq!(cold.stats.cycles, hot.stats.cycles);
+        assert!(
+            hot.stats.plane_word_ops < cold.stats.plane_word_ops,
+            "hot {} !< cold {}",
+            hot.stats.plane_word_ops,
+            cold.stats.plane_word_ops
+        );
     }
 
     #[test]

@@ -78,6 +78,13 @@ impl MappingPlan {
         (REGFILE_BITS - RESERVED_REGS * REG_BITS) / (2 * p)
     }
 
+    /// Whether the whole matrix is staged in one pass — the
+    /// weight-residency requirement: a single-pass plan leaves every
+    /// spill plane in BRAM, so later requests only move the vector.
+    pub fn is_single_pass(&self) -> bool {
+        self.row_passes == 1 && self.chunk_passes == 1
+    }
+
     /// Per-MAC cycle cost (incl. the multicycle driver's +1).
     pub fn mac_cost(&self) -> u64 {
         let c = match self.radix {
@@ -190,6 +197,130 @@ pub fn plan(config: &EngineConfig, m: usize, n: usize, p: usize, radix: u8) -> M
     }
 }
 
+/// Upper bound on the engine-pool size the shard planner will propose.
+/// A simulation resource cap (each pool member owns full plane
+/// buffers), not an algorithmic limit.
+pub const MAX_SHARDS: usize = 16;
+
+/// One row-shard of a matrix: rows `[row0, row0 + rows)`, always
+/// executed on engine-pool member `index`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub row0: usize,
+    pub rows: usize,
+}
+
+/// A row-partition of one GEMV across an engine pool. Shard `i` is
+/// pinned to pool member `i`, so each member's weight-residency token
+/// stays stable across batches — the per-shard residency the sharded
+/// tier exists to restore (cf. balanced PIM-bank placement,
+/// arXiv:2403.20297).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub m: usize,
+    pub n: usize,
+    pub precision: usize,
+    pub radix: u8,
+    /// Contiguous row ranges covering `0..m`, one per pool member.
+    pub shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Pool members (= shards) this plan uses.
+    pub fn k(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when every shard's mapping is single-pass on `config`, so
+    /// every pool member can keep its row-slice resident in BRAM.
+    pub fn resident_on(&self, config: &EngineConfig) -> bool {
+        self.shards
+            .iter()
+            .all(|s| plan(config, s.rows, self.n, self.precision, self.radix).is_single_pass())
+    }
+}
+
+/// Partition `m` rows into `k` balanced contiguous shards (the first
+/// `m % k` shards take one extra row). `k` is clamped to `1..=m`.
+pub fn shard_rows(m: usize, k: usize) -> Vec<Shard> {
+    assert!(m > 0, "empty GEMV");
+    let k = k.clamp(1, m);
+    let (base, rem) = (m / k, m % k);
+    let mut out = Vec::with_capacity(k);
+    let mut row0 = 0;
+    for index in 0..k {
+        let rows = base + usize::from(index < rem);
+        out.push(Shard { index, row0, rows });
+        row0 += rows;
+    }
+    out
+}
+
+/// Force a K-way row partition (property tests and ablations; the
+/// serving path uses [`plan_shards`], which sizes K to the BRAM
+/// budget).
+pub fn plan_shards_k(m: usize, n: usize, p: usize, radix: u8, k: usize) -> ShardPlan {
+    ShardPlan { m, n, precision: p, radix, shards: shard_rows(m, k) }
+}
+
+/// Decide whether an `m x n` GEMV should be row-sharded across an
+/// engine pool: `Some(plan)` when the single-engine mapping is
+/// multi-pass (no weight residency — every request re-stages spill
+/// planes) and at most [`MAX_SHARDS`] single-pass shards restore
+/// per-shard residency. `None` when one engine already holds the
+/// matrix, or when row-sharding cannot help (sharding shrinks `m`, not
+/// `n`: a chunk dimension that overflows even a one-row mapping stays
+/// on the single-engine multi-pass path).
+///
+/// The shard height search exploits monotonicity: growing a shard only
+/// ever adds row passes (`rows > R`) or chunk passes (larger rows
+/// shrink the fold factor, lengthening each PE's column chunk), so
+/// "single-pass at `rows`" is downward-closed and the largest feasible
+/// height binary-searches in `O(log m)` plan calls.
+pub fn plan_shards(
+    config: &EngineConfig,
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+) -> Option<ShardPlan> {
+    if plan(config, m, n, p, radix).is_single_pass() {
+        return None;
+    }
+    let single = |rows: usize| plan(config, rows, n, p, radix).is_single_pass();
+    if !single(1) {
+        return None;
+    }
+    // BRAM-budget ceiling: a single-pass shard stores each matrix
+    // element exactly once as a p-bit spill *pair* slot (w + its x
+    // companion) inside the engine's register columns, outside the
+    // reserved working registers — so rows past `cap` can never be
+    // single-pass and the search range tightens straight from the
+    // budget (`EngineConfig::bram_budget_bits`).
+    let reserved = (config.total_pes() * RESERVED_REGS * REG_BITS) as u64;
+    let usable = config.bram_budget_bits() - reserved;
+    let cap = (usable / (2 * n as u64 * p as u64)).clamp(1, m as u64) as usize;
+    // invariant: single(lo) && !single(hi) — hi = m is multi-pass per
+    // the early return; hi = cap + 1 overflows the spill budget
+    let (mut lo, mut hi) = (1usize, m.min(cap + 1));
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if single(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let k = m.div_ceil(lo);
+    if k > MAX_SHARDS {
+        return None;
+    }
+    // balanced shards are no taller than lo (ceil(m / ceil(m/lo)) <= lo),
+    // so every member stays single-pass / resident
+    Some(plan_shards_k(m, n, p, radix, k))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,5 +403,73 @@ mod tests {
         let big = plan(&u55(), 2304, 2048, 8, 2);
         assert_eq!(big.fold_factor, 1);
         assert_eq!(big.fold_steps(), 0);
+    }
+
+    #[test]
+    fn shard_rows_balanced_partition() {
+        for (m, k) in [(768, 2), (100, 3), (7, 4), (5, 9), (1, 1)] {
+            let shards = shard_rows(m, k);
+            assert_eq!(shards.len(), k.min(m));
+            let mut next = 0;
+            for s in &shards {
+                assert_eq!(s.row0, next, "contiguous");
+                assert!(s.rows >= 1);
+                next += s.rows;
+            }
+            assert_eq!(next, m, "covers all rows");
+            let hi = shards.iter().map(|s| s.rows).max().unwrap();
+            let lo = shards.iter().map(|s| s.rows).min().unwrap();
+            assert!(hi - lo <= 1, "balanced: {shards:?}");
+        }
+    }
+
+    #[test]
+    fn shard_planner_restores_residency() {
+        // small(): 384 lanes — m = 768 is 2 row passes on one engine
+        let cfg = EngineConfig::small();
+        let full = plan(&cfg, 768, 96, 8, 2);
+        assert!(!full.is_single_pass(), "{full:?}");
+        let sp = plan_shards(&cfg, 768, 96, 8, 2).expect("row-shardable");
+        assert!(sp.k() >= 2);
+        assert!(sp.k() <= MAX_SHARDS);
+        assert!(sp.resident_on(&cfg), "{sp:?}");
+        assert_eq!(sp.shards.iter().map(|s| s.rows).sum::<usize>(), 768);
+    }
+
+    #[test]
+    fn shard_planner_declines_single_pass_shapes() {
+        // already resident on one engine: no pool needed
+        assert!(plan_shards(&EngineConfig::small(), 64, 64, 8, 2).is_none());
+    }
+
+    #[test]
+    fn shard_planner_declines_column_overflow() {
+        // k exceeds PE capacity even at one matrix row: row-sharding
+        // cannot shrink n, so the planner must decline
+        let cfg = EngineConfig::small();
+        assert!(!plan(&cfg, 1, 50_000, 8, 2).is_single_pass());
+        assert!(plan_shards(&cfg, 400, 50_000, 8, 2).is_none());
+    }
+
+    #[test]
+    fn shard_planner_budget_cap_agrees_with_search() {
+        // 384-lane x 16-column engine, n = 768 @ 8-bit: the spill
+        // budget allows exactly 384 rows — the same height the lane
+        // bound allows — so the plan must be 2 resident shards
+        let cfg = EngineConfig { tile_rows: 2, tile_cols: 8, ..EngineConfig::u55() };
+        let sp = plan_shards(&cfg, 768, 768, 8, 2).unwrap();
+        assert_eq!(sp.k(), 2, "{sp:?}");
+        assert!(sp.resident_on(&cfg));
+    }
+
+    #[test]
+    fn shard_planner_binary_search_is_maximal() {
+        // every proposed shard is single-pass, and one fewer shard
+        // would force a taller, multi-pass member
+        let cfg = EngineConfig::small();
+        let sp = plan_shards(&cfg, 900, 64, 8, 2).unwrap();
+        assert!(sp.resident_on(&cfg));
+        let fewer = plan_shards_k(900, 64, 8, 2, sp.k() - 1);
+        assert!(!fewer.resident_on(&cfg), "{fewer:?}");
     }
 }

@@ -5,7 +5,9 @@ pub mod mapper;
 pub mod quant;
 pub mod codegen;
 pub mod scheduler;
+pub mod sharded;
 
-pub use mapper::{MappingPlan, plan};
+pub use mapper::{plan, plan_shards, plan_shards_k, MappingPlan, Shard, ShardPlan};
 pub use codegen::GemvProgram;
 pub use scheduler::{GemvOutcome, GemvScheduler};
+pub use sharded::ShardedScheduler;

@@ -148,6 +148,10 @@ impl GemvScheduler {
     /// Run an int8 MLP forward pass: per layer `acc = W@h + b`, then
     /// (except the last layer) ReLU + requantize by `scales[i]`.
     /// Returns the final logits and the merged engine stats.
+    ///
+    /// Malformed models return a typed [`GemvError`] instead of
+    /// panicking: an empty layer list or too few requantization scales
+    /// must never poison a serving worker thread.
     pub fn mlp_forward(
         &mut self,
         layers: &[Layer],
@@ -156,10 +160,18 @@ impl GemvScheduler {
         p: usize,
         radix: u8,
     ) -> Result<(Vec<i64>, ExecStats), GemvError> {
-        assert!(scales.len() + 1 >= layers.len());
+        let Some(last) = layers.len().checked_sub(1) else {
+            return Err(GemvError::EmptyModel);
+        };
+        if scales.len() < last {
+            return Err(GemvError::Shape {
+                what: "scales",
+                expected: last,
+                got: scales.len(),
+            });
+        }
         let mut h = x.to_vec();
         let mut stats = ExecStats::default();
-        let last = layers.len() - 1;
         for (i, layer) in layers.iter().enumerate() {
             let (mut acc, s) =
                 self.gemv(&layer.w, &h, layer.out_dim, layer.in_dim, p, radix)?;
@@ -173,7 +185,7 @@ impl GemvScheduler {
             quant::relu(&mut acc);
             h = quant::requantize(&acc, scales[i]);
         }
-        unreachable!("empty layer list")
+        unreachable!("loop returns at the last layer")
     }
 }
 
@@ -234,6 +246,35 @@ mod tests {
         sched.gemv(&w, &x, 8, 8, 8, 2).unwrap();
         sched.gemv(&w, &x, 8, 8, 8, 2).unwrap();
         assert_eq!(sched.cache.len(), 1);
+    }
+
+    #[test]
+    fn mlp_empty_layer_list_is_a_typed_error() {
+        // regression: `layers.len() - 1` underflowed (panicking the
+        // serving worker) instead of reporting the malformed model
+        let mut sched = GemvScheduler::new(EngineConfig::small());
+        let r = sched.mlp_forward(&[], &[1, 2, 3], &[], 8, 2);
+        assert!(matches!(r, Err(GemvError::EmptyModel)), "{r:?}");
+        // the scheduler must stay serviceable afterwards
+        let w = vec![1i64; 16];
+        let (y, _) = sched.gemv(&w, &[1, 1, 1, 1], 4, 4, 8, 2).unwrap();
+        assert_eq!(y, vec![4; 4]);
+    }
+
+    #[test]
+    fn mlp_missing_scales_is_a_typed_error() {
+        // regression: an `assert!` on scales length panicked the worker
+        let mut rng = XorShift::new(8);
+        let layers = vec![rand_layer(&mut rng, 8, 8), rand_layer(&mut rng, 4, 8)];
+        let x = rng.vec_i64(8, -64, 63);
+        let mut sched = GemvScheduler::new(EngineConfig::small());
+        let r = sched.mlp_forward(&layers, &x, &[], 8, 2);
+        assert!(
+            matches!(r, Err(GemvError::Shape { what: "scales", expected: 1, got: 0 })),
+            "{r:?}"
+        );
+        // enough scales: runs fine
+        assert!(sched.mlp_forward(&layers, &x, &[0.5], 8, 2).is_ok());
     }
 
     #[test]

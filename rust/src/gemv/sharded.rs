@@ -1,0 +1,297 @@
+//! Sharded multi-engine GEMV: a pool of [`GemvScheduler`]s serving one
+//! oversized matrix as row-shards.
+//!
+//! A matrix whose single-engine mapping is multi-pass gets no weight
+//! residency — every request re-stages spill planes, exactly the
+//! re-staging tax IMAGine's BRAM-resident design eliminates. The
+//! sharded tier row-partitions the matrix (plan in
+//! [`super::mapper::plan_shards`]) so each shard is single-pass on one
+//! pool member, stages each shard **once** (per-shard residency), runs
+//! the members in parallel on [`util::ThreadPool`](crate::util::ThreadPool),
+//! and concatenates the row-slices into the final `y` — bit-identical
+//! to the single-engine path (property-tested in
+//! `rust/tests/sharded_gemv.rs`).
+//!
+//! Shard `i` always executes on pool member `i`: the assignment is part
+//! of the [`ShardPlan`], so each member's residency token (model id +
+//! shard shape) stays stable across batches and a hot model never
+//! re-stages. This mirrors balanced data placement across PIM banks
+//! (arXiv:2403.20297) with the host-side concat playing the
+//! reduction/merge step.
+
+use super::codegen::GemvError;
+use super::mapper::{plan_shards, ShardPlan};
+use super::scheduler::{GemvOutcome, GemvScheduler};
+use crate::engine::{Engine, EngineConfig};
+use crate::sim::ExecStats;
+use crate::util::ThreadPool;
+use std::sync::Mutex;
+
+/// A GEMV scheduler over a pool of engines, serving row-sharded
+/// matrices with per-shard weight residency. The pool grows on demand
+/// up to the planner's [`MAX_SHARDS`](super::mapper::MAX_SHARDS).
+pub struct ShardedScheduler {
+    config: EngineConfig,
+    /// Column worker threads per pool member (1 = serial members:
+    /// shard-level parallelism already uses the machine).
+    engine_threads: usize,
+    /// Fan-out pool for the shard dispatch (members run concurrently).
+    /// `None` on a one-thread budget: shards then run serially on the
+    /// caller instead of oversubscribing the machine.
+    pool: Option<ThreadPool>,
+    /// Pool members; member `i` owns shard `i` of every sharded model
+    /// it serves (stable assignment keeps residency engine-local).
+    engines: Vec<Mutex<GemvScheduler>>,
+    /// Per-shard merged stats of the last sharded batch.
+    shard_stats: Vec<ExecStats>,
+}
+
+impl ShardedScheduler {
+    /// Build with the default thread budget (`IMAGINE_THREADS`) for the
+    /// shard fan-out and serial pool members.
+    pub fn new(config: EngineConfig) -> Self {
+        Self::with_threads(config, ThreadPool::default_threads(), 1)
+    }
+
+    /// Build with an explicit thread budget: `pool_threads` is the
+    /// total shard-dispatch concurrency including the calling thread
+    /// (1 = fully serial fan-out), `engine_threads` the column workers
+    /// per member.
+    pub fn with_threads(config: EngineConfig, pool_threads: usize, engine_threads: usize) -> Self {
+        let extra = pool_threads.saturating_sub(1);
+        ShardedScheduler {
+            config,
+            engine_threads: engine_threads.max(1),
+            pool: (extra > 0).then(|| ThreadPool::new(extra)),
+            engines: Vec::new(),
+            shard_stats: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Pool members created so far.
+    pub fn engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Per-shard merged [`ExecStats`] of the last sharded batch (empty
+    /// after an unsharded fallback run). Their field-wise sum equals
+    /// the sum over the batch's per-vector outcome stats.
+    pub fn last_shard_stats(&self) -> &[ExecStats] {
+        &self.shard_stats
+    }
+
+    fn ensure_engines(&mut self, k: usize) {
+        while self.engines.len() < k {
+            let engine = Engine::with_threads(self.config, self.engine_threads);
+            self.engines.push(Mutex::new(GemvScheduler::from_engine(self.config, engine)));
+        }
+    }
+
+    /// Run a fused multi-vector GEMV, row-sharding across the pool when
+    /// the planner says the single-engine mapping is multi-pass.
+    /// Otherwise (already resident, or unshardable) the batch runs on
+    /// pool member 0 exactly like [`GemvScheduler::gemv_batch`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemv_batch(
+        &mut self,
+        token: u64,
+        w: &[i64],
+        xs: &[&[i64]],
+        m: usize,
+        n: usize,
+        p: usize,
+        radix: u8,
+    ) -> Vec<GemvOutcome> {
+        match plan_shards(&self.config, m, n, p, radix) {
+            Some(sp) => self.run_plan(&sp, token, w, xs),
+            None => {
+                self.ensure_engines(1);
+                self.shard_stats.clear();
+                self.engines[0]
+                    .get_mut()
+                    .unwrap()
+                    .gemv_batch(token, w, xs, m, n, p, radix)
+            }
+        }
+    }
+
+    /// Execute a batch under an explicit [`ShardPlan`] (the serving
+    /// path passes the planner's, tests force K). Shard `i` runs on
+    /// member `i`; each member stages its row-slice once per batch (or
+    /// not at all when `token` is already resident there) and streams
+    /// every vector through it. Outcomes are per-vector: `y` is the
+    /// shard row-slices concatenated in row order, stats the merge of
+    /// all shards' work for that vector.
+    ///
+    /// `token` identifies the *matrix*: callers replaying the same
+    /// token must pass the same weights and plan (the serving path
+    /// guarantees both — model ids are never reused and `plan_shards`
+    /// is deterministic per shape). Forcing a different K for a
+    /// previously used token requires a fresh token, or a member whose
+    /// shard happens to keep its height but shift its rows would stay
+    /// "resident" on stale data.
+    pub fn run_plan(
+        &mut self,
+        sp: &ShardPlan,
+        token: u64,
+        w: &[i64],
+        xs: &[&[i64]],
+    ) -> Vec<GemvOutcome> {
+        let k = sp.shards.len();
+        let (m, n, p, radix) = (sp.m, sp.n, sp.precision, sp.radix);
+        if w.len() != m * n {
+            // nothing ran: don't leave a previous batch's shard stats
+            self.shard_stats.clear();
+            return xs
+                .iter()
+                .map(|_| Err(GemvError::Shape { what: "matrix", expected: m * n, got: w.len() }))
+                .collect();
+        }
+        self.ensure_engines(k);
+        let slots: Vec<Mutex<Vec<GemvOutcome>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
+        {
+            let engines = &self.engines;
+            let shards = &sp.shards;
+            let run_shard = |i: usize| {
+                let sh = shards[i];
+                let ws = &w[sh.row0 * n..(sh.row0 + sh.rows) * n];
+                let mut member = engines[i].lock().unwrap();
+                let out = member.gemv_batch(token, ws, xs, sh.rows, n, p, radix);
+                *slots[i].lock().unwrap() = out;
+            };
+            match &self.pool {
+                Some(pool) => pool.run(k, &run_shard),
+                None => (0..k).for_each(run_shard),
+            }
+        }
+        let mut per_shard: Vec<std::vec::IntoIter<GemvOutcome>> = slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().into_iter())
+            .collect();
+        self.shard_stats = vec![ExecStats::default(); k];
+        let mut out = Vec::with_capacity(xs.len());
+        for _ in 0..xs.len() {
+            let mut y = Vec::with_capacity(m);
+            let mut stats = ExecStats::default();
+            let mut err: Option<GemvError> = None;
+            for (s, it) in per_shard.iter_mut().enumerate() {
+                match it.next().expect("one outcome per shard per vector") {
+                    Ok((slice, st)) => {
+                        self.shard_stats[s].merge(&st);
+                        if err.is_none() {
+                            y.extend(slice);
+                            stats.merge(&st);
+                        }
+                    }
+                    // shards see the same vector, so they fail alike
+                    // (range/shape checks); keep the first error
+                    Err(e) => err = err.or(Some(e)),
+                }
+            }
+            out.push(match err {
+                None => Ok((y, stats)),
+                Some(e) => Err(e),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemv::mapper::{plan, plan_shards_k};
+    use crate::util::XorShift;
+
+    fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+        (0..m)
+            .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn forced_shards_match_single_engine() {
+        let cfg = EngineConfig::small();
+        let (m, n, p) = (48, 64, 8);
+        let mut rng = XorShift::new(21);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -100, 100)).collect();
+        let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut sharded = ShardedScheduler::with_threads(cfg, 2, 1);
+        for k in [2, 3, 4] {
+            let sp = plan_shards_k(m, n, p, 2, k);
+            let out = sharded.run_plan(&sp, 1000 + k as u64, &w, &xrefs);
+            assert_eq!(sharded.last_shard_stats().len(), k);
+            for (r, x) in out.into_iter().zip(&xs) {
+                assert_eq!(r.unwrap().0, host_gemv(&w, x, m, n), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_matrix_promotes_and_stays_correct() {
+        // 768 rows on a 384-lane engine: multi-pass solo, 2 shards here
+        let cfg = EngineConfig::small();
+        let (m, n) = (768, 64);
+        assert!(!plan(&cfg, m, n, 8, 2).is_single_pass());
+        let mut rng = XorShift::new(22);
+        let w = rng.vec_i64(m * n, -16, 15);
+        let x = rng.vec_i64(n, -64, 63);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let mut sharded = ShardedScheduler::with_threads(cfg, 2, 1);
+        let out = sharded.gemv_batch(7, &w, &xrefs, m, n, 8, 2);
+        assert!(sharded.engines() >= 2, "did not shard");
+        assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+    }
+
+    #[test]
+    fn serial_fanout_matches_pooled() {
+        // pool_threads = 1 must not spawn a pool (no oversubscription)
+        // and must produce identical results
+        let cfg = EngineConfig::small();
+        let (m, n) = (40, 32);
+        let mut rng = XorShift::new(24);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let sp = plan_shards_k(m, n, 8, 2, 3);
+        let mut serial = ShardedScheduler::with_threads(cfg, 1, 1);
+        let mut pooled = ShardedScheduler::with_threads(cfg, 3, 1);
+        let ys = serial.run_plan(&sp, 2, &w, &xrefs).remove(0).unwrap();
+        let yp = pooled.run_plan(&sp, 2, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(ys.0, yp.0);
+        assert_eq!(ys.0, host_gemv(&w, &x, m, n));
+        assert_eq!(ys.1, yp.1, "stats must not depend on the fan-out mode");
+    }
+
+    #[test]
+    fn per_vector_failures_stay_isolated() {
+        let cfg = EngineConfig::small();
+        let (m, n) = (32, 16);
+        let mut rng = XorShift::new(23);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let good = rng.vec_i64(n, -100, 100);
+        let bad = vec![5000i64; n]; // out of 8-bit range
+        let xrefs: Vec<&[i64]> = vec![&good, &bad];
+        let mut sharded = ShardedScheduler::with_threads(cfg, 2, 1);
+        let sp = plan_shards_k(m, n, 8, 2, 2);
+        let out = sharded.run_plan(&sp, 9, &w, &xrefs);
+        assert_eq!(out[0].as_ref().unwrap().0, host_gemv(&w, &good, m, n));
+        assert!(out[1].is_err());
+    }
+
+    #[test]
+    fn bad_matrix_shape_fails_every_vector() {
+        let mut sharded = ShardedScheduler::with_threads(EngineConfig::small(), 2, 1);
+        let sp = plan_shards_k(8, 8, 8, 2, 2);
+        let x = vec![0i64; 8];
+        let xrefs: Vec<&[i64]> = vec![&x, &x];
+        let out = sharded.run_plan(&sp, 1, &[0i64; 63], &xrefs);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| matches!(r, Err(GemvError::Shape { .. }))));
+    }
+}

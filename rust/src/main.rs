@@ -124,7 +124,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let workers = args.get_usize("workers", 2);
     let batch = args.get_usize("batch", 16);
     let d = args.get_usize("d", 64);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     let mut rng = XorShift::new(7);
     reg.register_gemv("demo", rng.vec_i64(d * d, -64, 63), d, d).unwrap();
     let cfg = CoordinatorConfig {

@@ -45,6 +45,15 @@ impl Device {
     pub fn max_pes(&self) -> u64 {
         self.bram as u64 * 32
     }
+
+    /// Total BRAM bits with every block serving as PIM register
+    /// columns (36 Kb per BRAM36) — the device-level ceiling of the
+    /// weight-residency budget the shard planner packs row-shards
+    /// against (`EngineConfig::bram_budget_bits` gives the figure for
+    /// a concrete engine build on the device).
+    pub fn bram_bits(&self) -> u64 {
+        self.bram as u64 * 36 * 1024
+    }
 }
 
 /// The nine Table IV representatives, in table order.
@@ -124,5 +133,14 @@ mod tests {
     fn intel_platforms_present() {
         assert_eq!(STRATIX10_GX2800.bram_fmax_mhz, 1000.0);
         assert_eq!(ARRIA10_GX900.bram_fmax_mhz, 730.0);
+    }
+
+    #[test]
+    fn u55_engine_budget_fits_device_bram() {
+        // the flagship engine's residency budget (register columns)
+        // must fit inside the device's raw BRAM capacity
+        let device = device_by_id("U55").unwrap();
+        let engine = crate::engine::EngineConfig::u55();
+        assert!(engine.bram_budget_bits() <= device.bram_bits());
     }
 }

@@ -99,7 +99,7 @@ fn coordinator_batched_responses_carry_cycles_and_batch_size() {
     let (m, n) = (24, 48);
     let mut rng = XorShift::new(11);
     let w = rng.vec_i64(m * n, -32, 31);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     reg.register_gemv("g", w.clone(), m, n).unwrap();
 
     // reference cycle count for this shape (deterministic simulation)

@@ -98,7 +98,7 @@ fn setp_validation_faults_the_engine() {
 
 #[test]
 fn coordinator_survives_bad_requests_mixed_with_good() {
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     reg.register_gemv("g", vec![1; 16], 4, 4).unwrap();
     let coord = Coordinator::start(CoordinatorConfig::default(), reg);
     // bad: unknown model / wrong dims — rejected synchronously

@@ -128,7 +128,7 @@ fn prop_coordinator_preserves_request_response_mapping() {
     // Every submitted request gets exactly its own answer, regardless
     // of batching, worker count, or model mix.
     let mut rng = XorShift::new(1234);
-    let mut reg = ModelRegistry::default();
+    let reg = ModelRegistry::default();
     let w1 = rng.vec_i64(8 * 8, -32, 31);
     let w2 = rng.vec_i64(4 * 8, -32, 31);
     reg.register_gemv("a", w1.clone(), 8, 8).unwrap();

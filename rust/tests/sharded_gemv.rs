@@ -1,0 +1,157 @@
+//! Sharded multi-engine GEMV semantics: row-sharding across an engine
+//! pool must be observationally identical in `y` to the single-engine
+//! path (property-tested across K and random shapes), per-shard
+//! `ExecStats` must sum to the per-vector totals, per-shard residency
+//! must cut the re-staging work for resident batches, and the
+//! coordinator must transparently promote oversized models.
+
+use imagine::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::engine::EngineConfig;
+use imagine::gemv::{plan, plan_shards, plan_shards_k, GemvScheduler, ShardedScheduler};
+use imagine::sim::ExecStats;
+use imagine::util::rng::{run_prop, XorShift};
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+#[test]
+fn prop_sharded_bit_identical_to_single_engine() {
+    let config = EngineConfig::small();
+    let mut sharded = ShardedScheduler::with_threads(config, 2, 1);
+    let mut token = 0u64;
+    run_prop("sharded y == single-engine y (K = 2, 3, 4)", 8, |rng| {
+        let m = rng.range(4, 160);
+        let n = rng.range(8, 120);
+        let p = *rng.pick(&[4usize, 8]);
+        let radix = if rng.bool() { 2 } else { 4 };
+        let half = 1i64 << (p - 1);
+        let w = rng.vec_i64(m * n, -half, half - 1);
+        let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -half, half - 1)).collect();
+        let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+
+        let mut single = GemvScheduler::new(config);
+        let solo: Vec<Vec<i64>> = xs
+            .iter()
+            .map(|x| single.gemv(&w, x, m, n, p, radix).unwrap().0)
+            .collect();
+
+        for k in [2usize, 3, 4] {
+            // fresh token per (case, k): distinct matrices must never
+            // share a residency identity
+            token += 1;
+            let sp = plan_shards_k(m, n, p, radix, k);
+            let out = sharded.run_plan(&sp, token, &w, &xrefs);
+            assert_eq!(out.len(), xs.len());
+            for (j, r) in out.into_iter().enumerate() {
+                let (y, stats) = r.unwrap_or_else(|e| panic!("k={k} vector {j}: {e}"));
+                assert_eq!(y, solo[j], "k={k} vector {j} m={m} n={n} p={p} radix={radix}");
+                assert!(stats.cycles > 0);
+            }
+        }
+    });
+}
+
+#[test]
+fn per_shard_stats_sum_to_vector_totals() {
+    let config = EngineConfig::small();
+    let (m, n, p) = (96, 64, 8);
+    let mut rng = XorShift::new(61);
+    let w = rng.vec_i64(m * n, -100, 100);
+    let xs: Vec<Vec<i64>> = (0..4).map(|_| rng.vec_i64(n, -100, 100)).collect();
+    let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+    let mut sharded = ShardedScheduler::with_threads(config, 2, 1);
+    let sp = plan_shards_k(m, n, p, 2, 3);
+    let out = sharded.run_plan(&sp, 5, &w, &xrefs);
+
+    let mut from_vectors = ExecStats::default();
+    for r in out {
+        from_vectors.merge(&r.unwrap().1);
+    }
+    let mut from_shards = ExecStats::default();
+    assert_eq!(sharded.last_shard_stats().len(), 3);
+    for s in sharded.last_shard_stats() {
+        assert!(s.cycles > 0, "idle shard");
+        assert!(s.plane_word_ops > 0, "shard did no plane work");
+        from_shards.merge(s);
+    }
+    assert_eq!(from_vectors, from_shards, "shard totals != vector totals");
+}
+
+#[test]
+fn per_shard_residency_cuts_restaging_work() {
+    // multi-pass on one small() engine (768 > 384 lanes), 2 shards
+    let config = EngineConfig::small();
+    let (m, n, p) = (768, 64, 8);
+    assert!(!plan(&config, m, n, p, 2).is_single_pass());
+    let sp = plan_shards(&config, m, n, p, 2).expect("shardable");
+    assert!(sp.resident_on(&config));
+
+    let mut rng = XorShift::new(67);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let xs: Vec<Vec<i64>> = (0..4).map(|_| rng.vec_i64(n, -64, 63)).collect();
+    let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+    let mut sharded = ShardedScheduler::with_threads(config, 2, 1);
+
+    let work = |out: Vec<imagine::gemv::GemvOutcome>| -> u64 {
+        out.into_iter().map(|r| r.unwrap().1.plane_word_ops).sum()
+    };
+    // batch 1: every shard stages its row-slice once (cold)
+    let cold = work(sharded.run_plan(&sp, 9, &w, &xrefs));
+    // batch 2, same token: shards are resident — only vectors move
+    let hot = work(sharded.run_plan(&sp, 9, &w, &xrefs));
+    assert!(
+        hot < cold,
+        "resident batch must re-stage less: hot {hot} !< cold {cold}"
+    );
+
+    // single-engine multi-pass baseline re-stages every vector
+    let mut single = GemvScheduler::new(config);
+    let single_work: u64 = xs
+        .iter()
+        .map(|x| single.gemv(&w, x, m, n, p, 2).unwrap().1.plane_word_ops)
+        .sum();
+    assert!(
+        hot < single_work,
+        "sharded resident batch must beat multi-pass re-staging: {hot} !< {single_work}"
+    );
+}
+
+#[test]
+fn coordinator_promotes_oversized_gemv_to_sharded_pool() {
+    let (m, n) = (768, 32);
+    let engine = EngineConfig::small();
+    assert!(
+        plan_shards(&engine, m, n, 8, 2).is_some(),
+        "shape must promote for this test to bite"
+    );
+    let mut rng = XorShift::new(71);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("wide", w.clone(), m, n).unwrap();
+    reg.register_gemv("small", rng.vec_i64(16 * 32, -16, 15), 16, 32).unwrap();
+    let coord = Coordinator::start(CoordinatorConfig { workers: 2, ..Default::default() }, reg);
+    let mut rxs = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..12 {
+        let x = rng.vec_i64(32, -64, 63);
+        let model = if i % 3 == 0 { "small" } else { "wide" };
+        if model == "wide" {
+            want.push(Some(host_gemv(&w, &x, m, n)));
+        } else {
+            want.push(None);
+        }
+        rxs.push(coord.submit(Request { model: model.into(), x }).unwrap());
+    }
+    for (rx, want) in rxs.into_iter().zip(want) {
+        let resp = rx.recv().unwrap().unwrap();
+        if let Some(y) = want {
+            assert_eq!(resp.y, y);
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.failed, 0);
+}
