@@ -49,6 +49,26 @@ fn stage_operands(e: &mut Engine, seed: u64) {
     }
 }
 
+/// Dense weights, sparse activations: only ~`density_pct`% of the x
+/// lanes are nonzero (the occupancy-skip showcase).
+fn stage_sparse_x(e: &mut Engine, seed: u64, density_pct: u64) {
+    let lanes = e.pe_rows();
+    let mut rng = XorShift::new(seed);
+    for c in 0..e.block_cols() {
+        e.write_reg_lanes(c, 1, 8, &rng.vec_i64(lanes, -128, 127)).unwrap();
+        let x: Vec<i64> = (0..lanes)
+            .map(|_| {
+                if rng.next_u64() % 100 < density_pct {
+                    1 + (rng.next_u64() % 127) as i64
+                } else {
+                    0
+                }
+            })
+            .collect();
+        e.write_reg_lanes(c, 2, 8, &x).unwrap();
+    }
+}
+
 fn main() {
     let (warm, iters) = if smoke() { (1, 3) } else { (3, 25) };
 
@@ -127,6 +147,55 @@ fn main() {
     let speedup = ms.median.as_secs_f64() / mp.median.as_secs_f64();
     println!("column-parallel speedup: {speedup:.2}x with {threads} threads");
 
+    // -- fused kernel replay vs per-instruction dispatch --------------
+    // Same engine geometry and thread budget; the only difference is
+    // one pool dispatch per segment vs one dispatch + join per
+    // instruction (ISSUE 3 tentpole; results are bit-identical, see
+    // tests/fused_skip_equivalence.rs).
+    println!("\n== fused column-kernel dispatch ==");
+    let mut interp = Engine::new(cfg);
+    interp.set_fuse(false);
+    stage_operands(&mut interp, 21);
+    let mi = bench("engine mac-burst, per-instruction dispatch", warm, iters, || {
+        black_box(interp.execute(&prog).unwrap().cycles)
+    });
+    println!("{}", mi.report());
+
+    let mut fused = Engine::new(cfg);
+    fused.set_fuse(true);
+    stage_operands(&mut fused, 21);
+    let mf = bench("engine mac-burst, fused kernel replay", warm, iters, || {
+        black_box(fused.execute(&prog).unwrap().cycles)
+    });
+    println!("{}", mf.report());
+    let fused_speedup = mi.median.as_secs_f64() / mf.median.as_secs_f64();
+    println!("fused-dispatch speedup: {fused_speedup:.2}x over per-instruction");
+
+    // -- occupancy-aware zero skipping: dense vs ~3% sparse x ---------
+    println!("\n== occupancy-aware plane skipping (sparse activations) ==");
+    let mut sparse_ref = Engine::new(cfg);
+    sparse_ref.set_fuse(true);
+    stage_sparse_x(&mut sparse_ref, 33, 3);
+    alu::set_skip(false);
+    let mno = bench("mac-burst, sparse x (~3%), skip off", warm, iters, || {
+        black_box(sparse_ref.execute(&prog).unwrap().cycles)
+    });
+    println!("{}", mno.report());
+
+    let mut sparse_opt = Engine::new(cfg);
+    sparse_opt.set_fuse(true);
+    stage_sparse_x(&mut sparse_opt, 33, 3);
+    alu::set_skip(true);
+    let myes = bench("mac-burst, sparse x (~3%), skip on", warm, iters, || {
+        black_box(sparse_opt.execute(&prog).unwrap().cycles)
+    });
+    println!("{}", myes.report());
+    let sparse_speedup = mno.median.as_secs_f64() / myes.median.as_secs_f64();
+    println!(
+        "sparse zero-skip speedup: {sparse_speedup:.2}x (dense fused = {:.3} us)",
+        mf.per_iter_us()
+    );
+
     // anchor at the workspace root regardless of the bench's cwd
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let mut sink = BenchSink::load(path);
@@ -140,6 +209,13 @@ fn main() {
             ("serial_us", Json::num(ms.per_iter_us())),
             ("parallel_us", Json::num(mp.per_iter_us())),
             ("speedup", Json::num(speedup)),
+            ("per_instr_us", Json::num(mi.per_iter_us())),
+            ("fused_us", Json::num(mf.per_iter_us())),
+            ("fused_speedup", Json::num(fused_speedup)),
+            ("dense_us", Json::num(mf.per_iter_us())),
+            ("sparse_noskip_us", Json::num(mno.per_iter_us())),
+            ("sparse_skip_us", Json::num(myes.per_iter_us())),
+            ("sparse_skip_speedup", Json::num(sparse_speedup)),
             ("smoke", Json::Bool(smoke())),
         ]),
     );

@@ -20,6 +20,7 @@ use crate::pim::alu::AluScratch;
 use crate::pim::PlaneBuf;
 use crate::util::ThreadPool;
 use std::ops::Range;
+use super::kernel::{ColSel, KernelStep};
 
 /// Minimum total plane words across the selected columns before a
 /// dispatch goes parallel (below this the condvar wake costs more than
@@ -135,6 +136,44 @@ impl ColumnArray {
             let scr = unsafe { &mut *scr_ptr.0.add(c) };
             f(c, col, scr);
         });
+    }
+
+    /// Execute one fused kernel segment: every column applies, in
+    /// program order, the steps whose selection contains it — **one**
+    /// pool dispatch for the whole segment instead of one per
+    /// instruction (the compiled-kernel replay path; `engine::kernel`).
+    /// Columns only reorder *across* each other (column 0 may finish
+    /// its whole step list before column 1 starts), which is invisible:
+    /// steps touch only their own column between barriers.
+    pub fn run_steps(&mut self, steps: &[KernelStep], entry_staged: i64) {
+        // a single-column segment needs no pool round-trip at all
+        if let Some(ColSel::One(c)) = single_column(steps) {
+            let (buf, scratch) = self.buf_scratch_mut(c as usize);
+            for step in steps {
+                step.op.apply(buf, scratch, entry_staged);
+            }
+            return;
+        }
+        let n = self.cols.len();
+        self.for_each(0..n, |c, buf, scratch| {
+            for step in steps {
+                if step.sel.contains(c) {
+                    step.op.apply(buf, scratch, entry_staged);
+                }
+            }
+        });
+    }
+}
+
+/// If every step targets the same single column, return that selection.
+fn single_column(steps: &[KernelStep]) -> Option<ColSel> {
+    let first = steps.first()?.sel;
+    match first {
+        ColSel::All => None,
+        ColSel::One(_) => steps[1..]
+            .iter()
+            .all(|s| s.sel == first)
+            .then_some(first),
     }
 }
 

@@ -6,26 +6,51 @@
 //! data differs (SELBLK masks columns; the east->west chain moves
 //! accumulators between columns).
 //!
-//! Execution is column-parallel: the per-column data effects of
-//! LDI/WRITE/MOV/ADD/SUB/MULT/MAC are dispatched across a worker pool
-//! by [`ColumnArray`] (columns are independent between barriers), while
-//! ACCUM/FOLD/READ — the ops that move data *between* columns or off
-//! the array — stay sequential barriers. Cycle accounting is unchanged:
-//! the controller times the SIMD instruction stream, so stats are
-//! bit-identical to a single-threaded run (asserted by the
-//! `prop_invariants` equivalence property).
+//! Execution is column-parallel and, by default, *fused*: a sealed
+//! program is lowered once into a compiled column kernel
+//! ([`super::kernel`]) whose segments make **one** worker-pool dispatch
+//! for every run of consecutive column-local instructions
+//! (LDI/WRITE/MOV/ADD/SUB/MULT/MAC — in a GEMV chunk pass the whole
+//! `k_per_pe` MULT/MAC burst), with barriers only at ACCUM/FOLD/READ —
+//! the ops that move data *between* columns or off the array. Kernels
+//! are cached per (program fingerprint, entry Op-Params, entry
+//! selection); `IMAGINE_FUSE=0` (or [`Engine::set_fuse`]) keeps the
+//! original per-instruction interpreter, which is also the automatic
+//! fallback for programs that refuse to lower (they fault). Cycle
+//! accounting is unchanged either way: the controller times the SIMD
+//! instruction stream itself, so stats are bit-identical across fused /
+//! interpreted / serial / parallel runs (asserted by the
+//! `prop_invariants` equivalence properties).
 
 use crate::isa::{Instr, Opcode, Program};
 use crate::pim::{alu, PlaneBuf, RegFile, REGFILE_BITS};
 use crate::sim::{ExecStats, Trace};
 use crate::tile::controller::{Controller, ControllerError};
+use crate::tile::params::OpParams;
 use crate::util::ThreadPool;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use super::column_array::ColumnArray;
 use super::config::EngineConfig;
+use super::kernel::{stage_spill_planes, CompiledKernel, KernelItem};
 
 /// Block-column select value meaning "all columns" (SELBLK 0x3FF).
 pub const SEL_ALL: u16 = 0x3FF;
+
+/// Compiled-kernel cache key: a kernel bakes in the entry Op-Params and
+/// SELBLK state (both persist across programs), so it is only
+/// replayable from the same entry state.
+type KernelKey = (u64, OpParams, Option<usize>);
+
+/// Cache slot: the exact program (hits verify full equality — a 64-bit
+/// fingerprint collision must never silently replay the wrong kernel)
+/// and its lowering result (`None` memoizes a refusal, so repeatedly
+/// executed non-lowerable programs skip straight to the interpreter).
+type KernelSlot = (Program, Option<Arc<CompiledKernel>>);
+
+/// Compiled kernels cached per engine; cleared wholesale when exceeded
+/// (real workloads cycle through a handful of programs).
+const KERNEL_CACHE_CAP: usize = 64;
 
 #[derive(Debug, thiserror::Error)]
 pub enum EngineError {
@@ -65,6 +90,11 @@ pub struct Engine {
     controller: Controller,
     stats: ExecStats,
     trace: Trace,
+    /// Fused execution (compiled-kernel replay). `IMAGINE_FUSE=0`
+    /// forces the per-instruction interpreter (docs/PERF.md).
+    fuse: bool,
+    /// Lowered kernels, keyed by program fingerprint + entry state.
+    kernels: HashMap<KernelKey, KernelSlot>,
 }
 
 impl Engine {
@@ -89,7 +119,26 @@ impl Engine {
             controller: Controller::new(config.stages),
             stats: ExecStats::default(),
             trace: Trace::off(),
+            fuse: crate::util::env_flag("IMAGINE_FUSE", true),
+            kernels: HashMap::new(),
         }
+    }
+
+    /// Toggle fused (compiled-kernel) execution for this engine; the
+    /// per-instruction interpreter stays available as the reference
+    /// path (`IMAGINE_FUSE=0` sets the process default to off).
+    pub fn set_fuse(&mut self, on: bool) {
+        self.fuse = on;
+    }
+
+    /// Whether this engine replays compiled kernels (vs interpreting).
+    pub fn fused(&self) -> bool {
+        self.fuse
+    }
+
+    /// Number of compiled kernels currently cached (introspection).
+    pub fn kernel_cache_len(&self) -> usize {
+        self.kernels.len()
     }
 
     /// Enable a bounded instruction trace (for debugging failures).
@@ -146,16 +195,163 @@ impl Engine {
     }
 
     /// Execute a sealed program to completion. Returns the run's stats.
+    ///
+    /// Fused path (default): the program is lowered once into a
+    /// [`CompiledKernel`] (cached per entry state) and replayed —
+    /// timing through the controller exactly as the interpreter does,
+    /// data through one pool dispatch per segment. Programs that refuse
+    /// to lower (they would fault) fall back to the interpreter so the
+    /// error surfaces with the interpreter's exact semantics.
     pub fn execute(&mut self, prog: &Program) -> Result<ExecStats, EngineError> {
         if !prog.is_halted() {
             return Err(EngineError::NotHalted);
         }
+        if self.fuse {
+            if let Some(kernel) = self.lookup_or_lower(prog) {
+                // The data pass must be infallible for the replay's
+                // split timing/data structure to be observably
+                // identical to the interpreter; the one dynamic fault
+                // (RSHIFT past the shift column) is predictable from
+                // the entry state, so a program that would hit it runs
+                // on the interpreter, preserving its exact
+                // partial-effect fault semantics.
+                if self.rshift_safe(&kernel) {
+                    return self.replay(prog, &kernel);
+                }
+            }
+        }
+        self.execute_interp(prog)
+    }
+
+    /// Whether replaying `kernel` from the current shift-column state
+    /// can ever underflow the output FIFO (READ refills to the full
+    /// lane count; each RSHIFT pops one element).
+    fn rshift_safe(&self, kernel: &CompiledKernel) -> bool {
+        let mut len = self.shift_col.len();
+        for item in &kernel.items {
+            match item {
+                KernelItem::Read { .. } => len = self.pe_rows(),
+                KernelItem::Rshift => {
+                    if len == 0 {
+                        return false;
+                    }
+                    len -= 1;
+                }
+                _ => {}
+            }
+        }
+        true
+    }
+
+    /// Fetch the compiled kernel for `prog` at the current entry state,
+    /// lowering and caching on miss (refusals are memoized too).
+    /// `None` = not lowerable (faulting program) — interpret instead.
+    fn lookup_or_lower(&mut self, prog: &Program) -> Option<Arc<CompiledKernel>> {
+        let key = (prog.fingerprint(), self.controller.params, self.sel);
+        if let Some((cached_prog, kernel)) = self.kernels.get(&key) {
+            if cached_prog == prog {
+                return kernel.clone();
+            }
+            // fingerprint collision: fall through and replace the slot
+        }
+        let lowered = CompiledKernel::lower(
+            prog,
+            self.columns.len(),
+            self.sel,
+            self.controller.params,
+        )
+        .map(Arc::new);
+        if self.kernels.len() >= KERNEL_CACHE_CAP {
+            self.kernels.clear();
+        }
+        self.kernels.insert(key, (prog.clone(), lowered.clone()));
+        lowered
+    }
+
+    /// Start-of-run bookkeeping shared by the replay and the
+    /// interpreter: restart the driver FSM and seed the stats with the
+    /// pipeline fill latency.
+    fn begin_run(&mut self) -> ExecStats {
         self.controller.restart();
-        let mut run = ExecStats {
+        ExecStats {
             fill_latency: self.config.fill_latency(),
             cycles: self.config.fill_latency(),
             ..ExecStats::default()
-        };
+        }
+    }
+
+    /// End-of-run bookkeeping shared by both execution paths — kept in
+    /// one place so the bit-identical-ExecStats invariant cannot drift:
+    /// staging words accumulated since the last run count against this
+    /// one (on hardware the staging DMA overlaps/precedes the burst it
+    /// feeds), then the run merges into the engine totals.
+    fn finish_run(&mut self, mut run: ExecStats) -> ExecStats {
+        run.plane_word_ops =
+            self.estimate_plane_ops(&run) + std::mem::take(&mut self.staged_words);
+        self.stats.merge(&run);
+        run
+    }
+
+    /// Replay a compiled kernel: the timing pass issues every
+    /// instruction through the controller (identical stats/trace to the
+    /// interpreter — the cycle model is the paper's hardware schedule),
+    /// then the data pass walks the lowered items.
+    fn replay(
+        &mut self,
+        prog: &Program,
+        kernel: &CompiledKernel,
+    ) -> Result<ExecStats, EngineError> {
+        let mut run = self.begin_run();
+        for instr in &prog.instrs {
+            let cycles = self
+                .controller
+                .issue(instr)
+                .map_err(|e| EngineError::Controller(e, self.trace.dump_tail(16)))?;
+            run.record(instr.op, cycles);
+            self.trace.push(run.cycles, *instr);
+        }
+        let entry_staged = self.staged;
+        for item in &kernel.items {
+            match item {
+                KernelItem::Segment(steps) => self.columns.run_steps(steps, entry_staged),
+                KernelItem::Read { base, width } => {
+                    self.shift_col = self.columns.buf(0).read_all(*base, *width).into();
+                }
+                KernelItem::Rshift => {
+                    // unreachable in practice: `rshift_safe` gates the
+                    // replay, so underflow routes to the interpreter
+                    let v = self.shift_col.pop_front().ok_or(EngineError::FifoEmpty)?;
+                    self.fifo_out.push(v);
+                }
+                KernelItem::Accum { base, width, hops } => {
+                    for _ in 0..*hops {
+                        self.accum_hop(*base, *width);
+                    }
+                }
+                KernelItem::Fold { sel, base, width, group } => {
+                    for c in 0..self.columns.len() {
+                        if sel.contains(c) {
+                            let (buf, scratch) = self.columns.buf_scratch_mut(c);
+                            alu::fold_step_with(buf, *base, *width, *group, scratch);
+                        }
+                    }
+                }
+            }
+        }
+        // commit the persistent front-end state the program left behind
+        if let Some(v) = kernel.final_staged {
+            self.staged = v;
+        }
+        if let Some(sel) = kernel.final_sel {
+            self.sel = sel;
+        }
+        Ok(self.finish_run(run))
+    }
+
+    /// The per-instruction reference interpreter (`IMAGINE_FUSE=0`, and
+    /// the fallback for programs that refuse to lower).
+    fn execute_interp(&mut self, prog: &Program) -> Result<ExecStats, EngineError> {
+        let mut run = self.begin_run();
         for instr in &prog.instrs {
             let cycles = self
                 .controller
@@ -165,12 +361,7 @@ impl Engine {
             run.record(instr.op, cycles);
             self.trace.push(run.cycles, *instr);
         }
-        // staging words accumulated since the last run count against
-        // this one: on hardware the staging DMA overlaps/precedes the
-        // burst it feeds
-        run.plane_word_ops = self.estimate_plane_ops(&run) + std::mem::take(&mut self.staged_words);
-        self.stats.merge(&run);
-        Ok(run)
+        Ok(self.finish_run(run))
     }
 
     /// Apply one instruction's data effects.
@@ -265,7 +456,8 @@ impl Engine {
                 let level = instr.imm as usize;
                 let group = crate::pim::PES_PER_BLOCK << level;
                 for c in self.selected() {
-                    alu::fold_step(self.columns.buf_mut(c), r.base, r.width, group);
+                    let (buf, scratch) = self.columns.buf_scratch_mut(c);
+                    alu::fold_step_with(buf, r.base, r.width, group, scratch);
                 }
             }
         }
@@ -343,6 +535,7 @@ impl Engine {
     /// spill element — the vector-staging fast path: an x-chunk element
     /// is identical across the matrix rows of a replica group, so the
     /// host drives it as a masked word-fill per plane (§Perf).
+    #[allow(clippy::too_many_arguments)]
     pub fn write_spill_lanes(
         &mut self,
         col: usize,
@@ -380,16 +573,6 @@ impl Engine {
     /// shift column; used by tests and the coordinator fast path).
     pub fn read_result(&self, reg: u8, width: usize) -> Result<Vec<i64>, EngineError> {
         self.read_reg_lanes(0, reg, width)
-    }
-}
-
-/// Copy spill element `idx` (`p` planes) into the register window at
-/// `dst_base` — the per-column body of [`Engine::stage_spill`], also
-/// run inside the parallel MULT/MAC dispatch.
-fn stage_spill_planes(col: &mut PlaneBuf, first_reg: u8, p: usize, idx: usize, dst_base: usize) {
-    let a = RegFile::spill_addr(first_reg, p, idx);
-    for i in 0..p {
-        col.copy_plane(a.base + i, dst_base + i);
     }
 }
 
@@ -520,6 +703,170 @@ mod tests {
         }
         let got = e.read_reg_lanes(0, 1, 8).unwrap();
         assert_eq!(got, w);
+    }
+
+    /// Two engines with identical data, one interpreting and one
+    /// replaying compiled kernels, must agree on everything observable.
+    fn assert_fused_matches_interp(progs: &[Program]) {
+        let cfg = EngineConfig::small();
+        let mut interp = Engine::new(cfg);
+        interp.set_fuse(false);
+        let mut fused = Engine::new(cfg);
+        fused.set_fuse(true);
+        let lanes = interp.pe_rows();
+        for e in [&mut interp, &mut fused] {
+            for c in 0..e.block_cols() {
+                let vals: Vec<i64> = (0..lanes).map(|l| ((l + c) % 200) as i64 - 100).collect();
+                e.write_reg_lanes(c, 1, 8, &vals).unwrap();
+                e.write_reg_lanes(c, 2, 8, &vals).unwrap();
+                for idx in 0..4 {
+                    let sv: Vec<i64> =
+                        (0..lanes).map(|l| ((l * 3 + idx) % 61) as i64 - 30).collect();
+                    e.write_spill(c, 8, 8, idx, &sv);
+                }
+            }
+        }
+        for prog in progs {
+            let si = interp.execute(prog).unwrap();
+            let sf = fused.execute(prog).unwrap();
+            assert_eq!(si, sf, "ExecStats diverged on {prog:?}");
+        }
+        assert_eq!(interp.columns(), fused.columns(), "column state diverged");
+        assert_eq!(interp.drain_fifo(), fused.drain_fifo());
+    }
+
+    #[test]
+    fn fused_replay_matches_interpreter_on_mixed_program() {
+        let prog: Program = [
+            Instr::setp(0, 8),
+            Instr::setp(1, 32),
+            Instr::selblk(1),
+            Instr::ldi(3, 55),
+            Instr::selblk(SEL_ALL),
+            Instr::new(Opcode::Mult, 4, 1, 2, 1),
+            Instr::new(Opcode::Mac, 4, 1, 2, 2),
+            Instr::mov(6, 4),
+            Instr::add(6, 6, 4),
+            Instr::accum(6, 3),
+            Instr::fold(6, 1),
+            Instr::read(6),
+            Instr::rshift(),
+            Instr::rshift(),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        assert_fused_matches_interp(&[prog]);
+    }
+
+    #[test]
+    fn fused_staging_and_selection_persist_across_programs() {
+        // LDI in stream 1 replayed by a bare WRITE in stream 2, under a
+        // SELBLK that also persists across the HALT boundary
+        let p1: Program = [Instr::selblk(2), Instr::ldi(1, 99), Instr::halt()]
+            .into_iter()
+            .collect();
+        let p2: Program = [Instr::write(3, 0), Instr::selblk(SEL_ALL), Instr::halt()]
+            .into_iter()
+            .collect();
+        assert_fused_matches_interp(&[p1.clone(), p2.clone()]);
+        // and the fused engine's own semantics are right in absolute terms
+        let mut e = Engine::new(EngineConfig::small());
+        e.set_fuse(true);
+        e.execute(&p1).unwrap();
+        e.execute(&p2).unwrap();
+        assert!(e.read_reg_lanes(2, 3, 8).unwrap().iter().all(|&v| v == 99));
+        assert!(e.read_reg_lanes(0, 3, 8).unwrap().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn kernel_cache_reuses_lowered_programs() {
+        let mut e = small();
+        e.set_fuse(true);
+        let prog: Program = [
+            Instr::setp(0, 8),
+            Instr::setp(1, 32),
+            Instr::mult(4, 1, 2),
+            Instr::mac(4, 1, 2),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        e.execute(&prog).unwrap();
+        assert_eq!(e.kernel_cache_len(), 1);
+        e.execute(&prog).unwrap();
+        assert_eq!(e.kernel_cache_len(), 1, "same program + entry state: cache hit");
+        // a different entry param state lowers separately
+        let setp: Program = [Instr::setp(0, 4), Instr::halt()].into_iter().collect();
+        e.execute(&setp).unwrap();
+        e.execute(&prog).unwrap();
+        assert_eq!(e.kernel_cache_len(), 3, "new entry state: new kernel");
+    }
+
+    #[test]
+    fn fused_faulting_programs_fall_back_to_interpreter_errors() {
+        let mut e = small();
+        e.set_fuse(true);
+        let bad: Program = [Instr::selblk(99), Instr::halt()].into_iter().collect();
+        assert!(matches!(e.execute(&bad), Err(EngineError::BadColumn(99, _))));
+        e.reset();
+        let bad: Program = [Instr::setp(0, 1), Instr::halt()].into_iter().collect();
+        assert!(matches!(e.execute(&bad), Err(EngineError::Controller(..))));
+        e.reset();
+        let bad: Program = [Instr::halt(), Instr::nop(), Instr::halt()].into_iter().collect();
+        assert!(matches!(e.execute(&bad), Err(EngineError::Controller(..))));
+    }
+
+    #[test]
+    fn kernel_cache_verifies_program_identity_on_hit() {
+        // simulate a 64-bit fingerprint collision by planting a
+        // different program's kernel in the slot the real program
+        // hashes to: the hit must be rejected by the full program
+        // comparison, never silently replayed
+        let mut e = small();
+        e.set_fuse(true);
+        let real: Program = [Instr::ldi(1, 5), Instr::halt()].into_iter().collect();
+        let planted: Program = [Instr::ldi(1, 9), Instr::halt()].into_iter().collect();
+        let key = (real.fingerprint(), e.controller.params, e.sel);
+        let wrong =
+            CompiledKernel::lower(&planted, e.block_cols(), None, e.controller.params).unwrap();
+        e.kernels.insert(key, (planted, Some(Arc::new(wrong))));
+        e.execute(&real).unwrap();
+        assert!(
+            e.read_reg_lanes(0, 1, 8).unwrap().iter().all(|&v| v == 5),
+            "collision slot must be replaced, not replayed"
+        );
+    }
+
+    #[test]
+    fn fused_fifo_underflow_takes_interpreter_semantics() {
+        // an RSHIFT underflow is the one data-pass fault a lowered
+        // kernel can hit at replay time; `rshift_safe` must route such
+        // programs to the interpreter so the fault leaves the exact
+        // interpreter partial state (SELBLK/LDI applied up to the
+        // faulting instruction)
+        let mut fused = small();
+        fused.set_fuse(true);
+        let mut interp = small();
+        interp.set_fuse(false);
+        let mut over = Program::new();
+        over.push(Instr::selblk(1));
+        over.push(Instr::ldi(2, 7));
+        over.push(Instr::read(4));
+        for _ in 0..=fused.pe_rows() {
+            over.push(Instr::rshift());
+        }
+        over.seal();
+        assert!(matches!(fused.execute(&over), Err(EngineError::FifoEmpty)));
+        assert!(matches!(interp.execute(&over), Err(EngineError::FifoEmpty)));
+        // identical persistent front-end state after the fault: the
+        // next stream's bare WRITE replays the same staging value
+        // under the same live selection on both engines
+        let p2: Program = [Instr::write(3, 0), Instr::halt()].into_iter().collect();
+        fused.execute(&p2).unwrap();
+        interp.execute(&p2).unwrap();
+        assert_eq!(fused.columns(), interp.columns());
+        assert!(fused.read_reg_lanes(1, 3, 8).unwrap().iter().all(|&v| v == 7));
     }
 
     #[test]

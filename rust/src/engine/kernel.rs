@@ -1,0 +1,466 @@
+//! Compiled column kernels: a sealed [`Program`] lowered once into a
+//! flat per-column trace the engine replays with **one worker-pool
+//! dispatch per segment** instead of one dispatch + join per
+//! instruction.
+//!
+//! The interpreter's per-instruction costs are host-side bookkeeping
+//! (Op-Params lookups, register resolution, a pool wake + barrier), all
+//! of which are loop-invariant for a given program and entry state.
+//! Lowering hoists them: every [`KernelOp`] carries its resolved
+//! register windows, radix, precision and spill pointer, and
+//! consecutive column-local ops (LDI/WRITE/MOV/ADD/SUB/MULT/MAC) fuse
+//! into a [`KernelItem::Segment`] — in a GEMV chunk pass the whole
+//! `k_per_pe` MULT/MAC burst becomes a single dispatch. Barriers remain
+//! only where columns actually exchange data or talk to the host:
+//! ACCUM (east->west hops), FOLD (lane network), READ/RSHIFT (output
+//! column). Timing is untouched — the engine still issues every
+//! instruction through the [`Controller`](crate::tile::controller), so
+//! `ExecStats` (cycles included) are bit-identical to the interpreter.
+//!
+//! A kernel is valid only for the *entry state* it was lowered against:
+//! Op-Params and SELBLK persist across programs (they are config
+//! registers), so the engine keys its kernel cache on
+//! `(program fingerprint, entry OpParams, entry selection)`. The LDI
+//! staging register also persists, but is handled symbolically
+//! ([`StageVal::EntryStaged`]) so it never fragments the cache.
+//!
+//! Lowering is total on well-formed programs and *refuses* (returns
+//! `None`) anything the interpreter would fault on — a mid-stream HALT,
+//! an invalid SETP, an out-of-range SELBLK or register window. The
+//! engine then falls back to the per-instruction interpreter, which
+//! reports the identical error with its usual partial-effect semantics
+//! (also the `IMAGINE_FUSE=0` escape hatch, docs/PERF.md).
+
+use crate::isa::{Opcode, Program};
+use crate::pim::alu::{self, AluScratch};
+use crate::pim::{PlaneBuf, RegFile, REG_BITS};
+use crate::tile::params::OpParams;
+use super::engine::SEL_ALL;
+
+/// Column selection of one kernel step, resolved at lowering time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColSel {
+    /// Every block column (SELBLK 0x3FF).
+    All,
+    /// A single selected block column.
+    One(u32),
+}
+
+impl ColSel {
+    #[inline]
+    pub fn contains(self, c: usize) -> bool {
+        match self {
+            ColSel::All => true,
+            ColSel::One(k) => k as usize == c,
+        }
+    }
+}
+
+/// The broadcast value of an LDI/WRITE step: resolved at lowering when
+/// an LDI appears earlier in the same program, or the engine's staging
+/// register at program entry (a WRITE replaying the previous stream's
+/// LDI — the staging register is engine state that survives HALT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageVal {
+    Imm(i64),
+    EntryStaged,
+}
+
+/// One per-column data operation with every Op-Param and register
+/// window resolved — a worker applies it to its own column without
+/// touching shared state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelOp {
+    /// LDI/WRITE: broadcast a value into a register window.
+    Broadcast { base: usize, width: usize, value: StageVal },
+    /// MOV with both windows resolved at the issue-time acc width.
+    Mov { dst: (usize, usize), src: (usize, usize) },
+    /// ADD/SUB ripple.
+    AddSub { dst: (usize, usize), a: (usize, usize), b: (usize, usize), subtract: bool },
+    /// MULT/MAC, optionally staging a spill operand pair first (the
+    /// PiCaSO-IM third-address pointer, paper §IV-D).
+    Mac {
+        dst: (usize, usize),
+        a: (usize, usize),
+        b: (usize, usize),
+        clear: bool,
+        booth: bool,
+        precision: usize,
+        spill: Option<usize>,
+    },
+}
+
+impl KernelOp {
+    /// Apply this op to one column. `entry_staged` resolves
+    /// [`StageVal::EntryStaged`] broadcasts.
+    pub fn apply(&self, col: &mut PlaneBuf, scratch: &mut AluScratch, entry_staged: i64) {
+        match self {
+            KernelOp::Broadcast { base, width, value } => {
+                let v = match value {
+                    StageVal::Imm(v) => *v,
+                    StageVal::EntryStaged => entry_staged,
+                };
+                col.broadcast(*base, *width, v);
+            }
+            KernelOp::Mov { dst, src } => {
+                alu::mov_with(col, *dst, *src, scratch);
+            }
+            KernelOp::AddSub { dst, a, b, subtract } => {
+                alu::add_sub_with(col, *dst, *a, *b, *subtract, scratch);
+            }
+            KernelOp::Mac { dst, a, b, clear, booth, precision, spill } => {
+                if let Some(e) = spill {
+                    let first = crate::gemv::mapper::SPILL_FIRST_REG;
+                    stage_spill_planes(col, first, *precision, 2 * e, a.0);
+                    stage_spill_planes(col, first, *precision, 2 * e + 1, b.0);
+                }
+                if *booth {
+                    alu::mac_booth4_with(col, *dst, *a, *b, *clear, scratch);
+                } else {
+                    alu::mac_radix2_with(col, *dst, *a, *b, *clear, scratch);
+                }
+            }
+        }
+    }
+}
+
+/// One step of a fused segment: a column op plus its selection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelStep {
+    pub sel: ColSel,
+    pub op: KernelOp,
+}
+
+/// One replay item: a fused segment (single pool dispatch) or a
+/// barrier that moves data between columns or off the array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelItem {
+    /// One worker-pool dispatch: every column applies, in program
+    /// order, the steps whose selection contains it.
+    Segment(Vec<KernelStep>),
+    /// READ: stage column 0's accumulator into the output shift column.
+    Read { base: usize, width: usize },
+    /// RSHIFT: pop one element off the shift column into FIFO-out.
+    Rshift,
+    /// ACCUM: `hops` sequential east->west accumulation hops.
+    Accum { base: usize, width: usize, hops: usize },
+    /// FOLD: one lane-network fold step per selected column.
+    Fold { sel: ColSel, base: usize, width: usize, group: usize },
+}
+
+/// A program lowered against a fixed entry state, ready to replay.
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    pub items: Vec<KernelItem>,
+    /// SELBLK state after the program (`None` = program never selects,
+    /// engine selection is left as-is).
+    pub final_sel: Option<Option<usize>>,
+    /// LDI staging value after the program (`None` = no LDI executed).
+    pub final_staged: Option<i64>,
+}
+
+impl CompiledKernel {
+    /// Number of fused segments (dispatches the replay will make for
+    /// column work; introspection for tests and benches).
+    pub fn segments(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| matches!(i, KernelItem::Segment(_)))
+            .count()
+    }
+
+    /// Lower `prog` against the given entry state. Returns `None` when
+    /// the program would fault in the interpreter (mid-stream HALT, bad
+    /// SETP/SELBLK, register overflow) — the caller falls back to the
+    /// interpreter so the error surfaces exactly as before.
+    pub fn lower(
+        prog: &Program,
+        ncols: usize,
+        entry_sel: Option<usize>,
+        entry_params: OpParams,
+    ) -> Option<CompiledKernel> {
+        let mut params = entry_params;
+        let mut sel = entry_sel;
+        let mut staged: Option<i64> = None;
+        let mut sel_changed = false;
+        let mut items: Vec<KernelItem> = Vec::new();
+        let mut seg: Vec<KernelStep> = Vec::new();
+        let flush = |items: &mut Vec<KernelItem>, seg: &mut Vec<KernelStep>| {
+            if !seg.is_empty() {
+                items.push(KernelItem::Segment(std::mem::take(seg)));
+            }
+        };
+        let n = prog.instrs.len();
+        for (idx, instr) in prog.instrs.iter().enumerate() {
+            if instr.op == Opcode::Halt && idx + 1 != n {
+                return None; // interpreter faults AfterHalt on the next op
+            }
+            let cursel = match sel {
+                None => ColSel::All,
+                Some(c) => ColSel::One(c as u32),
+            };
+            match instr.op {
+                Opcode::Nop | Opcode::Sync | Opcode::Halt => {}
+                Opcode::Setp => {
+                    // mirror the controller's validation; the replay's
+                    // timing pass re-applies it to the live controller
+                    params.set(instr.rd, instr.imm).ok()?;
+                }
+                Opcode::Selblk => {
+                    if instr.imm == SEL_ALL {
+                        sel = None;
+                    } else if (instr.imm as usize) < ncols {
+                        sel = Some(instr.imm as usize);
+                    } else {
+                        return None; // interpreter faults BadColumn
+                    }
+                    sel_changed = true;
+                }
+                Opcode::Ldi | Opcode::Write => {
+                    if instr.op == Opcode::Ldi {
+                        // sign-extend the 10-bit immediate
+                        staged = Some(((instr.imm as i64) << 54) >> 54);
+                    }
+                    let r = RegFile::resolve(instr.rd, REG_BITS).ok()?;
+                    let value = match staged {
+                        Some(v) => StageVal::Imm(v),
+                        None => StageVal::EntryStaged,
+                    };
+                    seg.push(KernelStep {
+                        sel: cursel,
+                        op: KernelOp::Broadcast { base: r.base, width: r.width, value },
+                    });
+                }
+                Opcode::Mov => {
+                    let d = RegFile::resolve(instr.rd, params.acc_width).ok()?;
+                    let s = RegFile::resolve(instr.rs1, params.acc_width).ok()?;
+                    seg.push(KernelStep {
+                        sel: cursel,
+                        op: KernelOp::Mov { dst: d.as_tuple(), src: s.as_tuple() },
+                    });
+                }
+                Opcode::Add | Opcode::Sub => {
+                    let d = RegFile::resolve(instr.rd, params.acc_width).ok()?;
+                    let a = RegFile::resolve(instr.rs1, params.acc_width).ok()?;
+                    let b = RegFile::resolve(instr.rs2, params.acc_width).ok()?;
+                    seg.push(KernelStep {
+                        sel: cursel,
+                        op: KernelOp::AddSub {
+                            dst: d.as_tuple(),
+                            a: a.as_tuple(),
+                            b: b.as_tuple(),
+                            subtract: instr.op == Opcode::Sub,
+                        },
+                    });
+                }
+                Opcode::Mult | Opcode::Mac => {
+                    let d = RegFile::resolve(instr.rd, params.acc_width).ok()?;
+                    let a = RegFile::resolve(instr.rs1, params.precision).ok()?;
+                    let b = RegFile::resolve(instr.rs2, params.precision).ok()?;
+                    seg.push(KernelStep {
+                        sel: cursel,
+                        op: KernelOp::Mac {
+                            dst: d.as_tuple(),
+                            a: a.as_tuple(),
+                            b: b.as_tuple(),
+                            clear: instr.op == Opcode::Mult,
+                            booth: params.radix == 4,
+                            precision: params.precision,
+                            spill: instr.imm.checked_sub(1).map(|e| e as usize),
+                        },
+                    });
+                }
+                Opcode::Read => {
+                    flush(&mut items, &mut seg);
+                    let r = RegFile::resolve(instr.rs1, params.acc_width).ok()?;
+                    items.push(KernelItem::Read { base: r.base, width: r.width });
+                }
+                Opcode::Rshift => {
+                    flush(&mut items, &mut seg);
+                    items.push(KernelItem::Rshift);
+                }
+                Opcode::Accum => {
+                    flush(&mut items, &mut seg);
+                    let r = RegFile::resolve(instr.rd, params.acc_width).ok()?;
+                    items.push(KernelItem::Accum {
+                        base: r.base,
+                        width: r.width,
+                        hops: instr.imm.max(1) as usize,
+                    });
+                }
+                Opcode::Fold => {
+                    flush(&mut items, &mut seg);
+                    let r = RegFile::resolve(instr.rd, params.acc_width).ok()?;
+                    items.push(KernelItem::Fold {
+                        sel: cursel,
+                        base: r.base,
+                        width: r.width,
+                        group: crate::pim::PES_PER_BLOCK << instr.imm as usize,
+                    });
+                }
+            }
+        }
+        flush(&mut items, &mut seg);
+        Some(CompiledKernel {
+            items,
+            final_sel: sel_changed.then_some(sel),
+            final_staged: staged,
+        })
+    }
+}
+
+/// Copy spill element `idx` (`p` planes) into the register window at
+/// `dst_base` — the per-column body of `Engine::stage_spill`, also run
+/// inside the fused MULT/MAC steps and the interpreter's dispatch.
+pub(crate) fn stage_spill_planes(
+    col: &mut PlaneBuf,
+    first_reg: u8,
+    p: usize,
+    idx: usize,
+    dst_base: usize,
+) {
+    let a = RegFile::spill_addr(first_reg, p, idx);
+    for i in 0..p {
+        col.copy_plane(a.base + i, dst_base + i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+    use crate::isa::encode::params;
+
+    fn lower_default(prog: &Program) -> Option<CompiledKernel> {
+        CompiledKernel::lower(prog, 4, None, OpParams::default())
+    }
+
+    #[test]
+    fn chunk_burst_lowers_to_one_segment() {
+        // the GEMV chunk-pass shape: SETPs + MULT/MAC burst + SYNC
+        let mut prog = Program::new();
+        prog.push(Instr::setp(params::PRECISION, 8));
+        prog.push(Instr::setp(params::ACC_WIDTH, 32));
+        prog.push(Instr::setp(params::RADIX, 2));
+        for e in 0..12u16 {
+            let op = if e == 0 { Opcode::Mult } else { Opcode::Mac };
+            prog.push(Instr::new(op, 4, 1, 2, e + 1));
+        }
+        prog.push(Instr::sync());
+        prog.seal();
+        let k = lower_default(&prog).unwrap();
+        assert_eq!(k.segments(), 1, "whole MAC burst must fuse: {:?}", k.items);
+        let KernelItem::Segment(steps) = &k.items[0] else {
+            panic!("expected a segment first");
+        };
+        assert_eq!(steps.len(), 12);
+        assert!(matches!(
+            steps[0].op,
+            KernelOp::Mac { clear: true, spill: Some(0), precision: 8, .. }
+        ));
+        assert!(matches!(
+            steps[11].op,
+            KernelOp::Mac { clear: false, spill: Some(11), .. }
+        ));
+        assert_eq!(k.final_sel, None);
+        assert_eq!(k.final_staged, None);
+    }
+
+    #[test]
+    fn barriers_split_segments_and_selblk_does_not() {
+        let prog: Program = [
+            Instr::ldi(1, 5),
+            Instr::selblk(2),
+            Instr::ldi(1, 7),
+            Instr::selblk(SEL_ALL),
+            Instr::accum(4, 2),
+            Instr::mov(5, 4),
+            Instr::read(4),
+            Instr::rshift(),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let k = lower_default(&prog).unwrap();
+        // [seg(ldi, ldi@col2), accum, seg(mov), read, rshift]
+        assert_eq!(k.segments(), 2, "{:?}", k.items);
+        let KernelItem::Segment(s0) = &k.items[0] else { panic!() };
+        assert_eq!(s0.len(), 2);
+        assert_eq!(s0[0].sel, ColSel::All);
+        assert_eq!(s0[1].sel, ColSel::One(2));
+        assert!(matches!(k.items[1], KernelItem::Accum { hops: 2, .. }));
+        assert!(matches!(k.items[3], KernelItem::Read { .. }));
+        assert!(matches!(k.items[4], KernelItem::Rshift));
+        assert_eq!(k.final_sel, Some(None), "ends on SELBLK ALL");
+        assert_eq!(k.final_staged, Some(7));
+    }
+
+    #[test]
+    fn setp_resolves_later_windows() {
+        let prog: Program = [
+            Instr::setp(params::PRECISION, 4),
+            Instr::setp(params::ACC_WIDTH, 12),
+            Instr::setp(params::RADIX, 4),
+            Instr::mac(4, 1, 2),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let k = lower_default(&prog).unwrap();
+        let KernelItem::Segment(steps) = &k.items[0] else { panic!() };
+        let KernelOp::Mac { dst, a, booth, precision, .. } = &steps[0].op else {
+            panic!()
+        };
+        assert_eq!(*dst, (4 * 32, 12));
+        assert_eq!(*a, (32, 4));
+        assert!(*booth);
+        assert_eq!(*precision, 4);
+    }
+
+    #[test]
+    fn write_without_ldi_uses_entry_staging() {
+        let prog: Program = [Instr::write(3, 0), Instr::halt()].into_iter().collect();
+        let k = lower_default(&prog).unwrap();
+        let KernelItem::Segment(steps) = &k.items[0] else { panic!() };
+        assert!(matches!(
+            steps[0].op,
+            KernelOp::Broadcast { value: StageVal::EntryStaged, .. }
+        ));
+        assert_eq!(k.final_staged, None, "no LDI: engine staging unchanged");
+    }
+
+    #[test]
+    fn faulting_programs_refuse_to_lower() {
+        // mid-stream HALT
+        let p: Program = [Instr::halt(), Instr::nop(), Instr::halt()].into_iter().collect();
+        assert!(lower_default(&p).is_none());
+        // bad SETP value
+        let p: Program = [Instr::setp(0, 1), Instr::halt()].into_iter().collect();
+        assert!(lower_default(&p).is_none());
+        // SELBLK out of range for 4 columns
+        let p: Program = [Instr::selblk(99), Instr::halt()].into_iter().collect();
+        assert!(lower_default(&p).is_none());
+        // register window overflowing the 1024-bit column
+        let p: Program = [
+            Instr::setp(params::PRECISION, 16),
+            Instr::setp(params::ACC_WIDTH, 64),
+            Instr::add(31, 1, 2),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        assert!(lower_default(&p).is_none());
+    }
+
+    #[test]
+    fn entry_state_changes_the_lowering() {
+        // the same WRITE lowers against whatever selection is live
+        let prog: Program = [Instr::write(1, 0), Instr::halt()].into_iter().collect();
+        let all = CompiledKernel::lower(&prog, 4, None, OpParams::default()).unwrap();
+        let one = CompiledKernel::lower(&prog, 4, Some(3), OpParams::default()).unwrap();
+        let KernelItem::Segment(sa) = &all.items[0] else { panic!() };
+        let KernelItem::Segment(so) = &one.items[0] else { panic!() };
+        assert_eq!(sa[0].sel, ColSel::All);
+        assert_eq!(so[0].sel, ColSel::One(3));
+    }
+}

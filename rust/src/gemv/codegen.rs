@@ -1,6 +1,15 @@
 //! Instruction generation: MappingPlan -> IMAGine programs, plus the
 //! host-side operand staging and result extraction that the shell DMA
 //! performs around them.
+//!
+//! Each generated program opens with the full SETP triple
+//! (precision / acc width / radix), which pins the entry Op-Params
+//! state: the engine lowers the stream once into a compiled column
+//! kernel (`engine::kernel`) and replays it on every subsequent pass
+//! and request — the chunk programs' `k_per_pe` MULT/MAC burst becomes
+//! a single worker-pool dispatch, and the reduce program is pure
+//! barriers. The codegen layer needs no engine handle for that: the
+//! kernel cache keys on the program fingerprint + entry state.
 
 use crate::engine::{Engine, EngineError};
 use crate::isa::{Instr, Program};
@@ -354,6 +363,29 @@ mod tests {
             hot.stats.plane_word_ops,
             cold.stats.plane_word_ops
         );
+    }
+
+    #[test]
+    fn fused_and_interpreted_gemv_agree_exactly() {
+        // same GemvProgram, two engines: compiled-kernel replay vs the
+        // per-instruction interpreter — y AND ExecStats must match
+        let config = EngineConfig::small();
+        let pl = plan(&config, 48, 64, 8, 2);
+        let gp = GemvProgram::generate(pl);
+        let mut fused = Engine::new(config);
+        fused.set_fuse(true);
+        let mut interp = Engine::new(config);
+        interp.set_fuse(false);
+        let mut rng = XorShift::new(41);
+        let w = rng.vec_i64(48 * 64, -128, 127);
+        let x = rng.vec_i64(64, -128, 127);
+        let rf = gp.execute(&mut fused, &w, &x).unwrap();
+        let ri = gp.execute(&mut interp, &w, &x).unwrap();
+        assert_eq!(rf.y, ri.y);
+        assert_eq!(rf.stats, ri.stats, "cycles/plane_word_ops must be identical");
+        assert_eq!(rf.y, host_gemv(&w, &x, 48, 64));
+        // the kernel cache holds the chunk + reduce programs
+        assert!(fused.kernel_cache_len() >= 2, "{}", fused.kernel_cache_len());
     }
 
     #[test]

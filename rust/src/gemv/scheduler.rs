@@ -29,12 +29,19 @@ impl Layer {
 /// One GEMV outcome: the result vector and the run's engine stats.
 pub type GemvOutcome = Result<(Vec<i64>, ExecStats), GemvError>;
 
+/// Program-cache key: the GEMV shape (m, n, precision, radix).
+type ShapeKey = (usize, usize, usize, u8);
+
 /// A GEMV/MLP scheduler bound to one engine instance. Compiled
-/// `GemvProgram`s are cached per (m, n, p, radix) shape.
+/// `GemvProgram`s are cached per (m, n, p, radix) shape behind an
+/// `Arc`, so serving a request clones a pointer, not the instruction
+/// streams (§Perf — the engine layer additionally caches each
+/// program's lowered column kernel, so a cache hit here replays a
+/// fully compiled trace).
 pub struct GemvScheduler {
     pub config: EngineConfig,
     engine: Engine,
-    cache: std::collections::BTreeMap<(usize, usize, usize, u8), GemvProgram>,
+    cache: std::collections::BTreeMap<ShapeKey, std::sync::Arc<GemvProgram>>,
     /// Weight-residency token: identity of the matrix whose spill
     /// planes are currently staged in the engine's BRAM (§Perf L3-4).
     resident: Option<(u64, usize, usize, usize, u8)>,
@@ -55,12 +62,15 @@ impl GemvScheduler {
         }
     }
 
-    fn program(&mut self, m: usize, n: usize, p: usize, radix: u8) -> &GemvProgram {
+    fn program(&mut self, m: usize, n: usize, p: usize, radix: u8) -> std::sync::Arc<GemvProgram> {
         let key = (m, n, p, radix);
         let config = &self.config;
         self.cache
             .entry(key)
-            .or_insert_with(|| GemvProgram::generate(plan(config, m, n, p, radix)))
+            .or_insert_with(|| {
+                std::sync::Arc::new(GemvProgram::generate(plan(config, m, n, p, radix)))
+            })
+            .clone()
     }
 
     /// Run one GEMV: y = W @ x (exact int32 accumulation).
@@ -74,7 +84,7 @@ impl GemvScheduler {
         radix: u8,
     ) -> Result<(Vec<i64>, ExecStats), GemvError> {
         self.resident = None;
-        let prog = self.program(m, n, p, radix).clone();
+        let prog = self.program(m, n, p, radix);
         let res = prog.execute(&mut self.engine, w, x)?;
         Ok((res.y, res.stats))
     }
@@ -98,7 +108,7 @@ impl GemvScheduler {
     ) -> Result<(Vec<i64>, ExecStats), GemvError> {
         let key = (token, m, n, p, radix);
         let hot = self.resident == Some(key);
-        let prog = self.program(m, n, p, radix).clone();
+        let prog = self.program(m, n, p, radix);
         let res = prog.execute_opts(&mut self.engine, w, x, hot)?;
         self.resident = if prog.supports_residency() { Some(key) } else { None };
         Ok((res.y, res.stats))
@@ -124,7 +134,7 @@ impl GemvScheduler {
         p: usize,
         radix: u8,
     ) -> Vec<GemvOutcome> {
-        let prog = self.program(m, n, p, radix).clone();
+        let prog = self.program(m, n, p, radix);
         let supports = prog.supports_residency();
         let key = (token, m, n, p, radix);
         let mut out = Vec::with_capacity(xs.len());

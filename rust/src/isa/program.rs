@@ -65,6 +65,34 @@ impl Program {
         let multi = self.instrs.iter().filter(|i| i.op.is_multicycle()).count();
         (self.instrs.len() - multi, multi)
     }
+
+    /// Stable FNV-1a fingerprint of the instruction stream — the
+    /// engine's compiled-kernel cache key (two programs with equal
+    /// fingerprints and equal entry state lower to the same kernel).
+    ///
+    /// Hashes the *unmasked* in-memory fields, not the 30-bit
+    /// encoding: `encode()` truncates out-of-range fields (rd to 5
+    /// bits, imm to 10), so two semantically different hand-built
+    /// programs (one of which faults in the interpreter) could alias
+    /// to one encoding — they must not alias to one cached kernel.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for i in &self.instrs {
+            let bytes = [
+                i.op as u8,
+                i.rd,
+                i.rs1,
+                i.rs2,
+                i.imm as u8,
+                (i.imm >> 8) as u8,
+            ];
+            for b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h ^ self.instrs.len() as u64
+    }
 }
 
 impl FromIterator<Instr> for Program {
@@ -97,6 +125,27 @@ mod tests {
         .collect();
         let q = Program::decode(&p.encode()).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_discriminating() {
+        let p: Program = [Instr::setp(0, 8), Instr::mac(4, 1, 2), Instr::halt()]
+            .into_iter()
+            .collect();
+        assert_eq!(p.fingerprint(), p.clone().fingerprint());
+        let q: Program = [Instr::setp(0, 8), Instr::mac(4, 1, 3), Instr::halt()]
+            .into_iter()
+            .collect();
+        assert_ne!(p.fingerprint(), q.fingerprint());
+        assert_ne!(Program::new().fingerprint(), p.fingerprint());
+        // out-of-range fields alias after encoding (imm masked to 10
+        // bits) but are semantically different — they must not share a
+        // fingerprint, or a faulting program could hit a valid cache
+        // entry in the engine's kernel cache
+        let a: Program = [Instr::selblk(0x3FF), Instr::halt()].into_iter().collect();
+        let b: Program = [Instr::selblk(0x7FF), Instr::halt()].into_iter().collect();
+        assert_eq!(a.encode()[0], b.encode()[0], "encoding masks imm");
+        assert_ne!(a.fingerprint(), b.fingerprint(), "fingerprint must not");
     }
 
     #[test]

@@ -14,8 +14,66 @@
 //! serialize columns on the allocator lock under the column-parallel
 //! dispatch). The plain-named wrappers allocate a fresh scratch and are
 //! kept for tests/benches and one-off callers.
+//!
+//! ## Occupancy-aware skipping (`IMAGINE_SKIP`, default on)
+//!
+//! The inner loops consult [`PlaneBuf`]'s occupancy index (per-plane
+//! conservative nonzero-word spans) to bypass work that is provably a
+//! no-op at word granularity:
+//!
+//! - an all-zero multiplier mask plane / Booth digit plane contributes
+//!   `eff = 0` with a zero carry-in, so the whole pass is skipped;
+//! - a word whose mask bits are zero never develops a carry — only the
+//!   nonzero mask words of a pass are walked (`AluScratch::active`);
+//! - a word outside the *multiplicand* window's span adds `0` (or, on
+//!   a negated pass, `2^win ≡ 0` modulo the accumulator window), which
+//!   leaves the accumulator bits identical — also skipped;
+//! - ADD/SUB/ACCUM words outside the union span of their source
+//!   windows are carry-settled: the destination word is the constant
+//!   the full walk would have produced (zero for ADD/SUB, unchanged
+//!   for ACCUM).
+//!
+//! Results are **bit-identical** either way, and the returned cycle
+//! costs are always the full hardware schedule (the paper's timing
+//! model must not observe the simulator shortcut). `IMAGINE_SKIP=0`
+//! (or [`set_skip`]`(false)`) forces the reference full-width walks,
+//! which the `fused_skip_equivalence` suite uses as ground truth.
 
 use super::bitplane::PlaneBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Latched skip mode: 0 = unresolved (read `IMAGINE_SKIP` on first
+/// use), 1 = forced off, 2 = forced on.
+static SKIP_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the occupancy-skip fast paths are active (`IMAGINE_SKIP`,
+/// default on). Results are bit-identical either way — this only
+/// selects between the reference walk and the span-restricted walk.
+pub fn skip_enabled() -> bool {
+    match SKIP_MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let on = crate::util::env_flag("IMAGINE_SKIP", true);
+            SKIP_MODE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force the skip paths on or off process-wide (test/bench hook; the
+/// equivalence suites flip this to compare against the reference walk).
+pub fn set_skip(on: bool) {
+    SKIP_MODE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Drop any [`set_skip`] override and re-latch from `IMAGINE_SKIP` on
+/// next use — tests MUST call this when done so the rest of the test
+/// binary runs under the environment's configured path (the CI
+/// reference job relies on `IMAGINE_SKIP=0` staying in force).
+pub fn reset_skip() {
+    SKIP_MODE.store(0, Ordering::Relaxed);
+}
 
 /// Reusable plane-word scratch for the ALU inner loops. All buffers are
 /// (re)sized on use; contents never carry meaning across calls.
@@ -27,7 +85,8 @@ pub struct AluScratch {
     sb: Vec<u64>,
     /// Ripple-carry plane.
     carry: Vec<u64>,
-    /// Sum staging plane (add/sub); constant-zero plane (booth digit 0).
+    /// Sum staging plane (add/sub); constant-zero plane (booth digit 0);
+    /// shifted-addend staging row (fold).
     sum: Vec<u64>,
     /// Multiplier-bit mask (radix-2) / `|d|==1` select (booth).
     mask: Vec<u64>,
@@ -37,6 +96,8 @@ pub struct AluScratch {
     neg: Vec<u64>,
     /// Sign-extended multiplicand planes, `acc_w * words` long.
     wext: Vec<u64>,
+    /// Word indices active in the current pass (occupancy skip).
+    active: Vec<u32>,
 }
 
 /// Two's-complement sign-extended bit `i` of a `width`-bit register.
@@ -52,6 +113,17 @@ fn fill_ext_planes(buf: &PlaneBuf, base: usize, reg_w: usize, width: usize, out:
     out.resize(width * words, 0);
     for i in 0..width {
         out[i * words..(i + 1) * words].copy_from_slice(ext_plane(buf, base, reg_w, i));
+    }
+}
+
+/// Union of two word spans (`lo >= hi` = empty).
+fn union_span(a: (usize, usize), b: (usize, usize)) -> (usize, usize) {
+    if a.0 >= a.1 {
+        b
+    } else if b.0 >= b.1 {
+        a
+    } else {
+        (a.0.min(b.0), a.1.max(b.1))
     }
 }
 
@@ -90,20 +162,61 @@ pub fn add_sub_with(
     s.sb.resize(words, 0);
     s.sb.copy_from_slice(buf.plane(b_base + b_w - 1));
     s.carry.resize(words, 0);
-    s.carry.fill(if subtract { !0u64 } else { 0 });
     s.sum.resize(words, 0);
-    for i in 0..dst_w {
-        {
-            let ap = if i < a_w { buf.plane(a_base + i) } else { &s.sa[..] };
-            let bp = if i < b_w { buf.plane(b_base + i) } else { &s.sb[..] };
-            for w in 0..words {
-                let (av, bv) = (ap[w], bp[w] ^ if subtract { !0 } else { 0 });
-                let c = s.carry[w];
-                s.sum[w] = av ^ bv ^ c;
-                s.carry[w] = (av & bv) | (c & (av ^ bv));
+    if skip_enabled() {
+        // Carry-settled word runs: outside the union occupancy span of
+        // the operand windows every operand word is zero, so the result
+        // word is zero (for SUB the all-ones borrow pattern cancels
+        // against the +1 carry-in) and the carry never changes. Only
+        // the union span ripples; stale destination words are zeroed.
+        let (slo, shi) = union_span(
+            buf.occ_window(a_base, a_w),
+            buf.occ_window(b_base, b_w),
+        );
+        let (zlo, zhi) = buf.occ_window(dst_base, dst_w);
+        if slo < shi {
+            s.carry[slo..shi].fill(if subtract { !0u64 } else { 0 });
+        }
+        for i in 0..dst_w {
+            if slo < shi {
+                let ap = if i < a_w { buf.plane(a_base + i) } else { &s.sa[..] };
+                let bp = if i < b_w { buf.plane(b_base + i) } else { &s.sb[..] };
+                for w in slo..shi {
+                    let (av, bv) = (ap[w], bp[w] ^ if subtract { !0 } else { 0 });
+                    let c = s.carry[w];
+                    s.sum[w] = av ^ bv ^ c;
+                    s.carry[w] = (av & bv) | (c & (av ^ bv));
+                }
+            }
+            let dp = buf.plane_mut(dst_base + i);
+            let (l0, l1) = (zlo, zhi.min(slo));
+            if l0 < l1 {
+                dp[l0..l1].fill(0);
+            }
+            let (r0, r1) = (zlo.max(shi), zhi);
+            if r0 < r1 {
+                dp[r0..r1].fill(0);
+            }
+            if slo < shi {
+                dp[slo..shi].copy_from_slice(&s.sum[slo..shi]);
             }
         }
-        buf.plane_mut(dst_base + i).copy_from_slice(&s.sum);
+    } else {
+        // reference path (IMAGINE_SKIP=0): the naive full-width ripple
+        s.carry.fill(if subtract { !0u64 } else { 0 });
+        for i in 0..dst_w {
+            {
+                let ap = if i < a_w { buf.plane(a_base + i) } else { &s.sa[..] };
+                let bp = if i < b_w { buf.plane(b_base + i) } else { &s.sb[..] };
+                for w in 0..words {
+                    let (av, bv) = (ap[w], bp[w] ^ if subtract { !0 } else { 0 });
+                    let c = s.carry[w];
+                    s.sum[w] = av ^ bv ^ c;
+                    s.carry[w] = (av & bv) | (c & (av ^ bv));
+                }
+            }
+            buf.plane_mut(dst_base + i).copy_from_slice(&s.sum);
+        }
     }
     mask_reg_tail(buf, dst_base, dst_w);
     (dst_w as u64) + 1
@@ -151,27 +264,65 @@ pub fn mac_radix2_with(
     fill_ext_planes(buf, w_base, p_w, acc_w, &mut s.wext);
     s.mask.resize(words, 0);
     s.carry.resize(words, 0);
+    let skip = skip_enabled();
+    // Words outside the multiplicand window's occupancy span hold zero
+    // in every (sign-extended) plane: a masked add there moves 0, and a
+    // masked subtract moves 2^win ≡ 0 modulo the accumulator window —
+    // bit-identical to running the pass, so those words are skipped.
+    let (wlo, whi) = buf.occ_window(w_base, p_w);
     let mut cycles = 0u64;
     for j in 0..p_x {
-        s.mask.copy_from_slice(buf.plane(x_base + j));
         let subtract = j == p_x - 1; // sign bit of the multiplier
         let win = acc_w.saturating_sub(j);
         let sub_mask = if subtract { !0u64 } else { 0 };
-        for (c, m) in s.carry.iter_mut().zip(&s.mask) {
-            *c = if subtract { *m } else { 0 };
-        }
-        for i in 0..win {
-            let vp = &s.wext[i * words..(i + 1) * words];
-            let acc_p = buf.plane_mut(acc_base + j + i);
-            for w in 0..words {
-                let eff = (vp[w] ^ sub_mask) & s.mask[w];
-                let a = acc_p[w];
-                let c = s.carry[w];
-                acc_p[w] = a ^ eff ^ c;
-                s.carry[w] = (a & eff) | (c & (a ^ eff));
+        cycles += win as u64 + 1; // the hardware schedule, skip or not
+        if skip {
+            let (mlo, mhi) = buf.occ_span(x_base + j);
+            let (lo, hi) = (mlo.max(wlo), mhi.min(whi));
+            s.active.clear();
+            if lo < hi {
+                let mp = buf.plane(x_base + j);
+                for (w, &mw) in mp.iter().enumerate().take(hi).skip(lo) {
+                    if mw != 0 {
+                        s.active.push(w as u32);
+                        s.mask[w] = mw;
+                        s.carry[w] = if subtract { mw } else { 0 };
+                    }
+                }
+            }
+            if s.active.is_empty() {
+                continue; // all-zero mask plane or blank multiplicand
+            }
+            for i in 0..win {
+                let vp = &s.wext[i * words..(i + 1) * words];
+                let acc_p = buf.plane_mut(acc_base + j + i);
+                for &wi in &s.active {
+                    let w = wi as usize;
+                    let eff = (vp[w] ^ sub_mask) & s.mask[w];
+                    let a = acc_p[w];
+                    let c = s.carry[w];
+                    acc_p[w] = a ^ eff ^ c;
+                    s.carry[w] = (a & eff) | (c & (a ^ eff));
+                }
+            }
+        } else {
+            // reference path (IMAGINE_SKIP=0): the naive full-width walk
+            s.mask.copy_from_slice(buf.plane(x_base + j));
+            for (c, m) in s.carry.iter_mut().zip(&s.mask) {
+                *c = if subtract { *m } else { 0 };
+            }
+            for i in 0..win {
+                let vp = &s.wext[i * words..(i + 1) * words];
+                let acc_p = buf.plane_mut(acc_base + j + i);
+                for w in 0..words {
+                    let eff = (vp[w] ^ sub_mask) & s.mask[w];
+                    let a = acc_p[w];
+                    let c = s.carry[w];
+                    acc_p[w] = a ^ eff ^ c;
+                    s.carry[w] = (a & eff) | (c & (a ^ eff));
+                }
             }
         }
-        cycles += win as u64 + 1;
     }
     mask_reg_tail(buf, acc_base, acc_w);
     cycles
@@ -222,36 +373,90 @@ pub fn mac_booth4_with(
     // constant-zero plane standing in for bit -1 of the multiplier
     s.sum.clear();
     s.sum.resize(words, 0);
+    let skip = skip_enabled();
+    let (wlo, whi) = buf.occ_window(w_base, p_w);
+    let sign_span = buf.occ_span(x_base + p_x - 1);
     let mut cycles = 0u64;
     for k in 0..ndigits {
+        let j = 2 * k;
+        let win = acc_w.saturating_sub(j);
+        cycles += win as u64 + 2; // +1 param step, +1 digit decode
+        // A word can only hold a nonzero digit inside the union span of
+        // the three multiplier bit-planes feeding digit k, and can only
+        // move a nonzero multiplicand inside the w window's span — on a
+        // negated digit outside it, `-0` adds 2^win ≡ 0, so everywhere
+        // outside the intersection the digit add is the identity.
+        let (lo, hi) = if skip {
+            let mut u = (0usize, 0usize);
+            for b in [j as isize - 1, j as isize, j as isize + 1] {
+                let sp = if b < 0 {
+                    (0, 0) // constant-zero bit -1
+                } else if (b as usize) < p_x {
+                    buf.occ_span(x_base + b as usize)
+                } else {
+                    sign_span // sign-extended multiplier bits
+                };
+                u = union_span(u, sp);
+            }
+            (u.0.max(wlo), u.1.min(whi))
+        } else {
+            (0, words)
+        };
+        if lo >= hi {
+            continue; // digit provably zero (or multiplicand blank)
+        }
         {
             let bm1 = if k == 0 { &s.sum[..] } else { buf.plane(x_base + 2 * k - 1) };
             let b0 = if 2 * k < p_x { buf.plane(x_base + 2 * k) } else { &s.sb[..] };
             let b1 = if 2 * k + 1 < p_x { buf.plane(x_base + 2 * k + 1) } else { &s.sb[..] };
-            for w in 0..words {
+            for w in lo..hi {
                 let (m1, z0, z1) = (bm1[w], b0[w], b1[w]);
                 s.mask[w] = z0 ^ m1; // |d| == 1
                 s.sel2[w] = (z1 & !z0 & !m1) | (!z1 & z0 & m1); // |d| == 2
                 s.neg[w] = z1 & !(z0 & m1); // d < 0
             }
         }
-        let j = 2 * k;
-        let win = acc_w.saturating_sub(j);
-        s.carry.copy_from_slice(&s.neg); // +1 where negated
-        for i in 0..win {
-            let v1 = &s.wext[i * words..(i + 1) * words];
-            let acc_p = buf.plane_mut(acc_base + j + i);
-            for w in 0..words {
-                let two_w = if i == 0 { 0 } else { s.wext[(i - 1) * words + w] };
-                let bit = (s.mask[w] & v1[w]) | (s.sel2[w] & two_w);
-                let eff = bit ^ s.neg[w];
-                let a = acc_p[w];
-                let c = s.carry[w];
-                acc_p[w] = a ^ eff ^ c;
-                s.carry[w] = (a & eff) | (c & (a ^ eff));
+        if skip {
+            s.active.clear();
+            for w in lo..hi {
+                if (s.mask[w] | s.sel2[w] | s.neg[w]) != 0 {
+                    s.active.push(w as u32);
+                    s.carry[w] = s.neg[w]; // +1 where negated
+                }
+            }
+            if s.active.is_empty() {
+                continue; // every lane's digit is 0 in this span
+            }
+            for i in 0..win {
+                let v1 = &s.wext[i * words..(i + 1) * words];
+                let acc_p = buf.plane_mut(acc_base + j + i);
+                for &wi in &s.active {
+                    let w = wi as usize;
+                    let two_w = if i == 0 { 0 } else { s.wext[(i - 1) * words + w] };
+                    let bit = (s.mask[w] & v1[w]) | (s.sel2[w] & two_w);
+                    let eff = bit ^ s.neg[w];
+                    let a = acc_p[w];
+                    let c = s.carry[w];
+                    acc_p[w] = a ^ eff ^ c;
+                    s.carry[w] = (a & eff) | (c & (a ^ eff));
+                }
+            }
+        } else {
+            s.carry.copy_from_slice(&s.neg); // +1 where negated
+            for i in 0..win {
+                let v1 = &s.wext[i * words..(i + 1) * words];
+                let acc_p = buf.plane_mut(acc_base + j + i);
+                for w in 0..words {
+                    let two_w = if i == 0 { 0 } else { s.wext[(i - 1) * words + w] };
+                    let bit = (s.mask[w] & v1[w]) | (s.sel2[w] & two_w);
+                    let eff = bit ^ s.neg[w];
+                    let a = acc_p[w];
+                    let c = s.carry[w];
+                    acc_p[w] = a ^ eff ^ c;
+                    s.carry[w] = (a & eff) | (c & (a ^ eff));
+                }
             }
         }
-        cycles += win as u64 + 2; // +1 param step, +1 digit decode
     }
     mask_reg_tail(buf, acc_base, acc_w);
     cycles
@@ -283,14 +488,23 @@ pub fn accum_from_with(
     assert_eq!(dst.lanes(), src.lanes(), "column lane mismatch");
     let words = dst.words();
     s.carry.resize(words, 0);
-    s.carry.fill(0);
-    for i in 0..width {
-        let sp = src.plane(base + i);
-        let dp = dst.plane_mut(base + i);
-        for w in 0..words {
-            let (a, b, c) = (dp[w], sp[w], s.carry[w]);
-            dp[w] = a ^ b ^ c;
-            s.carry[w] = (a & b) | (c & (a ^ b));
+    // Words outside the source window's occupancy span add zero and
+    // never develop a carry: the destination is untouched there.
+    let (lo, hi) = if skip_enabled() {
+        src.occ_window(base, width)
+    } else {
+        (0, words)
+    };
+    if lo < hi {
+        s.carry[lo..hi].fill(0);
+        for i in 0..width {
+            let sp = src.plane(base + i);
+            let dp = dst.plane_mut(base + i);
+            for w in lo..hi {
+                let (a, b, c) = (dp[w], sp[w], s.carry[w]);
+                dp[w] = a ^ b ^ c;
+                s.carry[w] = (a & b) | (c & (a ^ b));
+            }
         }
     }
     width as u64 + 2
@@ -305,9 +519,39 @@ pub fn fold_step(
     width: usize,
     group_lanes: usize,
 ) -> u64 {
-    let mut shifted = buf.clone();
-    shifted.shift_lanes_down(base, width, group_lanes);
-    accum_from(buf, &shifted, base, width)
+    fold_step_with(buf, base, width, group_lanes, &mut AluScratch::default())
+}
+
+/// [`fold_step`] against caller-owned scratch (allocation-free).
+///
+/// §Perf: the old implementation cloned the *entire* PlaneBuf (~1024
+/// planes) just to lane-shift a `width`-plane window. This walks the
+/// window once, staging each plane's lane-shifted words in one
+/// word-sized scratch row and adding it back in place — exact, because
+/// each plane is snapshotted before it is overwritten and the adder
+/// never revisits a plane.
+pub fn fold_step_with(
+    buf: &mut PlaneBuf,
+    base: usize,
+    width: usize,
+    group_lanes: usize,
+    s: &mut AluScratch,
+) -> u64 {
+    let words = buf.words();
+    s.carry.resize(words, 0);
+    s.carry.fill(0);
+    s.sum.resize(words, 0);
+    for i in 0..width {
+        // lane-shifted snapshot of the original plane
+        super::bitplane::lane_shift_words(buf.plane(base + i), &mut s.sum, group_lanes);
+        let dp = buf.plane_mut(base + i);
+        for w in 0..words {
+            let (a, b, c) = (dp[w], s.sum[w], s.carry[w]);
+            dp[w] = a ^ b ^ c;
+            s.carry[w] = (a & b) | (c & (a ^ b));
+        }
+    }
+    width as u64 + 2
 }
 
 /// `dst = src` register copy (`width` cycles — one bit-row per cycle).
@@ -552,6 +796,26 @@ mod tests {
     }
 
     #[test]
+    fn fold_step_with_unaligned_group() {
+        // a group size crossing word boundaries exercises the bit-shift
+        // path of the in-place shifted addend
+        let lanes = 300;
+        let mut b = mk(lanes);
+        let v: Vec<i64> = (0..lanes).map(|i| (i as i64 * 13) % 901 - 450).collect();
+        b.write_all(0, 24, &v);
+        let mut s = AluScratch::default();
+        let c = fold_step_with(&mut b, 0, 24, 70, &mut s);
+        assert_eq!(c, 26);
+        let got = b.read_all(0, 24);
+        for l in 0..lanes - 70 {
+            assert_eq!(got[l], v[l] + v[l + 70], "lane {l}");
+        }
+        for l in lanes - 70..lanes {
+            assert_eq!(got[l], v[l], "zero-fill add lane {l}");
+        }
+    }
+
+    #[test]
     fn mov_copies_and_sign_extends() {
         let mut b = mk(64);
         let v: Vec<i64> = (0..64).map(|i| i as i64 - 32).collect();
@@ -565,5 +829,118 @@ mod tests {
     fn mac_rejects_aliasing() {
         let mut b = mk(64);
         mac_radix2(&mut b, (0, 32), (16, 8), (40, 8), false);
+    }
+
+    /// Serializes the tests that flip the process-global skip switch
+    /// so they cannot race each other's reference/skip measurements,
+    /// and re-latches `IMAGINE_SKIP` on drop — even on panic, so a
+    /// failing assertion cannot leave the whole test binary pinned to
+    /// one path. (Other concurrent tests are unaffected either way:
+    /// both paths produce bit-identical results — that is the property
+    /// under test.)
+    static SKIP_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    struct SkipGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+    impl Drop for SkipGuard {
+        fn drop(&mut self) {
+            reset_skip();
+        }
+    }
+
+    fn skip_test_guard() -> SkipGuard {
+        SkipGuard(
+            SKIP_TEST_LOCK
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner()),
+        )
+    }
+
+    /// Run `op` on two identical buffers, one with the skip paths
+    /// forced off and one with them on, and require bit-identical data.
+    fn skip_equivalence_case(
+        lanes: usize,
+        fill: impl Fn(&mut PlaneBuf),
+        op: impl Fn(&mut PlaneBuf) -> u64,
+    ) {
+        let mut reference = mk(lanes);
+        let mut skipped = mk(lanes);
+        fill(&mut reference);
+        fill(&mut skipped);
+        set_skip(false);
+        let c_ref = op(&mut reference);
+        set_skip(true);
+        let c_skip = op(&mut skipped);
+        assert_eq!(c_ref, c_skip, "cycle schedule must not change");
+        assert_eq!(reference, skipped, "skip path diverged from reference");
+    }
+
+    #[test]
+    fn skip_paths_match_reference_walks() {
+        let _g = skip_test_guard();
+        let lanes = 64 * 5 + 17;
+        // sparse x (one hot lane per word-ish), dense w
+        let sparse: Vec<i64> = (0..lanes)
+            .map(|l| if l % 97 == 0 { (l as i64 % 17) - 8 } else { 0 })
+            .collect();
+        let dense: Vec<i64> = (0..lanes).map(|l| (l as i64 * 31) % 255 - 127).collect();
+        let zeros = vec![0i64; lanes];
+        for xvals in [&sparse, &dense, &zeros] {
+            for wvals in [&sparse, &dense, &zeros] {
+                for booth in [false, true] {
+                    skip_equivalence_case(
+                        lanes,
+                        |b| {
+                            b.write_all(0, 8, wvals);
+                            b.write_all(32, 8, xvals);
+                            b.write_all(64, 32, &dense);
+                        },
+                        |b| {
+                            if booth {
+                                mac_booth4(b, (64, 32), (0, 8), (32, 8), false)
+                            } else {
+                                mac_radix2(b, (64, 32), (0, 8), (32, 8), false)
+                            }
+                        },
+                    );
+                }
+                for subtract in [false, true] {
+                    skip_equivalence_case(
+                        lanes,
+                        |b| {
+                            b.write_all(0, 8, wvals);
+                            b.write_all(16, 8, xvals);
+                            // stale destination data the skip path must clear
+                            b.write_all(40, 16, &dense);
+                        },
+                        |b| add_sub(b, (40, 16), (0, 8), (16, 8), subtract),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_accum_from_matches_reference() {
+        let _g = skip_test_guard();
+        let lanes = 64 * 4 + 3;
+        let sparse: Vec<i64> = (0..lanes)
+            .map(|l| if l % 113 == 0 { 1 - (l as i64 % 3) } else { 0 })
+            .collect();
+        let dense: Vec<i64> = (0..lanes).map(|l| (l as i64 * 7) % 501 - 250).collect();
+        for src_vals in [&sparse, &dense] {
+            let mut dst_ref = mk(lanes);
+            let mut dst_skip = mk(lanes);
+            let mut src = mk(lanes);
+            dst_ref.write_all(64, 24, &dense);
+            dst_skip.write_all(64, 24, &dense);
+            src.write_all(64, 24, src_vals);
+            set_skip(false);
+            let c_ref = accum_from(&mut dst_ref, &src, 64, 24);
+            set_skip(true);
+            let c_skip = accum_from(&mut dst_skip, &src, 64, 24);
+            assert_eq!(c_ref, c_skip);
+            assert_eq!(dst_ref, dst_skip);
+        }
     }
 }

@@ -4,23 +4,91 @@
 //! `u64` words (lane `l` lives at word `l / 64`, bit `l % 64`). This is
 //! the transpose of how a CPU would store the values and exactly how the
 //! BRAM stores them: one bitline per PE, one address per bit.
+//!
+//! ## Occupancy index (§Perf)
+//!
+//! Each plane carries a conservative *nonzero-word span* `[lo, hi)`:
+//! every word outside the span is guaranteed zero (words inside may
+//! still be zero — the index over-approximates, never under). The
+//! precise staging paths (`write_all`, `broadcast`, `broadcast_lanes`,
+//! `copy_plane`, `clear_*`) maintain exact or tight spans; anything
+//! that takes a raw `plane_mut` borrow conservatively widens the span
+//! to the full plane. The bit-serial ALU's skip paths
+//! (`pim::alu`, gated by `IMAGINE_SKIP`) use the spans to bypass
+//! all-zero mask planes and carry-settled word runs without ever
+//! changing results — the index is advisory for wall-time only.
+
+/// Conservative nonzero-word span of one plane (`lo >= hi` = blank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Span {
+    lo: u32,
+    hi: u32,
+}
+
+impl Span {
+    const EMPTY: Span = Span { lo: 0, hi: 0 };
+
+    #[inline]
+    fn full(words: usize) -> Span {
+        Span { lo: 0, hi: words as u32 }
+    }
+
+    #[inline]
+    fn is_empty(self) -> bool {
+        self.lo >= self.hi
+    }
+
+    /// Grow the span to cover `[lo, hi)` as well.
+    #[inline]
+    fn widen(&mut self, lo: u32, hi: u32) {
+        if lo >= hi {
+            return;
+        }
+        if self.is_empty() {
+            *self = Span { lo, hi };
+        } else {
+            self.lo = self.lo.min(lo);
+            self.hi = self.hi.max(hi);
+        }
+    }
+}
 
 /// Packed bit-plane buffer: `depth` planes × `lanes` PE lanes.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub struct PlaneBuf {
     depth: usize,
     lanes: usize,
     words: usize,
     /// Flattened storage: plane `p` occupies `data[p*words .. (p+1)*words]`.
     data: Vec<u64>,
+    /// Per-plane conservative nonzero-word spans (the occupancy index).
+    occ: Vec<Span>,
 }
+
+/// Equality is *data* equality: the occupancy index is an advisory
+/// over-approximation that may legitimately differ between two buffers
+/// holding identical bits (e.g. the skip vs reference ALU paths), so it
+/// must not participate in the equivalence assertions.
+impl PartialEq for PlaneBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.depth == other.depth && self.lanes == other.lanes && self.data == other.data
+    }
+}
+
+impl Eq for PlaneBuf {}
 
 impl PlaneBuf {
     /// Allocate an all-zero buffer with `depth` bit-planes × `lanes` PEs.
     pub fn new(depth: usize, lanes: usize) -> Self {
         assert!(depth > 0 && lanes > 0, "empty PlaneBuf");
         let words = lanes.div_ceil(64);
-        PlaneBuf { depth, lanes, words, data: vec![0; depth * words] }
+        PlaneBuf {
+            depth,
+            lanes,
+            words,
+            data: vec![0; depth * words],
+            occ: vec![Span::EMPTY; depth],
+        }
     }
 
     pub fn depth(&self) -> usize { self.depth }
@@ -33,8 +101,20 @@ impl PlaneBuf {
         &self.data[p * self.words..(p + 1) * self.words]
     }
 
+    /// Mutable plane access. The caller may write anything, so the
+    /// occupancy span is conservatively widened to the whole plane.
     #[inline]
     pub fn plane_mut(&mut self, p: usize) -> &mut [u64] {
+        debug_assert!(p < self.depth, "plane {p} out of {}", self.depth);
+        self.occ[p] = Span::full(self.words);
+        &mut self.data[p * self.words..(p + 1) * self.words]
+    }
+
+    /// Mutable plane access that leaves the occupancy span untouched —
+    /// for internal paths that set a precise span themselves or only
+    /// ever clear bits (a span can legally stay wide, never too narrow).
+    #[inline]
+    fn plane_mut_untracked(&mut self, p: usize) -> &mut [u64] {
         debug_assert!(p < self.depth, "plane {p} out of {}", self.depth);
         &mut self.data[p * self.words..(p + 1) * self.words]
     }
@@ -43,12 +123,40 @@ impl PlaneBuf {
     #[inline]
     pub fn planes_mut2(&mut self, a: usize, b: usize) -> (&mut [u64], &mut [u64]) {
         assert_ne!(a, b);
+        self.occ[a] = Span::full(self.words);
+        self.occ[b] = Span::full(self.words);
         let w = self.words;
         let (lo, hi) = (a.min(b), a.max(b));
         let (head, tail) = self.data.split_at_mut(hi * w);
         let pa = &mut head[lo * w..lo * w + w];
         let pb = &mut tail[..w];
         if a < b { (pa, pb) } else { (pb, pa) }
+    }
+
+    /// Conservative nonzero-word span `[lo, hi)` of plane `p`: words
+    /// outside are guaranteed zero. `lo >= hi` means the plane is blank.
+    #[inline]
+    pub fn occ_span(&self, p: usize) -> (usize, usize) {
+        debug_assert!(p < self.depth);
+        let s = self.occ[p];
+        (s.lo as usize, s.hi as usize)
+    }
+
+    /// Union of the occupancy spans of planes `[base, base+width)` —
+    /// the word range a whole register window can be nonzero in.
+    pub fn occ_window(&self, base: usize, width: usize) -> (usize, usize) {
+        let mut u = Span::EMPTY;
+        for p in base..base + width {
+            let s = self.occ[p];
+            u.widen(s.lo, s.hi);
+        }
+        (u.lo as usize, u.hi as usize)
+    }
+
+    /// Whether plane `p` is provably all-zero.
+    #[inline]
+    pub fn plane_blank(&self, p: usize) -> bool {
+        self.occ[p].is_empty()
     }
 
     /// Read one lane's bit from plane `p`.
@@ -62,7 +170,11 @@ impl PlaneBuf {
     #[inline]
     pub fn set_bit(&mut self, p: usize, lane: usize, v: bool) {
         debug_assert!(lane < self.lanes);
-        let w = &mut self.plane_mut(p)[lane / 64];
+        let wi = lane / 64;
+        if v {
+            self.occ[p].widen(wi as u32, wi as u32 + 1);
+        }
+        let w = &mut self.plane_mut_untracked(p)[wi];
         let m = 1u64 << (lane % 64);
         if v { *w |= m } else { *w &= !m }
     }
@@ -72,20 +184,29 @@ impl PlaneBuf {
         if src == dst {
             return;
         }
-        let (d, s) = self.planes_mut2(dst, src);
-        d.copy_from_slice(s);
+        let w = self.words;
+        let hi = src.max(dst);
+        let (head, tail) = self.data.split_at_mut(hi * w);
+        if src < dst {
+            tail[..w].copy_from_slice(&head[src * w..src * w + w]);
+        } else {
+            head[dst * w..dst * w + w].copy_from_slice(&tail[..w]);
+        }
+        self.occ[dst] = self.occ[src];
     }
 
     /// Zero the planes `[base, base+width)`.
     pub fn clear_planes(&mut self, base: usize, width: usize) {
         for p in base..base + width {
-            self.plane_mut(p).fill(0);
+            self.plane_mut_untracked(p).fill(0);
+            self.occ[p] = Span::EMPTY;
         }
     }
 
     /// Zero the whole buffer in place (engine reset without realloc).
     pub fn clear_all(&mut self) {
         self.data.fill(0);
+        self.occ.fill(Span::EMPTY);
     }
 
     /// Read lane `lane`'s two's-complement value from planes
@@ -114,9 +235,12 @@ impl PlaneBuf {
     /// Write the same `value` into ALL lanes (BRAM broadcast write: the
     /// same bit-row pattern is driven on every bitline, one plane/cycle).
     pub fn broadcast(&mut self, base: usize, width: usize, value: i64) {
+        let words = self.words;
         for i in 0..width {
-            let fill = if (value >> i) & 1 == 1 { !0u64 } else { 0 };
-            self.plane_mut(base + i).fill(fill);
+            let bit = (value >> i) & 1 == 1;
+            let fill = if bit { !0u64 } else { 0 };
+            self.plane_mut_untracked(base + i).fill(fill);
+            self.occ[base + i] = if bit { Span::full(words) } else { Span::EMPTY };
         }
         self.mask_tail(base, width);
     }
@@ -142,7 +266,13 @@ impl PlaneBuf {
         debug_assert!(w1 < self.words);
         for i in 0..width {
             let bit = (value >> i) & 1 == 1;
-            let plane = self.plane_mut(base + i);
+            if bit {
+                // set bits can only appear in the written word range; a
+                // cleared range cannot shrink the span (other lanes of
+                // the same words may still be set)
+                self.occ[base + i].widen(w0 as u32, w1 as u32 + 1);
+            }
+            let plane = self.plane_mut_untracked(base + i);
             for (w, word) in plane.iter_mut().enumerate().take(w1 + 1).skip(w0) {
                 let lo = lane0.max(w * 64) - w * 64;
                 let hi = end.min(w * 64 + 64) - w * 64;
@@ -198,11 +328,16 @@ impl PlaneBuf {
     ///
     /// Plane-major word assembly: build each plane's packed words from
     /// bit `i` of 64 values at a time instead of per-lane `set_bit`
-    /// (the host-staging hot path, §Perf L3-1).
+    /// (the host-staging hot path, §Perf L3-1). Every plane word is
+    /// overwritten, so each plane's occupancy span is set exactly.
     pub fn write_all(&mut self, base: usize, width: usize, values: &[i64]) {
         assert_eq!(values.len(), self.lanes);
         assert!(width <= 64 && width > 0);
         let words = self.words;
+        // every plane word is overwritten below, so the spans restart
+        // from empty and widen as nonzero words land (no extra alloc —
+        // this is the host-staging hot path)
+        self.occ[base..base + width].fill(Span::EMPTY);
         // word-major: load each value once, scatter its bits into a
         // local plane-word stripe (cache-friendly transpose)
         let mut stripe = vec![0u64; width];
@@ -217,6 +352,9 @@ impl PlaneBuf {
             }
             for (i, &s) in stripe.iter().enumerate() {
                 self.data[(base + i) * words + wi] = s;
+                if s != 0 {
+                    self.occ[base + i].widen(wi as u32, wi as u32 + 1);
+                }
             }
         }
     }
@@ -231,7 +369,8 @@ impl PlaneBuf {
         let mask = (1u64 << rem) - 1;
         let w = self.words;
         for p in base..base + width {
-            self.plane_mut(p)[w - 1] &= mask;
+            // clears bits only: the occupancy span stays valid
+            self.plane_mut_untracked(p)[w - 1] &= mask;
         }
     }
 
@@ -242,30 +381,63 @@ impl PlaneBuf {
         if k == 0 {
             return;
         }
-        let (wshift, bshift) = (k / 64, (k % 64) as u32);
+        let wshift = k / 64;
         let words = self.words;
         let mut tmp = vec![0u64; words];
         for p in base..base + width {
-            {
-                let src = self.plane(p);
-                for i in 0..words {
-                    let lo = src.get(i + wshift).copied().unwrap_or(0);
-                    let hi = if bshift == 0 {
-                        0
-                    } else {
-                        src.get(i + wshift + 1).copied().unwrap_or(0) << (64 - bshift)
-                    };
-                    tmp[i] = (lo >> bshift) | hi;
-                }
-            }
-            self.plane_mut(p).copy_from_slice(&tmp);
+            lane_shift_words(self.plane(p), &mut tmp, k);
+            // every word is overwritten: the old span shifts down with
+            // the data (result word i reads source words i+wshift and
+            // i+wshift+1, so the span moves by wshift with 1 slack)
+            let old = self.occ[p];
+            self.plane_mut_untracked(p).copy_from_slice(&tmp);
+            self.occ[p] = if old.is_empty() {
+                Span::EMPTY
+            } else {
+                let lo = old.lo.saturating_sub(wshift as u32 + 1);
+                let hi = old.hi.saturating_sub(wshift as u32);
+                if lo < hi { Span { lo, hi } } else { Span::EMPTY }
+            };
         }
+    }
+}
+
+/// Shift one plane's packed words down by `k` lanes into `dst`,
+/// zero-filling the top — the word-level kernel shared by
+/// [`PlaneBuf::shift_lanes_down`] and the fold network's in-place
+/// shifted addend (`alu::fold_step_with`), so the two stay
+/// bit-identical by construction.
+pub(crate) fn lane_shift_words(src: &[u64], dst: &mut [u64], k: usize) {
+    let (wshift, bshift) = (k / 64, (k % 64) as u32);
+    for (i, d) in dst.iter_mut().enumerate() {
+        let lo = src.get(i + wshift).copied().unwrap_or(0);
+        let hi = if bshift == 0 {
+            0
+        } else {
+            src.get(i + wshift + 1).copied().unwrap_or(0) << (64 - bshift)
+        };
+        *d = (lo >> bshift) | hi;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The occupancy invariant: any word outside a plane's span is zero.
+    fn assert_occ_valid(b: &PlaneBuf) {
+        for p in 0..b.depth() {
+            let (lo, hi) = b.occ_span(p);
+            for (w, &word) in b.plane(p).iter().enumerate() {
+                if word != 0 {
+                    assert!(
+                        (lo..hi).contains(&w),
+                        "plane {p} word {w} nonzero outside span [{lo},{hi})"
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn read_write_lane_roundtrip() {
@@ -274,6 +446,7 @@ mod tests {
             b.write_lane(8, 8, lane, v);
             assert_eq!(b.read_lane(8, 8, lane), v, "lane {lane}");
         }
+        assert_occ_valid(&b);
     }
 
     #[test]
@@ -289,6 +462,7 @@ mod tests {
         let mut b = PlaneBuf::new(32, 130);
         b.broadcast(4, 8, -77);
         assert!(b.read_all(4, 8).iter().all(|&v| v == -77));
+        assert_occ_valid(&b);
     }
 
     #[test]
@@ -313,6 +487,7 @@ mod tests {
         assert_eq!(b.read_all(0, 8)[199], 1);
         b.broadcast_lanes(0, 8, 7, 10, 0);
         assert_ne!(b.read_all(0, 8)[10], 7);
+        assert_occ_valid(&b);
     }
 
     #[test]
@@ -321,6 +496,9 @@ mod tests {
         b.broadcast(0, 8, -1);
         b.clear_all();
         assert!(b.read_all(0, 8).iter().all(|&v| v == 0));
+        for p in 0..8 {
+            assert!(b.plane_blank(p), "plane {p} not blank after clear");
+        }
     }
 
     #[test]
@@ -344,6 +522,7 @@ mod tests {
         for l in 130..200 {
             assert_eq!(got[l], 0, "zero-fill lane {l}");
         }
+        assert_occ_valid(&b);
     }
 
     #[test]
@@ -356,5 +535,56 @@ mod tests {
         }
         assert_eq!(b.plane(1)[0], 7);
         assert_eq!(b.plane(3)[0], 9);
+        assert_occ_valid(&b);
+    }
+
+    #[test]
+    fn occupancy_tracks_precise_write_paths() {
+        let mut b = PlaneBuf::new(16, 64 * 6);
+        // blank after construction
+        assert!(b.plane_blank(0));
+        assert_eq!(b.occ_window(0, 8), (0, 0));
+        // write_all: exact spans per plane
+        let mut vals = vec![0i64; 64 * 6];
+        vals[3 * 64 + 7] = 1; // only word 3, plane 0
+        b.write_all(0, 8, &vals);
+        assert_eq!(b.occ_span(0), (3, 4));
+        assert!(b.plane_blank(1), "value 1 has no bit 1");
+        // overwrite with zeros resets the span
+        b.write_all(0, 8, &vec![0i64; 64 * 6]);
+        assert!(b.plane_blank(0));
+        // broadcast_lanes widens only the touched words
+        b.broadcast_lanes(0, 4, 1, 64, 64); // word 1 only, plane 0
+        assert_eq!(b.occ_span(0), (1, 2));
+        // copy_plane copies the span with the data
+        b.copy_plane(0, 9);
+        assert_eq!(b.occ_span(9), (1, 2));
+        assert_eq!(b.plane(9), b.plane(0));
+        // clear_planes empties
+        b.clear_planes(0, 4);
+        assert!(b.plane_blank(0));
+        // raw plane_mut conservatively widens to the whole plane
+        b.plane_mut(2)[0] = 0;
+        assert_eq!(b.occ_span(2), (0, b.words()));
+        assert_occ_valid(&b);
+    }
+
+    #[test]
+    fn occupancy_equality_ignores_spans() {
+        // same bits written through a conservative path (plane_mut:
+        // full-plane span) and a precise path (write_all: tight span)
+        // must still compare equal — equality is data equality.
+        let mut a = PlaneBuf::new(4, 64 * 3);
+        let mut b = PlaneBuf::new(4, 64 * 3);
+        a.plane_mut(1)[0] = 0b101;
+        let mut v = vec![0i64; 64 * 3];
+        v[0] = 1;
+        v[2] = 1;
+        b.write_all(1, 1, &v);
+        assert_eq!(a.occ_span(1), (0, 3), "plane_mut is conservative");
+        assert_eq!(b.occ_span(1), (0, 1), "write_all is tight");
+        assert_eq!(a, b, "equality must compare data, not occupancy");
+        assert_occ_valid(&a);
+        assert_occ_valid(&b);
     }
 }

@@ -5,7 +5,12 @@ use crate::isa::encode::params;
 
 
 /// Parameter state set through `SETP`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash`/`Eq` let the engine key its compiled-kernel cache on the
+/// entry Op-Params state: a lowered kernel bakes in the widths/radix in
+/// effect when each instruction issues, so it is only replayable from
+/// the same entry state (`engine::kernel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct OpParams {
     /// Operand precision p in bits (2..=16).
     pub precision: usize,

@@ -12,3 +12,23 @@ pub mod pool;
 pub use json::Json;
 pub use rng::XorShift;
 pub use pool::ThreadPool;
+
+/// Read a boolean environment toggle: unset → `default`; `"0"`,
+/// `"false"`, `"off"` or empty → false; anything else → true. Used by
+/// the `IMAGINE_FUSE` / `IMAGINE_SKIP` execution-path switches
+/// (docs/PERF.md).
+pub fn env_flag(name: &str, default: bool) -> bool {
+    match std::env::var(name) {
+        Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | ""),
+        Err(_) => default,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn env_flag_defaults_when_unset() {
+        assert!(super::env_flag("IMAGINE_SURELY_UNSET_FLAG_XYZ", true));
+        assert!(!super::env_flag("IMAGINE_SURELY_UNSET_FLAG_XYZ", false));
+    }
+}

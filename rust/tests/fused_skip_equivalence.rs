@@ -1,0 +1,114 @@
+//! Equivalence sweep for the two hot-path optimizations (ISSUE 3):
+//! fused compiled-kernel dispatch (`IMAGINE_FUSE`) and occupancy-aware
+//! plane/word skipping (`IMAGINE_SKIP`) must be *observably invisible*
+//! — `y`, `ExecStats.cycles` and `plane_word_ops` bit-identical to the
+//! per-instruction, full-width-walk reference — across sparsity
+//! (0%, ~3%, ~50%, 100% nonzero), precision, radix and thread count.
+//!
+//! Everything lives in one #[test] because the skip switch is
+//! process-global: a single test body flips it deterministically
+//! (other test binaries are separate processes and unaffected).
+
+use imagine::engine::{Engine, EngineConfig};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::pim::alu;
+use imagine::util::XorShift;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+/// `density_pct`% of entries nonzero (0 = all zero, 100 = none zero).
+fn sparse_vec(rng: &mut XorShift, n: usize, half: i64, density_pct: u64) -> Vec<i64> {
+    (0..n)
+        .map(|_| {
+            if density_pct > 0 && (density_pct >= 100 || rng.below(100) < density_pct) {
+                loop {
+                    let v = rng.range_i64(-half, half - 1);
+                    if v != 0 {
+                        break v;
+                    }
+                }
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// Re-latches the skip switch from `IMAGINE_SKIP` on scope exit, even
+/// when an assertion panics mid-sweep.
+struct ResetSkip;
+
+impl Drop for ResetSkip {
+    fn drop(&mut self) {
+        alu::reset_skip();
+    }
+}
+
+#[test]
+fn fused_skip_bit_identical_across_densities() {
+    let _reset = ResetSkip;
+    let config = EngineConfig::small();
+    // (m, n, p, radix, w density %, x density %, threads)
+    let cases = [
+        (40, 64, 8, 2, 100, 0, 1),
+        (40, 64, 8, 2, 100, 3, 4),
+        (40, 64, 8, 4, 100, 3, 4),
+        (33, 57, 4, 2, 50, 50, 4),
+        (33, 57, 4, 4, 3, 100, 1),
+        (64, 96, 8, 2, 3, 3, 4),
+        (64, 96, 12, 4, 50, 100, 4),
+        (16, 16, 2, 2, 100, 100, 1),
+        (8, 8, 8, 2, 0, 0, 1),
+    ];
+    let mut rng = XorShift::new(0x1534_F00D);
+    for &(m, n, p, radix, wd, xd, threads) in &cases {
+        let tag = format!("m={m} n={n} p={p} r={radix} wd={wd}% xd={xd}% t={threads}");
+        let half = 1i64 << (p - 1);
+        let w = sparse_vec(&mut rng, m * n, half, wd);
+        let x = sparse_vec(&mut rng, n, half, xd);
+        let gp = GemvProgram::generate(plan(&config, m, n, p, radix));
+
+        // reference: serial per-instruction interpreter, full-width walks
+        alu::set_skip(false);
+        let mut r_eng = Engine::with_threads(config, 1);
+        r_eng.set_fuse(false);
+        let reference = gp.execute(&mut r_eng, &w, &x).unwrap();
+
+        // optimized: fused kernel replay + occupancy skip, worker pool
+        alu::set_skip(true);
+        let mut o_eng = Engine::with_threads(config, threads);
+        o_eng.set_fuse(true);
+        let optimized = gp.execute(&mut o_eng, &w, &x).unwrap();
+
+        assert_eq!(optimized.y, reference.y, "y diverged [{tag}]");
+        assert_eq!(
+            optimized.stats.cycles, reference.stats.cycles,
+            "cycle model changed [{tag}]"
+        );
+        assert_eq!(
+            optimized.stats.plane_word_ops, reference.stats.plane_word_ops,
+            "work metric changed [{tag}]"
+        );
+        assert_eq!(optimized.stats, reference.stats, "ExecStats diverged [{tag}]");
+        assert_eq!(
+            r_eng.columns(),
+            o_eng.columns(),
+            "column state diverged [{tag}]"
+        );
+        assert_eq!(reference.y, host_gemv(&w, &x, m, n), "reference wrong [{tag}]");
+
+        // weight-resident replay (the serving fast path) must agree too
+        if gp.supports_residency() {
+            alu::set_skip(false);
+            let hot_ref = gp.execute_opts(&mut r_eng, &w, &x, true).unwrap();
+            alu::set_skip(true);
+            let hot_opt = gp.execute_opts(&mut o_eng, &w, &x, true).unwrap();
+            assert_eq!(hot_opt.y, hot_ref.y, "resident y diverged [{tag}]");
+            assert_eq!(hot_opt.stats, hot_ref.stats, "resident stats diverged [{tag}]");
+        }
+    }
+}

@@ -232,6 +232,46 @@ fn prop_column_parallel_engine_bit_identical_to_serial() {
 }
 
 #[test]
+fn prop_fused_engine_bit_identical_to_interpreter() {
+    // The compiled-kernel tentpole invariant: lowering a program once
+    // and replaying it (one pool dispatch per segment) must produce
+    // bit-identical column state, FIFO output and identical ExecStats
+    // to the per-instruction interpreter, across random programs AND
+    // across HALT boundaries (Op-Params, SELBLK and the LDI staging
+    // register persist between streams and parameterize the lowering).
+    run_prop("fused == interpreter", 6, |rng| {
+        let config = EngineConfig { tile_rows: 24, tile_cols: 2, ..EngineConfig::u55() };
+        let mut interp = Engine::with_threads(config, 4);
+        interp.set_fuse(false);
+        let mut fused = Engine::with_threads(config, 4);
+        fused.set_fuse(true);
+        let lanes = interp.pe_rows();
+        let cols = interp.block_cols();
+        for c in 0..cols {
+            for reg in [0u8, 1, 2, 4, 6] {
+                let v = rng.vec_i64(lanes, -100_000, 100_000);
+                interp.write_reg_lanes(c, reg, 32, &v).unwrap();
+                fused.write_reg_lanes(c, reg, 32, &v).unwrap();
+            }
+            for idx in 0..8 {
+                let v = rng.vec_i64(lanes, -128, 127);
+                interp.write_spill(c, 8, 8, idx, &v);
+                fused.write_spill(c, 8, 8, idx, &v);
+            }
+        }
+        // two consecutive streams exercise cross-program entry state
+        for stream in 0..2 {
+            let prog = random_program(rng, cols);
+            let s1 = interp.execute(&prog).unwrap();
+            let s2 = fused.execute(&prog).unwrap();
+            assert_eq!(s1, s2, "ExecStats diverged (stream {stream})");
+        }
+        assert_eq!(interp.columns(), fused.columns(), "column state diverged");
+        assert_eq!(interp.drain_fifo(), fused.drain_fifo());
+    });
+}
+
+#[test]
 fn prop_fold_preserves_sum() {
     run_prop("fold network conserves the column sum", 30, |rng| {
         let lanes = 256;
