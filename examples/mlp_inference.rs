@@ -9,15 +9,18 @@
 //!   L2 JAX MLP graph             -> artifacts/mlp_b1.hlo.txt
 //!   L3 coordinator + simulator   -> routing, batching, cycle counts
 //!
-//! Run: `make artifacts && cargo run --release --example mlp_inference`
+//! Run: `cargo run --release --example mlp_inference`
+//! (PJRT cross-check leg: `make artifacts`, then add `--features pjrt`.)
 //! Results recorded in EXPERIMENTS.md §End-to-end.
 
 use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
 use imagine::engine::EngineConfig;
 use imagine::gemv::scheduler::Layer;
+#[cfg(feature = "pjrt")]
 use imagine::runtime::Runtime;
 use imagine::sim::U55_FMAX_MHZ;
 use imagine::util::XorShift;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 const DIMS: [usize; 4] = [784, 256, 128, 10];
@@ -62,6 +65,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             precision: 8,
             radix: 2,
             clock_mhz: U55_FMAX_MHZ,
+            ..Default::default()
         },
         reg,
     );
@@ -87,28 +91,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let wall = t0.elapsed();
 
     // PJRT cross-check on the first few samples via the mlp_b1 artifact
-    let mut rt = Runtime::load(Path::new("artifacts"))?;
-    let mut flat: Vec<Vec<i32>> = Vec::new();
-    for l in &layers {
-        flat.push(l.w.iter().map(|&v| v as i32).collect());
-        flat.push(l.bias.iter().map(|&v| v as i32).collect());
+    #[cfg(feature = "pjrt")]
+    {
+        let mut rt = Runtime::load(Path::new("artifacts"))?;
+        let mut flat: Vec<Vec<i32>> = Vec::new();
+        for l in &layers {
+            flat.push(l.w.iter().map(|&v| v as i32).collect());
+            flat.push(l.bias.iter().map(|&v| v as i32).collect());
+        }
+        let mut checked = 0;
+        for (i, (_, x)) in inputs.iter().take(8).enumerate() {
+            let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+            let ins: Vec<&[i32]> = std::iter::once(xi.as_slice())
+                .chain(flat.iter().map(|v| v.as_slice()))
+                .collect();
+            let y = rt.execute("mlp_b1", &ins)?;
+            let sim: Vec<i32> = results[i].y.iter().map(|&v| v as i32).collect();
+            assert_eq!(y, sim, "sample {i}: PJRT artifact vs simulator");
+            checked += 1;
+        }
+        println!("PJRT cross-checked   : {checked}/8 OK (bit-exact)");
     }
-    let mut checked = 0;
-    for (i, (_, x)) in inputs.iter().take(8).enumerate() {
-        let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
-        let ins: Vec<&[i32]> = std::iter::once(xi.as_slice())
-            .chain(flat.iter().map(|v| v.as_slice()))
-            .collect();
-        let y = rt.execute("mlp_b1", &ins)?;
-        let sim: Vec<i32> = results[i].y.iter().map(|&v| v as i32).collect();
-        assert_eq!(y, sim, "sample {i}: PJRT artifact vs simulator");
-        checked += 1;
-    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT cross-check     : skipped (build with --features pjrt + make artifacts)");
 
     let m = coord.shutdown();
     let device_us_per_inf = total_cycles as f64 / samples as f64 / U55_FMAX_MHZ;
     println!("samples              : {samples}");
-    println!("PJRT cross-checked   : {checked}/8 OK (bit-exact)");
     println!("host wall time       : {:.1} ms total", wall.as_secs_f64() * 1e3);
     println!(
         "modeled device       : {:.1} us/inference -> {:.0} inf/s at {:.0} MHz",

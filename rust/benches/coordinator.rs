@@ -8,6 +8,7 @@
 //! Run: `cargo bench --bench coordinator`
 //! (`BENCH_SMOKE=1` for the reduced CI run.)
 
+use imagine::backend::BackendPolicy;
 use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
 use imagine::engine::EngineConfig;
 use imagine::gemv::GemvScheduler;
@@ -132,6 +133,41 @@ fn coord_sharded_model(requests: usize) -> f64 {
     requests as f64 / wall
 }
 
+/// End-to-end req/s of one execution-backend policy on a single-pass
+/// serving model — the per-backend rows of the BENCH_engine.json
+/// `coordinator.backends` array. `cross_check` runs every request
+/// twice (primary + oracle), so its row is the measured price of live
+/// numeric checking.
+fn coord_backend_policy(policy: BackendPolicy, requests: usize) -> f64 {
+    let mut rng = XorShift::new(41);
+    let half = 1i64 << (P - 1);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("m", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(20) },
+            engine: batch_engine_config(),
+            backend: policy,
+            ..Default::default()
+        },
+        reg,
+    );
+    let xs: Vec<Vec<i64>> = (0..requests).map(|_| rng.vec_i64(N, -half, half - 1)).collect();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(Request { model: "m".into(), x: x.clone() }).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    assert_eq!(m.cross_check_mismatches, 0, "backends disagreed: {m:?}");
+    requests as f64 / wall
+}
+
 fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64, f64) {
     let mut rng = XorShift::new(3);
     let reg = ModelRegistry::default();
@@ -183,6 +219,23 @@ fn main() {
     let sharded_reqps = coord_sharded_model(if smoke() { 8 } else { 32 });
     println!("sharded model {sharded_reqps:>8.0} req/s");
 
+    println!("\n== execution-backend policies ({M}x{N} single-pass model, 1 worker) ==");
+    let breqs = if smoke() { 8 } else { 32 };
+    let mut backend_rows = Vec::new();
+    for policy in [
+        BackendPolicy::Auto,
+        BackendPolicy::Native,
+        BackendPolicy::Sharded,
+        BackendPolicy::CrossCheck,
+    ] {
+        let reqps = coord_backend_policy(policy, breqs);
+        println!("backend {:<12} {reqps:>8.0} req/s", policy.name());
+        backend_rows.push(Json::obj([
+            ("backend", Json::Str(policy.name().into())),
+            ("reqps", Json::num(reqps)),
+        ]));
+    }
+
     println!("\n== coordinator scaling (32x32 model) ==");
     println!(
         "{:<28} {:>12} {:>10} {:>10}",
@@ -233,6 +286,7 @@ fn main() {
             ("coord_2model_unbatched_reqps", Json::num(unbatched)),
             ("coord_2model_batch8_reqps", Json::num(batched)),
             ("coord_sharded_768x256_reqps", Json::num(sharded_reqps)),
+            ("backends", Json::Arr(backend_rows)),
             ("smoke", Json::Bool(smoke())),
         ]),
     );

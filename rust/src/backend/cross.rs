@@ -1,0 +1,259 @@
+//! Cross-check execution: run every request on two backends and diff
+//! the results element-wise — the live numeric oracle the golden
+//! runtime was built for, generalized to any backend pair.
+//!
+//! The serving path (`BackendPolicy::CrossCheck`) pairs the
+//! auto-selected simulator backend with an [`OracleBackend`]
+//! reference: the golden PJRT runtime whenever it can prepare the
+//! model, and otherwise — runtime absent, MLP model, shape with no
+//! artifact — the *complementary* simulator path (a single-pass model
+//! re-executes row-sharded, a promoted model re-executes on one
+//! engine), a genuinely different instruction schedule over the same
+//! arithmetic, so scheduling bugs cannot cancel out. The fallback is
+//! per model: a partially covered artifact set never makes the
+//! uncovered models unserveable. Mismatch counts ride back on
+//! [`BackendResult::mismatches`] and surface in
+//! `MetricsSnapshot::{cross_checked, cross_check_mismatches}`.
+//!
+//! Fault injection: `IMAGINE_XCHECK_FAULT=1` wraps the reference in a
+//! [`FaultInjector`] that perturbs one element of the first result —
+//! the end-to-end proof that the mismatch plumbing reports (used by
+//! `tests/backend_equivalence.rs`; never set it on a real deployment).
+
+use super::golden::GoldenBackend;
+use super::{
+    AutoBackend, BackendContext, BackendError, BackendResult, ExecBackend, NativeBackend,
+    PreparedExec, PreparedModel, Selection, ShardedBackend,
+};
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::mapper::plan_shards_k;
+use std::sync::Arc;
+
+/// Runs `primary` and `reference` on every request, serves the primary
+/// result, and reports element-wise `y` disagreements.
+pub struct CrossCheckBackend {
+    primary: Arc<dyn ExecBackend>,
+    reference: Arc<dyn ExecBackend>,
+}
+
+impl CrossCheckBackend {
+    pub fn new(primary: Arc<dyn ExecBackend>, reference: Arc<dyn ExecBackend>) -> Self {
+        CrossCheckBackend { primary, reference }
+    }
+
+    /// The serving pairing: auto-selected primary against the
+    /// [`OracleBackend`] reference (golden per model when it applies,
+    /// complementary simulator path otherwise). Honors the
+    /// `IMAGINE_XCHECK_FAULT` fault-injection toggle.
+    pub fn auto(ctx: &BackendContext) -> Self {
+        let primary: Arc<dyn ExecBackend> = Arc::new(AutoBackend::new(ctx));
+        let mut reference: Arc<dyn ExecBackend> = Arc::new(OracleBackend::new(ctx));
+        if std::env::var("IMAGINE_XCHECK_FAULT").as_deref() == Ok("1") {
+            reference = Arc::new(FaultInjector::new(reference));
+        }
+        CrossCheckBackend::new(primary, reference)
+    }
+}
+
+impl ExecBackend for CrossCheckBackend {
+    fn name(&self) -> &'static str {
+        "cross_check"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        let prim = self.primary.prepare(model)?;
+        let refr = self.reference.prepare(model)?;
+        Ok(PreparedModel {
+            model: model.clone(),
+            concurrency: prim.concurrency,
+            exec: PreparedExec::Pair(Box::new(prim), Box::new(refr)),
+        })
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        let PreparedExec::Pair(prim, refr) = &prepared.exec else {
+            return xs
+                .iter()
+                .map(|_| {
+                    Err(BackendError::Unsupported {
+                        backend: "cross_check",
+                        what: "a preparation from another backend",
+                    })
+                })
+                .collect();
+        };
+        let mut out = self.primary.execute_batch(prim, xs);
+        let oracle = self.reference.execute_batch(refr, xs);
+        for (served, check) in out.iter_mut().zip(oracle) {
+            let Ok(res) = served else { continue };
+            res.mismatches = match check {
+                Ok(o) if o.y.len() == res.y.len() => {
+                    res.y.iter().zip(&o.y).filter(|(a, b)| a != b).count() as u64
+                }
+                // a reference that errors or changes shape disagrees
+                // about the whole vector
+                _ => res.y.len().max(1) as u64,
+            };
+        }
+        out
+    }
+}
+
+/// The cross-check reference: golden for every model the PJRT runtime
+/// can prepare, the complementary simulator path for the rest (MLPs,
+/// shapes without an artifact, or no runtime at all). The choice is
+/// made per model at prepare time and encoded in the prepared plan
+/// (`PreparedExec::Golden` vs `Native`/`Sharded`), so execution
+/// dispatches to whichever oracle actually planned it.
+pub struct OracleBackend {
+    golden: Option<Arc<dyn ExecBackend>>,
+    complement: ComplementBackend,
+}
+
+impl OracleBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        OracleBackend {
+            golden: GoldenBackend::load(ctx)
+                .ok()
+                .map(|g| Arc::new(g) as Arc<dyn ExecBackend>),
+            complement: ComplementBackend::new(ctx),
+        }
+    }
+}
+
+impl ExecBackend for OracleBackend {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        if let Some(golden) = &self.golden {
+            if let Ok(prep) = golden.prepare(model) {
+                return Ok(prep);
+            }
+        }
+        self.complement.prepare(model)
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        match (&prepared.exec, &self.golden) {
+            (PreparedExec::Golden(_), Some(golden)) => golden.execute_batch(prepared, xs),
+            _ => self.complement.execute_batch(prepared, xs),
+        }
+    }
+}
+
+/// The complementary simulator path: whatever [`select`](super::select)
+/// would choose, run the *other* executor — a single-pass model
+/// re-executes as a forced 2-way row-shard, a promoted (or even
+/// unshardable) model re-executes on one engine. Same arithmetic,
+/// different instruction schedule: the strongest oracle available
+/// without PJRT.
+pub struct ComplementBackend {
+    engine: EngineConfig,
+    precision: usize,
+    radix: u8,
+    native: NativeBackend,
+    sharded: ShardedBackend,
+}
+
+impl ComplementBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        ComplementBackend {
+            engine: ctx.engine,
+            precision: ctx.precision,
+            radix: ctx.radix,
+            native: NativeBackend::new(ctx),
+            sharded: ShardedBackend::new(ctx),
+        }
+    }
+}
+
+impl ExecBackend for ComplementBackend {
+    fn name(&self) -> &'static str {
+        "complement"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        match model {
+            Model::Mlp { .. } => self.native.prepare(model),
+            Model::Gemv { m, n, .. } => {
+                match super::select(model, &self.engine, self.precision, self.radix) {
+                    // single-pass natively -> force a 2-way shard; the
+                    // shards stay single-pass ("single-pass at rows" is
+                    // downward-closed in rows)
+                    Ok(Selection::Native) => {
+                        let sp = plan_shards_k(*m, *n, self.precision, self.radix, (*m).min(2));
+                        Ok(PreparedModel {
+                            model: model.clone(),
+                            concurrency: sp.k(),
+                            exec: PreparedExec::Sharded(sp),
+                        })
+                    }
+                    // promoted (or unshardable): one engine, multi-pass
+                    // allowed — this is the reference role, re-staging
+                    // cost is the price of the check
+                    Ok(Selection::Sharded(_)) | Err(_) => self.native.prepare(model),
+                }
+            }
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        match &prepared.exec {
+            PreparedExec::Sharded(_) => self.sharded.execute_batch(prepared, xs),
+            _ => self.native.execute_batch(prepared, xs),
+        }
+    }
+}
+
+/// Fault-injection decorator: perturbs the last element of the first
+/// successful result in every batch. Exists to prove, end to end, that
+/// a disagreeing backend is *reported* — enabled on the cross-check
+/// reference via `IMAGINE_XCHECK_FAULT=1`.
+pub struct FaultInjector {
+    inner: Arc<dyn ExecBackend>,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Arc<dyn ExecBackend>) -> Self {
+        FaultInjector { inner }
+    }
+}
+
+impl ExecBackend for FaultInjector {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        self.inner.prepare(model)
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        let mut out = self.inner.execute_batch(prepared, xs);
+        if let Some(Ok(first)) = out.first_mut() {
+            if let Some(v) = first.y.last_mut() {
+                *v = v.wrapping_add(1);
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,233 @@
+//! The golden backend: serves GEMV models through the PJRT-executed
+//! AOT artifacts (`runtime::Runtime`) — the numeric oracle, now a
+//! first-class executor behind the coordinator queue instead of an
+//! offline check.
+//!
+//! Compiled only with the `pjrt` cargo feature; without it the
+//! constructor returns a typed [`BackendError::Unavailable`] and the
+//! coordinator's `golden` policy degrades to per-request typed errors
+//! (never a build break — the default offline build carries no XLA
+//! dependency at all; see docs/BACKENDS.md for how the in-repo `xla`
+//! API stub is swapped for a real binding).
+//!
+//! Golden results carry zeroed [`ExecStats`](crate::sim::ExecStats):
+//! PJRT executes on the host CPU and has no cycle model, so
+//! `Response::device_us` is 0 for golden-served requests.
+
+use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedModel};
+use crate::coordinator::frontend::Model;
+use std::sync::Arc;
+
+/// Build the golden backend for the `golden` policy
+/// (`super::BackendPolicy::Golden`), degrading to an
+/// [`UnavailableBackend`] when the runtime cannot load (feature off,
+/// stub linked, or artifacts missing) so workers report the typed
+/// error per request.
+pub fn build(ctx: &BackendContext) -> Arc<dyn ExecBackend> {
+    match GoldenBackend::load(ctx) {
+        Ok(g) => Arc::new(g),
+        Err(e) => Arc::new(UnavailableBackend {
+            backend: "golden",
+            reason: e.to_string(),
+        }),
+    }
+}
+
+/// A placeholder for a backend whose runtime is missing: every
+/// `prepare`/`execute_batch` returns the typed
+/// [`BackendError::Unavailable`] explaining why.
+pub struct UnavailableBackend {
+    pub backend: &'static str,
+    pub reason: String,
+}
+
+impl UnavailableBackend {
+    fn err(&self) -> BackendError {
+        BackendError::Unavailable {
+            backend: self.backend,
+            reason: self.reason.clone(),
+        }
+    }
+}
+
+impl ExecBackend for UnavailableBackend {
+    fn name(&self) -> &'static str {
+        self.backend
+    }
+
+    fn prepare(&self, _model: &Model) -> Result<PreparedModel, BackendError> {
+        Err(self.err())
+    }
+
+    fn execute_batch(
+        &self,
+        _prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        xs.iter().map(|_| Err(self.err())).collect()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod enabled {
+    use super::super::{
+        BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel,
+    };
+    use crate::coordinator::frontend::Model;
+    use crate::runtime::Runtime;
+    use std::path::PathBuf;
+    use std::sync::Mutex;
+
+    /// PJRT golden executor over the AOT artifact manifest. One
+    /// compiled executable per artifact, cached for the backend's life
+    /// (the runtime's own cache).
+    pub struct GoldenBackend {
+        precision: usize,
+        radix: u8,
+        rt: Mutex<Runtime>,
+    }
+
+    impl GoldenBackend {
+        pub fn load(ctx: &BackendContext) -> Result<Self, BackendError> {
+            let dir = ctx
+                .artifacts
+                .clone()
+                .unwrap_or_else(|| PathBuf::from("artifacts"));
+            let rt = Runtime::load(&dir).map_err(|e| BackendError::Unavailable {
+                backend: "golden",
+                reason: e.to_string(),
+            })?;
+            Ok(GoldenBackend {
+                precision: ctx.precision,
+                radix: ctx.radix,
+                rt: Mutex::new(rt),
+            })
+        }
+
+        fn variant(&self) -> &'static str {
+            if self.radix == 4 {
+                "booth4"
+            } else {
+                "radix2"
+            }
+        }
+    }
+
+    impl ExecBackend for GoldenBackend {
+        fn name(&self) -> &'static str {
+            "golden"
+        }
+
+        fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+            match model {
+                Model::Mlp { .. } => Err(BackendError::Unsupported {
+                    backend: "golden",
+                    what: "mlp models (artifacts are lowered per layer-stack shape)",
+                }),
+                Model::Gemv { m, n, .. } => {
+                    let rt = self.rt.lock().unwrap();
+                    let meta = rt
+                        .manifest
+                        .find_gemv(*m, *n, self.precision, self.variant())
+                        .ok_or(BackendError::NoArtifact {
+                            m: *m,
+                            n: *n,
+                            p: self.precision,
+                            variant: self.variant(),
+                        })?;
+                    Ok(PreparedModel {
+                        model: model.clone(),
+                        concurrency: 1,
+                        exec: PreparedExec::Golden(meta.name.clone()),
+                    })
+                }
+            }
+        }
+
+        fn execute_batch(
+            &self,
+            prepared: &PreparedModel,
+            xs: &[Vec<i64>],
+        ) -> Vec<Result<BackendResult, BackendError>> {
+            let (PreparedExec::Golden(name), Model::Gemv { w, .. }) =
+                (&prepared.exec, &prepared.model)
+            else {
+                return xs
+                    .iter()
+                    .map(|_| {
+                        Err(BackendError::Unsupported {
+                            backend: "golden",
+                            what: "a preparation from another backend",
+                        })
+                    })
+                    .collect();
+            };
+            let mut rt = self.rt.lock().unwrap();
+            xs.iter()
+                .map(|x| {
+                    rt.gemv_i64(name, w, x)
+                        .map(|y| BackendResult {
+                            y,
+                            stats: Default::default(),
+                            resident: false,
+                            mismatches: 0,
+                            backend: "golden",
+                        })
+                        .map_err(BackendError::from)
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use enabled::GoldenBackend;
+
+/// Without the `pjrt` feature the golden backend is a typed error at
+/// construction: the default offline build carries no XLA dependency,
+/// and a coordinator configured for `golden` serves
+/// [`BackendError::Unavailable`] per request.
+#[cfg(not(feature = "pjrt"))]
+pub struct GoldenBackend {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl GoldenBackend {
+    pub fn load(_ctx: &BackendContext) -> Result<Self, BackendError> {
+        Err(BackendError::Unavailable {
+            backend: "golden",
+            reason: "built without the `pjrt` feature".into(),
+        })
+    }
+
+    fn err(&self) -> BackendError {
+        BackendError::Unavailable {
+            backend: "golden",
+            reason: "built without the `pjrt` feature".into(),
+        }
+    }
+}
+
+// The trait impl exists so call sites coerce uniformly to
+// `Arc<dyn ExecBackend>` under either feature state; `load` never
+// succeeds without the feature, so these methods are unreachable in
+// practice but still answer typed.
+#[cfg(not(feature = "pjrt"))]
+impl ExecBackend for GoldenBackend {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn prepare(&self, _model: &Model) -> Result<PreparedModel, BackendError> {
+        Err(self.err())
+    }
+
+    fn execute_batch(
+        &self,
+        _prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        xs.iter().map(|_| Err(self.err())).collect()
+    }
+}

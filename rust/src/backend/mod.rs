@@ -1,0 +1,299 @@
+//! Pluggable execution backends: every way the serving stack can run a
+//! registered model sits behind one [`ExecBackend`] trait.
+//!
+//! The coordinator used to hard-code its two executors (the
+//! single-engine `GemvScheduler` and the `ShardedScheduler` promotion
+//! for multi-pass models), while the PJRT golden runtime lived outside
+//! the serving path entirely. This layer turns each execution path into
+//! an `impl ExecBackend`:
+//!
+//! * [`NativeBackend`] — one simulated IMAGine engine (fused column
+//!   kernels + occupancy skipping intact), GEMV and MLP;
+//! * [`ShardedBackend`] — a row-sharded engine pool with per-shard
+//!   weight residency;
+//! * [`AutoBackend`] — per-model selection ([`select`]): native for
+//!   single-pass mappings, sharded promotion for multi-pass ones —
+//!   exactly the policy the coordinator previously hard-coded, now
+//!   with the unshardable case surfaced as a typed
+//!   [`GemvError::Unshardable`] instead of a silent multi-pass;
+//! * [`GoldenBackend`] — the PJRT-executed AOT artifacts (`pjrt`
+//!   feature; a typed [`BackendError::Unavailable`] without it);
+//! * [`CrossCheckBackend`] — runs every request on two backends and
+//!   diffs `y` element-wise, turning the golden runtime (or the
+//!   complementary simulator path) into a live numeric oracle.
+//!
+//! Adding a future executor (column-sharded pools, async submit, real
+//! PJRT devices) means writing a new `impl ExecBackend`, not another
+//! branch in the coordinator. Contract details: docs/BACKENDS.md.
+
+pub mod cross;
+pub mod golden;
+pub mod native;
+pub mod sharded;
+
+pub use cross::CrossCheckBackend;
+pub use golden::GoldenBackend;
+pub use native::NativeBackend;
+pub use sharded::ShardedBackend;
+
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::codegen::GemvError;
+use crate::gemv::mapper::{plan_shards_checked, ShardPlan};
+use crate::sim::ExecStats;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Which executor a coordinator (or a direct caller) should build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendPolicy {
+    /// Per-model selection: native for single-pass mappings, sharded
+    /// promotion for multi-pass ones (the serving default).
+    #[default]
+    Auto,
+    /// Force the single-engine path (multi-pass models run without
+    /// residency — the explicit opt-in to the re-staging tax).
+    Native,
+    /// Force the sharded pool (single-pass models run as one shard).
+    Sharded,
+    /// The PJRT golden runtime (requires the `pjrt` feature and AOT
+    /// artifacts; numeric-only, no cycle model).
+    Golden,
+    /// Serve from the auto-selected backend and diff every result
+    /// against a reference backend (golden when available, else the
+    /// complementary simulator path).
+    CrossCheck,
+}
+
+impl BackendPolicy {
+    /// Parse a policy name (`auto | native | sharded | golden |
+    /// cross_check`).
+    pub fn parse(s: &str) -> Option<BackendPolicy> {
+        match s {
+            "auto" => Some(BackendPolicy::Auto),
+            "native" => Some(BackendPolicy::Native),
+            "sharded" => Some(BackendPolicy::Sharded),
+            "golden" => Some(BackendPolicy::Golden),
+            "cross_check" => Some(BackendPolicy::CrossCheck),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendPolicy::Auto => "auto",
+            BackendPolicy::Native => "native",
+            BackendPolicy::Sharded => "sharded",
+            BackendPolicy::Golden => "golden",
+            BackendPolicy::CrossCheck => "cross_check",
+        }
+    }
+}
+
+/// Everything a backend needs to build its engines: geometry, the
+/// column-thread budget it may spend (also the sharded fan-out width),
+/// the served operand precision/radix, and where the PJRT artifacts
+/// live (golden backend; `None` = `artifacts/`).
+#[derive(Debug, Clone)]
+pub struct BackendContext {
+    pub engine: EngineConfig,
+    pub threads: usize,
+    pub precision: usize,
+    pub radix: u8,
+    pub artifacts: Option<PathBuf>,
+}
+
+impl BackendContext {
+    /// Context with the default thread budget (`IMAGINE_THREADS`).
+    pub fn new(engine: EngineConfig, precision: usize, radix: u8) -> Self {
+        BackendContext {
+            engine,
+            threads: crate::util::ThreadPool::default_threads(),
+            precision,
+            radix,
+            artifacts: None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum BackendError {
+    #[error("gemv: {0}")]
+    Gemv(#[from] GemvError),
+    #[error("backend '{backend}' does not support {what}")]
+    Unsupported { backend: &'static str, what: &'static str },
+    #[error("backend '{backend}' unavailable: {reason}")]
+    Unavailable { backend: &'static str, reason: String },
+    #[error("no golden artifact for gemv {m}x{n} @ {p}-bit ({variant})")]
+    NoArtifact { m: usize, n: usize, p: usize, variant: &'static str },
+    #[cfg(feature = "pjrt")]
+    #[error("pjrt: {0}")]
+    Pjrt(#[from] crate::runtime::pjrt::RuntimeError),
+}
+
+/// A model validated and planned for one backend. Produced by
+/// [`ExecBackend::prepare`]; carries the resolved model (so execution
+/// is pinned to the registration the request was validated against)
+/// plus the backend's execution plan.
+#[derive(Debug, Clone)]
+pub struct PreparedModel {
+    pub model: Model,
+    /// Engine-level concurrency of one request's execution (shards run
+    /// in parallel): the divisor for the modeled device-time estimate.
+    pub concurrency: usize,
+    pub exec: PreparedExec,
+}
+
+/// The backend-specific execution plan inside a [`PreparedModel`].
+#[derive(Debug, Clone)]
+pub enum PreparedExec {
+    /// Single-engine execution (GEMV — including an explicit multi-pass
+    /// run under the forced-native policy — and MLP forward).
+    Native,
+    /// Row-sharded execution across an engine pool under this plan.
+    Sharded(ShardPlan),
+    /// PJRT artifact execution by manifest name.
+    Golden(String),
+    /// Cross-check: the primary preparation and the reference one.
+    Pair(Box<PreparedModel>, Box<PreparedModel>),
+}
+
+/// One request's execution outcome on a backend.
+#[derive(Debug, Clone)]
+pub struct BackendResult {
+    pub y: Vec<i64>,
+    /// Simulated engine statistics (zeroed for the golden runtime,
+    /// which has no cycle model).
+    pub stats: ExecStats,
+    /// Weight-residency info: true when the model's weights were
+    /// already staged in engine BRAM as this group arrived (the request
+    /// paid only vector staging).
+    pub resident: bool,
+    /// Cross-check info: elements of `y` disagreeing with the
+    /// reference backend (0 when they agree or no check ran).
+    pub mismatches: u64,
+    /// Name of the backend that produced `y`.
+    pub backend: &'static str,
+}
+
+/// One execution path behind the coordinator. `prepare` validates and
+/// plans a registered model; `execute_batch` runs one fused group of
+/// input vectors against the prepared plan, returning one outcome per
+/// vector (a bad request fails alone, like the scheduler batch paths).
+///
+/// Implementations use interior mutability (`&self` methods) so one
+/// instance can sit behind an `Arc<dyn ExecBackend>` in a worker;
+/// engine state is serialized per backend, matching the one-engine-
+/// per-worker model the coordinator has always had.
+pub trait ExecBackend: Send + Sync {
+    /// Short stable name (metrics, bench rows, `Response::backend`).
+    fn name(&self) -> &'static str;
+
+    /// Validate + plan `model` for this backend.
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError>;
+
+    /// Execute one fused group against a prepared model.
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>>;
+}
+
+/// Which simulator path [`select`] chose for a model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// Single-pass on one engine (or an MLP): the native path.
+    Native,
+    /// Multi-pass on one engine: promote to the sharded pool.
+    Sharded(ShardPlan),
+}
+
+/// The promotion policy that used to live inside the coordinator:
+/// MLPs and single-pass GEMVs run native; a GEMV whose single-engine
+/// mapping is multi-pass promotes to row-shards (per-shard residency);
+/// a multi-pass GEMV that cannot be row-sharded into resident shards
+/// is a typed [`GemvError::Unshardable`] — never a silent multi-pass.
+pub fn select(
+    model: &Model,
+    engine: &EngineConfig,
+    precision: usize,
+    radix: u8,
+) -> Result<Selection, GemvError> {
+    match model {
+        Model::Mlp { .. } => Ok(Selection::Native),
+        Model::Gemv { m, n, .. } => {
+            match plan_shards_checked(engine, *m, *n, precision, radix)? {
+                None => Ok(Selection::Native),
+                Some(sp) => Ok(Selection::Sharded(sp)),
+            }
+        }
+    }
+}
+
+/// Build the backend a [`BackendPolicy`] names. Never fails: a policy
+/// whose runtime is missing (e.g. `golden` without the `pjrt` feature
+/// or without artifacts) yields a backend whose `prepare` returns the
+/// typed [`BackendError::Unavailable`], so the coordinator reports it
+/// per request instead of dying at worker start.
+pub fn build(policy: BackendPolicy, ctx: &BackendContext) -> Arc<dyn ExecBackend> {
+    match policy {
+        BackendPolicy::Auto => Arc::new(AutoBackend::new(ctx)),
+        BackendPolicy::Native => Arc::new(NativeBackend::new(ctx)),
+        BackendPolicy::Sharded => Arc::new(ShardedBackend::new(ctx)),
+        BackendPolicy::Golden => golden::build(ctx),
+        BackendPolicy::CrossCheck => Arc::new(CrossCheckBackend::auto(ctx)),
+    }
+}
+
+/// The serving default: per-model [`select`] over a native engine and
+/// a lazily built sharded pool — the executor pair each coordinator
+/// worker has owned since the sharded tier landed, now behind the
+/// trait.
+pub struct AutoBackend {
+    engine: EngineConfig,
+    precision: usize,
+    radix: u8,
+    native: NativeBackend,
+    sharded: ShardedBackend,
+}
+
+impl AutoBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        AutoBackend {
+            engine: ctx.engine,
+            precision: ctx.precision,
+            radix: ctx.radix,
+            native: NativeBackend::new(ctx),
+            sharded: ShardedBackend::new(ctx),
+        }
+    }
+}
+
+impl ExecBackend for AutoBackend {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        match select(model, &self.engine, self.precision, self.radix)? {
+            Selection::Native => self.native.prepare(model),
+            Selection::Sharded(sp) => Ok(PreparedModel {
+                model: model.clone(),
+                concurrency: sp.k(),
+                exec: PreparedExec::Sharded(sp),
+            }),
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        match &prepared.exec {
+            PreparedExec::Sharded(_) => self.sharded.execute_batch(prepared, xs),
+            _ => self.native.execute_batch(prepared, xs),
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! The single-engine backend: one simulated IMAGine engine behind a
+//! [`GemvScheduler`] — fused column kernels, occupancy skipping and
+//! single-slot weight residency exactly as the scheduler provides them.
+//!
+//! GEMV groups run through the fused `gemv_batch` path (the matrix is
+//! staged once per group, or not at all when the model id is already
+//! resident); MLPs run layer-by-layer through `mlp_forward`. Under the
+//! forced `native` policy a multi-pass GEMV executes here too — the
+//! explicit opt-in to per-request re-staging that the auto policy
+//! refuses (typed `Unshardable`) and the sharded backend eliminates.
+
+use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel};
+use crate::coordinator::frontend::Model;
+use crate::engine::{Engine, EngineConfig};
+use crate::gemv::scheduler::GemvScheduler;
+use std::sync::Mutex;
+
+pub struct NativeBackend {
+    precision: usize,
+    radix: u8,
+    sched: Mutex<GemvScheduler>,
+}
+
+impl NativeBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        let engine = Engine::with_threads(ctx.engine, ctx.threads);
+        NativeBackend {
+            precision: ctx.precision,
+            radix: ctx.radix,
+            sched: Mutex::new(GemvScheduler::from_engine(ctx.engine, engine)),
+        }
+    }
+
+    /// Build with explicit parts (tests and composed backends).
+    pub fn with_config(engine: EngineConfig, threads: usize, precision: usize, radix: u8) -> Self {
+        Self::new(&BackendContext {
+            engine,
+            threads,
+            precision,
+            radix,
+            artifacts: None,
+        })
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        Ok(PreparedModel {
+            model: model.clone(),
+            concurrency: 1,
+            exec: PreparedExec::Native,
+        })
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        let mut sched = self.sched.lock().unwrap();
+        match &prepared.model {
+            Model::Gemv { id, w, m, n } => {
+                let resident = sched.is_resident(*id, *m, *n, self.precision, self.radix);
+                let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+                sched
+                    .gemv_batch(*id, w, &xrefs, *m, *n, self.precision, self.radix)
+                    .into_iter()
+                    .map(|r| {
+                        r.map(|(y, stats)| BackendResult {
+                            y,
+                            stats,
+                            resident,
+                            mismatches: 0,
+                            backend: "native",
+                        })
+                        .map_err(BackendError::from)
+                    })
+                    .collect()
+            }
+            Model::Mlp { layers, scales, .. } => xs
+                .iter()
+                .map(|x| {
+                    sched
+                        .mlp_forward(layers, x, scales, self.precision, self.radix)
+                        .map(|(y, stats)| BackendResult {
+                            y,
+                            stats,
+                            // the MLP path re-stages every layer per
+                            // request: no residency to report
+                            resident: false,
+                            mismatches: 0,
+                            backend: "native",
+                        })
+                        .map_err(BackendError::from)
+                })
+                .collect(),
+        }
+    }
+}

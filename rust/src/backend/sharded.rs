@@ -1,0 +1,122 @@
+//! The sharded-pool backend: row-shards one GEMV across a pool of
+//! engines ([`ShardedScheduler`]) so every pool member keeps its
+//! row-slice resident in BRAM.
+//!
+//! `prepare` computes the shard plan: the planner's own plan for a
+//! multi-pass model, a trivial one-shard plan for a model that already
+//! fits one engine (the forced `sharded` policy then matches the
+//! native path bit-for-bit), and a typed
+//! [`GemvError::Unshardable`](crate::gemv::codegen::GemvError)
+//! when row-sharding cannot restore residency. The pool itself is
+//! built lazily on the first sharded execution, so an idle backend
+//! costs no threads — the same laziness the coordinator's hard-coded
+//! promotion had.
+
+use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel};
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::mapper::{plan_shards_checked, plan_shards_k};
+use crate::gemv::sharded::ShardedScheduler;
+use std::sync::Mutex;
+
+pub struct ShardedBackend {
+    engine: EngineConfig,
+    threads: usize,
+    precision: usize,
+    radix: u8,
+    /// Lazily built engine pool (one column thread per member; the
+    /// shard fan-out uses the backend's whole thread budget).
+    sched: Mutex<Option<ShardedScheduler>>,
+}
+
+impl ShardedBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        ShardedBackend {
+            engine: ctx.engine,
+            threads: ctx.threads,
+            precision: ctx.precision,
+            radix: ctx.radix,
+            sched: Mutex::new(None),
+        }
+    }
+}
+
+impl ExecBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        match model {
+            Model::Mlp { .. } => Err(BackendError::Unsupported {
+                backend: "sharded",
+                what: "mlp models (row-sharding applies to one weight matrix)",
+            }),
+            Model::Gemv { m, n, .. } => {
+                let sp = match plan_shards_checked(&self.engine, *m, *n, self.precision, self.radix)?
+                {
+                    Some(sp) => sp,
+                    // already single-pass on one engine: run as one
+                    // shard on pool member 0 (bit-identical to native)
+                    None => plan_shards_k(*m, *n, self.precision, self.radix, 1),
+                };
+                Ok(PreparedModel {
+                    model: model.clone(),
+                    concurrency: sp.k(),
+                    exec: PreparedExec::Sharded(sp),
+                })
+            }
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        let (id, w) = match &prepared.model {
+            Model::Gemv { id, w, .. } => (*id, w),
+            Model::Mlp { .. } => {
+                return xs
+                    .iter()
+                    .map(|_| {
+                        Err(BackendError::Unsupported {
+                            backend: "sharded",
+                            what: "mlp models (row-sharding applies to one weight matrix)",
+                        })
+                    })
+                    .collect()
+            }
+        };
+        let PreparedExec::Sharded(sp) = &prepared.exec else {
+            return xs
+                .iter()
+                .map(|_| {
+                    Err(BackendError::Unsupported {
+                        backend: "sharded",
+                        what: "a preparation from another backend",
+                    })
+                })
+                .collect();
+        };
+        let mut guard = self.sched.lock().unwrap();
+        let sched = guard
+            .get_or_insert_with(|| ShardedScheduler::with_threads(self.engine, self.threads, 1));
+        let resident = sched.is_resident(id, sp);
+        let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+        sched
+            .run_plan(sp, id, w, &xrefs)
+            .into_iter()
+            .map(|r| {
+                r.map(|(y, stats)| BackendResult {
+                    y,
+                    stats,
+                    resident,
+                    mismatches: 0,
+                    backend: "sharded",
+                })
+                .map_err(BackendError::from)
+            })
+            .collect()
+    }
+}

@@ -2,7 +2,9 @@
 //! `max_batch` requests or until `window` elapses after the first
 //! arrival, then groups by model so one staged weight matrix serves
 //! the whole group (weights stay resident across the batch — the
-//! dominant cost on real hardware is re-staging them).
+//! dominant cost on real hardware is re-staging them). Each group is
+//! one `ExecBackend::execute_batch` call, whatever backend the worker
+//! was built with.
 
 use std::time::Duration;
 

@@ -30,7 +30,10 @@ fn next_model_id() -> u64 {
     NEXT_MODEL_ID.fetch_add(1, Ordering::Relaxed)
 }
 
-/// A registered model.
+/// A registered model — the unit every
+/// [`ExecBackend::prepare`](crate::backend::ExecBackend::prepare)
+/// consumes. Payloads are `Arc`s, so the clone a request carries (and
+/// the one a backend's `PreparedModel` pins) is pointer-cheap.
 #[derive(Debug, Clone)]
 pub enum Model {
     /// A single weight matrix (m x n) served as GEMV.

@@ -20,6 +20,17 @@ pub struct Metrics {
     /// Requests in executed fused groups (pairs with `groups`).
     pub batched_requests: AtomicU64,
     pub sim_cycles: AtomicU64,
+    /// Fused groups that arrived with their model's weights already
+    /// staged in engine BRAM (backend residency info: the group paid
+    /// only vector staging).
+    pub residency_hits: AtomicU64,
+    /// Requests diffed against the reference backend under the
+    /// `cross_check` policy.
+    pub cross_checked: AtomicU64,
+    /// Result elements that disagreed with the reference backend
+    /// (summed over all cross-checked requests; any non-zero value is
+    /// a numeric-correctness alarm).
+    pub cross_check_mismatches: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -33,6 +44,9 @@ pub struct MetricsSnapshot {
     pub groups: u64,
     pub batched_requests: u64,
     pub sim_cycles: u64,
+    pub residency_hits: u64,
+    pub cross_checked: u64,
+    pub cross_check_mismatches: u64,
     pub latency_counts: Vec<u64>,
 }
 
@@ -51,6 +65,9 @@ impl Metrics {
             groups: self.groups.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            residency_hits: self.residency_hits.load(Ordering::Relaxed),
+            cross_checked: self.cross_checked.load(Ordering::Relaxed),
+            cross_check_mismatches: self.cross_check_mismatches.load(Ordering::Relaxed),
             latency_counts: self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
         }
     }
@@ -127,6 +144,19 @@ mod tests {
         m.batched_requests.fetch_add(8, Ordering::Relaxed);
         let s = m.snapshot();
         assert!((s.mean_batch_size() - 4.0).abs() < 1e-9, "{s:?}");
+    }
+
+    #[test]
+    fn snapshot_carries_backend_counters() {
+        let m = Metrics::default();
+        m.residency_hits.fetch_add(2, Ordering::Relaxed);
+        m.cross_checked.fetch_add(5, Ordering::Relaxed);
+        m.cross_check_mismatches.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.residency_hits, s.cross_checked, s.cross_check_mismatches),
+            (2, 5, 1)
+        );
     }
 
     #[test]

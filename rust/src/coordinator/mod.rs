@@ -3,11 +3,14 @@
 //!
 //! Requests are dispatched to the least-loaded worker (model-affinity
 //! tiebreak keeps compiled `GemvProgram`s and staged weights hot on an
-//! idle pool), dynamically batched inside each worker, executed on the
-//! worker's engine — or, for models whose mapping is multi-pass on one
-//! engine, on the worker's sharded engine pool
-//! (`gemv::sharded::ShardedScheduler`, per-shard weight residency) —
-//! and optionally cross-checked against the PJRT golden artifacts.
+//! idle pool), dynamically batched inside each worker, and executed
+//! through the worker's pluggable [`ExecBackend`](crate::backend):
+//! the auto-selecting simulator pair by default (single-engine for
+//! single-pass mappings, the sharded engine pool with per-shard weight
+//! residency for multi-pass ones), or — by
+//! [`BackendPolicy`](crate::backend::BackendPolicy) — a forced
+//! native/sharded path, the PJRT golden runtime, or a cross-checking
+//! backend pair that diffs every result against a numeric oracle.
 //! Built on std threads + channels (this environment has no async
 //! runtime crate; the event loop is in-repo by design — see Cargo.toml
 //! note).
@@ -23,3 +26,6 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;
 pub use batcher::BatchPolicy;
 pub use frontend::ModelRegistry;
+// the policy knob rides in `CoordinatorConfig`; re-export it so
+// serving callers don't need to import `crate::backend` separately
+pub use crate::backend::BackendPolicy;

@@ -1,9 +1,9 @@
 //! Request router: least-loaded dispatch with model-affinity tiebreak.
 //!
 //! Pure name-hash affinity (the old policy) keeps each worker's
-//! compiled `GemvProgram` cache and staged weights hot for the models
-//! it owns — but it pins a hot model to one worker while the rest of
-//! the pool idles. The router now tracks outstanding requests per
+//! backend caches (compiled `GemvProgram`s, staged weights, compiled
+//! PJRT executables) hot for the models it owns — but it pins a hot
+//! model to one worker while the rest of the pool idles. The router now tracks outstanding requests per
 //! worker and dispatches to the least-loaded queue, breaking ties in
 //! favour of the model's affinity worker: an idle pool still serves
 //! every model from its home worker (caches and residency stay hot),

@@ -1,13 +1,18 @@
 //! The coordinator server: worker pool, request lifecycle, shutdown.
+//!
+//! Workers execute through the pluggable [`ExecBackend`] layer
+//! (`crate::backend`): the coordinator holds no concrete executor
+//! types. The configured [`BackendPolicy`] decides what each worker
+//! builds — the auto-selecting simulator pair (default), a forced
+//! native/sharded path, the PJRT golden runtime, or the cross-checking
+//! oracle mode.
 
 use super::batcher::{group_by_key, BatchPolicy};
 use super::frontend::{Model, ModelRegistry, RegistryError};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::Router;
+use crate::backend::{self, BackendContext, BackendError, BackendPolicy, ExecBackend};
 use crate::engine::EngineConfig;
-use crate::gemv::mapper::plan_shards;
-use crate::gemv::scheduler::GemvScheduler;
-use crate::gemv::sharded::ShardedScheduler;
 use crate::sim::U55_FMAX_MHZ;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -27,6 +32,12 @@ pub struct CoordinatorConfig {
     pub radix: u8,
     /// Modeled hardware clock for latency reporting (MHz).
     pub clock_mhz: f64,
+    /// Execution-backend policy each worker builds
+    /// (`auto | native | sharded | golden | cross_check`).
+    pub backend: BackendPolicy,
+    /// PJRT artifact directory for the golden backend
+    /// (`None` = `artifacts/`).
+    pub artifacts: Option<std::path::PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -38,6 +49,8 @@ impl Default for CoordinatorConfig {
             precision: 8,
             radix: 2,
             clock_mhz: U55_FMAX_MHZ,
+            backend: BackendPolicy::Auto,
+            artifacts: None,
         }
     }
 }
@@ -55,6 +68,7 @@ pub struct Response {
     pub y: Vec<i64>,
     /// Engine cycles this request's execution consumed (summed across
     /// shard engines for a sharded model; shards run concurrently).
+    /// Zero for the golden backend, which has no cycle model.
     pub cycles: u64,
     /// Modeled on-hardware time at the configured clock (us). For a
     /// sharded model this is the critical-path estimate: summed cycles
@@ -70,6 +84,8 @@ pub struct Response {
     /// batch mixing models executes one group per model, so this is
     /// NOT the whole drain size.
     pub batch_size: usize,
+    /// Name of the [`ExecBackend`] that produced `y`.
+    pub backend: &'static str,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -80,8 +96,12 @@ pub enum SubmitError {
     InputDim { model: String, expected: usize, got: usize },
     #[error("coordinator is shut down")]
     Closed,
+    /// Execution failed in the worker's backend. `Arc`-shared because a
+    /// group-level failure (e.g. a typed
+    /// [`Unshardable`](crate::gemv::codegen::GemvError::Unshardable)
+    /// from `prepare`) fans out to every request of the group.
     #[error("execution failed: {0}")]
-    Exec(String),
+    Exec(Arc<BackendError>),
 }
 
 /// One accepted request in flight to a worker. The `Model` resolved at
@@ -193,17 +213,6 @@ impl Coordinator {
     }
 }
 
-/// Per-worker execution state: the single-engine scheduler plus a
-/// lazily built sharded pool for models whose mapping is multi-pass on
-/// one engine.
-struct WorkerState {
-    sched: GemvScheduler,
-    sharded: Option<ShardedScheduler>,
-    /// Column-thread budget this worker was given (the sharded pool
-    /// reuses it as its fan-out width).
-    threads: usize,
-}
-
 fn worker_loop(
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
@@ -214,12 +223,17 @@ fn worker_loop(
     // Split the machine's thread budget across the worker pool so N
     // workers don't each spawn a full-machine column pool and contend.
     let threads = (crate::util::ThreadPool::default_threads() / cfg.workers.max(1)).max(1);
-    let engine = crate::engine::Engine::with_threads(cfg.engine, threads);
-    let mut state = WorkerState {
-        sched: GemvScheduler::from_engine(cfg.engine, engine),
-        sharded: None,
+    let ctx = BackendContext {
+        engine: cfg.engine,
         threads,
+        precision: cfg.precision,
+        radix: cfg.radix,
+        artifacts: cfg.artifacts.clone(),
     };
+    // The worker's executor. All dispatch below goes through the trait:
+    // the policy decides what actually runs (auto-selected simulator
+    // engines, golden PJRT, a cross-checking pair, ...).
+    let backend: Arc<dyn ExecBackend> = backend::build(cfg.backend, &ctx);
     'outer: loop {
         // block for the first job
         let first = match rx.recv() {
@@ -246,12 +260,12 @@ fn worker_loop(
             match job {
                 Job::Run(p) => batch.push(p),
                 Job::Stop => {
-                    execute_batch(&cfg, &metrics, &router, wid, &mut state, batch);
+                    execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch);
                     break 'outer;
                 }
             }
         }
-        execute_batch(&cfg, &metrics, &router, wid, &mut state, batch);
+        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch);
     }
     // Drain-after-stop: requests accepted before shutdown can still sit
     // behind the Stop sentinel (e.g. submitted while the final batch
@@ -267,7 +281,7 @@ fn worker_loop(
     while !rest.is_empty() {
         let take = rest.len().min(chunk);
         let batch: Vec<_> = rest.drain(..take).collect();
-        execute_batch(&cfg, &metrics, &router, wid, &mut state, batch);
+        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch);
     }
 }
 
@@ -276,8 +290,8 @@ fn execute_batch(
     metrics: &Arc<Metrics>,
     router: &Router,
     wid: usize,
-    state: &mut WorkerState,
-    batch: Vec<Pending>,
+    backend: &dyn ExecBackend,
+    mut batch: Vec<Pending>,
 ) {
     let drained = batch.len() as u64;
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -285,80 +299,75 @@ fn execute_batch(
     // must never fuse, each request runs against the model it was
     // validated with at submit time.
     for (_, idxs) in group_by_key(&batch, |p| p.model.id()) {
-        let model = &batch[idxs[0]].model;
+        let model = batch[idxs[0]].model.clone();
         metrics.groups.fetch_add(1, Ordering::Relaxed);
         metrics.batched_requests.fetch_add(idxs.len() as u64, Ordering::Relaxed);
         // The co-batching unit: this group executes back-to-back on one
-        // engine; for a GEMV model it shares one staged matrix.
+        // backend; for a GEMV model it shares one staged matrix.
         let group_size = idxs.len();
-        // Run the group's engine work. GEMV groups go through the fused
-        // batch path: the matrix is staged once (or is already resident
-        // from a previous batch — the registry-assigned model id is the
-        // residency token) and the group's vectors stream through the
-        // compiled program without re-staging. A model whose mapping is
-        // multi-pass on one engine — too many rows for the lanes, or
-        // too long a column chunk for the spill capacity — would get no
-        // residency at all, so it promotes to the sharded pool:
-        // row-shards sized by `plan_shards` run in parallel, each
-        // resident on its own pool member.
-        // shards of one request run concurrently on the pool, so the
-        // modeled latency is the summed cycles over the concurrency
-        let mut concurrency = 1usize;
-        let results: Vec<Result<(Vec<i64>, u64), SubmitError>> = match model {
-            Model::Gemv { id, w, m, n } => {
-                let xs: Vec<&[i64]> = idxs.iter().map(|&i| batch[i].req.x.as_slice()).collect();
-                let outcomes = match plan_shards(&cfg.engine, *m, *n, cfg.precision, cfg.radix) {
-                    Some(sp) => {
-                        concurrency = sp.k();
-                        let (engine_cfg, threads) = (cfg.engine, state.threads);
-                        state
-                            .sharded
-                            .get_or_insert_with(|| {
-                                ShardedScheduler::with_threads(engine_cfg, threads, 1)
-                            })
-                            .run_plan(&sp, *id, w, &xs)
-                    }
-                    None => state
-                        .sched
-                        .gemv_batch(*id, w, &xs, *m, *n, cfg.precision, cfg.radix),
-                };
-                outcomes
-                    .into_iter()
-                    .map(|r| {
-                        r.map(|(y, s)| (y, s.cycles))
-                            .map_err(|e| SubmitError::Exec(e.to_string()))
-                    })
-                    .collect()
-            }
-            Model::Mlp { layers, scales, .. } => idxs
-                .iter()
-                .map(|&i| {
-                    state
-                        .sched
-                        .mlp_forward(layers, &batch[i].req.x, scales, cfg.precision, cfg.radix)
-                        .map(|(y, s)| (y, s.cycles))
-                        .map_err(|e| SubmitError::Exec(e.to_string()))
-                })
-                .collect(),
-        };
+        // The requests' input vectors, moved out (each request belongs
+        // to exactly one group and only needs `y` back).
+        let xs: Vec<Vec<i64>> =
+            idxs.iter().map(|&i| std::mem::take(&mut batch[i].req.x)).collect();
+        // prepare + execute through the trait: the backend owns the
+        // promotion/planning decisions the coordinator used to make. A
+        // prepare failure (unknown artifact, typed Unshardable, golden
+        // unavailable, ...) fails the whole group with the same shared
+        // error.
+        let (results, concurrency): (Vec<Result<_, Arc<BackendError>>>, usize) =
+            match backend.prepare(&model) {
+                Ok(prep) => {
+                    let concurrency = prep.concurrency.max(1);
+                    let outs = backend
+                        .execute_batch(&prep, &xs)
+                        .into_iter()
+                        .map(|r| r.map_err(Arc::new))
+                        .collect();
+                    (outs, concurrency)
+                }
+                Err(e) => {
+                    let e = Arc::new(e);
+                    ((0..xs.len()).map(|_| Err(e.clone())).collect(), 1)
+                }
+            };
+        // Residency observability: one staged-weights hit per group
+        // that arrived with its model already resident.
+        if results
+            .iter()
+            .find_map(|r| r.as_ref().ok())
+            .is_some_and(|r| r.resident)
+        {
+            metrics.residency_hits.fetch_add(1, Ordering::Relaxed);
+        }
         for (&i, result) in idxs.iter().zip(results) {
             let pending = &batch[i];
-            let result = result.map(|(y, cycles)| {
-                let host_us = pending.enqueued.elapsed().as_secs_f64() * 1e6;
-                metrics.completed.fetch_add(1, Ordering::Relaxed);
-                metrics.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
-                metrics.record_latency_us(host_us as u64);
-                Response {
-                    y,
-                    cycles,
-                    device_us: cycles as f64 / (cfg.clock_mhz * concurrency as f64),
-                    host_us,
-                    batch_size: group_size,
+            let result = match result {
+                Ok(r) => {
+                    let host_us = pending.enqueued.elapsed().as_secs_f64() * 1e6;
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.sim_cycles.fetch_add(r.stats.cycles, Ordering::Relaxed);
+                    metrics.record_latency_us(host_us as u64);
+                    if matches!(cfg.backend, BackendPolicy::CrossCheck) {
+                        metrics.cross_checked.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .cross_check_mismatches
+                            .fetch_add(r.mismatches, Ordering::Relaxed);
+                    }
+                    Ok(Response {
+                        y: r.y,
+                        cycles: r.stats.cycles,
+                        device_us: r.stats.cycles as f64
+                            / (cfg.clock_mhz * concurrency as f64),
+                        host_us,
+                        batch_size: group_size,
+                        backend: r.backend,
+                    })
                 }
-            });
-            if result.is_err() {
-                metrics.failed.fetch_add(1, Ordering::Relaxed);
-            }
+                Err(e) => {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    Err(SubmitError::Exec(e))
+                }
+            };
             let _ = pending.reply.send(result);
         }
     }
@@ -395,6 +404,7 @@ mod tests {
             assert_eq!(resp.y, host_gemv(&w, &x, 16, 16));
             assert!(resp.cycles > 0);
             assert!(resp.device_us > 0.0);
+            assert_eq!(resp.backend, "native");
         }
         let m = coord.shutdown();
         assert_eq!(m.completed, 4);
@@ -558,8 +568,8 @@ mod tests {
     #[test]
     fn oversized_model_served_through_sharded_pool() {
         // 768 rows on the 384-lane small() engine: multi-pass solo, so
-        // the worker must promote it to the sharded path — and results
-        // must stay bit-identical to the host reference
+        // the auto policy must promote it to the sharded backend — and
+        // results must stay bit-identical to the host reference
         let (m, n) = (768, 48);
         let mut rng = XorShift::new(47);
         let w = rng.vec_i64(m * n, -16, 15);
@@ -574,9 +584,53 @@ mod tests {
             let resp = coord.call(Request { model: "big".into(), x: x.clone() }).unwrap();
             assert_eq!(resp.y, host_gemv(&w, &x, m, n));
             assert!(resp.cycles > 0);
+            assert_eq!(resp.backend, "sharded");
         }
         let snap = coord.shutdown();
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn resident_groups_surface_in_metrics() {
+        // back-to-back single-model calls on one worker: the second
+        // group arrives with the matrix already staged
+        let (reg, _) = registry_with_gemv(32, 32);
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+            reg,
+        );
+        for _ in 0..3 {
+            coord.call(Request { model: "g".into(), x: vec![1; 32] }).unwrap();
+        }
+        let snap = coord.shutdown();
+        assert!(snap.residency_hits >= 2, "{snap:?}");
+    }
+
+    #[test]
+    fn golden_policy_without_runtime_is_a_typed_error() {
+        // without the pjrt feature (or without artifacts) the golden
+        // backend must degrade to per-request Unavailable errors — the
+        // worker never panics and the coordinator stays serviceable
+        let (reg, _) = registry_with_gemv(8, 8);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                backend: BackendPolicy::Golden,
+                artifacts: Some(std::path::PathBuf::from("/nonexistent")),
+                ..Default::default()
+            },
+            reg,
+        );
+        let err = coord.call(Request { model: "g".into(), x: vec![1; 8] }).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                SubmitError::Exec(e) if matches!(e.as_ref(), BackendError::Unavailable { .. })
+            ),
+            "{err:?}"
+        );
+        let snap = coord.shutdown();
+        assert_eq!(snap.failed, 1);
     }
 }

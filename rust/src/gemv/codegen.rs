@@ -38,6 +38,18 @@ pub enum GemvError {
     Range(i64, usize),
     #[error("empty model: no layers to run")]
     EmptyModel,
+    /// A multi-pass GEMV that row-sharding cannot make resident: either
+    /// a single matrix row already overflows the per-engine chunk
+    /// capacity (sharding shrinks rows, not columns), or restoring
+    /// residency would need more than
+    /// [`MAX_SHARDS`](super::mapper::MAX_SHARDS) pool members. Backend
+    /// selection surfaces this instead of silently multi-passing; the
+    /// forced `native` policy is the explicit opt-in to run it anyway.
+    #[error(
+        "gemv with {rows} rows cannot be row-sharded into resident shards \
+         (per-engine budget {budget_bits} bits)"
+    )]
+    Unshardable { rows: usize, budget_bits: u64 },
 }
 
 /// Result of one simulated GEMV.

@@ -265,32 +265,41 @@ pub fn plan_shards_k(m: usize, n: usize, p: usize, radix: u8, k: usize) -> Shard
 }
 
 /// Decide whether an `m x n` GEMV should be row-sharded across an
-/// engine pool: `Some(plan)` when the single-engine mapping is
-/// multi-pass (no weight residency — every request re-stages spill
-/// planes) and at most [`MAX_SHARDS`] single-pass shards restore
-/// per-shard residency. `None` when one engine already holds the
-/// matrix, or when row-sharding cannot help (sharding shrinks `m`, not
-/// `n`: a chunk dimension that overflows even a one-row mapping stays
-/// on the single-engine multi-pass path).
+/// engine pool — the checked form backend selection uses:
+///
+/// * `Ok(None)` — the single-engine mapping is already single-pass
+///   (resident on one engine, nothing to shard);
+/// * `Ok(Some(plan))` — multi-pass on one engine, and at most
+///   [`MAX_SHARDS`] single-pass shards restore per-shard residency;
+/// * `Err(`[`GemvError::Unshardable`]`)` — multi-pass, but row-sharding
+///   cannot restore residency: a chunk dimension that overflows even a
+///   one-row mapping (sharding shrinks `m`, not `n`), or a row count
+///   needing more than [`MAX_SHARDS`] members. Callers decide whether
+///   to surface the error (the serving auto policy) or to run the
+///   multi-pass mapping anyway (the forced-native policy, ablations).
 ///
 /// The shard height search exploits monotonicity: growing a shard only
 /// ever adds row passes (`rows > R`) or chunk passes (larger rows
 /// shrink the fold factor, lengthening each PE's column chunk), so
 /// "single-pass at `rows`" is downward-closed and the largest feasible
 /// height binary-searches in `O(log m)` plan calls.
-pub fn plan_shards(
+pub fn plan_shards_checked(
     config: &EngineConfig,
     m: usize,
     n: usize,
     p: usize,
     radix: u8,
-) -> Option<ShardPlan> {
+) -> Result<Option<ShardPlan>, crate::gemv::codegen::GemvError> {
+    let unshardable = || crate::gemv::codegen::GemvError::Unshardable {
+        rows: m,
+        budget_bits: config.bram_budget_bits(),
+    };
     if plan(config, m, n, p, radix).is_single_pass() {
-        return None;
+        return Ok(None);
     }
     let single = |rows: usize| plan(config, rows, n, p, radix).is_single_pass();
     if !single(1) {
-        return None;
+        return Err(unshardable());
     }
     // BRAM-budget ceiling: a single-pass shard stores each matrix
     // element exactly once as a p-bit spill *pair* slot (w + its x
@@ -314,11 +323,25 @@ pub fn plan_shards(
     }
     let k = m.div_ceil(lo);
     if k > MAX_SHARDS {
-        return None;
+        return Err(unshardable());
     }
     // balanced shards are no taller than lo (ceil(m / ceil(m/lo)) <= lo),
     // so every member stays single-pass / resident
-    Some(plan_shards_k(m, n, p, radix, k))
+    Ok(Some(plan_shards_k(m, n, p, radix, k)))
+}
+
+/// [`plan_shards_checked`] with the unshardable case folded into
+/// `None`: the fallback form for callers that keep the single-engine
+/// multi-pass path (the `ShardedScheduler`'s own promotion check, the
+/// ablation benches).
+pub fn plan_shards(
+    config: &EngineConfig,
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+) -> Option<ShardPlan> {
+    plan_shards_checked(config, m, n, p, radix).ok().flatten()
 }
 
 #[cfg(test)]
@@ -449,6 +472,41 @@ mod tests {
         let cfg = EngineConfig::small();
         assert!(!plan(&cfg, 1, 50_000, 8, 2).is_single_pass());
         assert!(plan_shards(&cfg, 400, 50_000, 8, 2).is_none());
+    }
+
+    #[test]
+    fn chunk_overflow_is_a_typed_unshardable_error() {
+        // regression: the chunk-capacity None path used to read as
+        // "don't shard" and callers silently multi-passed; the checked
+        // planner must name the condition so backend selection can
+        // refuse it with a typed error
+        let cfg = EngineConfig::small();
+        let r = plan_shards_checked(&cfg, 400, 50_000, 8, 2);
+        assert!(
+            matches!(
+                r,
+                Err(crate::gemv::codegen::GemvError::Unshardable { rows: 400, budget_bits })
+                    if budget_bits == cfg.bram_budget_bits()
+            ),
+            "{r:?}"
+        );
+        // single-pass shapes still report "nothing to shard"...
+        assert!(matches!(plan_shards_checked(&cfg, 64, 64, 8, 2), Ok(None)));
+        // ...and shardable multi-pass shapes still plan
+        assert!(matches!(plan_shards_checked(&cfg, 768, 96, 8, 2), Ok(Some(_))));
+    }
+
+    #[test]
+    fn too_many_rows_is_a_typed_unshardable_error() {
+        // more rows than MAX_SHARDS single-pass members can hold
+        let cfg = EngineConfig::small();
+        let too_tall = cfg.pe_rows() * (MAX_SHARDS + 1);
+        let r = plan_shards_checked(&cfg, too_tall, 16, 8, 2);
+        assert!(
+            matches!(r, Err(crate::gemv::codegen::GemvError::Unshardable { .. })),
+            "{r:?}"
+        );
+        assert!(plan_shards(&cfg, too_tall, 16, 8, 2).is_none());
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod codegen;
 pub mod scheduler;
 pub mod sharded;
 
-pub use mapper::{plan, plan_shards, plan_shards_k, MappingPlan, Shard, ShardPlan};
+pub use mapper::{plan, plan_shards, plan_shards_checked, plan_shards_k, MappingPlan, Shard, ShardPlan};
 pub use codegen::GemvProgram;
 pub use scheduler::{GemvOutcome, GemvScheduler};
 pub use sharded::ShardedScheduler;

@@ -73,6 +73,14 @@ impl GemvScheduler {
             .clone()
     }
 
+    /// Whether `(token, shape)` is what currently sits staged in the
+    /// engine's BRAM — the residency probe backends report through
+    /// `BackendResult::resident` (a hot group pays only vector
+    /// staging).
+    pub fn is_resident(&self, token: u64, m: usize, n: usize, p: usize, radix: u8) -> bool {
+        self.resident == Some((token, m, n, p, radix))
+    }
+
     /// Run one GEMV: y = W @ x (exact int32 accumulation).
     pub fn gemv(
         &mut self,

@@ -84,6 +84,19 @@ impl ShardedScheduler {
         &self.shard_stats
     }
 
+    /// Whether every shard of `sp` is resident on its pool member for
+    /// `token` — the sharded residency probe (a hot plan re-stages
+    /// nothing; each member moves only vector planes).
+    pub fn is_resident(&self, token: u64, sp: &ShardPlan) -> bool {
+        sp.shards.iter().all(|sh| {
+            self.engines.get(sh.index).is_some_and(|e| {
+                e.lock()
+                    .unwrap()
+                    .is_resident(token, sh.rows, sp.n, sp.precision, sp.radix)
+            })
+        })
+    }
+
     fn ensure_engines(&mut self, k: usize) {
         while self.engines.len() < k {
             let engine = Engine::with_threads(self.config, self.engine_threads);

@@ -11,6 +11,7 @@ pub mod resources;
 pub mod baselines;
 pub mod gemv;
 pub mod runtime;
+pub mod backend;
 pub mod coordinator;
 pub mod report;
 pub mod util;

@@ -3,11 +3,16 @@
 //! ```text
 //! imagine reproduce [all|table1|table2|table3|table4|table5|fig1|fig4|fig5|fig6|asic]
 //! imagine gemv --m 256 --n 256 --precision 8 [--booth] [--verify]
-//! imagine serve --requests 64 --workers 2 [--batch 16]
+//! imagine serve --requests 64 --workers 2 [--batch 16] [--backend auto]
 //! imagine devices
 //! imagine model --d 1024 --precision 8      # analytic latency point
 //! ```
+//!
+//! `serve --backend` takes an execution-backend policy
+//! (`auto | native | sharded | golden | cross_check`); `gemv --verify`
+//! needs a build with the `pjrt` feature and the AOT artifacts.
 
+use imagine::backend::BackendPolicy;
 use imagine::baselines::latency::{all_engines, comparison_engines};
 use imagine::baselines::ImagineModel;
 use imagine::coordinator::{
@@ -16,10 +21,12 @@ use imagine::coordinator::{
 use imagine::engine::{Engine, EngineConfig};
 use imagine::gemv::{plan, GemvProgram};
 use imagine::report;
+#[cfg(feature = "pjrt")]
 use imagine::runtime::Runtime;
 use imagine::sim::U55_FMAX_MHZ;
 use imagine::util::cli::Args;
 use imagine::util::XorShift;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 fn main() {
@@ -98,6 +105,7 @@ fn cmd_gemv(args: &Args) -> i32 {
         if ok { "OK" } else { "MISMATCH" }
     );
     if args.has("verify") {
+        #[cfg(feature = "pjrt")]
         match Runtime::load(Path::new("artifacts")) {
             Ok(mut rt) => match rt.manifest.find_gemv(m, n, p, if radix == 4 { "booth4" } else { "radix2" }) {
                 Some(meta) => {
@@ -115,6 +123,8 @@ fn cmd_gemv(args: &Args) -> i32 {
             },
             Err(e) => eprintln!("artifact load failed ({e}); run `make artifacts`"),
         }
+        #[cfg(not(feature = "pjrt"))]
+        eprintln!("--verify needs a build with the `pjrt` feature (cargo run --features pjrt ...)");
     }
     if ok { 0 } else { 1 }
 }
@@ -124,12 +134,18 @@ fn cmd_serve(args: &Args) -> i32 {
     let workers = args.get_usize("workers", 2);
     let batch = args.get_usize("batch", 16);
     let d = args.get_usize("d", 64);
+    let policy = args.get_or("backend", "auto");
+    let Some(backend) = BackendPolicy::parse(&policy) else {
+        eprintln!("unknown backend policy '{policy}' (auto|native|sharded|golden|cross_check)");
+        return 2;
+    };
     let reg = ModelRegistry::default();
     let mut rng = XorShift::new(7);
     reg.register_gemv("demo", rng.vec_i64(d * d, -64, 63), d, d).unwrap();
     let cfg = CoordinatorConfig {
         workers,
         batch: BatchPolicy { max_batch: batch, ..Default::default() },
+        backend,
         ..Default::default()
     };
     let coord = Coordinator::start(cfg, reg);
@@ -161,6 +177,17 @@ fn cmd_serve(args: &Args) -> i32 {
         m.latency_percentile_us(50.0),
         m.latency_percentile_us(99.0)
     );
+    println!(
+        "backend={} residency_hits={} cross_checked={} mismatches={}",
+        backend.name(),
+        m.residency_hits,
+        m.cross_checked,
+        m.cross_check_mismatches
+    );
+    if m.cross_check_mismatches > 0 {
+        eprintln!("cross-check FAILED: backends disagree");
+        return 1;
+    }
     (m.failed > 0) as i32
 }
 

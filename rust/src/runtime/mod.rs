@@ -1,10 +1,20 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`
 //! produced once by `python/compile/aot.py`) and executes them on the
-//! XLA CPU client — the golden numeric backend the coordinator uses to
-//! cross-check the PIM simulator. Python is never on this path.
+//! XLA CPU client — the golden numeric backend the coordinator's
+//! `golden`/`cross_check` policies serve through. Python is never on
+//! this path.
+//!
+//! The artifact manifest layer is always compiled (it is plain JSON +
+//! file metadata); the PJRT executor itself sits behind the `pjrt`
+//! cargo feature so the default offline build carries no XLA
+//! dependency at all. Without the feature,
+//! [`GoldenBackend`](crate::backend::GoldenBackend) degrades to a
+//! typed `BackendError::Unavailable`. See docs/BACKENDS.md.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Manifest};
+#[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;

@@ -1,0 +1,255 @@
+//! Cross-backend equivalence: every simulator backend must produce the
+//! same `y` for the same model, and each backend must be deterministic
+//! bit-for-bit — (y, cycles, plane_word_ops) — across column-thread
+//! budgets. CI runs this whole file a second time with
+//! `IMAGINE_FUSE=0 IMAGINE_SKIP=0`, so the equivalence also holds on
+//! the reference (per-instruction, no-skip) execution paths.
+//!
+//! Also the coordinator-level seams: the typed `Unshardable` group
+//! failure and the `cross_check` policy's mismatch reporting
+//! (including a planted fault).
+
+use imagine::backend::{
+    BackendContext, BackendError, BackendPolicy, BackendResult, ExecBackend, NativeBackend,
+    ShardedBackend,
+};
+use imagine::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request, SubmitError,
+};
+use imagine::engine::EngineConfig;
+use imagine::gemv::codegen::GemvError;
+use imagine::util::XorShift;
+use std::sync::Mutex;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+fn ctx(threads: usize) -> BackendContext {
+    BackendContext {
+        engine: EngineConfig::small(),
+        threads,
+        precision: 8,
+        radix: 2,
+        artifacts: None,
+    }
+}
+
+/// Run one registered GEMV through a backend and unwrap every outcome.
+fn run_gemv(
+    backend: &dyn ExecBackend,
+    reg: &ModelRegistry,
+    name: &str,
+    xs: &[Vec<i64>],
+) -> Vec<BackendResult> {
+    let model = reg.get(name).unwrap();
+    let prep = backend.prepare(&model).unwrap();
+    backend
+        .execute_batch(&prep, xs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect()
+}
+
+/// The property: for random single-pass and multi-pass models, native
+/// and sharded backends agree on `y` (and with the host), and each
+/// backend is bit-deterministic — identical (y, cycles,
+/// plane_word_ops) — across thread budgets {1, 4}.
+#[test]
+fn prop_native_and_sharded_backends_bit_agree() {
+    let mut rng = XorShift::new(0xBAC);
+    // (m, n) pools: single-pass on small() (384 lanes) and multi-pass
+    // (promoted to >= 2 shards)
+    let single_pass = [(16, 24), (48, 96), (96, 40)];
+    let multi_pass = [(520, 32), (768, 48)];
+    for (round, &(m, n)) in single_pass.iter().chain(&multi_pass).enumerate() {
+        let w = rng.vec_i64(m * n, -64, 63);
+        let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -100, 100)).collect();
+        let reg = ModelRegistry::default();
+        reg.register_gemv("g", w.clone(), m, n).unwrap();
+
+        let mut per_thread: Vec<(Vec<BackendResult>, Vec<BackendResult>)> = Vec::new();
+        for threads in [1usize, 4] {
+            let native = NativeBackend::new(&ctx(threads));
+            let sharded = ShardedBackend::new(&ctx(threads));
+            let ny = run_gemv(&native, &reg, "g", &xs);
+            let sy = run_gemv(&sharded, &reg, "g", &xs);
+            for ((nr, sr), x) in ny.iter().zip(&sy).zip(&xs) {
+                let want = host_gemv(&w, x, m, n);
+                assert_eq!(nr.y, want, "native {m}x{n} round {round}");
+                assert_eq!(sr.y, want, "sharded {m}x{n} round {round}");
+            }
+            per_thread.push((ny, sy));
+        }
+        // bit-determinism across thread budgets, per backend
+        let (n1, s1) = &per_thread[0];
+        let (n4, s4) = &per_thread[1];
+        for (a, b) in n1.iter().zip(n4).chain(s1.iter().zip(s4)) {
+            assert_eq!(a.y, b.y, "{m}x{n}: y must not depend on threads");
+            assert_eq!(
+                (a.stats.cycles, a.stats.plane_word_ops),
+                (b.stats.cycles, b.stats.plane_word_ops),
+                "{m}x{n}: stats must not depend on threads"
+            );
+        }
+    }
+}
+
+/// A second batch with the same model id must arrive resident on both
+/// backends (the residency info the results carry).
+#[test]
+fn residency_info_reported_by_both_backends() {
+    let mut rng = XorShift::new(0xE51);
+    let (m, n) = (48, 64); // single-pass
+    let w = rng.vec_i64(m * n, -32, 31);
+    let xs: Vec<Vec<i64>> = (0..2).map(|_| rng.vec_i64(n, -64, 63)).collect();
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w, m, n).unwrap();
+    for (label, backend) in [
+        ("native", Box::new(NativeBackend::new(&ctx(1))) as Box<dyn ExecBackend>),
+        ("sharded", Box::new(ShardedBackend::new(&ctx(1)))),
+    ] {
+        let first = run_gemv(backend.as_ref(), &reg, "g", &xs);
+        assert!(first.iter().all(|r| !r.resident), "{label}: first batch is cold");
+        let second = run_gemv(backend.as_ref(), &reg, "g", &xs);
+        assert!(second.iter().all(|r| r.resident), "{label}: second batch must be hot");
+    }
+}
+
+/// MLP models run only on the native path; the sharded backend must
+/// refuse them with a typed capability error, not multi-pass silently.
+#[test]
+fn sharded_backend_refuses_mlp_typed() {
+    let reg = ModelRegistry::default();
+    let layer = imagine::gemv::scheduler::Layer::new(vec![1; 16], vec![0; 4], 4, 4);
+    reg.register_mlp("m", vec![layer], vec![]).unwrap();
+    let sharded = ShardedBackend::new(&ctx(1));
+    let err = sharded.prepare(&reg.get("m").unwrap()).unwrap_err();
+    assert!(matches!(err, BackendError::Unsupported { backend: "sharded", .. }), "{err:?}");
+}
+
+/// Regression (satellite): a matrix whose single row overflows the
+/// per-PE chunk capacity is *unshardable* — backend selection must
+/// surface the typed `GemvError::Unshardable` through the coordinator
+/// instead of silently running the multi-pass mapping.
+#[test]
+fn unshardable_chunk_overflow_is_typed_through_the_coordinator() {
+    let (m, n) = (8usize, 50_000usize);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("wide", vec![0i64; m * n], m, n).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+        reg,
+    );
+    let err = coord
+        .call(Request { model: "wide".into(), x: vec![0; n] })
+        .unwrap_err();
+    assert!(
+        matches!(
+            &err,
+            SubmitError::Exec(e) if matches!(
+                e.as_ref(),
+                BackendError::Gemv(GemvError::Unshardable { rows: 8, .. })
+            )
+        ),
+        "{err:?}"
+    );
+    let snap = coord.shutdown();
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.completed, 0);
+}
+
+/// The cross-check tests build coordinators whose workers read the
+/// `IMAGINE_XCHECK_FAULT` environment toggle at start; serialize them
+/// so the planted fault never leaks into the clean run.
+static XCHECK_ENV: Mutex<()> = Mutex::new(());
+
+#[test]
+fn cross_check_policy_agrees_and_reports_zero_mismatches() {
+    let _guard = XCHECK_ENV.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var("IMAGINE_XCHECK_FAULT");
+    let mut rng = XorShift::new(0xCC0);
+    let (m, n) = (48, 64);
+    let w = rng.vec_i64(m * n, -32, 31);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w.clone(), m, n).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy::none(),
+            backend: BackendPolicy::CrossCheck,
+            ..Default::default()
+        },
+        reg,
+    );
+    for _ in 0..4 {
+        let x = rng.vec_i64(n, -64, 63);
+        let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+        assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.cross_checked, 4, "{snap:?}");
+    assert_eq!(snap.cross_check_mismatches, 0, "{snap:?}");
+}
+
+/// Smoke (satellite): plant a one-element fault on the cross-check
+/// reference and require the mismatch to surface in MetricsSnapshot —
+/// the end-to-end proof the oracle plumbing reports, not just runs.
+#[test]
+fn cross_check_smoke_planted_mismatch_lands_in_metrics() {
+    let _guard = XCHECK_ENV.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("IMAGINE_XCHECK_FAULT", "1");
+    let result = std::panic::catch_unwind(|| {
+        let mut rng = XorShift::new(0xCC1);
+        let (m, n) = (32, 32);
+        let w = rng.vec_i64(m * n, -32, 31);
+        let reg = ModelRegistry::default();
+        reg.register_gemv("g", w.clone(), m, n).unwrap();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batch: BatchPolicy::none(),
+                backend: BackendPolicy::CrossCheck,
+                ..Default::default()
+            },
+            reg,
+        );
+        let x = rng.vec_i64(n, -64, 63);
+        let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+        // the *served* result comes from the primary backend: still correct
+        assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+        let snap = coord.shutdown();
+        assert_eq!(snap.cross_checked, 1, "{snap:?}");
+        assert_eq!(
+            snap.cross_check_mismatches, 1,
+            "planted one-element fault must be reported: {snap:?}"
+        );
+    });
+    std::env::remove_var("IMAGINE_XCHECK_FAULT");
+    if let Err(p) = result {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// Forcing the sharded policy on a single-pass model must match the
+/// native policy bit-for-bit (one-shard plan on pool member 0).
+#[test]
+fn forced_sharded_policy_matches_native_on_single_pass_models() {
+    let mut rng = XorShift::new(0xF0);
+    let (m, n) = (40, 32);
+    let w = rng.vec_i64(m * n, -64, 63);
+    let xs: Vec<Vec<i64>> = (0..2).map(|_| rng.vec_i64(n, -64, 63)).collect();
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w, m, n).unwrap();
+    let native = NativeBackend::new(&ctx(2));
+    let sharded = ShardedBackend::new(&ctx(2));
+    let ny = run_gemv(&native, &reg, "g", &xs);
+    let sy = run_gemv(&sharded, &reg, "g", &xs);
+    for (a, b) in ny.iter().zip(&sy) {
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.plane_word_ops, b.stats.plane_word_ops);
+    }
+}

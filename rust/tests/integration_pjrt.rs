@@ -1,7 +1,12 @@
 //! Cross-backend integration: the cycle-accurate IMAGine simulator,
 //! the host reference, and the PJRT-executed AOT artifacts (L1 Pallas
 //! bit-serial kernel inside the L2 JAX graph) must agree bit-for-bit.
-//! Requires `make artifacts`.
+//! Requires a build with the `pjrt` feature (against a real xla
+//! binding, not the offline stub) and `make artifacts`; skips — never
+//! fails — when either is missing. The simulator-vs-simulator backend
+//! equivalence lives in `tests/backend_equivalence.rs` and always
+//! runs.
+#![cfg(feature = "pjrt")]
 
 use imagine::engine::{Engine, EngineConfig};
 use imagine::gemv::scheduler::{GemvScheduler, Layer};
@@ -14,6 +19,17 @@ fn artifacts() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Runtime + artifacts, or skip this test.
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load(&artifacts()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT integration test: {e}");
+            None
+        }
+    }
+}
+
 fn sim_gemv(d: usize, radix: u8, w: &[i64], x: &[i64]) -> Vec<i64> {
     let config = EngineConfig::small();
     let gp = GemvProgram::generate(plan(&config, d, d, 8, radix));
@@ -23,7 +39,7 @@ fn sim_gemv(d: usize, radix: u8, w: &[i64], x: &[i64]) -> Vec<i64> {
 
 #[test]
 fn gemv_artifacts_match_simulator() {
-    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let Some(mut rt) = runtime_or_skip() else { return };
     let mut rng = XorShift::new(100);
     for d in [64usize, 128, 256] {
         let w = rng.vec_i64(d * d, -128, 127);
@@ -36,7 +52,7 @@ fn gemv_artifacts_match_simulator() {
 
 #[test]
 fn booth_artifact_matches_booth_simulator() {
-    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let Some(mut rt) = runtime_or_skip() else { return };
     let mut rng = XorShift::new(101);
     let d = 256;
     let w = rng.vec_i64(d * d, -128, 127);
@@ -48,7 +64,7 @@ fn booth_artifact_matches_booth_simulator() {
 
 #[test]
 fn p4_artifact_matches_simulator() {
-    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let Some(mut rt) = runtime_or_skip() else { return };
     let mut rng = XorShift::new(102);
     let d = 256;
     let w = rng.vec_i64(d * d, -8, 7);
@@ -63,7 +79,7 @@ fn p4_artifact_matches_simulator() {
 
 #[test]
 fn gemm_batch_artifact_matches_per_vector_sim() {
-    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let Some(mut rt) = runtime_or_skip() else { return };
     let mut rng = XorShift::new(103);
     let (b, d) = (8usize, 256usize);
     let w = rng.vec_i64(d * d, -128, 127);
@@ -80,7 +96,7 @@ fn gemm_batch_artifact_matches_per_vector_sim() {
 
 #[test]
 fn mlp_artifact_matches_scheduler() {
-    let mut rt = Runtime::load(&artifacts()).unwrap();
+    let Some(mut rt) = runtime_or_skip() else { return };
     let dims = [784usize, 256, 128, 10];
     let scales = [0.0078125f64, 0.0078125];
     let mut rng = XorShift::new(104);
