@@ -133,6 +133,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         m.latency_percentile_us(50.0),
         m.latency_percentile_us(99.0)
     );
-    println!("\nall layers composed: Pallas kernel -> JAX AOT -> PJRT == coordinator -> simulator.");
+    println!(
+        "\nall layers composed: Pallas kernel -> JAX AOT -> PJRT == coordinator -> simulator."
+    );
     Ok(())
 }

@@ -15,8 +15,12 @@ use imagine::util::XorShift;
 
 fn main() {
     println!("== ablation 1: controller pipeline stage A (Fig 3a / §V-C) ==");
-    for (label, stages) in [("without stage A", PipelineStages::NONE), ("with stage A", PipelineStages::U55_FINAL)] {
-        let t = SystemTiming::analyze(&ULTRASCALE_PLUS, stages, Some(&FanoutTree::u55_tile(31)), 384);
+    for (label, stages) in [
+        ("without stage A", PipelineStages::NONE),
+        ("with stage A", PipelineStages::U55_FINAL),
+    ] {
+        let t =
+            SystemTiming::analyze(&ULTRASCALE_PLUS, stages, Some(&FanoutTree::u55_tile(31)), 384);
         println!(
             "{label:<16} system {:>6.0} MHz (controller {:>6.0}, fanout {:>6.0}, PIM {:>6.0})",
             t.system_mhz(), t.controller_mhz, t.fanout_mhz, t.pim_mhz
@@ -24,9 +28,17 @@ fn main() {
     }
 
     println!("\n== ablation 2: fanout tree vs direct broadcast (§V-C iter 2-3) ==");
-    for (label, tree) in [("direct (384 sinks)", None), ("2-level fanout-4 tree", Some(FanoutTree::u55_tile(31)))] {
-        let t = SystemTiming::analyze(&ULTRASCALE_PLUS, PipelineStages::U55_FINAL, tree.as_ref(), 384);
-        println!("{label:<22} fanout path {:>6.0} MHz -> system {:>6.0} MHz", t.fanout_mhz, t.system_mhz());
+    for (label, tree) in [
+        ("direct (384 sinks)", None),
+        ("2-level fanout-4 tree", Some(FanoutTree::u55_tile(31))),
+    ] {
+        let t =
+            SystemTiming::analyze(&ULTRASCALE_PLUS, PipelineStages::U55_FINAL, tree.as_ref(), 384);
+        println!(
+            "{label:<22} fanout path {:>6.0} MHz -> system {:>6.0} MHz",
+            t.fanout_mhz,
+            t.system_mhz()
+        );
     }
 
     println!("\n== ablation 3: Booth radix-4 vs radix-2 (IMAGine-slice4, Fig 6) ==");
@@ -35,7 +47,10 @@ fn main() {
     for d in [256usize, 1024, 2048] {
         let c2 = r2.cycle_latency(d, 8);
         let c4 = r4.cycle_latency(d, 8);
-        println!("D={d:<5} radix-2 {c2:>8} cycles   booth-4 {c4:>8} cycles   ({:.2}x)", c2 as f64 / c4 as f64);
+        println!(
+            "D={d:<5} radix-2 {c2:>8} cycles   booth-4 {c4:>8} cycles   ({:.2}x)",
+            c2 as f64 / c4 as f64
+        );
     }
 
     println!("\n== ablation 4: fold network (row replication) at small D ==");

@@ -92,7 +92,16 @@ fn main() {
             &format!("mac_radix2 (reused scratch) lanes={lanes}"),
             warm,
             iters,
-            || black_box(alu::mac_radix2_with(&mut b, (64, 32), (0, 8), (32, 8), false, &mut scratch)),
+            || {
+                black_box(alu::mac_radix2_with(
+                    &mut b,
+                    (64, 32),
+                    (0, 8),
+                    (32, 8),
+                    false,
+                    &mut scratch,
+                ))
+            },
         );
         println!("{}", m.report());
 

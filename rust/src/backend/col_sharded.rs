@@ -1,0 +1,127 @@
+//! The column-sharded backend: splits one *wide* GEMV's input
+//! dimension across a pool of engines ([`ColShardedScheduler`]) so
+//! every pool member keeps its column slice resident in BRAM, and
+//! reduces the K partial dot-product vectors host-side.
+//!
+//! `prepare` computes the slice plan: the planner's own plan for a
+//! model row-sharding cannot make resident, a trivial one-slice plan
+//! for a model the row tier (or one engine) already serves (the forced
+//! `col_sharded` policy then matches the auto path bit-for-bit), and a
+//! typed [`GemvError::Unshardable`](crate::gemv::codegen::GemvError)
+//! only when the model exceeds the aggregate BRAM of
+//! [`MAX_SHARDS`](crate::gemv::mapper::MAX_SHARDS) slices. The pool is
+//! built lazily on the first execution, so an idle backend costs no
+//! threads.
+
+use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel};
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::col_sharded::ColShardedScheduler;
+use crate::gemv::mapper::{plan_col_shards_checked, plan_col_shards_k};
+use std::sync::Mutex;
+
+pub struct ColShardedBackend {
+    engine: EngineConfig,
+    threads: usize,
+    precision: usize,
+    radix: u8,
+    /// Lazily built slice pool (each member row-shards internally on
+    /// one thread; the slice fan-out uses the backend's whole budget).
+    sched: Mutex<Option<ColShardedScheduler>>,
+}
+
+impl ColShardedBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        ColShardedBackend {
+            engine: ctx.engine,
+            threads: ctx.threads,
+            precision: ctx.precision,
+            radix: ctx.radix,
+            sched: Mutex::new(None),
+        }
+    }
+}
+
+impl ExecBackend for ColShardedBackend {
+    fn name(&self) -> &'static str {
+        "col_sharded"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        match model {
+            Model::Mlp { .. } => Err(BackendError::Unsupported {
+                backend: "col_sharded",
+                what: "mlp models (column-sharding applies to one weight matrix)",
+            }),
+            Model::Gemv { m, n, .. } => {
+                let planned =
+                    plan_col_shards_checked(&self.engine, *m, *n, self.precision, self.radix);
+                let cp = match planned? {
+                    Some(cp) => cp,
+                    // the row tier (or one engine) already serves this
+                    // shape: run as one slice on pool member 0
+                    // (bit-identical to the auto selection)
+                    None => plan_col_shards_k(*m, *n, self.precision, self.radix, 1),
+                };
+                Ok(PreparedModel {
+                    model: model.clone(),
+                    concurrency: cp.engine_concurrency(&self.engine),
+                    exec: PreparedExec::ColSharded(cp),
+                })
+            }
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        let (id, w) = match &prepared.model {
+            Model::Gemv { id, w, .. } => (*id, w),
+            Model::Mlp { .. } => {
+                return xs
+                    .iter()
+                    .map(|_| {
+                        Err(BackendError::Unsupported {
+                            backend: "col_sharded",
+                            what: "mlp models (column-sharding applies to one weight matrix)",
+                        })
+                    })
+                    .collect()
+            }
+        };
+        let PreparedExec::ColSharded(cp) = &prepared.exec else {
+            return xs
+                .iter()
+                .map(|_| {
+                    Err(BackendError::Unsupported {
+                        backend: "col_sharded",
+                        what: "a preparation from another backend",
+                    })
+                })
+                .collect();
+        };
+        let mut guard = self.sched.lock().unwrap();
+        let sched = guard
+            .get_or_insert_with(|| ColShardedScheduler::with_threads(self.engine, self.threads, 1));
+        let resident = sched.is_resident(id, cp);
+        let reduce_adds = cp.reduce_adds();
+        let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+        sched
+            .run_plan(cp, id, w, &xrefs)
+            .into_iter()
+            .map(|r| {
+                r.map(|(y, stats)| BackendResult {
+                    y,
+                    stats,
+                    resident,
+                    mismatches: 0,
+                    reduce_adds,
+                    backend: "col_sharded",
+                })
+                .map_err(BackendError::from)
+            })
+            .collect()
+    }
+}

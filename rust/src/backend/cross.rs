@@ -199,10 +199,13 @@ impl ExecBackend for ComplementBackend {
                             exec: PreparedExec::Sharded(sp),
                         })
                     }
-                    // promoted (or unshardable): one engine, multi-pass
-                    // allowed — this is the reference role, re-staging
-                    // cost is the price of the check
-                    Ok(Selection::Sharded(_)) | Err(_) => self.native.prepare(model),
+                    // promoted (row- or column-sharded) or unshardable:
+                    // one engine, multi-pass allowed — this is the
+                    // reference role, re-staging cost is the price of
+                    // the check
+                    Ok(Selection::Sharded(_)) | Ok(Selection::ColSharded(_)) | Err(_) => {
+                        self.native.prepare(model)
+                    }
                 }
             }
         }

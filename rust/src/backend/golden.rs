@@ -171,6 +171,7 @@ mod enabled {
                             stats: Default::default(),
                             resident: false,
                             mismatches: 0,
+                            reduce_adds: 0,
                             backend: "golden",
                         })
                         .map_err(BackendError::from)

@@ -11,26 +11,34 @@
 //!   kernels + occupancy skipping intact), GEMV and MLP;
 //! * [`ShardedBackend`] — a row-sharded engine pool with per-shard
 //!   weight residency;
+//! * [`ColShardedBackend`] — a column-sharded engine pool for models
+//!   whose input dimension overflows a single engine's chunk capacity:
+//!   per-slice weight residency plus a host-side partial-sum
+//!   reduction, composing with row shards inside each slice;
 //! * [`AutoBackend`] — per-model selection ([`select`]): native for
-//!   single-pass mappings, sharded promotion for multi-pass ones —
-//!   exactly the policy the coordinator previously hard-coded, now
-//!   with the unshardable case surfaced as a typed
-//!   [`GemvError::Unshardable`] instead of a silent multi-pass;
+//!   single-pass mappings, row-sharded promotion for multi-pass ones,
+//!   column-sharded promotion when row-sharding cannot restore
+//!   residency — a typed [`GemvError::Unshardable`] remains only for
+//!   models exceeding the pool's aggregate BRAM, never a silent
+//!   multi-pass;
 //! * [`GoldenBackend`] — the PJRT-executed AOT artifacts (`pjrt`
 //!   feature; a typed [`BackendError::Unavailable`] without it);
 //! * [`CrossCheckBackend`] — runs every request on two backends and
 //!   diffs `y` element-wise, turning the golden runtime (or the
 //!   complementary simulator path) into a live numeric oracle.
 //!
-//! Adding a future executor (column-sharded pools, async submit, real
-//! PJRT devices) means writing a new `impl ExecBackend`, not another
-//! branch in the coordinator. Contract details: docs/BACKENDS.md.
+//! Adding a future executor (async submit, real PJRT devices, a
+//! compiled-trace consumer) means writing a new `impl ExecBackend`,
+//! not another branch in the coordinator. Contract details:
+//! docs/BACKENDS.md.
 
+pub mod col_sharded;
 pub mod cross;
 pub mod golden;
 pub mod native;
 pub mod sharded;
 
+pub use col_sharded::ColShardedBackend;
 pub use cross::CrossCheckBackend;
 pub use golden::GoldenBackend;
 pub use native::NativeBackend;
@@ -39,7 +47,7 @@ pub use sharded::ShardedBackend;
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::codegen::GemvError;
-use crate::gemv::mapper::{plan_shards_checked, ShardPlan};
+use crate::gemv::mapper::{plan_col_shards_checked, plan_shards_checked, ColShardPlan, ShardPlan};
 use crate::sim::ExecStats;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -54,8 +62,12 @@ pub enum BackendPolicy {
     /// Force the single-engine path (multi-pass models run without
     /// residency — the explicit opt-in to the re-staging tax).
     Native,
-    /// Force the sharded pool (single-pass models run as one shard).
+    /// Force the row-sharded pool (single-pass models run as one
+    /// shard).
     Sharded,
+    /// Force the column-sharded pool (models the row tier serves run
+    /// as one slice).
+    ColSharded,
     /// The PJRT golden runtime (requires the `pjrt` feature and AOT
     /// artifacts; numeric-only, no cycle model).
     Golden,
@@ -66,13 +78,14 @@ pub enum BackendPolicy {
 }
 
 impl BackendPolicy {
-    /// Parse a policy name (`auto | native | sharded | golden |
-    /// cross_check`).
+    /// Parse a policy name (`auto | native | sharded | col_sharded |
+    /// golden | cross_check`).
     pub fn parse(s: &str) -> Option<BackendPolicy> {
         match s {
             "auto" => Some(BackendPolicy::Auto),
             "native" => Some(BackendPolicy::Native),
             "sharded" => Some(BackendPolicy::Sharded),
+            "col_sharded" => Some(BackendPolicy::ColSharded),
             "golden" => Some(BackendPolicy::Golden),
             "cross_check" => Some(BackendPolicy::CrossCheck),
             _ => None,
@@ -84,6 +97,7 @@ impl BackendPolicy {
             BackendPolicy::Auto => "auto",
             BackendPolicy::Native => "native",
             BackendPolicy::Sharded => "sharded",
+            BackendPolicy::ColSharded => "col_sharded",
             BackendPolicy::Golden => "golden",
             BackendPolicy::CrossCheck => "cross_check",
         }
@@ -152,6 +166,10 @@ pub enum PreparedExec {
     Native,
     /// Row-sharded execution across an engine pool under this plan.
     Sharded(ShardPlan),
+    /// Column-sharded execution across an engine pool under this plan
+    /// (host-side partial-sum reduction; composes with row sharding
+    /// inside each pool member).
+    ColSharded(ColShardPlan),
     /// PJRT artifact execution by manifest name.
     Golden(String),
     /// Cross-check: the primary preparation and the reference one.
@@ -172,6 +190,11 @@ pub struct BackendResult {
     /// Cross-check info: elements of `y` disagreeing with the
     /// reference backend (0 when they agree or no check ran).
     pub mismatches: u64,
+    /// Host-side reduction adds this request paid (column-sharded
+    /// execution sums K partial vectors on the host: (K-1) * m adds;
+    /// 0 everywhere else). Host arithmetic, so it is reported here
+    /// instead of inside the engine work metric.
+    pub reduce_adds: u64,
     /// Name of the backend that produced `y`.
     pub backend: &'static str,
 }
@@ -205,15 +228,23 @@ pub trait ExecBackend: Send + Sync {
 pub enum Selection {
     /// Single-pass on one engine (or an MLP): the native path.
     Native,
-    /// Multi-pass on one engine: promote to the sharded pool.
+    /// Multi-pass on one engine: promote to the row-sharded pool.
     Sharded(ShardPlan),
+    /// Row-sharding cannot restore residency (the input dimension
+    /// overflows the chunk capacity, or the BRAM budget caps row-shard
+    /// heights below `m / MAX_SHARDS`): promote to the column-sharded
+    /// pool, whose members row-shard internally when needed.
+    ColSharded(ColShardPlan),
 }
 
 /// The promotion policy that used to live inside the coordinator:
 /// MLPs and single-pass GEMVs run native; a GEMV whose single-engine
 /// mapping is multi-pass promotes to row-shards (per-shard residency);
-/// a multi-pass GEMV that cannot be row-sharded into resident shards
-/// is a typed [`GemvError::Unshardable`] — never a silent multi-pass.
+/// one that row-sharding cannot make resident promotes to column
+/// slices with host-side reduction (composing with row shards inside
+/// each slice). Only a model exceeding the aggregate BRAM of
+/// [`MAX_SHARDS`](crate::gemv::mapper::MAX_SHARDS) slices remains a
+/// typed [`GemvError::Unshardable`] — never a silent multi-pass.
 pub fn select(
     model: &Model,
     engine: &EngineConfig,
@@ -223,9 +254,18 @@ pub fn select(
     match model {
         Model::Mlp { .. } => Ok(Selection::Native),
         Model::Gemv { m, n, .. } => {
-            match plan_shards_checked(engine, *m, *n, precision, radix)? {
-                None => Ok(Selection::Native),
-                Some(sp) => Ok(Selection::Sharded(sp)),
+            match plan_shards_checked(engine, *m, *n, precision, radix) {
+                Ok(None) => Ok(Selection::Native),
+                Ok(Some(sp)) => Ok(Selection::Sharded(sp)),
+                Err(row_err) => {
+                    match plan_col_shards_checked(engine, *m, *n, precision, radix)? {
+                        Some(cp) => Ok(Selection::ColSharded(cp)),
+                        // unreachable in practice: the column planner
+                        // returns `Ok(None)` only when the row tier
+                        // succeeds — keep the row error as the answer
+                        None => Err(row_err),
+                    }
+                }
             }
         }
     }
@@ -241,21 +281,22 @@ pub fn build(policy: BackendPolicy, ctx: &BackendContext) -> Arc<dyn ExecBackend
         BackendPolicy::Auto => Arc::new(AutoBackend::new(ctx)),
         BackendPolicy::Native => Arc::new(NativeBackend::new(ctx)),
         BackendPolicy::Sharded => Arc::new(ShardedBackend::new(ctx)),
+        BackendPolicy::ColSharded => Arc::new(ColShardedBackend::new(ctx)),
         BackendPolicy::Golden => golden::build(ctx),
         BackendPolicy::CrossCheck => Arc::new(CrossCheckBackend::auto(ctx)),
     }
 }
 
 /// The serving default: per-model [`select`] over a native engine and
-/// a lazily built sharded pool — the executor pair each coordinator
-/// worker has owned since the sharded tier landed, now behind the
-/// trait.
+/// lazily built row- and column-sharded pools — the executor set each
+/// coordinator worker owns behind the trait.
 pub struct AutoBackend {
     engine: EngineConfig,
     precision: usize,
     radix: u8,
     native: NativeBackend,
     sharded: ShardedBackend,
+    col_sharded: ColShardedBackend,
 }
 
 impl AutoBackend {
@@ -266,6 +307,7 @@ impl AutoBackend {
             radix: ctx.radix,
             native: NativeBackend::new(ctx),
             sharded: ShardedBackend::new(ctx),
+            col_sharded: ColShardedBackend::new(ctx),
         }
     }
 }
@@ -283,6 +325,11 @@ impl ExecBackend for AutoBackend {
                 concurrency: sp.k(),
                 exec: PreparedExec::Sharded(sp),
             }),
+            Selection::ColSharded(cp) => Ok(PreparedModel {
+                model: model.clone(),
+                concurrency: cp.engine_concurrency(&self.engine),
+                exec: PreparedExec::ColSharded(cp),
+            }),
         }
     }
 
@@ -293,6 +340,7 @@ impl ExecBackend for AutoBackend {
     ) -> Vec<Result<BackendResult, BackendError>> {
         match &prepared.exec {
             PreparedExec::Sharded(_) => self.sharded.execute_batch(prepared, xs),
+            PreparedExec::ColSharded(_) => self.col_sharded.execute_batch(prepared, xs),
             _ => self.native.execute_batch(prepared, xs),
         }
     }

@@ -75,6 +75,7 @@ impl ExecBackend for NativeBackend {
                             stats,
                             resident,
                             mismatches: 0,
+                            reduce_adds: 0,
                             backend: "native",
                         })
                         .map_err(BackendError::from)
@@ -93,6 +94,7 @@ impl ExecBackend for NativeBackend {
                             // request: no residency to report
                             resident: false,
                             mismatches: 0,
+                            reduce_adds: 0,
                             backend: "native",
                         })
                         .map_err(BackendError::from)

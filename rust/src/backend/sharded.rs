@@ -53,8 +53,8 @@ impl ExecBackend for ShardedBackend {
                 what: "mlp models (row-sharding applies to one weight matrix)",
             }),
             Model::Gemv { m, n, .. } => {
-                let sp = match plan_shards_checked(&self.engine, *m, *n, self.precision, self.radix)?
-                {
+                let planned = plan_shards_checked(&self.engine, *m, *n, self.precision, self.radix);
+                let sp = match planned? {
                     Some(sp) => sp,
                     // already single-pass on one engine: run as one
                     // shard on pool member 0 (bit-identical to native)
@@ -113,6 +113,7 @@ impl ExecBackend for ShardedBackend {
                     stats,
                     resident,
                     mismatches: 0,
+                    reduce_adds: 0,
                     backend: "sharded",
                 })
                 .map_err(BackendError::from)

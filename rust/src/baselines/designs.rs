@@ -32,29 +32,165 @@ impl DesignPoint {
 
 /// Table I: maximum frequencies of existing FPGA-PIM designs.
 pub const TABLE1: [DesignPoint; 8] = [
-    DesignPoint { name: "CCB", kind: "Custom", device: "Stratix 10", f_bram: 1000.0, f_pim: Some(624.0), f_sys: Some(455.0), util: None },
-    DesignPoint { name: "CoMeFa-A", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(294.0), f_sys: Some(288.0), util: None },
-    DesignPoint { name: "CoMeFa-D", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(588.0), f_sys: Some(292.0), util: None },
-    DesignPoint { name: "BRAMAC-2SA", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(586.0), f_sys: None, util: None },
-    DesignPoint { name: "BRAMAC-1DA", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(500.0), f_sys: None, util: None },
-    DesignPoint { name: "M4BRAM", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(553.0), f_sys: None, util: None },
-    DesignPoint { name: "SPAR-2", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(445.0), f_sys: Some(200.0), util: None },
-    DesignPoint { name: "PiCaSO", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(737.0), f_sys: None, util: None },
+    DesignPoint {
+        name: "CCB",
+        kind: "Custom",
+        device: "Stratix 10",
+        f_bram: 1000.0,
+        f_pim: Some(624.0),
+        f_sys: Some(455.0),
+        util: None,
+    },
+    DesignPoint {
+        name: "CoMeFa-A",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(294.0),
+        f_sys: Some(288.0),
+        util: None,
+    },
+    DesignPoint {
+        name: "CoMeFa-D",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(588.0),
+        f_sys: Some(292.0),
+        util: None,
+    },
+    DesignPoint {
+        name: "BRAMAC-2SA",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(586.0),
+        f_sys: None,
+        util: None,
+    },
+    DesignPoint {
+        name: "BRAMAC-1DA",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(500.0),
+        f_sys: None,
+        util: None,
+    },
+    DesignPoint {
+        name: "M4BRAM",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(553.0),
+        f_sys: None,
+        util: None,
+    },
+    DesignPoint {
+        name: "SPAR-2",
+        kind: "Overlay",
+        device: "UltraScale+",
+        f_bram: 737.0,
+        f_pim: Some(445.0),
+        f_sys: Some(200.0),
+        util: None,
+    },
+    DesignPoint {
+        name: "PiCaSO",
+        kind: "Overlay",
+        device: "UltraScale+",
+        f_bram: 737.0,
+        f_pim: Some(737.0),
+        f_sys: None,
+        util: None,
+    },
 ];
 
 /// Table V: utilization and frequency of PIM-based GEMV/GEMM engines.
 /// util = [LUT%, FF%, DSP%, BRAM%]; RIMA/CCB/CoMeFa report combined
 /// logic% which we store in the LUT slot (FF = NaN).
 pub const TABLE5: [DesignPoint; 9] = [
-    DesignPoint { name: "RIMA-Fast", kind: "Custom", device: "Stratix 10", f_bram: 1000.0, f_pim: None, f_sys: Some(455.0), util: Some([60.1, f64::NAN, 50.0, 55.0]) },
-    DesignPoint { name: "RIMA-Large", kind: "Custom", device: "Stratix 10", f_bram: 1000.0, f_pim: None, f_sys: Some(278.0), util: Some([89.0, f64::NAN, 50.0, 93.0]) },
-    DesignPoint { name: "CCB GEMV", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(624.0), f_sys: Some(231.0), util: Some([27.9, f64::NAN, 90.1, 91.8]) },
-    DesignPoint { name: "CoMeFa-A GEMV", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(294.0), f_sys: Some(242.0), util: Some([27.9, f64::NAN, 90.1, 91.8]) },
-    DesignPoint { name: "CoMeFa-D GEMM", kind: "Custom", device: "Arria 10", f_bram: 730.0, f_pim: Some(588.0), f_sys: Some(267.0), util: Some([25.5, f64::NAN, 92.4, 86.7]) },
-    DesignPoint { name: "SPAR-2 (US+)", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(445.0), f_sys: Some(200.0), util: Some([11.3, 2.4, 0.0, 14.5]) },
-    DesignPoint { name: "SPAR-2 (V7)", kind: "Overlay", device: "Virtex-7", f_bram: 543.0, f_pim: Some(445.0), f_sys: Some(130.0), util: Some([28.5, 7.0, 0.0, 30.4]) },
-    DesignPoint { name: "IMAGine", kind: "Overlay", device: "UltraScale+", f_bram: 737.0, f_pim: Some(737.0), f_sys: Some(737.0), util: Some([35.6, 24.8, 0.0, 100.0]) },
-    DesignPoint { name: "IMAGine-CB", kind: "Custom", device: "UltraScale+", f_bram: 737.0, f_pim: Some(737.0), f_sys: Some(737.0), util: Some([10.1, 7.2, 0.0, 100.0]) },
+    DesignPoint {
+        name: "RIMA-Fast",
+        kind: "Custom",
+        device: "Stratix 10",
+        f_bram: 1000.0,
+        f_pim: None,
+        f_sys: Some(455.0),
+        util: Some([60.1, f64::NAN, 50.0, 55.0]),
+    },
+    DesignPoint {
+        name: "RIMA-Large",
+        kind: "Custom",
+        device: "Stratix 10",
+        f_bram: 1000.0,
+        f_pim: None,
+        f_sys: Some(278.0),
+        util: Some([89.0, f64::NAN, 50.0, 93.0]),
+    },
+    DesignPoint {
+        name: "CCB GEMV",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(624.0),
+        f_sys: Some(231.0),
+        util: Some([27.9, f64::NAN, 90.1, 91.8]),
+    },
+    DesignPoint {
+        name: "CoMeFa-A GEMV",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(294.0),
+        f_sys: Some(242.0),
+        util: Some([27.9, f64::NAN, 90.1, 91.8]),
+    },
+    DesignPoint {
+        name: "CoMeFa-D GEMM",
+        kind: "Custom",
+        device: "Arria 10",
+        f_bram: 730.0,
+        f_pim: Some(588.0),
+        f_sys: Some(267.0),
+        util: Some([25.5, f64::NAN, 92.4, 86.7]),
+    },
+    DesignPoint {
+        name: "SPAR-2 (US+)",
+        kind: "Overlay",
+        device: "UltraScale+",
+        f_bram: 737.0,
+        f_pim: Some(445.0),
+        f_sys: Some(200.0),
+        util: Some([11.3, 2.4, 0.0, 14.5]),
+    },
+    DesignPoint {
+        name: "SPAR-2 (V7)",
+        kind: "Overlay",
+        device: "Virtex-7",
+        f_bram: 543.0,
+        f_pim: Some(445.0),
+        f_sys: Some(130.0),
+        util: Some([28.5, 7.0, 0.0, 30.4]),
+    },
+    DesignPoint {
+        name: "IMAGine",
+        kind: "Overlay",
+        device: "UltraScale+",
+        f_bram: 737.0,
+        f_pim: Some(737.0),
+        f_sys: Some(737.0),
+        util: Some([35.6, 24.8, 0.0, 100.0]),
+    },
+    DesignPoint {
+        name: "IMAGine-CB",
+        kind: "Custom",
+        device: "UltraScale+",
+        f_bram: 737.0,
+        f_pim: Some(737.0),
+        f_sys: Some(737.0),
+        util: Some([10.1, 7.2, 0.0, 100.0]),
+    },
 ];
 
 #[cfg(test)]

@@ -50,7 +50,13 @@ impl ImagineModel {
     /// precision"): every PE contributes one MAC (2 ops) per
     /// `mac_cost` cycles at f_sys.
     pub fn peak_tops(&self, p: usize) -> f64 {
-        let pl = plan(&self.config, self.config.pe_rows(), self.config.block_cols() * 64, p, self.radix);
+        let pl = plan(
+            &self.config,
+            self.config.pe_rows(),
+            self.config.block_cols() * 64,
+            p,
+            self.radix,
+        );
         let macs_per_sec =
             self.config.total_pes() as f64 * self.f_sys_mhz * 1e6 / pl.mac_cost() as f64;
         2.0 * macs_per_sec / 1e12

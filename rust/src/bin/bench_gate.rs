@@ -1,0 +1,92 @@
+//! CI bench-regression gate: compare two `BENCH_*.json` files and fail
+//! (exit 1) when any gated row regresses by more than the threshold.
+//!
+//! ```text
+//! bench_gate <base.json> <current.json> [--threshold 0.15]
+//! ```
+//!
+//! Gated rows are the named numeric rows with a known direction:
+//! `*reqps` (higher-better, measured best-of-3 by the benches) and
+//! the deterministic `*plane_ops*` work-metric rows (lower-better) —
+//! see `util::bench::gate_regressions`. Wall-clock and speedup rows
+//! stay informational: CI runners are too noisy for a hard gate on
+//! single raw-time measurements. A missing *base* file exits 0 (first
+//! run on a branch has no baseline); a missing or unparsable
+//! *current* file is an error (the PR's benches must have produced
+//! one).
+
+use imagine::util::bench::{flatten_metrics, gate_regressions};
+use imagine::util::Json;
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+fn load(path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let mut out = BTreeMap::new();
+    flatten_metrics(&json, "", &mut out);
+    Ok(out)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut threshold = 0.15f64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--threshold" {
+            let Some(v) = it.next().and_then(|v| v.parse::<f64>().ok()) else {
+                eprintln!("--threshold needs a fractional value (e.g. 0.15)");
+                return ExitCode::from(2);
+            };
+            threshold = v;
+        } else {
+            paths.push(a.clone());
+        }
+    }
+    let [base_path, cur_path] = paths.as_slice() else {
+        eprintln!("usage: bench_gate <base.json> <current.json> [--threshold 0.15]");
+        return ExitCode::from(2);
+    };
+    let base = match load(base_path) {
+        Ok(b) => b,
+        Err(e) => {
+            // no baseline (first run on this base branch): nothing to
+            // gate against, pass
+            println!("bench gate: no usable baseline ({e}) — skipping");
+            return ExitCode::SUCCESS;
+        }
+    };
+    let current = match load(cur_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench gate: current run unreadable: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let report = gate_regressions(&base, &current, threshold);
+    println!(
+        "bench gate: {} gated rows compared at {:.0}% threshold",
+        report.compared,
+        threshold * 100.0
+    );
+    if report.regressions.is_empty() {
+        println!("bench gate: OK");
+        return ExitCode::SUCCESS;
+    }
+    for r in &report.regressions {
+        eprintln!(
+            "REGRESSION {}: base {:.3} -> current {:.3} ({:+.1}%)",
+            r.key,
+            r.base,
+            r.current,
+            (r.ratio - 1.0) * 100.0
+        );
+    }
+    eprintln!(
+        "bench gate: {} row(s) regressed > {:.0}%",
+        report.regressions.len(),
+        threshold * 100.0
+    );
+    ExitCode::FAILURE
+}

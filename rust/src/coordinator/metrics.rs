@@ -24,6 +24,14 @@ pub struct Metrics {
     /// staged in engine BRAM (backend residency info: the group paid
     /// only vector staging).
     pub residency_hits: AtomicU64,
+    /// Fused groups executed on the column-sharded backend (models the
+    /// row tier could not make resident).
+    pub col_sharded_groups: AtomicU64,
+    /// Host-side reduction adds paid by column-sharded execution
+    /// (summing K partial vectors costs (K-1) * m adds per request) —
+    /// the host cost of serving wide models that the engine work
+    /// metric cannot see.
+    pub host_reduce_adds: AtomicU64,
     /// Requests diffed against the reference backend under the
     /// `cross_check` policy.
     pub cross_checked: AtomicU64,
@@ -45,6 +53,8 @@ pub struct MetricsSnapshot {
     pub batched_requests: u64,
     pub sim_cycles: u64,
     pub residency_hits: u64,
+    pub col_sharded_groups: u64,
+    pub host_reduce_adds: u64,
     pub cross_checked: u64,
     pub cross_check_mismatches: u64,
     pub latency_counts: Vec<u64>,
@@ -66,6 +76,8 @@ impl Metrics {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             residency_hits: self.residency_hits.load(Ordering::Relaxed),
+            col_sharded_groups: self.col_sharded_groups.load(Ordering::Relaxed),
+            host_reduce_adds: self.host_reduce_adds.load(Ordering::Relaxed),
             cross_checked: self.cross_checked.load(Ordering::Relaxed),
             cross_check_mismatches: self.cross_check_mismatches.load(Ordering::Relaxed),
             latency_counts: self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
@@ -152,11 +164,14 @@ mod tests {
         m.residency_hits.fetch_add(2, Ordering::Relaxed);
         m.cross_checked.fetch_add(5, Ordering::Relaxed);
         m.cross_check_mismatches.fetch_add(1, Ordering::Relaxed);
+        m.col_sharded_groups.fetch_add(3, Ordering::Relaxed);
+        m.host_reduce_adds.fetch_add(96, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(
             (s.residency_hits, s.cross_checked, s.cross_check_mismatches),
             (2, 5, 1)
         );
+        assert_eq!((s.col_sharded_groups, s.host_reduce_adds), (3, 96));
     }
 
     #[test]

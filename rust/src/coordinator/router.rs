@@ -3,7 +3,8 @@
 //! Pure name-hash affinity (the old policy) keeps each worker's
 //! backend caches (compiled `GemvProgram`s, staged weights, compiled
 //! PJRT executables) hot for the models it owns — but it pins a hot
-//! model to one worker while the rest of the pool idles. The router now tracks outstanding requests per
+//! model to one worker while the rest of the pool idles. The router
+//! now tracks outstanding requests per
 //! worker and dispatches to the least-loaded queue, breaking ties in
 //! favour of the model's affinity worker: an idle pool still serves
 //! every model from its home worker (caches and residency stay hot),

@@ -330,14 +330,25 @@ fn execute_batch(
                     ((0..xs.len()).map(|_| Err(e.clone())).collect(), 1)
                 }
             };
-        // Residency observability: one staged-weights hit per group
-        // that arrived with its model already resident.
-        if results
+        // Backend observability: one staged-weights hit per group that
+        // arrived with its model already resident, one col-sharded
+        // group per group the column tier executed, and the host-side
+        // reduction adds the group's requests paid.
+        if let Some(first_ok) = results.iter().find_map(|r| r.as_ref().ok()) {
+            if first_ok.resident {
+                metrics.residency_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            if first_ok.backend == "col_sharded" {
+                metrics.col_sharded_groups.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let reduce_adds: u64 = results
             .iter()
-            .find_map(|r| r.as_ref().ok())
-            .is_some_and(|r| r.resident)
-        {
-            metrics.residency_hits.fetch_add(1, Ordering::Relaxed);
+            .filter_map(|r| r.as_ref().ok())
+            .map(|r| r.reduce_adds)
+            .sum();
+        if reduce_adds > 0 {
+            metrics.host_reduce_adds.fetch_add(reduce_adds, Ordering::Relaxed);
         }
         for (&i, result) in idxs.iter().zip(results) {
             let pending = &batch[i];
@@ -589,6 +600,39 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn wide_model_served_through_col_sharded_pool() {
+        // one matrix row of 10_000 8-bit elements overflows the small()
+        // engine's chunk capacity (4608): row-sharding can't help, so
+        // this model used to be a typed Unshardable error under auto —
+        // the column tier must now serve it resident, bit-identical to
+        // the host reference
+        let (m, n) = (4, 10_000);
+        let mut rng = XorShift::new(53);
+        let w = rng.vec_i64(m * n, -16, 15);
+        let reg = ModelRegistry::default();
+        reg.register_gemv("wide", w.clone(), m, n).unwrap();
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+            reg,
+        );
+        for _ in 0..2 {
+            let x = rng.vec_i64(n, -64, 63);
+            let resp = coord.call(Request { model: "wide".into(), x: x.clone() }).unwrap();
+            assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+            assert!(resp.cycles > 0);
+            assert_eq!(resp.backend, "col_sharded");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.col_sharded_groups, 2, "{snap:?}");
+        // K = 3 slices -> (K-1) * m adds per request
+        assert_eq!(snap.host_reduce_adds, 2 * 2 * m as u64, "{snap:?}");
+        // the second request arrives with every slice resident
+        assert!(snap.residency_hits >= 1, "{snap:?}");
     }
 
     #[test]

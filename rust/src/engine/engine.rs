@@ -438,9 +438,23 @@ impl Engine {
                         stage_spill_planes(col, first, p, 2 * e + 1, b.base);
                     }
                     if radix == 4 {
-                        alu::mac_booth4_with(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear, scratch);
+                        alu::mac_booth4_with(
+                            col,
+                            d.as_tuple(),
+                            a.as_tuple(),
+                            b.as_tuple(),
+                            clear,
+                            scratch,
+                        );
                     } else {
-                        alu::mac_radix2_with(col, d.as_tuple(), a.as_tuple(), b.as_tuple(), clear, scratch);
+                        alu::mac_radix2_with(
+                            col,
+                            d.as_tuple(),
+                            a.as_tuple(),
+                            b.as_tuple(),
+                            clear,
+                            scratch,
+                        );
                     }
                 });
             }
@@ -517,7 +531,12 @@ impl Engine {
     }
 
     /// Read per-lane values of logical register `reg` in column `col`.
-    pub fn read_reg_lanes(&self, col: usize, reg: u8, width: usize) -> Result<Vec<i64>, EngineError> {
+    pub fn read_reg_lanes(
+        &self,
+        col: usize,
+        reg: u8,
+        width: usize,
+    ) -> Result<Vec<i64>, EngineError> {
         let r = RegFile::resolve(reg, width)?;
         Ok(self.columns.buf(col).read_all(r.base, r.width))
     }
@@ -558,7 +577,14 @@ impl Engine {
     /// MAC by the 3-address schedule (paper §IV-D). Only the element's
     /// `p` planes move (the consuming MAC reads the operand at width
     /// `p`; §Perf L3-3).
-    pub fn stage_spill(&mut self, col: usize, first_reg: u8, p: usize, idx: usize, reg: u8) -> Result<(), EngineError> {
+    pub fn stage_spill(
+        &mut self,
+        col: usize,
+        first_reg: u8,
+        p: usize,
+        idx: usize,
+        reg: u8,
+    ) -> Result<(), EngineError> {
         let r = RegFile::resolve(reg, p)?;
         stage_spill_planes(self.columns.buf_mut(col), first_reg, p, idx, r.base);
         Ok(())

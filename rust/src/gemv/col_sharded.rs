@@ -1,0 +1,467 @@
+//! Column-sharded multi-engine GEMV: a pool of [`ShardedScheduler`]s
+//! serving one *wide* matrix as column slices, with the K partial
+//! dot-product vectors reduced host-side.
+//!
+//! Row-sharding (`gemv/sharded.rs`) restores weight residency for
+//! matrices with too many rows, but it can never shrink the input
+//! dimension: a matrix whose columns overflow a single engine's chunk
+//! capacity used to be a typed `GemvError::Unshardable` with no
+//! resident-serving path at all. The column tier closes that gap: the
+//! planner ([`super::mapper::plan_col_shards`]) splits `n` into K
+//! balanced slices that each serve resident on one pool member, slice
+//! `i` always executes on member `i` (stable per-slice residency, the
+//! same discipline as the row tier), and the host sums the K partial
+//! `m`-vectors element-wise into the final `y`. Every partial is an
+//! exact 64-bit integer — each slice's engine accumulator is sized for
+//! its own slice width (`OpParams::exact_acc_width(p, cols)`), and the
+//! host reduction widens to `i64`, so the sum is bit-identical to a
+//! forced-native multi-pass run of the whole matrix (property-tested
+//! in `rust/tests/col_sharded_gemv.rs`).
+//!
+//! The pool members are whole [`ShardedScheduler`]s, so the two tiers
+//! compose: a slice that is still too tall for one engine row-shards
+//! *inside* its member, and a model oversized in both dimensions
+//! serves resident through K_col x K_row engines. This mirrors 2-D
+//! balanced data placement across PIM banks (arXiv:2403.20297), with
+//! the host reduction playing the inter-bank merge the PrIM studies
+//! identify as the GEMV bottleneck knob.
+
+use super::codegen::GemvError;
+use super::mapper::{plan_col_shards, ColShardPlan};
+use super::scheduler::GemvOutcome;
+use super::sharded::ShardedScheduler;
+use crate::engine::EngineConfig;
+use crate::sim::ExecStats;
+use crate::util::ThreadPool;
+use std::sync::Mutex;
+
+/// A GEMV scheduler over a pool of [`ShardedScheduler`]s, serving
+/// column-sharded matrices with per-slice weight residency and
+/// host-side partial-sum reduction. The pool grows on demand up to the
+/// planner's [`MAX_SHARDS`](super::mapper::MAX_SHARDS) slices.
+pub struct ColShardedScheduler {
+    config: EngineConfig,
+    /// Row-shard fan-out threads per pool member (1 = each member runs
+    /// its internal row-shards serially: slice-level parallelism
+    /// already uses the machine).
+    member_threads: usize,
+    /// Fan-out pool for the slice dispatch (members run concurrently).
+    /// `None` on a one-thread budget: slices then run serially on the
+    /// caller instead of oversubscribing the machine.
+    pool: Option<ThreadPool>,
+    /// Pool members; member `i` owns column slice `i` of every sharded
+    /// model it serves (stable assignment keeps residency
+    /// member-local).
+    members: Vec<Mutex<ShardedScheduler>>,
+    /// Per-slice merged stats of the last column-sharded batch.
+    slice_stats: Vec<ExecStats>,
+    /// Host-side reduction adds performed by the last batch (summing K
+    /// partial vectors costs (K-1) * m adds per request).
+    reduce_adds: u64,
+    /// One-slot cache of the resident model's sliced weights, keyed by
+    /// residency token: re-slicing an `m x n` matrix on every hot batch
+    /// would cost O(m * n) host copies per call for a model whose whole
+    /// point is that nothing but vectors move.
+    sliced: Option<(u64, Vec<Vec<i64>>)>,
+}
+
+impl ColShardedScheduler {
+    /// Build with the default thread budget (`IMAGINE_THREADS`) for the
+    /// slice fan-out and serial pool members.
+    pub fn new(config: EngineConfig) -> Self {
+        Self::with_threads(config, ThreadPool::default_threads(), 1)
+    }
+
+    /// Build with an explicit thread budget: `pool_threads` is the
+    /// total slice-dispatch concurrency including the calling thread
+    /// (1 = fully serial fan-out), `member_threads` the row-shard
+    /// fan-out width inside each member.
+    pub fn with_threads(config: EngineConfig, pool_threads: usize, member_threads: usize) -> Self {
+        let extra = pool_threads.saturating_sub(1);
+        ColShardedScheduler {
+            config,
+            member_threads: member_threads.max(1),
+            pool: (extra > 0).then(|| ThreadPool::new(extra)),
+            members: Vec::new(),
+            slice_stats: Vec::new(),
+            reduce_adds: 0,
+            sliced: None,
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Pool members created so far.
+    pub fn members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Per-slice merged [`ExecStats`] of the last column-sharded batch
+    /// (empty after an unsharded fallback run). Their field-wise sum
+    /// equals the sum over the batch's per-vector outcome stats.
+    pub fn last_slice_stats(&self) -> &[ExecStats] {
+        &self.slice_stats
+    }
+
+    /// Host-side reduction adds of the last column-sharded batch
+    /// ((K-1) * m per successfully served vector) — the host cost the
+    /// engine work metric cannot see.
+    pub fn last_reduce_adds(&self) -> u64 {
+        self.reduce_adds
+    }
+
+    /// Whether every slice of `cp` is resident on its pool member for
+    /// `token` — the column-sharded residency probe (a hot plan
+    /// re-stages nothing; each member moves only its vector slice).
+    pub fn is_resident(&self, token: u64, cp: &ColShardPlan) -> bool {
+        cp.slices.iter().all(|sl| {
+            self.members.get(sl.index).is_some_and(|m| {
+                m.lock()
+                    .unwrap()
+                    .is_resident_model(token, cp.m, sl.cols, cp.precision, cp.radix)
+            })
+        })
+    }
+
+    fn ensure_members(&mut self, k: usize) {
+        while self.members.len() < k {
+            let member = ShardedScheduler::with_threads(self.config, self.member_threads, 1);
+            self.members.push(Mutex::new(member));
+        }
+    }
+
+    /// Build (or reuse) the per-slice weight copies for `token`. The
+    /// caller contract matches the row tier: one token always maps to
+    /// one (weights, plan) pair, so a token hit can reuse the slices.
+    fn ensure_sliced(&mut self, cp: &ColShardPlan, token: u64, w: &[i64]) {
+        let hit = self
+            .sliced
+            .as_ref()
+            .is_some_and(|(t, v)| *t == token && v.len() == cp.slices.len());
+        if hit {
+            return;
+        }
+        let slices = cp
+            .slices
+            .iter()
+            .map(|sl| {
+                let mut ws = Vec::with_capacity(cp.m * sl.cols);
+                for r in 0..cp.m {
+                    let base = r * cp.n + sl.col0;
+                    ws.extend_from_slice(&w[base..base + sl.cols]);
+                }
+                ws
+            })
+            .collect();
+        self.sliced = Some((token, slices));
+    }
+
+    /// Run a fused multi-vector GEMV, column-sharding across the pool
+    /// when the planner says row-sharding alone cannot make the model
+    /// resident. Otherwise the batch runs on pool member 0 exactly like
+    /// [`ShardedScheduler::gemv_batch`] (which itself row-shards or
+    /// falls back to a single engine), so this scheduler serves every
+    /// shape.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemv_batch(
+        &mut self,
+        token: u64,
+        w: &[i64],
+        xs: &[&[i64]],
+        m: usize,
+        n: usize,
+        p: usize,
+        radix: u8,
+    ) -> Vec<GemvOutcome> {
+        match plan_col_shards(&self.config, m, n, p, radix) {
+            Some(cp) => self.run_plan(&cp, token, w, xs),
+            None => {
+                self.ensure_members(1);
+                self.slice_stats.clear();
+                self.reduce_adds = 0;
+                self.members[0]
+                    .get_mut()
+                    .unwrap()
+                    .gemv_batch(token, w, xs, m, n, p, radix)
+            }
+        }
+    }
+
+    /// Execute a batch under an explicit [`ColShardPlan`] (the serving
+    /// path passes the planner's, tests force K). Slice `i` runs on
+    /// member `i`; each member stages its column slice once per batch
+    /// (or not at all when `token` is already resident there) and
+    /// streams every vector's matching sub-range through it. Outcomes
+    /// are per-vector: `y` is the element-wise 64-bit sum of the K
+    /// partial vectors, stats the merge of all slices' work for that
+    /// vector (host reduction adds are reported separately via
+    /// [`Self::last_reduce_adds`] — they are host arithmetic, not
+    /// engine work).
+    ///
+    /// `token` identifies the *matrix*: callers replaying the same
+    /// token must pass the same weights and plan (the serving path
+    /// guarantees both — model ids are never reused and
+    /// `plan_col_shards` is deterministic per shape).
+    pub fn run_plan(
+        &mut self,
+        cp: &ColShardPlan,
+        token: u64,
+        w: &[i64],
+        xs: &[&[i64]],
+    ) -> Vec<GemvOutcome> {
+        let k = cp.slices.len();
+        let (m, n, p, radix) = (cp.m, cp.n, cp.precision, cp.radix);
+        self.slice_stats.clear();
+        self.reduce_adds = 0;
+        if w.len() != m * n {
+            return xs
+                .iter()
+                .map(|_| Err(GemvError::Shape { what: "matrix", expected: m * n, got: w.len() }))
+                .collect();
+        }
+        // Pre-validate every vector against the FULL model shape: a
+        // slice only sees its own column range, so a short vector or an
+        // out-of-range element in another slice's range would otherwise
+        // fail some members and not others. Checking here keeps the
+        // per-vector error behavior identical to the native path
+        // (length first, then the first out-of-range value).
+        let half = 1i64 << (p - 1);
+        let mut pre: Vec<Option<GemvError>> = xs
+            .iter()
+            .map(|x| {
+                if x.len() != n {
+                    Some(GemvError::Shape { what: "vector", expected: n, got: x.len() })
+                } else {
+                    x.iter()
+                        .find(|&&v| v < -half || v >= half)
+                        .map(|&v| GemvError::Range(v, p))
+                }
+            })
+            .collect();
+        let valid: Vec<usize> =
+            (0..xs.len()).filter(|&i| pre[i].is_none()).collect();
+        self.ensure_members(k);
+        self.ensure_sliced(cp, token, w);
+        let slots: Vec<Mutex<Vec<GemvOutcome>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
+        {
+            let members = &self.members;
+            let (_, sliced) = self.sliced.as_ref().expect("sliced weights just ensured");
+            let slices = &cp.slices;
+            let run_slice = |i: usize| {
+                let sl = slices[i];
+                let xs_i: Vec<&[i64]> = valid
+                    .iter()
+                    .map(|&j| &xs[j][sl.col0..sl.col0 + sl.cols])
+                    .collect();
+                let mut member = members[i].lock().unwrap();
+                let out = member.gemv_batch(token, &sliced[i], &xs_i, m, sl.cols, p, radix);
+                *slots[i].lock().unwrap() = out;
+            };
+            match &self.pool {
+                Some(pool) => pool.run(k, &run_slice),
+                None => (0..k).for_each(run_slice),
+            }
+        }
+        let mut per_slice: Vec<std::vec::IntoIter<GemvOutcome>> = slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().into_iter())
+            .collect();
+        self.slice_stats = vec![ExecStats::default(); k];
+        let mut merged = Vec::with_capacity(valid.len());
+        for _ in 0..valid.len() {
+            // host reduction: y[r] = sum over slices of partial[r],
+            // exact in i64 (|partial| <= cols * 2^(2p-2) per slice)
+            let mut y = vec![0i64; m];
+            let mut stats = ExecStats::default();
+            let mut err: Option<GemvError> = None;
+            for (s, it) in per_slice.iter_mut().enumerate() {
+                match it.next().expect("one outcome per slice per vector") {
+                    Ok((partial, st)) => {
+                        self.slice_stats[s].merge(&st);
+                        if err.is_none() {
+                            for (acc, v) in y.iter_mut().zip(&partial) {
+                                *acc += v;
+                            }
+                            stats.merge(&st);
+                        }
+                    }
+                    // pre-validation catches every per-vector input
+                    // error, so a member failure here is engine-level;
+                    // keep the first slice's error deterministically
+                    Err(e) => err = err.or(Some(e)),
+                }
+            }
+            merged.push(match err {
+                None => {
+                    self.reduce_adds += ((k - 1) * m) as u64;
+                    Ok((y, stats))
+                }
+                Some(e) => Err(e),
+            });
+        }
+        // interleave the executed outcomes back among the pre-failed
+        // vectors, preserving request order
+        let mut merged = merged.into_iter();
+        pre.iter_mut()
+            .map(|slot| match slot.take() {
+                Some(e) => Err(e),
+                None => merged.next().expect("one merged outcome per valid vector"),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemv::mapper::{plan_col_shards, plan_col_shards_k, plan_shards_checked};
+    use crate::util::XorShift;
+
+    fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+        (0..m)
+            .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    /// single_tile(): 192 lanes x 2 block columns — one matrix row
+    /// holds at most 2 * 12 * 48 = 1152 8-bit elements, so these tests
+    /// trigger chunk overflow with small matrices.
+    fn tiny() -> EngineConfig {
+        EngineConfig::single_tile()
+    }
+
+    #[test]
+    fn forced_col_shards_match_host() {
+        let cfg = tiny();
+        let (m, n, p) = (24, 96, 8);
+        let mut rng = XorShift::new(51);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -100, 100)).collect();
+        let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut sched = ColShardedScheduler::with_threads(cfg, 2, 1);
+        for k in [2, 3, 4] {
+            let cp = plan_col_shards_k(m, n, p, 2, k);
+            let out = sched.run_plan(&cp, 2000 + k as u64, &w, &xrefs);
+            assert_eq!(sched.last_slice_stats().len(), k);
+            assert_eq!(sched.last_reduce_adds(), ((k - 1) * m * xs.len()) as u64);
+            for (r, x) in out.into_iter().zip(&xs) {
+                assert_eq!(r.unwrap().0, host_gemv(&w, x, m, n), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_matrix_promotes_and_stays_correct() {
+        // 2400 columns on a 1152-capacity engine: unshardable by rows,
+        // 3 column slices here
+        let cfg = tiny();
+        let (m, n) = (8, 2400);
+        assert!(plan_shards_checked(&cfg, m, n, 8, 2).is_err());
+        let mut rng = XorShift::new(52);
+        let w = rng.vec_i64(m * n, -16, 15);
+        let x = rng.vec_i64(n, -64, 63);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let mut sched = ColShardedScheduler::with_threads(cfg, 2, 1);
+        let out = sched.gemv_batch(7, &w, &xrefs, m, n, 8, 2);
+        assert!(sched.members() >= 2, "did not column-shard");
+        assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+    }
+
+    #[test]
+    fn second_batch_arrives_resident_per_slice() {
+        let cfg = tiny();
+        let (m, n) = (8, 2400);
+        let cp = plan_col_shards(&cfg, m, n, 8, 2).unwrap();
+        let mut rng = XorShift::new(53);
+        let w = rng.vec_i64(m * n, -16, 15);
+        let x = rng.vec_i64(n, -64, 63);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let mut sched = ColShardedScheduler::with_threads(cfg, 1, 1);
+        assert!(!sched.is_resident(11, &cp), "cold pool must not claim residency");
+        let cold = sched.run_plan(&cp, 11, &w, &xrefs).remove(0).unwrap();
+        assert!(sched.is_resident(11, &cp), "slices must be resident after a batch");
+        let hot = sched.run_plan(&cp, 11, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(cold.0, hot.0);
+        assert!(
+            hot.1.plane_word_ops < cold.1.plane_word_ops,
+            "hot {} !< cold {}: residency must drop staging work",
+            hot.1.plane_word_ops,
+            cold.1.plane_word_ops
+        );
+    }
+
+    #[test]
+    fn serial_fanout_matches_pooled() {
+        // pool_threads = 1 must not spawn a pool and must produce
+        // identical results AND stats
+        let cfg = tiny();
+        let (m, n) = (16, 64);
+        let mut rng = XorShift::new(54);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let cp = plan_col_shards_k(m, n, 8, 2, 3);
+        let mut serial = ColShardedScheduler::with_threads(cfg, 1, 1);
+        let mut pooled = ColShardedScheduler::with_threads(cfg, 3, 1);
+        let ys = serial.run_plan(&cp, 3, &w, &xrefs).remove(0).unwrap();
+        let yp = pooled.run_plan(&cp, 3, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(ys.0, yp.0);
+        assert_eq!(ys.0, host_gemv(&w, &x, m, n));
+        assert_eq!(ys.1, yp.1, "stats must not depend on the fan-out mode");
+    }
+
+    #[test]
+    fn per_vector_failures_stay_isolated_and_consistent() {
+        let cfg = tiny();
+        let (m, n) = (8, 32);
+        let mut rng = XorShift::new(55);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let good = rng.vec_i64(n, -100, 100);
+        // out-of-range element in the LAST slice's column range: the
+        // pre-validation must fail the whole vector, not just slice K
+        let mut bad = rng.vec_i64(n, -100, 100);
+        bad[n - 1] = 5000;
+        let short = vec![1i64; n - 3];
+        let xrefs: Vec<&[i64]> = vec![&good, &bad, &short];
+        let mut sched = ColShardedScheduler::with_threads(cfg, 2, 1);
+        let cp = plan_col_shards_k(m, n, 8, 2, 2);
+        let out = sched.run_plan(&cp, 9, &w, &xrefs);
+        assert_eq!(out[0].as_ref().unwrap().0, host_gemv(&w, &good, m, n));
+        assert!(matches!(out[1], Err(GemvError::Range(5000, 8))), "{:?}", out[1]);
+        assert!(matches!(out[2], Err(GemvError::Shape { what: "vector", .. })), "{:?}", out[2]);
+        // only the good vector pays host reduction
+        assert_eq!(sched.last_reduce_adds(), m as u64);
+    }
+
+    #[test]
+    fn bad_matrix_shape_fails_every_vector() {
+        let mut sched = ColShardedScheduler::with_threads(tiny(), 2, 1);
+        let cp = plan_col_shards_k(8, 8, 8, 2, 2);
+        let x = vec![0i64; 8];
+        let xrefs: Vec<&[i64]> = vec![&x, &x];
+        let out = sched.run_plan(&cp, 1, &[0i64; 63], &xrefs);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| matches!(r, Err(GemvError::Shape { .. }))));
+    }
+
+    #[test]
+    fn composes_with_internal_row_sharding() {
+        // oversized in both dimensions on the tiny engine: 400 rows
+        // need row shards, 1500 columns need column slices
+        let cfg = tiny();
+        let (m, n) = (400, 1500);
+        assert!(plan_shards_checked(&cfg, m, n, 8, 2).is_err());
+        let cp = plan_col_shards(&cfg, m, n, 8, 2).expect("col-shardable");
+        assert!(cp.engine_concurrency(&cfg) > cp.k(), "{cp:?}");
+        let mut rng = XorShift::new(56);
+        let w = rng.vec_i64(m * n, -4, 3);
+        let x = rng.vec_i64(n, -8, 7);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let mut sched = ColShardedScheduler::with_threads(cfg, 2, 2);
+        let out = sched.run_plan(&cp, 77, &w, &xrefs);
+        assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+        assert!(sched.is_resident(77, &cp), "both tiers must hold residency");
+    }
+}

@@ -344,6 +344,181 @@ pub fn plan_shards(
     plan_shards_checked(config, m, n, p, radix).ok().flatten()
 }
 
+/// One column-shard of a matrix: columns `[col0, col0 + cols)` of every
+/// row, always executed on engine-pool member `index`. The member
+/// computes the *partial* dot products `W[:, col0..col0+cols] @
+/// x[col0..col0+cols]`; the host sums the K partial vectors
+/// element-wise into the final `y`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColShard {
+    pub index: usize,
+    pub col0: usize,
+    pub cols: usize,
+}
+
+/// A column-partition of one GEMV across an engine pool — the tier for
+/// matrices whose *input* dimension overflows a single engine's chunk
+/// capacity (row-sharding shrinks `m`, never `n`). Slice `i` is pinned
+/// to pool member `i`, so each member's weight-residency token stays
+/// stable across batches, exactly like the row tier; the balanced
+/// split across members mirrors balanced PIM-bank data placement
+/// (arXiv:2403.20297), with the host-side partial-sum reduction
+/// playing the inter-bank merge.
+///
+/// Column slices compose with row sharding: a slice that is still too
+/// tall for one engine row-shards *inside* its pool member (the
+/// members are [`ShardedScheduler`](super::sharded::ShardedScheduler)s),
+/// so a model oversized in both dimensions serves resident too.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColShardPlan {
+    pub m: usize,
+    pub n: usize,
+    pub precision: usize,
+    pub radix: u8,
+    /// Contiguous column ranges covering `0..n`, one per pool member.
+    pub slices: Vec<ColShard>,
+}
+
+impl ColShardPlan {
+    /// Pool members (= column slices) this plan uses.
+    pub fn k(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// True when every column slice serves resident on its pool member
+    /// for `config`: either the slice's own mapping is single-pass, or
+    /// its internal row-sharding makes every row-shard single-pass.
+    pub fn resident_on(&self, config: &EngineConfig) -> bool {
+        self.slices.iter().all(|s| {
+            match plan_shards_checked(config, self.m, s.cols, self.precision, self.radix) {
+                Ok(None) => true,
+                Ok(Some(sp)) => sp.resident_on(config),
+                Err(_) => false,
+            }
+        })
+    }
+
+    /// Engine-level concurrency of one request under this plan: the
+    /// total engine count across all slices (each slice's internal
+    /// row-shards run in parallel, and the slices run in parallel with
+    /// each other) — the divisor for the modeled device-time estimate.
+    pub fn engine_concurrency(&self, config: &EngineConfig) -> usize {
+        self.slices
+            .iter()
+            .map(|s| {
+                plan_shards(config, self.m, s.cols, self.precision, self.radix)
+                    .map_or(1, |sp| sp.k())
+            })
+            .sum::<usize>()
+            .max(1)
+    }
+
+    /// Host-side reduction work of one request: element-wise additions
+    /// summing K partial `m`-vectors into `y` ((K-1) * m adds, exact in
+    /// 64-bit — see docs/PERF.md "Column-sharded serving").
+    pub fn reduce_adds(&self) -> u64 {
+        (self.slices.len().saturating_sub(1) * self.m) as u64
+    }
+}
+
+/// Partition `n` columns into `k` balanced contiguous slices (the
+/// first `n % k` slices take one extra column). `k` is clamped to
+/// `1..=n`.
+pub fn shard_cols(n: usize, k: usize) -> Vec<ColShard> {
+    assert!(n > 0, "empty GEMV");
+    let k = k.clamp(1, n);
+    let (base, rem) = (n / k, n % k);
+    let mut out = Vec::with_capacity(k);
+    let mut col0 = 0;
+    for index in 0..k {
+        let cols = base + usize::from(index < rem);
+        out.push(ColShard { index, col0, cols });
+        col0 += cols;
+    }
+    out
+}
+
+/// Force a K-way column partition (property tests and ablations; the
+/// serving path uses [`plan_col_shards`], which sizes K so every slice
+/// serves resident).
+pub fn plan_col_shards_k(m: usize, n: usize, p: usize, radix: u8, k: usize) -> ColShardPlan {
+    ColShardPlan { m, n, precision: p, radix, slices: shard_cols(n, k) }
+}
+
+/// Decide whether an `m x n` GEMV needs column-sharding across an
+/// engine pool — the checked form backend selection composes with
+/// [`plan_shards_checked`]:
+///
+/// * `Ok(None)` — the row tier (or a plain single-pass mapping)
+///   already serves this model resident; no column split needed;
+/// * `Ok(Some(plan))` — row-sharding alone cannot make the model
+///   resident, but at most [`MAX_SHARDS`] balanced column slices can:
+///   each slice is single-pass on one engine or row-shards resident
+///   inside its pool member;
+/// * `Err(`[`GemvError::Unshardable`]`)` — no feasible slice width
+///   exists (the row count overflows even [`MAX_SHARDS`] row-shards at
+///   width 1) or residency would need more than [`MAX_SHARDS`] column
+///   slices: the model genuinely exceeds the aggregate BRAM the pool
+///   can offer.
+///
+/// The width search exploits monotonicity: shrinking a slice only ever
+/// helps — a narrower slice needs less chunk capacity per PE *and*
+/// raises the BRAM-budget ceiling on row-shard heights (fewer columns
+/// per row means taller single-pass shards, so fewer row-shards) — so
+/// "slice width `w` serves resident" is downward-closed and the
+/// largest feasible width binary-searches in `O(log n)` planner calls.
+pub fn plan_col_shards_checked(
+    config: &EngineConfig,
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+) -> Result<Option<ColShardPlan>, crate::gemv::codegen::GemvError> {
+    let unshardable = || crate::gemv::codegen::GemvError::Unshardable {
+        rows: m,
+        budget_bits: config.bram_budget_bits(),
+    };
+    let feasible = |w: usize| plan_shards_checked(config, m, w, p, radix).is_ok();
+    if feasible(n) {
+        return Ok(None);
+    }
+    if !feasible(1) {
+        // even a one-column slice cannot serve resident: the row count
+        // alone overflows MAX_SHARDS single-pass members
+        return Err(unshardable());
+    }
+    // invariant: feasible(lo) && !feasible(hi)
+    let (mut lo, mut hi) = (1usize, n);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let k = n.div_ceil(lo);
+    if k > MAX_SHARDS {
+        return Err(unshardable());
+    }
+    // balanced slices are no wider than lo (ceil(n / ceil(n/lo)) <= lo),
+    // so every member serves its slice resident
+    Ok(Some(plan_col_shards_k(m, n, p, radix, k)))
+}
+
+/// [`plan_col_shards_checked`] with the unshardable case folded into
+/// `None`: the fallback form for callers that keep a non-resident path
+/// (the `ColShardedScheduler`'s own promotion check, ablations).
+pub fn plan_col_shards(
+    config: &EngineConfig,
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+) -> Option<ColShardPlan> {
+    plan_col_shards_checked(config, m, n, p, radix).ok().flatten()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -528,6 +703,93 @@ mod tests {
         let sp = plan_shards(&cfg, 900, 64, 8, 2).unwrap();
         assert!(sp.resident_on(&cfg));
         let fewer = plan_shards_k(900, 64, 8, 2, sp.k() - 1);
+        assert!(!fewer.resident_on(&cfg), "{fewer:?}");
+    }
+
+    #[test]
+    fn shard_cols_balanced_partition() {
+        for (n, k) in [(768, 2), (100, 3), (7, 4), (5, 9), (1, 1)] {
+            let slices = shard_cols(n, k);
+            assert_eq!(slices.len(), k.min(n));
+            let mut next = 0;
+            for s in &slices {
+                assert_eq!(s.col0, next, "contiguous");
+                assert!(s.cols >= 1);
+                next += s.cols;
+            }
+            assert_eq!(next, n, "covers all columns");
+            let hi = slices.iter().map(|s| s.cols).max().unwrap();
+            let lo = slices.iter().map(|s| s.cols).min().unwrap();
+            assert!(hi - lo <= 1, "balanced: {slices:?}");
+        }
+    }
+
+    #[test]
+    fn col_planner_restores_residency_on_chunk_overflow() {
+        // small(): one matrix row holds at most 4608 8-bit elements
+        // (4 cols x 24 replicas x 48 per PE), so n = 10_000 is
+        // unshardable by rows — the exact class the column tier serves
+        let cfg = EngineConfig::small();
+        let (m, n) = (8, 10_000);
+        assert!(plan_shards_checked(&cfg, m, n, 8, 2).is_err());
+        let cp = plan_col_shards(&cfg, m, n, 8, 2).expect("col-shardable");
+        assert!(cp.k() >= 2);
+        assert!(cp.k() <= MAX_SHARDS);
+        assert!(cp.resident_on(&cfg), "{cp:?}");
+        assert_eq!(cp.slices.iter().map(|s| s.cols).sum::<usize>(), n);
+        assert_eq!(cp.reduce_adds(), ((cp.k() - 1) * m) as u64);
+    }
+
+    #[test]
+    fn col_planner_declines_when_row_tier_suffices() {
+        let cfg = EngineConfig::small();
+        // already resident on one engine
+        assert!(matches!(plan_col_shards_checked(&cfg, 64, 64, 8, 2), Ok(None)));
+        // row-shardable: the row tier owns it
+        assert!(matches!(plan_col_shards_checked(&cfg, 768, 96, 8, 2), Ok(None)));
+    }
+
+    #[test]
+    fn col_planner_unshardable_when_aggregate_bram_overflows() {
+        // needs ceil(80_000 / 4608) = 18 > MAX_SHARDS slices: the model
+        // exceeds what the whole pool's BRAM can hold resident
+        let cfg = EngineConfig::small();
+        let r = plan_col_shards_checked(&cfg, 8, 80_000, 8, 2);
+        assert!(
+            matches!(
+                r,
+                Err(crate::gemv::codegen::GemvError::Unshardable { rows: 8, budget_bits })
+                    if budget_bits == cfg.bram_budget_bits()
+            ),
+            "{r:?}"
+        );
+        assert!(plan_col_shards(&cfg, 8, 80_000, 8, 2).is_none());
+    }
+
+    #[test]
+    fn col_planner_composes_with_row_sharding() {
+        // oversized in BOTH dimensions: 500 rows need row-sharding, and
+        // 6000 columns overflow the chunk capacity of any row height the
+        // row tier alone could pick — the column planner must produce
+        // slices whose internal row-sharding is fully resident
+        let cfg = EngineConfig::small();
+        let (m, n) = (500, 6000);
+        assert!(plan_shards_checked(&cfg, m, n, 8, 2).is_err());
+        let cp = plan_col_shards(&cfg, m, n, 8, 2).expect("col-shardable");
+        assert!(cp.k() >= 2, "{cp:?}");
+        assert!(cp.resident_on(&cfg), "{cp:?}");
+        // each slice row-shards internally, so the engine-level
+        // concurrency exceeds the slice count
+        assert!(cp.engine_concurrency(&cfg) > cp.k(), "{cp:?}");
+    }
+
+    #[test]
+    fn col_planner_binary_search_is_maximal() {
+        // one fewer slice would force a wider, non-resident member
+        let cfg = EngineConfig::small();
+        let cp = plan_col_shards(&cfg, 8, 10_000, 8, 2).unwrap();
+        assert!(cp.resident_on(&cfg));
+        let fewer = plan_col_shards_k(8, 10_000, 8, 2, cp.k() - 1);
         assert!(!fewer.resident_on(&cfg), "{fewer:?}");
     }
 }

@@ -1,13 +1,18 @@
 //! GEMV on the IMAGine engine: matrix->array mapping, quantization,
 //! instruction codegen and the high-level scheduler.
 
+pub mod codegen;
+pub mod col_sharded;
 pub mod mapper;
 pub mod quant;
-pub mod codegen;
 pub mod scheduler;
 pub mod sharded;
 
-pub use mapper::{plan, plan_shards, plan_shards_checked, plan_shards_k, MappingPlan, Shard, ShardPlan};
 pub use codegen::GemvProgram;
+pub use col_sharded::ColShardedScheduler;
+pub use mapper::{
+    plan, plan_col_shards, plan_col_shards_checked, plan_col_shards_k, plan_shards,
+    plan_shards_checked, plan_shards_k, ColShard, ColShardPlan, MappingPlan, Shard, ShardPlan,
+};
 pub use scheduler::{GemvOutcome, GemvScheduler};
 pub use sharded::ShardedScheduler;

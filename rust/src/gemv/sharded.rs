@@ -97,6 +97,22 @@ impl ShardedScheduler {
         })
     }
 
+    /// Residency probe for an arbitrary model shape, matching what
+    /// [`Self::gemv_batch`] would execute: the per-shard probe when the
+    /// planner row-shards it, the member-0 single-engine probe
+    /// otherwise (a multi-pass fallback never holds residency). Used by
+    /// the column-sharded tier, whose pool members are whole
+    /// `ShardedScheduler`s.
+    pub fn is_resident_model(&self, token: u64, m: usize, n: usize, p: usize, radix: u8) -> bool {
+        match plan_shards(&self.config, m, n, p, radix) {
+            Some(sp) => self.is_resident(token, &sp),
+            None => self
+                .engines
+                .first()
+                .is_some_and(|e| e.lock().unwrap().is_resident(token, m, n, p, radix)),
+        }
+    }
+
     fn ensure_engines(&mut self, k: usize) {
         while self.engines.len() < k {
             let engine = Engine::with_threads(self.config, self.engine_threads);

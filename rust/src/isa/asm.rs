@@ -65,16 +65,46 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
             }
         };
         let instr = match mnemonic.as_str() {
-            "nop" => { arity(0)?; Instr::nop() }
-            "sync" => { arity(0)?; Instr::sync() }
-            "halt" => { arity(0)?; Instr::halt() }
-            "rshift" => { arity(0)?; Instr::rshift() }
-            "ldi" => { arity(2)?; Instr::ldi(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
-            "write" => { arity(2)?; Instr::write(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
-            "read" => { arity(1)?; Instr::read(parse_reg(ops[0], line)?) }
-            "mov" => { arity(2)?; Instr::mov(parse_reg(ops[0], line)?, parse_reg(ops[1], line)?) }
-            "selblk" => { arity(1)?; Instr::selblk(parse_imm(ops[0], line)?) }
-            "setp" => { arity(2)?; Instr::setp(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            "nop" => {
+                arity(0)?;
+                Instr::nop()
+            }
+            "sync" => {
+                arity(0)?;
+                Instr::sync()
+            }
+            "halt" => {
+                arity(0)?;
+                Instr::halt()
+            }
+            "rshift" => {
+                arity(0)?;
+                Instr::rshift()
+            }
+            "ldi" => {
+                arity(2)?;
+                Instr::ldi(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?)
+            }
+            "write" => {
+                arity(2)?;
+                Instr::write(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?)
+            }
+            "read" => {
+                arity(1)?;
+                Instr::read(parse_reg(ops[0], line)?)
+            }
+            "mov" => {
+                arity(2)?;
+                Instr::mov(parse_reg(ops[0], line)?, parse_reg(ops[1], line)?)
+            }
+            "selblk" => {
+                arity(1)?;
+                Instr::selblk(parse_imm(ops[0], line)?)
+            }
+            "setp" => {
+                arity(2)?;
+                Instr::setp(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?)
+            }
             "add" | "sub" | "mult" | "mac" => {
                 arity(3)?;
                 let (rd, rs1, rs2) = (
@@ -90,8 +120,14 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
                 };
                 Instr::new(op, rd, rs1, rs2, 0)
             }
-            "accum" => { arity(2)?; Instr::accum(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
-            "fold" => { arity(2)?; Instr::fold(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?) }
+            "accum" => {
+                arity(2)?;
+                Instr::accum(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?)
+            }
+            "fold" => {
+                arity(2)?;
+                Instr::fold(parse_reg(ops[0], line)?, parse_imm(ops[1], line)?)
+            }
             _ => return Err(AsmError::UnknownMnemonic { line, mnemonic }),
         };
         prog.push(instr);

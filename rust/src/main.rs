@@ -9,8 +9,9 @@
 //! ```
 //!
 //! `serve --backend` takes an execution-backend policy
-//! (`auto | native | sharded | golden | cross_check`); `gemv --verify`
-//! needs a build with the `pjrt` feature and the AOT artifacts.
+//! (`auto | native | sharded | col_sharded | golden | cross_check`);
+//! `gemv --verify` needs a build with the `pjrt` feature and the AOT
+//! artifacts.
 
 use imagine::backend::BackendPolicy;
 use imagine::baselines::latency::{all_engines, comparison_engines};
@@ -107,7 +108,10 @@ fn cmd_gemv(args: &Args) -> i32 {
     if args.has("verify") {
         #[cfg(feature = "pjrt")]
         match Runtime::load(Path::new("artifacts")) {
-            Ok(mut rt) => match rt.manifest.find_gemv(m, n, p, if radix == 4 { "booth4" } else { "radix2" }) {
+            Ok(mut rt) => match rt
+                .manifest
+                .find_gemv(m, n, p, if radix == 4 { "booth4" } else { "radix2" })
+            {
                 Some(meta) => {
                     let name = meta.name.clone();
                     match rt.gemv_i64(&name, &w, &x) {
@@ -136,7 +140,10 @@ fn cmd_serve(args: &Args) -> i32 {
     let d = args.get_usize("d", 64);
     let policy = args.get_or("backend", "auto");
     let Some(backend) = BackendPolicy::parse(&policy) else {
-        eprintln!("unknown backend policy '{policy}' (auto|native|sharded|golden|cross_check)");
+        eprintln!(
+            "unknown backend policy '{policy}' \
+             (auto|native|sharded|col_sharded|golden|cross_check)"
+        );
         return 2;
     };
     let reg = ModelRegistry::default();
@@ -178,9 +185,12 @@ fn cmd_serve(args: &Args) -> i32 {
         m.latency_percentile_us(99.0)
     );
     println!(
-        "backend={} residency_hits={} cross_checked={} mismatches={}",
+        "backend={} residency_hits={} col_sharded_groups={} host_reduce_adds={} \
+         cross_checked={} mismatches={}",
         backend.name(),
         m.residency_hits,
+        m.col_sharded_groups,
+        m.host_reduce_adds,
         m.cross_checked,
         m.cross_check_mismatches
     );

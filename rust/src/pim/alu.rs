@@ -681,8 +681,10 @@ mod tests {
     fn mac_case(variant: &str, p: usize, lanes: usize, seed: i64) {
         let mut b = mk(lanes);
         let half = 1i64 << (p - 1);
-        let wv: Vec<i64> = (0..lanes).map(|i| ((i as i64 * 7 + seed) % (2 * half)) - half).collect();
-        let xv: Vec<i64> = (0..lanes).map(|i| ((i as i64 * 13 + seed * 3) % (2 * half)) - half).collect();
+        let wv: Vec<i64> =
+            (0..lanes).map(|i| ((i as i64 * 7 + seed) % (2 * half)) - half).collect();
+        let xv: Vec<i64> =
+            (0..lanes).map(|i| ((i as i64 * 13 + seed * 3) % (2 * half)) - half).collect();
         let a0: Vec<i64> = (0..lanes).map(|i| (i as i64 * 5 - 100) % 1000).collect();
         b.write_all(0, p, &wv);
         b.write_all(32, p, &xv);

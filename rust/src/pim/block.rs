@@ -43,7 +43,13 @@ pub struct BlockGeom {
 impl BlockGeom {
     /// The U55 overlay block used throughout the paper.
     pub fn overlay() -> Self {
-        BlockGeom { pes: super::PES_PER_BLOCK, regfile_bits: super::REGFILE_BITS, luts: 114, ffs: 129, bram18: 1 }
+        BlockGeom {
+            pes: super::PES_PER_BLOCK,
+            regfile_bits: super::REGFILE_BITS,
+            luts: 114,
+            ffs: 129,
+            bram18: 1,
+        }
     }
 
     /// PiCaSO-CB: datapath absorbed into the BRAM tile; only the glue

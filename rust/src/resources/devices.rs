@@ -58,15 +58,78 @@ impl Device {
 
 /// The nine Table IV representatives, in table order.
 pub const DEVICES: [Device; 9] = [
-    Device { part: "xcu55c-fsvh-2", id: "U55", family: Family::UltraScalePlus, bram: 2016, lut_per_bram: 646, bram_fmax_mhz: 737.0 },
-    Device { part: "xc7vx330tffg-2", id: "V7-a", family: Family::Virtex7, bram: 750, lut_per_bram: 272, bram_fmax_mhz: 543.0 },
-    Device { part: "xc7vx485tffg-2", id: "V7-b", family: Family::Virtex7, bram: 1030, lut_per_bram: 295, bram_fmax_mhz: 543.0 },
-    Device { part: "xc7v2000tfhg-2", id: "V7-c", family: Family::Virtex7, bram: 1292, lut_per_bram: 946, bram_fmax_mhz: 543.0 },
-    Device { part: "xc7vx1140tflg-2", id: "V7-d", family: Family::Virtex7, bram: 1880, lut_per_bram: 379, bram_fmax_mhz: 543.0 },
-    Device { part: "xcvu3p-ffvc-3", id: "US-a", family: Family::UltraScalePlus, bram: 720, lut_per_bram: 547, bram_fmax_mhz: 737.0 },
-    Device { part: "xcvu23p-vsva-3", id: "US-b", family: Family::UltraScalePlus, bram: 2112, lut_per_bram: 488, bram_fmax_mhz: 737.0 },
-    Device { part: "xcvu19p-fsvb-2", id: "US-c", family: Family::UltraScalePlus, bram: 2160, lut_per_bram: 1892, bram_fmax_mhz: 737.0 },
-    Device { part: "xcvu29p-figd-3", id: "US-d", family: Family::UltraScalePlus, bram: 2688, lut_per_bram: 643, bram_fmax_mhz: 737.0 },
+    Device {
+        part: "xcu55c-fsvh-2",
+        id: "U55",
+        family: Family::UltraScalePlus,
+        bram: 2016,
+        lut_per_bram: 646,
+        bram_fmax_mhz: 737.0,
+    },
+    Device {
+        part: "xc7vx330tffg-2",
+        id: "V7-a",
+        family: Family::Virtex7,
+        bram: 750,
+        lut_per_bram: 272,
+        bram_fmax_mhz: 543.0,
+    },
+    Device {
+        part: "xc7vx485tffg-2",
+        id: "V7-b",
+        family: Family::Virtex7,
+        bram: 1030,
+        lut_per_bram: 295,
+        bram_fmax_mhz: 543.0,
+    },
+    Device {
+        part: "xc7v2000tfhg-2",
+        id: "V7-c",
+        family: Family::Virtex7,
+        bram: 1292,
+        lut_per_bram: 946,
+        bram_fmax_mhz: 543.0,
+    },
+    Device {
+        part: "xc7vx1140tflg-2",
+        id: "V7-d",
+        family: Family::Virtex7,
+        bram: 1880,
+        lut_per_bram: 379,
+        bram_fmax_mhz: 543.0,
+    },
+    Device {
+        part: "xcvu3p-ffvc-3",
+        id: "US-a",
+        family: Family::UltraScalePlus,
+        bram: 720,
+        lut_per_bram: 547,
+        bram_fmax_mhz: 737.0,
+    },
+    Device {
+        part: "xcvu23p-vsva-3",
+        id: "US-b",
+        family: Family::UltraScalePlus,
+        bram: 2112,
+        lut_per_bram: 488,
+        bram_fmax_mhz: 737.0,
+    },
+    Device {
+        part: "xcvu19p-fsvb-2",
+        id: "US-c",
+        family: Family::UltraScalePlus,
+        bram: 2160,
+        lut_per_bram: 1892,
+        bram_fmax_mhz: 737.0,
+    },
+    Device {
+        part: "xcvu29p-figd-3",
+        id: "US-d",
+        family: Family::UltraScalePlus,
+        bram: 2688,
+        lut_per_bram: 643,
+        bram_fmax_mhz: 737.0,
+    },
 ];
 
 /// RIMA's platform: Stratix 10 GX2800 (1 GHz M20K Fmax [22]).

@@ -91,6 +91,13 @@ impl BenchSink {
         BenchSink { path: PathBuf::from(path), root }
     }
 
+    /// A previously recorded top-level section (from the loaded file
+    /// or an earlier `set` this run) — lets a bench merge keyed rows
+    /// into what the last run recorded instead of overwriting them.
+    pub fn get(&self, section: &str) -> Option<&Json> {
+        self.root.get(section)
+    }
+
     /// Replace this bench's top-level section.
     pub fn set(&mut self, section: &str, value: Json) {
         self.root.insert(section.to_string(), value);
@@ -99,6 +106,111 @@ impl BenchSink {
     pub fn save(&self) -> std::io::Result<()> {
         std::fs::write(&self.path, format!("{}\n", Json::Obj(self.root.clone())))
     }
+}
+
+/// Flatten a benchmark JSON tree into dotted-path -> value rows:
+/// objects recurse with `.`-joined keys, arrays with `[i]` indices,
+/// and only numeric leaves are kept. The row names are what the CI
+/// bench-regression gate (`tools/bench_gate`, `src/bin/bench_gate.rs`)
+/// compares across runs.
+pub fn flatten_metrics(json: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    match json {
+        Json::Num(v) => {
+            out.insert(prefix.to_string(), *v);
+        }
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let key = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten_metrics(v, &key, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                flatten_metrics(v, &format!("{prefix}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// One gated row comparison: `ratio` is current/base.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateRow {
+    pub key: String,
+    pub base: f64,
+    pub current: f64,
+    pub ratio: f64,
+}
+
+/// Outcome of a bench-gate comparison.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// Rows worse than the threshold, most-regressed first.
+    pub regressions: Vec<GateRow>,
+    /// Gated rows present in both files.
+    pub compared: usize,
+}
+
+/// Whether a row name is gated, and in which direction. Throughput
+/// rows (`*reqps`) are higher-better; the deterministic simulator
+/// work metric (`*plane_ops*` rows, e.g.
+/// `sharded_resident_plane_ops_per_batch`, derived from
+/// `ExecStats::plane_word_ops`) is lower-better. Everything else —
+/// absolute wall-clock microseconds AND the speedup ratios, both
+/// single measurements with no noise protection — stays
+/// informational: CI runners are too noisy for a hard gate on raw
+/// time. The gated `reqps` rows are themselves wall-clock-derived, so
+/// the benches that emit them measure best-of-N runs (see
+/// `benches/coordinator.rs::best_reqps`) to keep a one-off scheduler
+/// hiccup on a shared runner from tripping the gate.
+fn gate_direction(key: &str) -> Option<bool> {
+    if key.ends_with("reqps") {
+        Some(true) // higher is better
+    } else if key.contains("plane_ops") || key.contains("plane_word_ops") {
+        Some(false) // lower is better
+    } else {
+        None
+    }
+}
+
+/// Compare two flattened benchmark files: a gated row regresses when
+/// it is worse than `threshold` (a fraction, e.g. 0.15) relative to
+/// the base run. Rows present in only one file are ignored (new
+/// benches must not fail the gate; removed ones are caught in review).
+pub fn gate_regressions(
+    base: &BTreeMap<String, f64>,
+    current: &BTreeMap<String, f64>,
+    threshold: f64,
+) -> GateReport {
+    let mut report = GateReport::default();
+    for (key, &b) in base {
+        let Some(higher_better) = gate_direction(key) else { continue };
+        let Some(&c) = current.get(key) else { continue };
+        if b <= 0.0 {
+            continue;
+        }
+        report.compared += 1;
+        let ratio = c / b;
+        let regressed =
+            if higher_better { ratio < 1.0 - threshold } else { ratio > 1.0 + threshold };
+        if regressed {
+            report.regressions.push(GateRow { key: key.clone(), base: b, current: c, ratio });
+        }
+    }
+    // most-regressed first: normalize both directions onto one scale
+    // (a lower-better row's severity is the reciprocal ratio, so a 50%
+    // throughput drop outranks a 16% work-metric growth)
+    let severity = |r: &GateRow| {
+        if gate_direction(&r.key) == Some(true) {
+            r.ratio
+        } else {
+            1.0 / r.ratio.max(f64::MIN_POSITIVE)
+        }
+    };
+    report.regressions.sort_by(|a, b| {
+        severity(a).partial_cmp(&severity(b)).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    report
 }
 
 #[cfg(test)]
@@ -118,5 +230,82 @@ mod tests {
         let m = bench("sleepless", 0, 3, || std::thread::sleep(Duration::from_millis(1)));
         let t = m.throughput(1000.0);
         assert!(t > 0.0 && t < 1_100_000.0);
+    }
+
+    fn metrics(src: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        flatten_metrics(&Json::parse(src).unwrap(), "", &mut out);
+        out
+    }
+
+    #[test]
+    fn flatten_walks_objects_and_arrays() {
+        let m = metrics(
+            r#"{"coordinator": {"backends": {"auto": {"reqps": 100}},
+                "rows": [{"reqps": 5}, {"note": "str"}], "smoke": true}}"#,
+        );
+        assert_eq!(m.get("coordinator.backends.auto.reqps"), Some(&100.0));
+        assert_eq!(m.get("coordinator.rows[0].reqps"), Some(&5.0));
+        assert!(!m.keys().any(|k| k.contains("note") || k.contains("smoke")));
+    }
+
+    #[test]
+    fn gate_flags_reqps_drop_and_plane_ops_growth() {
+        // row names mirror what the benches actually emit
+        // (coordinator reqps rows, sharded *_plane_ops_per_batch rows)
+        let base = metrics(
+            r#"{"a": {"x_reqps": 100, "cold_plane_ops_per_batch": 1000, "wall_us": 50}}"#,
+        );
+        let ok = metrics(
+            r#"{"a": {"x_reqps": 90, "cold_plane_ops_per_batch": 1100, "wall_us": 500}}"#,
+        );
+        let report = gate_regressions(&base, &ok, 0.15);
+        assert_eq!(report.compared, 2, "wall_us must stay informational");
+        assert!(report.regressions.is_empty(), "{:?}", report.regressions);
+
+        let bad = metrics(
+            r#"{"a": {"x_reqps": 80, "cold_plane_ops_per_batch": 1200, "wall_us": 50}}"#,
+        );
+        let report = gate_regressions(&base, &bad, 0.15);
+        let keys: Vec<&str> = report.regressions.iter().map(|r| r.key.as_str()).collect();
+        assert_eq!(
+            keys,
+            ["a.x_reqps", "a.cold_plane_ops_per_batch"],
+            "{:?}",
+            report.regressions
+        );
+    }
+
+    #[test]
+    fn gate_ignores_rows_missing_from_either_side() {
+        let base = metrics(r#"{"a": {"old_reqps": 100}}"#);
+        let cur = metrics(r#"{"a": {"new_reqps": 1}}"#);
+        let report = gate_regressions(&base, &cur, 0.15);
+        assert_eq!(report.compared, 0);
+        assert!(report.regressions.is_empty());
+    }
+
+    #[test]
+    fn gate_sorts_most_regressed_first_across_directions() {
+        // a 50% throughput collapse must outrank a 16% work-metric
+        // growth even though their raw ratios sit on opposite sides
+        // of 1.0
+        let base = metrics(r#"{"a": {"x_reqps": 100, "plane_ops_per_batch": 1000}}"#);
+        let cur = metrics(r#"{"a": {"x_reqps": 50, "plane_ops_per_batch": 1160}}"#);
+        let report = gate_regressions(&base, &cur, 0.15);
+        assert_eq!(report.regressions.len(), 2);
+        assert_eq!(report.regressions[0].key, "a.x_reqps", "{:?}", report.regressions);
+    }
+
+    #[test]
+    fn gate_speedup_rows_stay_informational() {
+        // speedup ratios are single unprotected measurements (no
+        // best-of-N); hard-failing them would be the same false-
+        // regression mode the gate excludes wall-clock rows for
+        let base = metrics(r#"{"a": {"batch8_speedup": 4.0}}"#);
+        let cur = metrics(r#"{"a": {"batch8_speedup": 3.0}}"#);
+        let report = gate_regressions(&base, &cur, 0.15);
+        assert_eq!(report.compared, 0);
+        assert!(report.regressions.is_empty());
     }
 }

@@ -10,8 +10,8 @@
 //! (including a planted fault).
 
 use imagine::backend::{
-    BackendContext, BackendError, BackendPolicy, BackendResult, ExecBackend, NativeBackend,
-    ShardedBackend,
+    AutoBackend, BackendContext, BackendError, BackendPolicy, BackendResult, ColShardedBackend,
+    ExecBackend, NativeBackend, ShardedBackend,
 };
 use imagine::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request, SubmitError,
@@ -130,21 +130,53 @@ fn sharded_backend_refuses_mlp_typed() {
     assert!(matches!(err, BackendError::Unsupported { backend: "sharded", .. }), "{err:?}");
 }
 
-/// Regression (satellite): a matrix whose single row overflows the
-/// per-PE chunk capacity is *unshardable* — backend selection must
-/// surface the typed `GemvError::Unshardable` through the coordinator
-/// instead of silently running the multi-pass mapping.
+/// Tentpole: a matrix whose single row overflows the per-PE chunk
+/// capacity used to be a typed `Unshardable` error under the auto
+/// policy — the column-sharded tier must now serve it resident,
+/// bit-identical to the host reference, with partial-sum reduction
+/// stats surfacing in the metrics.
 #[test]
-fn unshardable_chunk_overflow_is_typed_through_the_coordinator() {
+fn formerly_unshardable_wide_model_now_serves_through_col_sharded() {
     let (m, n) = (8usize, 50_000usize);
+    let mut rng = XorShift::new(0xC01);
+    let w = rng.vec_i64(m * n, -8, 7);
     let reg = ModelRegistry::default();
-    reg.register_gemv("wide", vec![0i64; m * n], m, n).unwrap();
+    reg.register_gemv("wide", w.clone(), m, n).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+        reg,
+    );
+    let x = rng.vec_i64(n, -16, 15);
+    for round in 0..2 {
+        let resp = coord.call(Request { model: "wide".into(), x: x.clone() }).unwrap();
+        assert_eq!(resp.y, host_gemv(&w, &x, m, n), "round {round}");
+        assert_eq!(resp.backend, "col_sharded");
+    }
+    let snap = coord.shutdown();
+    assert_eq!((snap.completed, snap.failed), (2, 0), "{snap:?}");
+    assert_eq!(snap.col_sharded_groups, 2, "{snap:?}");
+    assert!(snap.host_reduce_adds > 0, "{snap:?}");
+    assert!(snap.residency_hits >= 1, "second call must arrive resident: {snap:?}");
+}
+
+/// Regression: the typed `Unshardable` error remains for models whose
+/// residency would need more than MAX_SHARDS column slices — the
+/// aggregate-BRAM overflow the pool genuinely cannot hold. The error
+/// stays a per-request typed failure through the coordinator, never a
+/// silent multi-pass.
+#[test]
+fn aggregate_bram_overflow_is_typed_through_the_coordinator() {
+    // small(): 4608 elements per row maximum -> 80_000 columns need 18
+    // slices, over the MAX_SHARDS = 16 pool cap
+    let (m, n) = (8usize, 80_000usize);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("huge", vec![0i64; m * n], m, n).unwrap();
     let coord = Coordinator::start(
         CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
         reg,
     );
     let err = coord
-        .call(Request { model: "wide".into(), x: vec![0; n] })
+        .call(Request { model: "huge".into(), x: vec![0; n] })
         .unwrap_err();
     assert!(
         matches!(
@@ -251,5 +283,30 @@ fn forced_sharded_policy_matches_native_on_single_pass_models() {
         assert_eq!(a.y, b.y);
         assert_eq!(a.stats.cycles, b.stats.cycles);
         assert_eq!(a.stats.plane_word_ops, b.stats.plane_word_ops);
+    }
+}
+
+/// Forcing the col_sharded policy on a model the row tier serves must
+/// match the auto selection bit-for-bit (one-slice plan on pool member
+/// 0, zero host reduction), for both a single-pass and a row-sharded
+/// shape.
+#[test]
+fn forced_col_sharded_policy_matches_auto_on_narrow_models() {
+    let mut rng = XorShift::new(0xF1);
+    for (m, n) in [(40usize, 32usize), (768, 48)] {
+        let w = rng.vec_i64(m * n, -32, 31);
+        let xs: Vec<Vec<i64>> = (0..2).map(|_| rng.vec_i64(n, -64, 63)).collect();
+        let reg = ModelRegistry::default();
+        reg.register_gemv("g", w, m, n).unwrap();
+        let auto = AutoBackend::new(&ctx(2));
+        let col = ColShardedBackend::new(&ctx(2));
+        let ay = run_gemv(&auto, &reg, "g", &xs);
+        let cy = run_gemv(&col, &reg, "g", &xs);
+        for (a, b) in ay.iter().zip(&cy) {
+            assert_eq!(a.y, b.y, "{m}x{n}");
+            assert_eq!(a.stats.cycles, b.stats.cycles, "{m}x{n}");
+            assert_eq!(a.stats.plane_word_ops, b.stats.plane_word_ops, "{m}x{n}");
+            assert_eq!(b.reduce_adds, 0, "one slice must not pay host reduction");
+        }
     }
 }

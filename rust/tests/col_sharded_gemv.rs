@@ -1,0 +1,121 @@
+//! Column-sharded GEMV equivalence (satellite): the col-sharded tier
+//! must be bit-identical in `y` to a forced-native multi-pass run of
+//! the whole matrix, and bit-deterministic in (cycles,
+//! plane_word_ops) across slice fan-out thread budgets — for forced
+//! K ∈ {2, 4, 8} partitions and for the planner's own plan, across
+//! precisions. CI runs this file a second time with `IMAGINE_FUSE=0
+//! IMAGINE_SKIP=0`, so the equivalence also holds on the reference
+//! (per-instruction, no-skip) execution paths.
+
+use imagine::engine::EngineConfig;
+use imagine::gemv::col_sharded::ColShardedScheduler;
+use imagine::gemv::mapper::{plan, plan_col_shards, plan_col_shards_k};
+use imagine::gemv::GemvScheduler;
+use imagine::sim::ExecStats;
+use imagine::util::XorShift;
+
+/// single_tile(): 192 lanes x 2 block columns. One matrix row holds at
+/// most 2 * 12 * k_max(p) elements (1152 @ 8-bit, 2304 @ 4-bit, 576 @
+/// 16-bit), so the shapes below overflow the chunk capacity and force
+/// the single-engine mapping into multi-pass.
+fn tiny() -> EngineConfig {
+    EngineConfig::single_tile()
+}
+
+/// Forced-native multi-pass reference: one engine, one vector at a
+/// time, re-staging every pass — the explicit `native`-policy path the
+/// column tier must match bit-for-bit in `y`.
+fn native_reference(w: &[i64], xs: &[Vec<i64>], m: usize, n: usize, p: usize) -> Vec<Vec<i64>> {
+    let mut sched = GemvScheduler::new(tiny());
+    xs.iter()
+        .map(|x| sched.gemv(w, x, m, n, p, 2).unwrap().0)
+        .collect()
+}
+
+/// Run one col-sharded plan at a given slice fan-out budget, returning
+/// per-vector (y, stats).
+fn col_run(
+    cp: &imagine::gemv::ColShardPlan,
+    token: u64,
+    w: &[i64],
+    xs: &[Vec<i64>],
+    pool_threads: usize,
+) -> Vec<(Vec<i64>, ExecStats)> {
+    let mut sched = ColShardedScheduler::with_threads(tiny(), pool_threads, 1);
+    let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
+    sched
+        .run_plan(cp, token, w, &xrefs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect()
+}
+
+#[test]
+fn prop_col_sharded_bit_identical_to_native_multi_pass() {
+    let mut rng = XorShift::new(0xC5D);
+    // (m, n, p): all chunk-overflowing (multi-pass) on tiny()
+    let shapes = [(8usize, 1500usize, 8usize), (20, 2600, 4), (8, 700, 16)];
+    for &(m, n, p) in &shapes {
+        let base = plan(&tiny(), m, n, p, 2);
+        assert!(!base.is_single_pass(), "{m}x{n}@{p} must be multi-pass: {base:?}");
+        let half = 1i64 << (p - 1);
+        let w = rng.vec_i64(m * n, -half.min(16), (half - 1).min(15));
+        let xs: Vec<Vec<i64>> = (0..2)
+            .map(|_| rng.vec_i64(n, -half.min(32), (half - 1).min(31)))
+            .collect();
+        let want = native_reference(&w, &xs, m, n, p);
+        for k in [2usize, 4, 8] {
+            let cp = plan_col_shards_k(m, n, p, 2, k);
+            let serial = col_run(&cp, 100 + k as u64, &w, &xs, 1);
+            let pooled = col_run(&cp, 100 + k as u64, &w, &xs, 3);
+            for ((s, t), y) in serial.iter().zip(&pooled).zip(&want) {
+                assert_eq!(&s.0, y, "{m}x{n}@{p} k={k}: y != native multi-pass");
+                assert_eq!(s.0, t.0, "{m}x{n}@{p} k={k}: y depends on threads");
+                assert_eq!(
+                    (s.1.cycles, s.1.plane_word_ops),
+                    (t.1.cycles, t.1.plane_word_ops),
+                    "{m}x{n}@{p} k={k}: stats depend on threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_plan_matches_native_multi_pass_and_is_resident() {
+    let mut rng = XorShift::new(0xC5E);
+    let (m, n, p) = (8usize, 2400usize, 8usize);
+    let cp = plan_col_shards(&tiny(), m, n, p, 2).expect("col-shardable");
+    assert!(cp.resident_on(&tiny()), "{cp:?}");
+    let w = rng.vec_i64(m * n, -16, 15);
+    let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -32, 31)).collect();
+    let want = native_reference(&w, &xs, m, n, p);
+    let got = col_run(&cp, 7, &w, &xs, 2);
+    for (g, y) in got.iter().zip(&want) {
+        assert_eq!(&g.0, y, "planner plan != native multi-pass");
+    }
+}
+
+#[test]
+fn hot_batches_replay_identically() {
+    // the same token twice: the second (resident) batch must produce
+    // identical y and cycles, with strictly less staging work
+    let mut rng = XorShift::new(0xC5F);
+    let (m, n, p) = (8usize, 1500usize, 8usize);
+    let cp = plan_col_shards(&tiny(), m, n, p, 2).expect("col-shardable");
+    let w = rng.vec_i64(m * n, -16, 15);
+    let x = rng.vec_i64(n, -32, 31);
+    let xs = vec![x];
+    let mut sched = ColShardedScheduler::with_threads(tiny(), 2, 1);
+    let xrefs: Vec<&[i64]> = xs.iter().map(|v| v.as_slice()).collect();
+    let cold = sched.run_plan(&cp, 42, &w, &xrefs).remove(0).unwrap();
+    let hot = sched.run_plan(&cp, 42, &w, &xrefs).remove(0).unwrap();
+    assert_eq!(cold.0, hot.0);
+    assert_eq!(cold.1.cycles, hot.1.cycles, "cycle model must not depend on residency");
+    assert!(
+        hot.1.plane_word_ops < cold.1.plane_word_ops,
+        "hot {} !< cold {}",
+        hot.1.plane_word_ops,
+        cold.1.plane_word_ops
+    );
+}
