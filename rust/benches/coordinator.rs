@@ -12,6 +12,7 @@ use imagine::backend::BackendPolicy;
 use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
 use imagine::engine::EngineConfig;
 use imagine::gemv::GemvScheduler;
+use imagine::sim::fault::{self, FaultPlan};
 use imagine::util::bench::{bench, black_box, smoke, BenchSink};
 use imagine::util::{Json, XorShift};
 
@@ -100,7 +101,7 @@ fn coord_two_model(policy: BatchPolicy, requests: usize) -> f64 {
         .enumerate()
         .map(|(i, x)| {
             let model = if i % 2 == 0 { "a" } else { "b" };
-            coord.submit(Request { model: model.into(), x: x.clone() }).unwrap()
+            coord.submit(Request::new(model, x.clone())).unwrap()
         })
         .collect();
     for rx in rxs {
@@ -148,7 +149,7 @@ fn coord_promoted_model(seed: u64, m: usize, n: usize, requests: usize) -> f64 {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = xs
         .iter()
-        .map(|x| coord.submit(Request { model: "big".into(), x: x.clone() }).unwrap())
+        .map(|x| coord.submit(Request::new("big", x.clone())).unwrap())
         .collect();
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -183,7 +184,7 @@ fn coord_backend_policy(policy: BackendPolicy, requests: usize) -> f64 {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = xs
         .iter()
-        .map(|x| coord.submit(Request { model: "m".into(), x: x.clone() }).unwrap())
+        .map(|x| coord.submit(Request::new("m", x.clone())).unwrap())
         .collect();
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -207,7 +208,7 @@ fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = xs
         .iter()
-        .map(|x| coord.submit(Request { model: "m".into(), x: x.clone() }).unwrap())
+        .map(|x| coord.submit(Request::new("m", x.clone())).unwrap())
         .collect();
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -279,6 +280,23 @@ fn main() {
         );
     }
 
+    println!("\n== fault-injection layer: hooks disabled vs null plan ({M}x{N}, 1 worker) ==");
+    // The off row rides the CI bench-regression gate: with no plan
+    // installed every seam is one relaxed atomic load, so this must
+    // track the plain auto-policy row within noise (<2% is the
+    // budget; the 15% gate catches anything structural).
+    std::env::remove_var("IMAGINE_FAULT");
+    let fault_off = best_reqps(3, || coord_backend_policy(BackendPolicy::Auto, breqs));
+    let fault_null = {
+        let _guard = fault::install_scoped(FaultPlan::default());
+        best_reqps(3, || coord_backend_policy(BackendPolicy::Auto, breqs))
+    };
+    println!(
+        "hooks off {fault_off:>8.0} req/s   null plan installed {fault_null:>8.0} req/s   \
+         ({:.3}x)",
+        fault_null / fault_off
+    );
+
     println!("\n== coordinator scaling (32x32 model) ==");
     println!(
         "{:<28} {:>12} {:>10} {:>10}",
@@ -307,7 +325,7 @@ fn main() {
     let (warm, iters) = if smoke() { (1, 5) } else { (5, 50) };
     let m = bench("submit+recv roundtrip", warm, iters, || {
         coord
-            .call(Request { model: "m".into(), x: x.clone() })
+            .call(Request::new("m", x.clone()))
             .unwrap()
             .cycles
     });
@@ -342,6 +360,8 @@ fn main() {
             ("coord_2model_batch8_reqps", Json::num(batched)),
             ("coord_sharded_768x256_reqps", Json::num(sharded_reqps)),
             ("coord_col_sharded_8x24000_reqps", Json::num(col_sharded_reqps)),
+            ("coord_fault_layer_off_reqps", Json::num(fault_off)),
+            ("coord_fault_layer_null_reqps", Json::num(fault_null)),
             ("backends", Json::Obj(backend_rows)),
             ("smoke", Json::Bool(smoke())),
         ]),

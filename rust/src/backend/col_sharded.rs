@@ -13,7 +13,10 @@
 //! built lazily on the first execution, so an idle backend costs no
 //! threads.
 
-use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel};
+use super::{
+    BackendContext, BackendError, BackendHealth, BackendResult, ExecBackend, PreparedExec,
+    PreparedModel,
+};
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::col_sharded::ColShardedScheduler;
@@ -119,9 +122,20 @@ impl ExecBackend for ColShardedBackend {
                     mismatches: 0,
                     reduce_adds,
                     backend: "col_sharded",
+                    degraded: false,
                 })
                 .map_err(BackendError::from)
             })
             .collect()
+    }
+
+    fn health(&self) -> BackendHealth {
+        match &*self.sched.lock().unwrap() {
+            Some(s) => BackendHealth {
+                failovers: s.failovers(),
+                quarantined: s.quarantined() as u64,
+            },
+            None => BackendHealth::default(),
+        }
     }
 }

@@ -22,8 +22,8 @@
 
 use super::golden::GoldenBackend;
 use super::{
-    AutoBackend, BackendContext, BackendError, BackendResult, ExecBackend, NativeBackend,
-    PreparedExec, PreparedModel, Selection, ShardedBackend,
+    AutoBackend, BackendContext, BackendError, BackendHealth, BackendResult, ExecBackend,
+    NativeBackend, PreparedExec, PreparedModel, Selection, ShardedBackend,
 };
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
@@ -102,6 +102,10 @@ impl ExecBackend for CrossCheckBackend {
         }
         out
     }
+
+    fn health(&self) -> BackendHealth {
+        self.primary.health().merged(self.reference.health())
+    }
 }
 
 /// The cross-check reference: golden for every model the PJRT runtime
@@ -149,6 +153,10 @@ impl ExecBackend for OracleBackend {
             (PreparedExec::Golden(_), Some(golden)) => golden.execute_batch(prepared, xs),
             _ => self.complement.execute_batch(prepared, xs),
         }
+    }
+
+    fn health(&self) -> BackendHealth {
+        self.complement.health()
     }
 }
 
@@ -221,6 +229,10 @@ impl ExecBackend for ComplementBackend {
             _ => self.native.execute_batch(prepared, xs),
         }
     }
+
+    fn health(&self) -> BackendHealth {
+        self.sharded.health()
+    }
 }
 
 /// Fault-injection decorator: perturbs the last element of the first
@@ -258,5 +270,9 @@ impl ExecBackend for FaultInjector {
             }
         }
         out
+    }
+
+    fn health(&self) -> BackendHealth {
+        self.inner.health()
     }
 }

@@ -173,6 +173,7 @@ mod enabled {
                             mismatches: 0,
                             reduce_adds: 0,
                             backend: "golden",
+                            degraded: false,
                         })
                         .map_err(BackendError::from)
                 })

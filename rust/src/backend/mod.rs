@@ -140,6 +140,11 @@ pub enum BackendError {
     Unavailable { backend: &'static str, reason: String },
     #[error("no golden artifact for gemv {m}x{n} @ {p}-bit ({variant})")]
     NoArtifact { m: usize, n: usize, p: usize, variant: &'static str },
+    /// A cross-checked group still disagreed with the reference after
+    /// the coordinator's bounded retries: the result is untrustworthy
+    /// and is failed typed instead of served (docs/ROBUSTNESS.md).
+    #[error("cross-check mismatch persisted after {retries} retry(ies): {elements} element(s) disagree")]
+    Mismatch { elements: u64, retries: u32 },
     #[cfg(feature = "pjrt")]
     #[error("pjrt: {0}")]
     Pjrt(#[from] crate::runtime::pjrt::RuntimeError),
@@ -197,6 +202,32 @@ pub struct BackendResult {
     pub reduce_adds: u64,
     /// Name of the backend that produced `y`.
     pub backend: &'static str,
+    /// Graceful degradation: true when the preferred (sharded) path
+    /// was unavailable — its pool exhausted by quarantines — and the
+    /// result was served by the single-engine multi-pass fallback
+    /// instead. Exact numerics, reduced throughput; surfaced as
+    /// `Response::degraded` (docs/ROBUSTNESS.md).
+    pub degraded: bool,
+}
+
+/// Failure-handling counters a backend's engine pools report through
+/// [`ExecBackend::health`]: cumulative shard failovers and currently
+/// quarantined members. The coordinator turns deltas into
+/// `MetricsSnapshot::{failovers, quarantined_engines}`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BackendHealth {
+    pub failovers: u64,
+    pub quarantined: u64,
+}
+
+impl BackendHealth {
+    /// Field-wise sum (composing backends aggregate their children).
+    pub fn merged(self, other: BackendHealth) -> BackendHealth {
+        BackendHealth {
+            failovers: self.failovers + other.failovers,
+            quarantined: self.quarantined + other.quarantined,
+        }
+    }
 }
 
 /// One execution path behind the coordinator. `prepare` validates and
@@ -221,6 +252,12 @@ pub trait ExecBackend: Send + Sync {
         prepared: &PreparedModel,
         xs: &[Vec<i64>],
     ) -> Vec<Result<BackendResult, BackendError>>;
+
+    /// Pool-health counters (failovers performed, members quarantined).
+    /// Backends without engine pools report zeros.
+    fn health(&self) -> BackendHealth {
+        BackendHealth::default()
+    }
 }
 
 /// Which simulator path [`select`] chose for a model.
@@ -338,10 +375,44 @@ impl ExecBackend for AutoBackend {
         prepared: &PreparedModel,
         xs: &[Vec<i64>],
     ) -> Vec<Result<BackendResult, BackendError>> {
-        match &prepared.exec {
+        let out = match &prepared.exec {
             PreparedExec::Sharded(_) => self.sharded.execute_batch(prepared, xs),
             PreparedExec::ColSharded(_) => self.col_sharded.execute_batch(prepared, xs),
-            _ => self.native.execute_batch(prepared, xs),
+            _ => return self.native.execute_batch(prepared, xs),
+        };
+        let exhausted = out
+            .iter()
+            .any(|r| matches!(r, Err(BackendError::Gemv(GemvError::PoolExhausted { .. }))));
+        if !exhausted {
+            return out;
         }
+        // Graceful degradation: the sharded pool can no longer host
+        // the plan (quarantines exhausted its member budget) — serve
+        // the group on the single native engine instead. Multi-pass
+        // and without residency, but exact and available; results are
+        // flagged so responses carry `degraded = true`.
+        match self.native.prepare(&prepared.model) {
+            Ok(native_prep) => {
+                let mut out = self.native.execute_batch(&native_prep, xs);
+                for r in out.iter_mut().flatten() {
+                    r.degraded = true;
+                }
+                out
+            }
+            // native prepare is infallible today; stay typed if that
+            // ever changes
+            Err(e) => {
+                let reason = e.to_string();
+                xs.iter()
+                    .map(|_| {
+                        Err(BackendError::Unavailable { backend: "auto", reason: reason.clone() })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn health(&self) -> BackendHealth {
+        self.sharded.health().merged(self.col_sharded.health())
     }
 }

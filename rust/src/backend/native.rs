@@ -77,6 +77,7 @@ impl ExecBackend for NativeBackend {
                             mismatches: 0,
                             reduce_adds: 0,
                             backend: "native",
+                            degraded: false,
                         })
                         .map_err(BackendError::from)
                     })
@@ -96,6 +97,7 @@ impl ExecBackend for NativeBackend {
                             mismatches: 0,
                             reduce_adds: 0,
                             backend: "native",
+                            degraded: false,
                         })
                         .map_err(BackendError::from)
                 })

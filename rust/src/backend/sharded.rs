@@ -12,7 +12,10 @@
 //! costs no threads — the same laziness the coordinator's hard-coded
 //! promotion had.
 
-use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel};
+use super::{
+    BackendContext, BackendError, BackendHealth, BackendResult, ExecBackend, PreparedExec,
+    PreparedModel,
+};
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::mapper::{plan_shards_checked, plan_shards_k};
@@ -115,9 +118,20 @@ impl ExecBackend for ShardedBackend {
                     mismatches: 0,
                     reduce_adds: 0,
                     backend: "sharded",
+                    degraded: false,
                 })
                 .map_err(BackendError::from)
             })
             .collect()
+    }
+
+    fn health(&self) -> BackendHealth {
+        match &*self.sched.lock().unwrap() {
+            Some(s) => BackendHealth {
+                failovers: s.failovers(),
+                quarantined: s.quarantined() as u64,
+            },
+            None => BackendHealth::default(),
+        }
     }
 }

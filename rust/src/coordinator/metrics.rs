@@ -39,6 +39,24 @@ pub struct Metrics {
     /// (summed over all cross-checked requests; any non-zero value is
     /// a numeric-correctness alarm).
     pub cross_check_mismatches: AtomicU64,
+    /// Fused-group re-executions after a transient fault (cross-check
+    /// mismatch or dead pool member) under the coordinator's bounded
+    /// [`RetryPolicy`](super::server::RetryPolicy).
+    pub retries: AtomicU64,
+    /// Shard/slice re-assignments onto a fresh pool member after a
+    /// member death (summed over both sharded tiers via
+    /// `ExecBackend::health`).
+    pub failovers: AtomicU64,
+    /// Pool members currently quarantined as dead (a level sampled
+    /// from `ExecBackend::health`, not a monotone event count — it
+    /// only grows, but by health deltas, not per-request increments).
+    pub quarantined_engines: AtomicU64,
+    /// Responses served by the forced-native degradation path after
+    /// the sharded tiers exhausted their pools (`Response::degraded`).
+    pub degraded_responses: AtomicU64,
+    /// Requests shed before execution because their deadline had
+    /// already passed when their group was scheduled.
+    pub deadline_misses: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -57,6 +75,16 @@ pub struct MetricsSnapshot {
     pub host_reduce_adds: u64,
     pub cross_checked: u64,
     pub cross_check_mismatches: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub quarantined_engines: u64,
+    pub degraded_responses: u64,
+    pub deadline_misses: u64,
+    /// Faults the active [`FaultPlan`](crate::sim::fault::FaultPlan)
+    /// has injected process-wide (0 when `IMAGINE_FAULT` is unset and
+    /// no scoped plan is installed). Sampled at snapshot time from the
+    /// fault layer's own counters, not accumulated here.
+    pub faults_injected: u64,
     pub latency_counts: Vec<u64>,
 }
 
@@ -80,6 +108,14 @@ impl Metrics {
             host_reduce_adds: self.host_reduce_adds.load(Ordering::Relaxed),
             cross_checked: self.cross_checked.load(Ordering::Relaxed),
             cross_check_mismatches: self.cross_check_mismatches.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            quarantined_engines: self.quarantined_engines.load(Ordering::Relaxed),
+            degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            faults_injected: crate::sim::fault::global()
+                .map(|f| f.counts().injected)
+                .unwrap_or(0),
             latency_counts: self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
         }
     }
@@ -172,6 +208,24 @@ mod tests {
             (2, 5, 1)
         );
         assert_eq!((s.col_sharded_groups, s.host_reduce_adds), (3, 96));
+    }
+
+    #[test]
+    fn snapshot_carries_robustness_counters() {
+        // no assertion on faults_injected: it samples process-global
+        // fault state that other tests may scope-install concurrently
+        let m = Metrics::default();
+        m.retries.fetch_add(2, Ordering::Relaxed);
+        m.failovers.fetch_add(1, Ordering::Relaxed);
+        m.quarantined_engines.fetch_add(1, Ordering::Relaxed);
+        m.degraded_responses.fetch_add(4, Ordering::Relaxed);
+        m.deadline_misses.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.retries, s.failovers, s.quarantined_engines),
+            (2, 1, 1)
+        );
+        assert_eq!((s.degraded_responses, s.deadline_misses), (4, 3));
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod router;
 pub mod metrics;
 pub mod frontend;
 
-pub use server::{Coordinator, CoordinatorConfig, Request, Response, SubmitError};
+pub use server::{Coordinator, CoordinatorConfig, Request, Response, RetryPolicy, SubmitError};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;
 pub use batcher::BatchPolicy;

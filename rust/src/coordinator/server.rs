@@ -6,19 +6,34 @@
 //! builds — the auto-selecting simulator pair (default), a forced
 //! native/sharded path, the PJRT golden runtime, or the cross-checking
 //! oracle mode.
+//!
+//! Robustness: requests may carry a [`Request::deadline_us`] — a group
+//! scheduled past a request's deadline sheds it with a typed
+//! [`SubmitError::DeadlineExceeded`] instead of burning engine time on
+//! a dead answer. Transient group failures (a cross-check mismatch or
+//! a dead pool member) re-execute under the bounded [`RetryPolicy`];
+//! a mismatch that survives every retry escalates to a typed
+//! [`BackendError::Mismatch`] rather than serving silently corrupt
+//! results. Pool-member deaths fail over inside the sharded tiers and
+//! surface here only as `health()` deltas (`failovers`,
+//! `quarantined_engines`) and, when a pool is exhausted, as the auto
+//! backend's forced-native degradation ([`Response::degraded`]).
 
 use super::batcher::{group_by_key, BatchPolicy};
 use super::frontend::{Model, ModelRegistry, RegistryError};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::Router;
-use crate::backend::{self, BackendContext, BackendError, BackendPolicy, ExecBackend};
+use crate::backend::{
+    self, BackendContext, BackendError, BackendHealth, BackendPolicy, ExecBackend,
+};
 use crate::engine::EngineConfig;
-use crate::sim::U55_FMAX_MHZ;
+use crate::gemv::codegen::GemvError;
+use crate::sim::{fault, U55_FMAX_MHZ};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -38,6 +53,8 @@ pub struct CoordinatorConfig {
     /// PJRT artifact directory for the golden backend
     /// (`None` = `artifacts/`).
     pub artifacts: Option<std::path::PathBuf>,
+    /// Bounded re-execution of fused groups after a transient fault.
+    pub retry: RetryPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -51,7 +68,41 @@ impl Default for CoordinatorConfig {
             clock_mhz: U55_FMAX_MHZ,
             backend: BackendPolicy::Auto,
             artifacts: None,
+            retry: RetryPolicy::default(),
         }
+    }
+}
+
+/// Bounded re-execution policy for transient group failures: a
+/// cross-check mismatch (one run of the pair may have absorbed a soft
+/// or injected fault) or a pool member that died mid-dispatch
+/// ([`GemvError::MemberDead`]). A retry re-runs the *whole* fused
+/// group; the backoff before attempt `k` is `backoff_us << (k-1)`
+/// microseconds (shift capped at 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-executions allowed after the first attempt. With retries
+    /// enabled, a mismatch that persists through the last attempt
+    /// escalates to a typed [`BackendError::Mismatch`] failure; with
+    /// `max_retries == 0` mismatching results are served and only
+    /// reported (the pre-retry coordinator behavior).
+    pub max_retries: u32,
+    /// Base backoff unit (microseconds); 0 disables sleeping.
+    pub backoff_us: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff_us: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries, no mismatch escalation: first-attempt results are
+    /// served as-is with mismatches merely counted in
+    /// `cross_check_mismatches`.
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, backoff_us: 0 }
     }
 }
 
@@ -60,6 +111,23 @@ impl Default for CoordinatorConfig {
 pub struct Request {
     pub model: String,
     pub x: Vec<i64>,
+    /// Serving deadline relative to submission (microseconds). A group
+    /// scheduled after this much queue wait sheds the request with
+    /// [`SubmitError::DeadlineExceeded`] instead of executing it.
+    /// `None` (the default) never sheds.
+    pub deadline_us: Option<u64>,
+}
+
+impl Request {
+    pub fn new(model: impl Into<String>, x: Vec<i64>) -> Self {
+        Request { model: model.into(), x, deadline_us: None }
+    }
+
+    /// Attach a serving deadline (microseconds from submission).
+    pub fn with_deadline_us(mut self, us: u64) -> Self {
+        self.deadline_us = Some(us);
+        self
+    }
 }
 
 /// The response with simulation-derived timing.
@@ -86,6 +154,12 @@ pub struct Response {
     pub batch_size: usize,
     /// Name of the [`ExecBackend`] that produced `y`.
     pub backend: &'static str,
+    /// The result was served by a degraded path: the sharded pool this
+    /// model would normally run on was exhausted (every member
+    /// quarantined), and the auto backend fell back to forced-native
+    /// multi-pass execution on a fresh engine. Correct, but without
+    /// the residency/latency the plan promised.
+    pub degraded: bool,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -102,6 +176,17 @@ pub enum SubmitError {
     /// from `prepare`) fans out to every request of the group.
     #[error("execution failed: {0}")]
     Exec(Arc<BackendError>),
+    /// The request waited past its [`Request::deadline_us`] before its
+    /// group was scheduled; it was shed without executing.
+    #[error(
+        "deadline exceeded for '{model}': waited {waited_us}us against a {deadline_us}us deadline"
+    )]
+    DeadlineExceeded { model: String, deadline_us: u64, waited_us: u64 },
+    /// The worker serving this request died without answering (its
+    /// reply channel dropped — e.g. a panic escaped the backend). The
+    /// request's fate is unknown; resubmit if idempotent.
+    #[error("worker died before answering")]
+    WorkerLost,
 }
 
 /// One accepted request in flight to a worker. The `Model` resolved at
@@ -191,9 +276,12 @@ impl Coordinator {
         Ok(rx)
     }
 
-    /// Submit and wait.
+    /// Submit and wait. A reply channel that drops without an answer
+    /// means the worker died mid-request (shutdown drains answer
+    /// everything accepted), surfaced as
+    /// [`SubmitError::WorkerLost`].
     pub fn call(&self, req: Request) -> Result<Response, SubmitError> {
-        self.submit(req)?.recv().map_err(|_| SubmitError::Closed)?
+        self.submit(req)?.recv().map_err(|_| SubmitError::WorkerLost)?
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -234,6 +322,9 @@ fn worker_loop(
     // the policy decides what actually runs (auto-selected simulator
     // engines, golden PJRT, a cross-checking pair, ...).
     let backend: Arc<dyn ExecBackend> = backend::build(cfg.backend, &ctx);
+    // This worker's last-seen backend health; execute_batch feeds the
+    // deltas (failovers, newly quarantined members) into the metrics.
+    let mut health_seen = BackendHealth::default();
     'outer: loop {
         // block for the first job
         let first = match rx.recv() {
@@ -260,12 +351,13 @@ fn worker_loop(
             match job {
                 Job::Run(p) => batch.push(p),
                 Job::Stop => {
-                    execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch);
+                    let be = backend.as_ref();
+                    execute_batch(&cfg, &metrics, &router, wid, be, batch, &mut health_seen);
                     break 'outer;
                 }
             }
         }
-        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch);
+        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch, &mut health_seen);
     }
     // Drain-after-stop: requests accepted before shutdown can still sit
     // behind the Stop sentinel (e.g. submitted while the final batch
@@ -281,8 +373,15 @@ fn worker_loop(
     while !rest.is_empty() {
         let take = rest.len().min(chunk);
         let batch: Vec<_> = rest.drain(..take).collect();
-        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch);
+        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch, &mut health_seen);
     }
+}
+
+/// Is this per-request failure worth re-running the group for? Only a
+/// dead pool member: the scheduler has already quarantined it and
+/// remapped the slot, so the next attempt lands on a fresh engine.
+fn is_transient(e: &BackendError) -> bool {
+    matches!(e, BackendError::Gemv(GemvError::MemberDead { .. }))
 }
 
 fn execute_batch(
@@ -292,6 +391,7 @@ fn execute_batch(
     wid: usize,
     backend: &dyn ExecBackend,
     mut batch: Vec<Pending>,
+    health_seen: &mut BackendHealth,
 ) {
     let drained = batch.len() as u64;
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -299,37 +399,81 @@ fn execute_batch(
     // must never fuse, each request runs against the model it was
     // validated with at submit time.
     for (_, idxs) in group_by_key(&batch, |p| p.model.id()) {
-        let model = batch[idxs[0]].model.clone();
+        // Scheduled worker-death fault seam (`panic:group=N`):
+        // deliberately NOT contained — the point is proving the
+        // coordinator's contract when a worker thread dies (pending
+        // replies drop, `call` surfaces `WorkerLost`).
+        if let Some(f) = fault::global() {
+            f.maybe_panic();
+        }
+        // Deadline shedding: a request whose deadline passed while it
+        // queued is answered with a typed error, not executed — the
+        // caller has already given up on the result.
+        let mut live = Vec::with_capacity(idxs.len());
+        for &i in &idxs {
+            let p = &batch[i];
+            let waited_us = p.enqueued.elapsed().as_micros() as u64;
+            match p.req.deadline_us {
+                Some(d) if waited_us > d => {
+                    metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = p.reply.send(Err(SubmitError::DeadlineExceeded {
+                        model: p.req.model.clone(),
+                        deadline_us: d,
+                        waited_us,
+                    }));
+                }
+                _ => live.push(i),
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let model = batch[live[0]].model.clone();
         metrics.groups.fetch_add(1, Ordering::Relaxed);
-        metrics.batched_requests.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+        metrics.batched_requests.fetch_add(live.len() as u64, Ordering::Relaxed);
         // The co-batching unit: this group executes back-to-back on one
         // backend; for a GEMV model it shares one staged matrix.
-        let group_size = idxs.len();
+        let group_size = live.len();
         // The requests' input vectors, moved out (each request belongs
         // to exactly one group and only needs `y` back).
         let xs: Vec<Vec<i64>> =
-            idxs.iter().map(|&i| std::mem::take(&mut batch[i].req.x)).collect();
+            live.iter().map(|&i| std::mem::take(&mut batch[i].req.x)).collect();
         // prepare + execute through the trait: the backend owns the
         // promotion/planning decisions the coordinator used to make. A
         // prepare failure (unknown artifact, typed Unshardable, golden
         // unavailable, ...) fails the whole group with the same shared
-        // error.
-        let (results, concurrency): (Vec<Result<_, Arc<BackendError>>>, usize) =
-            match backend.prepare(&model) {
+        // error. Transient execution faults — a cross-check mismatch or
+        // a dead pool member — re-run the whole group under the bounded
+        // retry policy (prepare is pure planning, so re-preparing per
+        // attempt is cheap and picks up post-failover pool state).
+        let mut attempt: u32 = 0;
+        let (results, concurrency): (Vec<Result<_, Arc<BackendError>>>, usize) = loop {
+            let (outs, concurrency) = match backend.prepare(&model) {
                 Ok(prep) => {
                     let concurrency = prep.concurrency.max(1);
-                    let outs = backend
-                        .execute_batch(&prep, &xs)
-                        .into_iter()
-                        .map(|r| r.map_err(Arc::new))
-                        .collect();
-                    (outs, concurrency)
+                    (backend.execute_batch(&prep, &xs), concurrency)
                 }
                 Err(e) => {
                     let e = Arc::new(e);
-                    ((0..xs.len()).map(|_| Err(e.clone())).collect(), 1)
+                    break ((0..xs.len()).map(|_| Err(e.clone())).collect(), 1);
                 }
             };
+            let transient = outs.iter().any(|r| match r {
+                Ok(res) => res.mismatches > 0,
+                Err(e) => is_transient(e),
+            });
+            if transient && attempt < cfg.retry.max_retries {
+                attempt += 1;
+                metrics.retries.fetch_add(1, Ordering::Relaxed);
+                if cfg.retry.backoff_us > 0 {
+                    let us = cfg.retry.backoff_us << (attempt - 1).min(6);
+                    std::thread::sleep(Duration::from_micros(us));
+                }
+                continue;
+            }
+            break (outs.into_iter().map(|r| r.map_err(Arc::new)).collect(), concurrency);
+        };
         // Backend observability: one staged-weights hit per group that
         // arrived with its model already resident, one col-sharded
         // group per group the column tier executed, and the host-side
@@ -350,29 +494,46 @@ fn execute_batch(
         if reduce_adds > 0 {
             metrics.host_reduce_adds.fetch_add(reduce_adds, Ordering::Relaxed);
         }
-        for (&i, result) in idxs.iter().zip(results) {
+        for (&i, result) in live.iter().zip(results) {
             let pending = &batch[i];
             let result = match result {
+                // cross-check metrics record what the last attempt saw,
+                // *before* escalation — a mismatch that persisted to a
+                // typed failure is still a counted mismatch
                 Ok(r) => {
-                    let host_us = pending.enqueued.elapsed().as_secs_f64() * 1e6;
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.sim_cycles.fetch_add(r.stats.cycles, Ordering::Relaxed);
-                    metrics.record_latency_us(host_us as u64);
                     if matches!(cfg.backend, BackendPolicy::CrossCheck) {
                         metrics.cross_checked.fetch_add(1, Ordering::Relaxed);
                         metrics
                             .cross_check_mismatches
                             .fetch_add(r.mismatches, Ordering::Relaxed);
                     }
-                    Ok(Response {
-                        y: r.y,
-                        cycles: r.stats.cycles,
-                        device_us: r.stats.cycles as f64
-                            / (cfg.clock_mhz * concurrency as f64),
-                        host_us,
-                        batch_size: group_size,
-                        backend: r.backend,
-                    })
+                    if r.mismatches > 0 && cfg.retry.max_retries > 0 {
+                        // never serve a result the reference still
+                        // disputes after the retry budget: fail typed
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        Err(SubmitError::Exec(Arc::new(BackendError::Mismatch {
+                            elements: r.mismatches,
+                            retries: attempt,
+                        })))
+                    } else {
+                        let host_us = pending.enqueued.elapsed().as_secs_f64() * 1e6;
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        metrics.sim_cycles.fetch_add(r.stats.cycles, Ordering::Relaxed);
+                        metrics.record_latency_us(host_us as u64);
+                        if r.degraded {
+                            metrics.degraded_responses.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(Response {
+                            y: r.y,
+                            cycles: r.stats.cycles,
+                            device_us: r.stats.cycles as f64
+                                / (cfg.clock_mhz * concurrency as f64),
+                            host_us,
+                            batch_size: group_size,
+                            backend: r.backend,
+                            degraded: r.degraded,
+                        })
+                    }
                 }
                 Err(e) => {
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -382,6 +543,19 @@ fn execute_batch(
             let _ = pending.reply.send(result);
         }
     }
+    // Health deltas: the sharded tiers fail over and quarantine
+    // internally; fold what changed since this worker's last batch into
+    // the coordinator-level counters.
+    let h = backend.health();
+    let failed_over = h.failovers.saturating_sub(health_seen.failovers);
+    let newly_quarantined = h.quarantined.saturating_sub(health_seen.quarantined);
+    if failed_over > 0 {
+        metrics.failovers.fetch_add(failed_over, Ordering::Relaxed);
+    }
+    if newly_quarantined > 0 {
+        metrics.quarantined_engines.fetch_add(newly_quarantined, Ordering::Relaxed);
+    }
+    *health_seen = h;
     router.complete_n(wid, drained);
 }
 
@@ -411,7 +585,7 @@ mod tests {
         let mut rng = XorShift::new(2);
         for _ in 0..4 {
             let x = rng.vec_i64(16, -100, 100);
-            let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+            let resp = coord.call(Request::new("g", x.clone())).unwrap();
             assert_eq!(resp.y, host_gemv(&w, &x, 16, 16));
             assert!(resp.cycles > 0);
             assert!(resp.device_us > 0.0);
@@ -431,7 +605,7 @@ mod tests {
         let cases: Vec<Vec<i64>> = (0..24).map(|_| rng.vec_i64(8, -50, 50)).collect();
         let rxs: Vec<_> = cases
             .iter()
-            .map(|x| coord.submit(Request { model: "g".into(), x: x.clone() }).unwrap())
+            .map(|x| coord.submit(Request::new("g", x.clone())).unwrap())
             .collect();
         for (x, rx) in cases.iter().zip(rxs) {
             let resp = rx.recv().unwrap().unwrap();
@@ -446,7 +620,7 @@ mod tests {
     fn input_dim_validated_at_submit() {
         let (reg, _) = registry_with_gemv(8, 8);
         let coord = Coordinator::start(CoordinatorConfig::default(), reg);
-        let err = coord.submit(Request { model: "g".into(), x: vec![0; 3] });
+        let err = coord.submit(Request::new("g", vec![0; 3]));
         assert!(matches!(err, Err(SubmitError::InputDim { expected: 8, got: 3, .. })));
         coord.shutdown();
     }
@@ -455,7 +629,7 @@ mod tests {
     fn unknown_model_rejected() {
         let coord = Coordinator::start(CoordinatorConfig::default(), ModelRegistry::default());
         assert!(matches!(
-            coord.submit(Request { model: "x".into(), x: vec![] }),
+            coord.submit(Request::new("x", vec![])),
             Err(SubmitError::Registry(_))
         ));
         coord.shutdown();
@@ -471,7 +645,7 @@ mod tests {
         };
         let coord = Coordinator::start(cfg, reg);
         let rxs: Vec<_> = (0..8)
-            .map(|_| coord.submit(Request { model: "g".into(), x: vec![1; 8] }).unwrap())
+            .map(|_| coord.submit(Request::new("g", vec![1; 8])).unwrap())
             .collect();
         let mut max_batch = 0;
         for rx in rxs {
@@ -508,7 +682,7 @@ mod tests {
             .map(|i| {
                 let model = if i % 2 == 0 { "a" } else { "b" };
                 coord
-                    .submit(Request { model: model.into(), x: vec![1; 8] })
+                    .submit(Request::new(model, vec![1; 8]))
                     .unwrap()
             })
             .collect();
@@ -543,7 +717,7 @@ mod tests {
         for round in 0..6 {
             let w = rng.vec_i64(m * n, -16, 15);
             reg.register_gemv("g", w.clone(), m, n).unwrap();
-            let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+            let resp = coord.call(Request::new("g", x.clone())).unwrap();
             assert_eq!(resp.y, host_gemv(&w, &x, m, n), "round {round}: stale weights served");
             reg.unregister("g").unwrap();
         }
@@ -565,7 +739,7 @@ mod tests {
         let cases: Vec<Vec<i64>> = (0..40).map(|_| rng.vec_i64(8, -50, 50)).collect();
         let rxs: Vec<_> = cases
             .iter()
-            .map(|x| coord.submit(Request { model: "g".into(), x: x.clone() }).unwrap())
+            .map(|x| coord.submit(Request::new("g", x.clone())).unwrap())
             .collect();
         let snap = coord.shutdown();
         for (x, rx) in cases.iter().zip(rxs) {
@@ -592,7 +766,7 @@ mod tests {
         );
         for _ in 0..3 {
             let x = rng.vec_i64(n, -64, 63);
-            let resp = coord.call(Request { model: "big".into(), x: x.clone() }).unwrap();
+            let resp = coord.call(Request::new("big", x.clone())).unwrap();
             assert_eq!(resp.y, host_gemv(&w, &x, m, n));
             assert!(resp.cycles > 0);
             assert_eq!(resp.backend, "sharded");
@@ -620,7 +794,7 @@ mod tests {
         );
         for _ in 0..2 {
             let x = rng.vec_i64(n, -64, 63);
-            let resp = coord.call(Request { model: "wide".into(), x: x.clone() }).unwrap();
+            let resp = coord.call(Request::new("wide", x.clone())).unwrap();
             assert_eq!(resp.y, host_gemv(&w, &x, m, n));
             assert!(resp.cycles > 0);
             assert_eq!(resp.backend, "col_sharded");
@@ -645,7 +819,7 @@ mod tests {
             reg,
         );
         for _ in 0..3 {
-            coord.call(Request { model: "g".into(), x: vec![1; 32] }).unwrap();
+            coord.call(Request::new("g", vec![1; 32])).unwrap();
         }
         let snap = coord.shutdown();
         assert!(snap.residency_hits >= 2, "{snap:?}");
@@ -666,7 +840,7 @@ mod tests {
             },
             reg,
         );
-        let err = coord.call(Request { model: "g".into(), x: vec![1; 8] }).unwrap_err();
+        let err = coord.call(Request::new("g", vec![1; 8])).unwrap_err();
         assert!(
             matches!(
                 &err,
@@ -676,5 +850,55 @@ mod tests {
         );
         let snap = coord.shutdown();
         assert_eq!(snap.failed, 1);
+    }
+
+    #[test]
+    fn missed_deadline_is_shed_with_a_typed_error() {
+        let (reg, w) = registry_with_gemv(8, 8);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 2, window: std::time::Duration::from_millis(25) },
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg, reg);
+        // a lone request is held for the full 25ms batching window
+        // before its group is scheduled — far past its 1ms deadline
+        let err = coord
+            .call(Request::new("g", vec![1; 8]).with_deadline_us(1_000))
+            .unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SubmitError::DeadlineExceeded { deadline_us: 1_000, waited_us, .. }
+                    if waited_us > 1_000
+            ),
+            "{err:?}"
+        );
+        // a deadline-free request on the same pool still gets served
+        let resp = coord.call(Request::new("g", vec![1; 8])).unwrap();
+        assert_eq!(resp.y, host_gemv(&w, &[1; 8], 8, 8));
+        assert!(!resp.degraded);
+        let snap = coord.shutdown();
+        assert_eq!(snap.deadline_misses, 1, "{snap:?}");
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        // the shed request never formed (or joined) an executed group
+        assert_eq!(snap.batched_requests, 1, "{snap:?}");
+    }
+
+    #[test]
+    fn generous_deadline_is_met() {
+        let (reg, w) = registry_with_gemv(8, 8);
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
+            reg,
+        );
+        let resp = coord
+            .call(Request::new("g", vec![2; 8]).with_deadline_us(60_000_000))
+            .unwrap();
+        assert_eq!(resp.y, host_gemv(&w, &[2; 8], 8, 8));
+        let snap = coord.shutdown();
+        assert_eq!(snap.deadline_misses, 0);
+        assert_eq!(snap.completed, 1);
     }
 }

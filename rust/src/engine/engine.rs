@@ -95,6 +95,10 @@ pub struct Engine {
     fuse: bool,
     /// Lowered kernels, keyed by program fingerprint + entry state.
     kernels: HashMap<KernelKey, KernelSlot>,
+    /// Identity of this engine for the fault-injection stall seam
+    /// (`stall:engine=..` in `IMAGINE_FAULT`): pool schedulers tag each
+    /// member engine with its slot index (docs/ROBUSTNESS.md).
+    fault_slot: usize,
 }
 
 impl Engine {
@@ -121,7 +125,14 @@ impl Engine {
             trace: Trace::off(),
             fuse: crate::util::env_flag("IMAGINE_FUSE", true),
             kernels: HashMap::new(),
+            fault_slot: 0,
         }
+    }
+
+    /// Tag this engine with its pool slot for the fault-injection
+    /// stall seam (`IMAGINE_FAULT`, docs/ROBUSTNESS.md).
+    pub fn set_fault_slot(&mut self, slot: usize) {
+        self.fault_slot = slot;
     }
 
     /// Toggle fused (compiled-kernel) execution for this engine; the
@@ -203,6 +214,18 @@ impl Engine {
     /// to lower (they would fault) fall back to the interpreter so the
     /// error surfaces with the interpreter's exact semantics.
     pub fn execute(&mut self, prog: &Program) -> Result<ExecStats, EngineError> {
+        let res = self.execute_prog(prog);
+        // Fault-injection stall seam: every execution (fused replay or
+        // interpreter, and transitively every ColumnArray dispatch)
+        // funnels through here, so one hook point covers them all.
+        // One relaxed atomic load when no plan is installed.
+        if let Some(f) = crate::sim::fault::global() {
+            f.stall(self.fault_slot);
+        }
+        res
+    }
+
+    fn execute_prog(&mut self, prog: &Program) -> Result<ExecStats, EngineError> {
         if !prog.is_halted() {
             return Err(EngineError::NotHalted);
         }

@@ -50,6 +50,29 @@ pub enum GemvError {
          (per-engine budget {budget_bits} bits)"
     )]
     Unshardable { rows: usize, budget_bits: u64 },
+    /// A pool member stopped answering dispatches (fault-injected
+    /// death, `die:member=..` in `IMAGINE_FAULT`). Scheduler-internal
+    /// failover normally quarantines the member and re-plans onto a
+    /// replacement; this surfaces when the death hits a path with no
+    /// peers to fail over to mid-call — the member is quarantined and
+    /// a retry (e.g. the coordinator's bounded retry) lands on a fresh
+    /// engine. See docs/ROBUSTNESS.md.
+    #[error("pool member {member} is dead")]
+    MemberDead { member: usize },
+    /// Shard failover ran out of healthy pool members: serving the
+    /// plan needs `needed` members but quarantines have exhausted the
+    /// physical budget ([`MAX_SHARDS`](super::mapper::MAX_SHARDS)).
+    /// The auto backend degrades such a group to the single-engine
+    /// multi-pass path instead of failing the request.
+    #[error(
+        "engine pool exhausted: {needed} shard(s) needed, \
+         {quarantined} member(s) quarantined"
+    )]
+    PoolExhausted { needed: usize, quarantined: usize },
+    /// The shard fan-out's worker pool failed (contained job panic or
+    /// a replaced worker thread).
+    #[error("worker pool: {0}")]
+    Pool(#[from] crate::util::pool::PoolError),
 }
 
 /// Result of one simulated GEMV.

@@ -26,13 +26,21 @@
 //! the host reduction playing the inter-bank merge the PrIM studies
 //! identify as the GEMV bottleneck knob.
 
+//! Failure handling (docs/ROBUSTNESS.md): like the row tier, slice
+//! slots map to physical members through an assignment table; a member
+//! that dies mid-dispatch is quarantined, its slot remapped onto a
+//! fresh `ShardedScheduler`, and the plan re-run. Exhausting the
+//! physical budget surfaces [`GemvError::PoolExhausted`] for the auto
+//! backend to degrade on.
+
 use super::codegen::GemvError;
-use super::mapper::{plan_col_shards, ColShardPlan};
+use super::mapper::{plan_col_shards, ColShardPlan, MAX_SHARDS};
 use super::scheduler::GemvOutcome;
 use super::sharded::ShardedScheduler;
 use crate::engine::EngineConfig;
-use crate::sim::ExecStats;
+use crate::sim::{fault, ExecStats};
 use crate::util::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// A GEMV scheduler over a pool of [`ShardedScheduler`]s, serving
@@ -63,6 +71,14 @@ pub struct ColShardedScheduler {
     /// would cost O(m * n) host copies per call for a model whose whole
     /// point is that nothing but vectors move.
     sliced: Option<(u64, Vec<Vec<i64>>)>,
+    /// Logical slice slot -> physical member (identity until failover).
+    assign: Vec<usize>,
+    /// Physical members quarantined after a death.
+    quarantined: Vec<usize>,
+    /// Dispatches per physical member (drives `die:member=M,after=N`).
+    calls: Vec<AtomicU64>,
+    /// Slot remaps performed after member deaths.
+    failovers: u64,
 }
 
 impl ColShardedScheduler {
@@ -86,6 +102,10 @@ impl ColShardedScheduler {
             slice_stats: Vec::new(),
             reduce_adds: 0,
             sliced: None,
+            assign: Vec::new(),
+            quarantined: Vec::new(),
+            calls: Vec::new(),
+            failovers: 0,
         }
     }
 
@@ -117,7 +137,7 @@ impl ColShardedScheduler {
     /// re-stages nothing; each member moves only its vector slice).
     pub fn is_resident(&self, token: u64, cp: &ColShardPlan) -> bool {
         cp.slices.iter().all(|sl| {
-            self.members.get(sl.index).is_some_and(|m| {
+            self.members.get(self.phys_of(sl.index)).is_some_and(|m| {
                 m.lock()
                     .unwrap()
                     .is_resident_model(token, cp.m, sl.cols, cp.precision, cp.radix)
@@ -125,10 +145,70 @@ impl ColShardedScheduler {
         })
     }
 
+    /// Slot remaps performed after member deaths (fault layer), summed
+    /// with the members' own internal row-tier failovers.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+            + self
+                .members
+                .iter()
+                .map(|m| m.lock().unwrap().failovers())
+                .sum::<u64>()
+    }
+
+    /// Physical members quarantined after deaths (this tier plus the
+    /// members' internal row-tier quarantines).
+    pub fn quarantined(&self) -> usize {
+        self.quarantined.len()
+            + self
+                .members
+                .iter()
+                .map(|m| m.lock().unwrap().quarantined())
+                .sum::<usize>()
+    }
+
+    /// Physical member serving logical slot `slot` (identity unless a
+    /// death remapped it).
+    fn phys_of(&self, slot: usize) -> usize {
+        self.assign.get(slot).copied().unwrap_or(slot)
+    }
+
+    /// Extend the assignment table to cover `k` slots (see the row
+    /// tier's `ensure_assign`).
+    fn ensure_assign(&mut self, k: usize) {
+        while self.assign.len() < k {
+            let slot = self.assign.len();
+            let phys = if self.quarantined.contains(&slot) || self.assign.contains(&slot) {
+                self.fresh_phys()
+            } else {
+                slot
+            };
+            self.assign.push(phys);
+        }
+    }
+
+    /// The next never-used physical member index.
+    fn fresh_phys(&self) -> usize {
+        self.members
+            .len()
+            .max(self.assign.iter().map(|p| p + 1).max().unwrap_or(0))
+    }
+
+    /// Quarantine `phys` and remap `slot` onto a fresh member; the
+    /// dispatch-time capacity gate bounds the growth.
+    fn quarantine_slot(&mut self, slot: usize, phys: usize) {
+        if !self.quarantined.contains(&phys) {
+            self.quarantined.push(phys);
+        }
+        self.assign[slot] = self.fresh_phys();
+        self.failovers += 1;
+    }
+
     fn ensure_members(&mut self, k: usize) {
         while self.members.len() < k {
             let member = ShardedScheduler::with_threads(self.config, self.member_threads, 1);
             self.members.push(Mutex::new(member));
+            self.calls.push(AtomicU64::new(0));
         }
     }
 
@@ -178,10 +258,31 @@ impl ColShardedScheduler {
         match plan_col_shards(&self.config, m, n, p, radix) {
             Some(cp) => self.run_plan(&cp, token, w, xs),
             None => {
-                self.ensure_members(1);
                 self.slice_stats.clear();
                 self.reduce_adds = 0;
-                self.members[0]
+                self.ensure_assign(1);
+                let phys = self.assign[0];
+                if phys >= MAX_SHARDS {
+                    let q = self.quarantined.len();
+                    return xs
+                        .iter()
+                        .map(|_| Err(GemvError::PoolExhausted { needed: 1, quarantined: q }))
+                        .collect();
+                }
+                self.ensure_members(phys + 1);
+                if let Some(f) = fault::global() {
+                    let call = self.calls[phys].fetch_add(1, Ordering::Relaxed);
+                    if f.should_die(phys, call) {
+                        // quarantine so a retry lands on a fresh
+                        // member; surface the typed death
+                        self.quarantine_slot(0, phys);
+                        return xs
+                            .iter()
+                            .map(|_| Err(GemvError::MemberDead { member: phys }))
+                            .collect();
+                    }
+                }
+                self.members[phys]
                     .get_mut()
                     .unwrap()
                     .gemv_batch(token, w, xs, m, n, p, radix)
@@ -242,28 +343,72 @@ impl ColShardedScheduler {
             .collect();
         let valid: Vec<usize> =
             (0..xs.len()).filter(|&i| pre[i].is_none()).collect();
-        self.ensure_members(k);
+        self.ensure_assign(k);
         self.ensure_sliced(cp, token, w);
-        let slots: Vec<Mutex<Vec<GemvOutcome>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
-        {
-            let members = &self.members;
-            let (_, sliced) = self.sliced.as_ref().expect("sliced weights just ensured");
-            let slices = &cp.slices;
-            let run_slice = |i: usize| {
-                let sl = slices[i];
-                let xs_i: Vec<&[i64]> = valid
+        let slots = loop {
+            // Capacity gate (see the row tier): past the physical
+            // budget the plan is unservable here.
+            let max_phys = (0..k).map(|i| self.assign[i]).max().unwrap_or(0);
+            if max_phys >= MAX_SHARDS {
+                let q = self.quarantined.len();
+                return xs
                     .iter()
-                    .map(|&j| &xs[j][sl.col0..sl.col0 + sl.cols])
+                    .map(|_| Err(GemvError::PoolExhausted { needed: k, quarantined: q }))
                     .collect();
-                let mut member = members[i].lock().unwrap();
-                let out = member.gemv_batch(token, &sliced[i], &xs_i, m, sl.cols, p, radix);
-                *slots[i].lock().unwrap() = out;
-            };
-            match &self.pool {
-                Some(pool) => pool.run(k, &run_slice),
-                None => (0..k).for_each(run_slice),
             }
-        }
+            self.ensure_members(max_phys + 1);
+            let slots: Vec<Mutex<Vec<GemvOutcome>>> =
+                (0..k).map(|_| Mutex::new(Vec::new())).collect();
+            let dead: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+            let ran = {
+                let members = &self.members;
+                let calls = &self.calls;
+                let assign = &self.assign;
+                let (_, sliced) = self.sliced.as_ref().expect("sliced weights just ensured");
+                let slices = &cp.slices;
+                let faults = fault::global();
+                let run_slice = |i: usize| {
+                    let sl = slices[i];
+                    let phys = assign[i];
+                    if let Some(f) = &faults {
+                        let call = calls[phys].fetch_add(1, Ordering::Relaxed);
+                        if f.should_die(phys, call) {
+                            dead.lock().unwrap().push((i, phys));
+                            return;
+                        }
+                    }
+                    let xs_i: Vec<&[i64]> = valid
+                        .iter()
+                        .map(|&j| &xs[j][sl.col0..sl.col0 + sl.cols])
+                        .collect();
+                    let mut member = members[phys].lock().unwrap();
+                    let out = member.gemv_batch(token, &sliced[i], &xs_i, m, sl.cols, p, radix);
+                    *slots[i].lock().unwrap() = out;
+                };
+                match &self.pool {
+                    Some(pool) => pool.run_checked(k, &run_slice),
+                    None => {
+                        (0..k).for_each(run_slice);
+                        Ok(())
+                    }
+                }
+            };
+            if let Err(e) = ran {
+                return xs.iter().map(|_| Err(GemvError::Pool(e.clone()))).collect();
+            }
+            let mut died = dead.into_inner().unwrap();
+            if died.is_empty() {
+                break slots;
+            }
+            // Failover: quarantine dead members, remap, re-run.
+            died.sort_unstable();
+            died.dedup();
+            for (slot, phys) in died {
+                if self.assign[slot] == phys {
+                    self.quarantine_slot(slot, phys);
+                }
+            }
+        };
         let mut per_slice: Vec<std::vec::IntoIter<GemvOutcome>> = slots
             .into_iter()
             .map(|s| s.into_inner().unwrap().into_iter())
@@ -444,6 +589,33 @@ mod tests {
         let out = sched.run_plan(&cp, 1, &[0i64; 63], &xrefs);
         assert_eq!(out.len(), 2);
         assert!(out.iter().all(|r| matches!(r, Err(GemvError::Shape { .. }))));
+    }
+
+    #[test]
+    fn member_death_quarantines_and_fails_over() {
+        use crate::sim::fault::{install_scoped, DieSpec, FaultPlan};
+        // member 1 dies at first contact; note the die seam applies to
+        // every scheduler instance's member 1, but the slices here are
+        // small enough that each member serves through its internal
+        // member 0 — only the column tier sees the death
+        let _g = install_scoped(FaultPlan {
+            dies: vec![DieSpec { member: 1, after: 0 }],
+            ..FaultPlan::default()
+        });
+        let cfg = tiny();
+        let (m, n) = (16, 96);
+        let mut rng = XorShift::new(57);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let mut sched = ColShardedScheduler::with_threads(cfg, 1, 1);
+        let cp = plan_col_shards_k(m, n, 8, 2, 3);
+        let out = sched.run_plan(&cp, 91, &w, &xrefs);
+        assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+        assert_eq!(sched.failovers(), 1);
+        assert_eq!(sched.quarantined(), 1);
+        // slot 1 now lives on the replacement member (index 3)
+        assert_eq!(sched.members(), 4);
     }
 
     #[test]

@@ -93,7 +93,14 @@ impl GemvScheduler {
     ) -> Result<(Vec<i64>, ExecStats), GemvError> {
         self.resident = None;
         let prog = self.program(m, n, p, radix);
-        let res = prog.execute(&mut self.engine, w, x)?;
+        let mut res = prog.execute(&mut self.engine, w, x)?;
+        // Fault-injection bit-flip seam (silent-corruption model): the
+        // scheduler epilogue is the one funnel every execution path —
+        // native, shard member, column-shard member, oracle — produces
+        // results through. No-op unless a plan is installed.
+        if let Some(f) = crate::sim::fault::global() {
+            f.bitflip(&mut res.y);
+        }
         Ok((res.y, res.stats))
     }
 
@@ -117,8 +124,11 @@ impl GemvScheduler {
         let key = (token, m, n, p, radix);
         let hot = self.resident == Some(key);
         let prog = self.program(m, n, p, radix);
-        let res = prog.execute_opts(&mut self.engine, w, x, hot)?;
+        let mut res = prog.execute_opts(&mut self.engine, w, x, hot)?;
         self.resident = if prog.supports_residency() { Some(key) } else { None };
+        if let Some(f) = crate::sim::fault::global() {
+            f.bitflip(&mut res.y);
+        }
         Ok((res.y, res.stats))
     }
 
@@ -149,8 +159,11 @@ impl GemvScheduler {
         for &x in xs {
             let hot = supports && self.resident == Some(key);
             match prog.execute_opts(&mut self.engine, w, x, hot) {
-                Ok(res) => {
+                Ok(mut res) => {
                     self.resident = if supports { Some(key) } else { None };
+                    if let Some(f) = crate::sim::fault::global() {
+                        f.bitflip(&mut res.y);
+                    }
                     out.push(Ok((res.y, res.stats)));
                 }
                 Err(e) => {

@@ -18,13 +18,23 @@
 //! re-stages. This mirrors balanced data placement across PIM banks
 //! (arXiv:2403.20297) with the host-side concat playing the
 //! reduction/merge step.
+//!
+//! Failure handling (docs/ROBUSTNESS.md): shard slots map to physical
+//! members through an assignment table. A member that dies mid-dispatch
+//! (fault-injected via `die:member=..`) is quarantined, its slot is
+//! remapped onto a fresh engine, and the whole plan re-runs — per-shard
+//! residency re-stages on the replacement. When quarantines exhaust the
+//! physical pool budget ([`MAX_SHARDS`]) the batch fails with the typed
+//! [`GemvError::PoolExhausted`], which the auto backend turns into
+//! graceful degradation onto the single-engine path.
 
 use super::codegen::GemvError;
-use super::mapper::{plan_shards, ShardPlan};
+use super::mapper::{plan_shards, ShardPlan, MAX_SHARDS};
 use super::scheduler::{GemvOutcome, GemvScheduler};
 use crate::engine::{Engine, EngineConfig};
-use crate::sim::ExecStats;
+use crate::sim::{fault, ExecStats};
 use crate::util::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// A GEMV scheduler over a pool of engines, serving row-sharded
@@ -44,6 +54,18 @@ pub struct ShardedScheduler {
     engines: Vec<Mutex<GemvScheduler>>,
     /// Per-shard merged stats of the last sharded batch.
     shard_stats: Vec<ExecStats>,
+    /// Logical shard slot -> physical member. Identity until a member
+    /// death remaps a slot onto a fresh replacement engine.
+    assign: Vec<usize>,
+    /// Physical members quarantined after a death; never dispatched
+    /// again.
+    quarantined: Vec<usize>,
+    /// Dispatches per physical member — drives the deterministic
+    /// `die:member=M,after=N` seam (atomics: shards dispatch in
+    /// parallel). Parallel array with `engines`.
+    calls: Vec<AtomicU64>,
+    /// Slot remaps performed after member deaths.
+    failovers: u64,
 }
 
 impl ShardedScheduler {
@@ -65,6 +87,10 @@ impl ShardedScheduler {
             pool: (extra > 0).then(|| ThreadPool::new(extra)),
             engines: Vec::new(),
             shard_stats: Vec::new(),
+            assign: Vec::new(),
+            quarantined: Vec::new(),
+            calls: Vec::new(),
+            failovers: 0,
         }
     }
 
@@ -89,7 +115,7 @@ impl ShardedScheduler {
     /// nothing; each member moves only vector planes).
     pub fn is_resident(&self, token: u64, sp: &ShardPlan) -> bool {
         sp.shards.iter().all(|sh| {
-            self.engines.get(sh.index).is_some_and(|e| {
+            self.engines.get(self.phys_of(sh.index)).is_some_and(|e| {
                 e.lock()
                     .unwrap()
                     .is_resident(token, sh.rows, sp.n, sp.precision, sp.radix)
@@ -108,15 +134,67 @@ impl ShardedScheduler {
             Some(sp) => self.is_resident(token, &sp),
             None => self
                 .engines
-                .first()
+                .get(self.phys_of(0))
                 .is_some_and(|e| e.lock().unwrap().is_resident(token, m, n, p, radix)),
         }
     }
 
+    /// Slot remaps performed after member deaths (fault layer).
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Physical members quarantined after deaths.
+    pub fn quarantined(&self) -> usize {
+        self.quarantined.len()
+    }
+
+    /// Physical member serving logical slot `slot` (identity unless a
+    /// death remapped it).
+    fn phys_of(&self, slot: usize) -> usize {
+        self.assign.get(slot).copied().unwrap_or(slot)
+    }
+
+    /// Extend the assignment table to cover `k` slots. A new slot
+    /// defaults to its own index unless that member is quarantined or
+    /// already serving a remapped slot.
+    fn ensure_assign(&mut self, k: usize) {
+        while self.assign.len() < k {
+            let slot = self.assign.len();
+            let phys = if self.quarantined.contains(&slot) || self.assign.contains(&slot) {
+                self.fresh_phys()
+            } else {
+                slot
+            };
+            self.assign.push(phys);
+        }
+    }
+
+    /// The next never-used physical member index.
+    fn fresh_phys(&self) -> usize {
+        self.engines
+            .len()
+            .max(self.assign.iter().map(|p| p + 1).max().unwrap_or(0))
+    }
+
+    /// Quarantine `phys` and remap `slot` onto a fresh member. The new
+    /// index may exceed the pool budget; the dispatch-time capacity
+    /// gate turns that into [`GemvError::PoolExhausted`].
+    fn quarantine_slot(&mut self, slot: usize, phys: usize) {
+        if !self.quarantined.contains(&phys) {
+            self.quarantined.push(phys);
+        }
+        self.assign[slot] = self.fresh_phys();
+        self.failovers += 1;
+    }
+
     fn ensure_engines(&mut self, k: usize) {
         while self.engines.len() < k {
-            let engine = Engine::with_threads(self.config, self.engine_threads);
+            let idx = self.engines.len();
+            let mut engine = Engine::with_threads(self.config, self.engine_threads);
+            engine.set_fault_slot(idx);
             self.engines.push(Mutex::new(GemvScheduler::from_engine(self.config, engine)));
+            self.calls.push(AtomicU64::new(0));
         }
     }
 
@@ -138,9 +216,32 @@ impl ShardedScheduler {
         match plan_shards(&self.config, m, n, p, radix) {
             Some(sp) => self.run_plan(&sp, token, w, xs),
             None => {
-                self.ensure_engines(1);
                 self.shard_stats.clear();
-                self.engines[0]
+                self.ensure_assign(1);
+                let phys = self.assign[0];
+                if phys >= MAX_SHARDS {
+                    let q = self.quarantined.len();
+                    return xs
+                        .iter()
+                        .map(|_| Err(GemvError::PoolExhausted { needed: 1, quarantined: q }))
+                        .collect();
+                }
+                self.ensure_engines(phys + 1);
+                if let Some(f) = fault::global() {
+                    let call = self.calls[phys].fetch_add(1, Ordering::Relaxed);
+                    if f.should_die(phys, call) {
+                        // no peers to fail over to mid-call: quarantine
+                        // now so a retry (e.g. the coordinator's
+                        // bounded retry) lands on a fresh member, and
+                        // surface the typed death
+                        self.quarantine_slot(0, phys);
+                        return xs
+                            .iter()
+                            .map(|_| Err(GemvError::MemberDead { member: phys }))
+                            .collect();
+                    }
+                }
+                self.engines[phys]
                     .get_mut()
                     .unwrap()
                     .gemv_batch(token, w, xs, m, n, p, radix)
@@ -180,23 +281,76 @@ impl ShardedScheduler {
                 .map(|_| Err(GemvError::Shape { what: "matrix", expected: m * n, got: w.len() }))
                 .collect();
         }
-        self.ensure_engines(k);
-        let slots: Vec<Mutex<Vec<GemvOutcome>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
-        {
-            let engines = &self.engines;
-            let shards = &sp.shards;
-            let run_shard = |i: usize| {
-                let sh = shards[i];
-                let ws = &w[sh.row0 * n..(sh.row0 + sh.rows) * n];
-                let mut member = engines[i].lock().unwrap();
-                let out = member.gemv_batch(token, ws, xs, sh.rows, n, p, radix);
-                *slots[i].lock().unwrap() = out;
-            };
-            match &self.pool {
-                Some(pool) => pool.run(k, &run_shard),
-                None => (0..k).for_each(run_shard),
+        self.ensure_assign(k);
+        let slots = loop {
+            // Capacity gate: quarantines may have pushed a slot's
+            // assignment past the physical pool budget — the plan is no
+            // longer servable here and the caller (auto backend)
+            // degrades to the single-engine path.
+            let max_phys = (0..k).map(|i| self.assign[i]).max().unwrap_or(0);
+            if max_phys >= MAX_SHARDS {
+                self.shard_stats.clear();
+                let q = self.quarantined.len();
+                return xs
+                    .iter()
+                    .map(|_| Err(GemvError::PoolExhausted { needed: k, quarantined: q }))
+                    .collect();
             }
-        }
+            self.ensure_engines(max_phys + 1);
+            let slots: Vec<Mutex<Vec<GemvOutcome>>> =
+                (0..k).map(|_| Mutex::new(Vec::new())).collect();
+            let dead: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+            let ran = {
+                let engines = &self.engines;
+                let calls = &self.calls;
+                let assign = &self.assign;
+                let shards = &sp.shards;
+                let faults = fault::global();
+                let run_shard = |i: usize| {
+                    let sh = shards[i];
+                    let phys = assign[i];
+                    if let Some(f) = &faults {
+                        let call = calls[phys].fetch_add(1, Ordering::Relaxed);
+                        if f.should_die(phys, call) {
+                            dead.lock().unwrap().push((i, phys));
+                            return;
+                        }
+                    }
+                    let ws = &w[sh.row0 * n..(sh.row0 + sh.rows) * n];
+                    let mut member = engines[phys].lock().unwrap();
+                    let out = member.gemv_batch(token, ws, xs, sh.rows, n, p, radix);
+                    *slots[i].lock().unwrap() = out;
+                };
+                match &self.pool {
+                    Some(pool) => pool.run_checked(k, &run_shard),
+                    None => {
+                        (0..k).for_each(run_shard);
+                        Ok(())
+                    }
+                }
+            };
+            if let Err(e) = ran {
+                // the fan-out itself failed (contained job panic or a
+                // lost-and-replaced worker): the batch's outcomes are
+                // unusable — fail it typed; the pool has recovered
+                self.shard_stats.clear();
+                return xs.iter().map(|_| Err(GemvError::Pool(e.clone()))).collect();
+            }
+            let mut died = dead.into_inner().unwrap();
+            if died.is_empty() {
+                break slots;
+            }
+            // Failover: quarantine dead members, remap their slots onto
+            // fresh engines, and re-run the whole plan (per-shard
+            // residency re-stages on the replacements).
+            died.sort_unstable();
+            died.dedup();
+            for (slot, phys) in died {
+                if self.assign[slot] == phys {
+                    self.quarantine_slot(slot, phys);
+                }
+            }
+        };
         let mut per_shard: Vec<std::vec::IntoIter<GemvOutcome>> = slots
             .into_iter()
             .map(|s| s.into_inner().unwrap().into_iter())
@@ -311,6 +465,59 @@ mod tests {
         let out = sharded.run_plan(&sp, 9, &w, &xrefs);
         assert_eq!(out[0].as_ref().unwrap().0, host_gemv(&w, &good, m, n));
         assert!(out[1].is_err());
+    }
+
+    #[test]
+    fn member_death_quarantines_and_fails_over() {
+        use crate::sim::fault::{install_scoped, DieSpec, FaultPlan};
+        let _g = install_scoped(FaultPlan {
+            dies: vec![DieSpec { member: 1, after: 0 }],
+            ..FaultPlan::default()
+        });
+        let cfg = EngineConfig::small();
+        let (m, n) = (48, 64);
+        let mut rng = XorShift::new(31);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        // serial fan-out: deterministic death/retry order
+        let mut sharded = ShardedScheduler::with_threads(cfg, 1, 1);
+        let sp = plan_shards_k(m, n, 8, 2, 3);
+        let out = sharded.run_plan(&sp, 77, &w, &xrefs);
+        assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+        assert_eq!(sharded.failovers(), 1);
+        assert_eq!(sharded.quarantined(), 1);
+        // slot 1 now lives on the replacement engine (index 3)
+        assert_eq!(sharded.engines(), 4);
+        // and the failover is sticky: the next batch reuses it
+        let out = sharded.run_plan(&sp, 77, &w, &xrefs);
+        assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+        assert_eq!(sharded.failovers(), 1);
+    }
+
+    #[test]
+    fn exhausted_pool_is_a_typed_error() {
+        use crate::gemv::mapper::MAX_SHARDS;
+        use crate::sim::fault::{install_scoped, DieSpec, FaultPlan};
+        // every physical member dies on first contact: failover burns
+        // through the budget and must surface PoolExhausted, not hang
+        let _g = install_scoped(FaultPlan {
+            dies: (0..2 * MAX_SHARDS).map(|m| DieSpec { member: m, after: 0 }).collect(),
+            ..FaultPlan::default()
+        });
+        let cfg = EngineConfig::small();
+        let (m, n) = (48, 64);
+        let mut rng = XorShift::new(32);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let mut sharded = ShardedScheduler::with_threads(cfg, 1, 1);
+        let sp = plan_shards_k(m, n, 8, 2, 3);
+        let out = sharded.run_plan(&sp, 80, &w, &xrefs);
+        assert!(
+            matches!(out[0], Err(GemvError::PoolExhausted { needed: 3, .. })),
+            "{out:?}"
+        );
     }
 
     #[test]

@@ -160,7 +160,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let rxs: Vec<_> = (0..requests)
         .map(|_| {
             coord
-                .submit(Request { model: "demo".into(), x: rng.vec_i64(d, -64, 63) })
+                .submit(Request::new("demo", rng.vec_i64(d, -64, 63)))
                 .unwrap()
         })
         .collect();

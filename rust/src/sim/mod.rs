@@ -1,5 +1,7 @@
-//! Simulation accounting: cycle statistics and instruction tracing.
+//! Simulation accounting: cycle statistics, instruction tracing and
+//! deterministic fault injection.
 
+pub mod fault;
 pub mod stats;
 pub mod trace;
 

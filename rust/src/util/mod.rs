@@ -11,7 +11,7 @@ pub mod pool;
 
 pub use json::Json;
 pub use rng::XorShift;
-pub use pool::ThreadPool;
+pub use pool::{PoolError, ThreadPool};
 
 /// Read a boolean environment toggle: unset → `default`; `"0"`,
 /// `"false"`, `"off"` or empty → false; anything else → true. Used by

@@ -4,18 +4,52 @@
 //! spawn. Workers are long-lived; each dispatch hands them one
 //! type-erased job and indices are claimed with an atomic counter so
 //! uneven columns load-balance.
+//!
+//! Failure containment (docs/ROBUSTNESS.md): a panic inside the job
+//! closure is caught per index and surfaced as a typed
+//! [`PoolError::JobPanicked`]; a worker *thread* that dies anyway (a
+//! payload the per-index catch must not swallow, see [`WorkerAbort`])
+//! restores the pool's counters from its thread-exit guard — so the
+//! submitter never deadlocks — and is replaced before the dispatch
+//! returns [`PoolError::WorkerLost`]. All pool locks are
+//! poison-tolerant: one dead worker must not cascade panics into every
+//! later dispatch or into `Drop`.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+
+/// Typed pool failure surfaced by [`ThreadPool::run_checked`].
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum PoolError {
+    /// The job closure panicked on at least one index; the panic was
+    /// contained to that index and the rest of the job completed.
+    #[error("pool job panicked in a worker")]
+    JobPanicked,
+    /// Worker thread(s) died mid-job; their bookkeeping was restored
+    /// by the thread-exit guard and replacements were spawned before
+    /// this was returned, so the pool is back at full strength.
+    #[error("{lost} pool worker(s) died mid-job (replaced)")]
+    WorkerLost { lost: usize },
+}
+
+/// Test-only escape hatch: a job closure that panics with this payload
+/// is *not* contained per index — the panic is rethrown and kills the
+/// worker thread itself, simulating a thread lost to a failure the
+/// per-index catch cannot see. Exercised by the pool's regression
+/// tests for the lost-worker path.
+#[doc(hidden)]
+#[derive(Debug)]
+pub struct WorkerAbort;
 
 /// One parallel-for dispatch: workers claim indices `0..len` from
 /// `next` and call `f(i)`; each index is executed exactly once.
 ///
 /// `f` borrows the submitter's stack. The lifetime is erased to
 /// `'static` when the job is built; this is sound because
-/// [`ThreadPool::run`] does not return until every worker has finished
-/// the job and dropped its `Arc<Job>`, so the borrow never dangles
+/// [`ThreadPool::run_checked`] does not return until every worker has
+/// finished the job and dropped its `Arc<Job>` (workers that die
+/// mid-job drop theirs during unwind), so the borrow never dangles
 /// while reachable.
 struct Job {
     f: &'static (dyn Fn(usize) + Sync),
@@ -31,6 +65,10 @@ struct State {
     epoch: u64,
     /// Workers that have not yet finished the current job.
     running: usize,
+    /// Worker threads currently alive.
+    live: usize,
+    /// Workers lost since the last dispatch accounted for them.
+    lost: usize,
     stop: bool,
 }
 
@@ -42,35 +80,46 @@ struct Shared {
     done: Condvar,
 }
 
-/// A fixed-size pool executing one parallel-for at a time.
+impl Shared {
+    /// Poison-tolerant state lock: a worker that panicked while holding
+    /// the mutex must not cascade panics into other threads (and
+    /// `Drop` must still be able to join).
+    fn state(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A fixed-size pool executing one parallel-for at a time. Lost
+/// workers are replaced, so the size is stable across failures.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    target: usize,
 }
 
 impl ThreadPool {
     /// Spawn `workers` threads (at least 1).
     pub fn new(workers: usize) -> ThreadPool {
+        let target = workers.max(1);
         let shared = Arc::new(Shared {
-            state: Mutex::new(State { job: None, epoch: 0, running: 0, stop: false }),
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                running: 0,
+                live: target,
+                lost: 0,
+                stop: false,
+            }),
             work: Condvar::new(),
             done: Condvar::new(),
         });
-        let handles = (0..workers.max(1))
-            .map(|i| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("imagine-pool-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn pool worker")
-            })
-            .collect();
-        ThreadPool { shared, handles }
+        let handles = (0..target).map(|i| spawn_worker(&shared, i, 0)).collect();
+        ThreadPool { shared, handles: Mutex::new(handles), target }
     }
 
-    /// Worker threads in the pool.
+    /// Worker threads in the pool (replacements keep this stable).
     pub fn workers(&self) -> usize {
-        self.handles.len()
+        self.target
     }
 
     /// Thread count requested via `IMAGINE_THREADS`, defaulting to the
@@ -86,14 +135,25 @@ impl ThreadPool {
     /// until all indices completed. The calling thread participates in
     /// the scan, so a pool of N workers applies N+1 threads. Distinct
     /// indices run concurrently — `f` must only touch data disjoint per
-    /// index (or shared immutably).
+    /// index (or shared immutably). Panics if `f` panicked on any
+    /// index; see [`Self::run_checked`] for the typed-error variant.
     pub fn run(&self, len: usize, f: &(dyn Fn(usize) + Sync)) {
-        if len == 0 {
-            return;
+        if let Err(e) = self.run_checked(len, f) {
+            panic!("{e}");
         }
-        // SAFETY: lifetime erasure only — `run` joins the job (waits for
-        // `running == 0`, at which point every worker has dropped its
-        // Arc) before returning, so `f` outlives all uses.
+    }
+
+    /// [`Self::run`], but job panics and lost workers come back as a
+    /// typed [`PoolError`] instead of a propagated panic. On
+    /// `WorkerLost` the pool has already respawned replacements.
+    pub fn run_checked(&self, len: usize, f: &(dyn Fn(usize) + Sync)) -> Result<(), PoolError> {
+        if len == 0 {
+            return Ok(());
+        }
+        // SAFETY: lifetime erasure only — the dispatch joins the job
+        // (waits for `running == 0`; dying workers decrement it from
+        // their exit guard after dropping their Arc) before returning,
+        // so `f` outlives all uses.
         let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
@@ -104,24 +164,39 @@ impl ThreadPool {
             panicked: AtomicBool::new(false),
         });
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state();
             debug_assert!(st.job.is_none(), "overlapping ThreadPool::run");
             st.job = Some(job.clone());
             st.epoch = st.epoch.wrapping_add(1);
-            st.running = self.handles.len();
+            st.running = st.live;
             self.shared.work.notify_all();
         }
         run_job(&job);
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state();
         while st.running > 0 {
-            st = self.shared.done.wait(st).unwrap();
+            st = self.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.job = None;
+        // Replace lost workers before reporting, so the pool is back at
+        // full strength for the next dispatch.
+        let lost = std::mem::take(&mut st.lost);
+        if lost > 0 {
+            let mut handles = self.handles.lock().unwrap_or_else(PoisonError::into_inner);
+            for _ in 0..lost {
+                let idx = handles.len();
+                handles.push(spawn_worker(&self.shared, idx, st.epoch));
+                st.live += 1;
+            }
+        }
         drop(st);
         let panicked = job.panicked.load(Ordering::Relaxed);
         drop(job);
-        if panicked {
-            panic!("ThreadPool job panicked in a worker");
+        if lost > 0 {
+            Err(PoolError::WorkerLost { lost })
+        } else if panicked {
+            Err(PoolError::JobPanicked)
+        } else {
+            Ok(())
         }
     }
 }
@@ -129,14 +204,25 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state();
             st.stop = true;
             self.shared.work.notify_all();
         }
-        for h in self.handles.drain(..) {
+        let mut handles = self.handles.lock().unwrap_or_else(PoisonError::into_inner);
+        for h in handles.drain(..) {
+            // a worker that died joins as Err(payload); ignore — the
+            // exit guard already settled its bookkeeping
             let _ = h.join();
         }
     }
+}
+
+fn spawn_worker(shared: &Arc<Shared>, i: usize, seen_epoch: u64) -> JoinHandle<()> {
+    let sh = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("imagine-pool-{i}"))
+        .spawn(move || worker_loop(sh, seen_epoch))
+        .expect("spawn pool worker")
 }
 
 /// Claim-and-execute until the job's index space is exhausted.
@@ -147,17 +233,45 @@ fn run_job(job: &Job) {
             break;
         }
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.f)(i)));
-        if r.is_err() {
+        if let Err(payload) = r {
             job.panicked.store(true, Ordering::Relaxed);
+            if payload.downcast_ref::<WorkerAbort>().is_some() {
+                // deliberately uncontained (test hook): kill the worker
+                // thread and let its exit guard restore the pool
+                std::panic::resume_unwind(payload);
+            }
         }
     }
 }
 
-fn worker_loop(sh: Arc<Shared>) {
-    let mut seen = 0u64;
+fn worker_loop(sh: Arc<Shared>, init_epoch: u64) {
+    /// Thread-exit guard: if a panic escapes `run_job`'s per-index
+    /// containment, the dying thread still restores the counters the
+    /// submitter is waiting on — a lost worker must never become a
+    /// deadlocked `run()` (this was the `Drop`-deadlock bug).
+    struct ExitGuard {
+        sh: Arc<Shared>,
+    }
+    impl Drop for ExitGuard {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                let mut st = self.sh.state();
+                st.live -= 1;
+                st.lost += 1;
+                if st.running > 0 {
+                    st.running -= 1;
+                    if st.running == 0 {
+                        self.sh.done.notify_one();
+                    }
+                }
+            }
+        }
+    }
+    let _guard = ExitGuard { sh: sh.clone() };
+    let mut seen = init_epoch;
     loop {
         let job = {
-            let mut st = sh.state.lock().unwrap();
+            let mut st = sh.state();
             loop {
                 if st.stop {
                     return;
@@ -168,14 +282,16 @@ fn worker_loop(sh: Arc<Shared>) {
                         break j;
                     }
                 }
-                st = sh.work.wait(st).unwrap();
+                st = sh.work.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         };
         run_job(&job);
         // Drop our Arc before reporting done: once `running` hits 0 the
         // submitter may invalidate the borrow the job's `f` points at.
+        // (On an escaped panic, unwind drops `job` before `_guard`
+        // decrements `running` — same ordering.)
         drop(job);
-        let mut st = sh.state.lock().unwrap();
+        let mut st = sh.state();
         st.running -= 1;
         if st.running == 0 {
             sh.done.notify_one();
@@ -255,5 +371,45 @@ mod tests {
             n.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn contained_panic_is_a_typed_error() {
+        let pool = ThreadPool::new(2);
+        let r = pool.run_checked(8, &|i| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+        assert_eq!(r, Err(PoolError::JobPanicked));
+        pool.run_checked(4, &|_| {}).unwrap();
+    }
+
+    #[test]
+    fn lost_workers_are_replaced_and_drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        // Kill every pool thread that claims an index; the submitter
+        // (not named imagine-pool-*) serves the rest. Slow the
+        // submitter's indices down so workers reliably wake and claim.
+        let r = pool.run_checked(64, &|_i| {
+            let on_pool_thread = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("imagine-pool-"));
+            if on_pool_thread {
+                std::panic::panic_any(WorkerAbort);
+            }
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        });
+        assert!(matches!(r, Err(PoolError::WorkerLost { .. })), "{r:?}");
+        // replacements serve the next dispatch with full coverage
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.run_checked(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // regression: Drop used to hang on the dead workers' never-
+        // decremented `running`; must join cleanly now
+        drop(pool);
     }
 }

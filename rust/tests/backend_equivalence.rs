@@ -14,7 +14,7 @@ use imagine::backend::{
     ExecBackend, NativeBackend, ShardedBackend,
 };
 use imagine::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request, SubmitError,
+    BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request, RetryPolicy, SubmitError,
 };
 use imagine::engine::EngineConfig;
 use imagine::gemv::codegen::GemvError;
@@ -148,7 +148,7 @@ fn formerly_unshardable_wide_model_now_serves_through_col_sharded() {
     );
     let x = rng.vec_i64(n, -16, 15);
     for round in 0..2 {
-        let resp = coord.call(Request { model: "wide".into(), x: x.clone() }).unwrap();
+        let resp = coord.call(Request::new("wide", x.clone())).unwrap();
         assert_eq!(resp.y, host_gemv(&w, &x, m, n), "round {round}");
         assert_eq!(resp.backend, "col_sharded");
     }
@@ -175,9 +175,7 @@ fn aggregate_bram_overflow_is_typed_through_the_coordinator() {
         CoordinatorConfig { workers: 1, batch: BatchPolicy::none(), ..Default::default() },
         reg,
     );
-    let err = coord
-        .call(Request { model: "huge".into(), x: vec![0; n] })
-        .unwrap_err();
+    let err = coord.call(Request::new("huge", vec![0; n])).unwrap_err();
     assert!(
         matches!(
             &err,
@@ -218,7 +216,7 @@ fn cross_check_policy_agrees_and_reports_zero_mismatches() {
     );
     for _ in 0..4 {
         let x = rng.vec_i64(n, -64, 63);
-        let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+        let resp = coord.call(Request::new("g", x.clone())).unwrap();
         assert_eq!(resp.y, host_gemv(&w, &x, m, n));
     }
     let snap = coord.shutdown();
@@ -229,6 +227,8 @@ fn cross_check_policy_agrees_and_reports_zero_mismatches() {
 /// Smoke (satellite): plant a one-element fault on the cross-check
 /// reference and require the mismatch to surface in MetricsSnapshot —
 /// the end-to-end proof the oracle plumbing reports, not just runs.
+/// Retries are disabled here to pin the report-only contract
+/// (`RetryPolicy::none()` serves the mismatching result and counts it).
 #[test]
 fn cross_check_smoke_planted_mismatch_lands_in_metrics() {
     let _guard = XCHECK_ENV.lock().unwrap_or_else(|e| e.into_inner());
@@ -244,12 +244,13 @@ fn cross_check_smoke_planted_mismatch_lands_in_metrics() {
                 workers: 1,
                 batch: BatchPolicy::none(),
                 backend: BackendPolicy::CrossCheck,
+                retry: RetryPolicy::none(),
                 ..Default::default()
             },
             reg,
         );
         let x = rng.vec_i64(n, -64, 63);
-        let resp = coord.call(Request { model: "g".into(), x: x.clone() }).unwrap();
+        let resp = coord.call(Request::new("g", x.clone())).unwrap();
         // the *served* result comes from the primary backend: still correct
         assert_eq!(resp.y, host_gemv(&w, &x, m, n));
         let snap = coord.shutdown();
@@ -258,6 +259,55 @@ fn cross_check_smoke_planted_mismatch_lands_in_metrics() {
             snap.cross_check_mismatches, 1,
             "planted one-element fault must be reported: {snap:?}"
         );
+        assert_eq!(snap.retries, 0, "{snap:?}");
+    });
+    std::env::remove_var("IMAGINE_XCHECK_FAULT");
+    if let Err(p) = result {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// With retries enabled (the default policy), a mismatch that persists
+/// through the whole retry budget must escalate to a typed
+/// `BackendError::Mismatch` failure instead of serving the disputed
+/// result — and the attempts must land in `MetricsSnapshot::retries`.
+#[test]
+fn persistent_mismatch_escalates_to_typed_error_after_retries() {
+    let _guard = XCHECK_ENV.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("IMAGINE_XCHECK_FAULT", "1");
+    let result = std::panic::catch_unwind(|| {
+        let mut rng = XorShift::new(0xCC2);
+        let (m, n) = (32, 32);
+        let w = rng.vec_i64(m * n, -32, 31);
+        let reg = ModelRegistry::default();
+        reg.register_gemv("g", w, m, n).unwrap();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batch: BatchPolicy::none(),
+                backend: BackendPolicy::CrossCheck,
+                retry: RetryPolicy { max_retries: 2, backoff_us: 1 },
+                ..Default::default()
+            },
+            reg,
+        );
+        let x = rng.vec_i64(n, -64, 63);
+        let err = coord.call(Request::new("g", x)).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                SubmitError::Exec(e) if matches!(
+                    e.as_ref(),
+                    BackendError::Mismatch { elements: 1, retries: 2 }
+                )
+            ),
+            "{err:?}"
+        );
+        let snap = coord.shutdown();
+        assert_eq!(snap.retries, 2, "{snap:?}");
+        assert_eq!((snap.completed, snap.failed), (0, 1), "{snap:?}");
+        // the final attempt's mismatch is still counted before escalation
+        assert_eq!(snap.cross_check_mismatches, 1, "{snap:?}");
     });
     std::env::remove_var("IMAGINE_XCHECK_FAULT");
     if let Err(p) = result {

@@ -118,7 +118,7 @@ fn coordinator_batched_responses_carry_cycles_and_batch_size() {
     let xs: Vec<Vec<i64>> = (0..8).map(|_| rng.vec_i64(n, -64, 63)).collect();
     let rxs: Vec<_> = xs
         .iter()
-        .map(|x| coord.submit(Request { model: "g".into(), x: x.clone() }).unwrap())
+        .map(|x| coord.submit(Request::new("g", x.clone())).unwrap())
         .collect();
     let mut max_batch = 0;
     for (x, rx) in xs.iter().zip(rxs) {

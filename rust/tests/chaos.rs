@@ -1,0 +1,292 @@
+//! Chaos suite (seeded fault injection, end to end): under any
+//! `FaultPlan`, every coordinator response must be bit-identical to the
+//! fault-free host reference OR a typed error / a flagged degraded
+//! result — never silent corruption. CI runs this binary both on the
+//! default paths and under `IMAGINE_FUSE=0 IMAGINE_SKIP=0`, and again
+//! across an `IMAGINE_FAULT` seed matrix (the env-driven test below
+//! picks the spec up).
+//!
+//! Every test installs its plan via `fault::install_scoped`, which
+//! serializes the suite on the fault layer's scope lock — the injected
+//! faults are process-global, so two plans must never overlap.
+
+use imagine::backend::BackendError;
+use imagine::coordinator::{
+    BackendPolicy, BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request,
+    RetryPolicy, SubmitError,
+};
+use imagine::sim::fault::{self, DieSpec, FaultPlan, StallSpec};
+use imagine::util::XorShift;
+use std::time::Duration;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+fn coord_cfg(workers: usize, backend: BackendPolicy) -> CoordinatorConfig {
+    CoordinatorConfig { workers, batch: BatchPolicy::none(), backend, ..Default::default() }
+}
+
+/// Result bit-flips on every engine epilogue: the cross-check pair can
+/// never agree (the primary takes 1 flip per vector, the 2-slice
+/// reference takes 2 in disjoint row ranges), so with retries enabled
+/// every request must fail typed as a persistent mismatch — corruption
+/// is *always* caught, never served.
+#[test]
+fn bitflip_storm_is_always_caught_and_typed() {
+    let _guard = fault::install_scoped(FaultPlan {
+        bitflip_rate: 1.0,
+        seed: 7,
+        ..Default::default()
+    });
+    let mut rng = XorShift::new(0xC4A05);
+    let (m, n) = (32, 32);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w, m, n).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            retry: RetryPolicy { max_retries: 2, backoff_us: 1 },
+            ..coord_cfg(1, BackendPolicy::CrossCheck)
+        },
+        reg,
+    );
+    for round in 0..6 {
+        let x = rng.vec_i64(n, -64, 63);
+        let err = coord.call(Request::new("g", x)).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                SubmitError::Exec(e)
+                    if matches!(e.as_ref(), BackendError::Mismatch { retries: 2, .. })
+            ),
+            "round {round}: {err:?}"
+        );
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 0, "{snap:?}");
+    assert_eq!(snap.failed, 6, "{snap:?}");
+    assert_eq!(snap.retries, 12, "two retries per request: {snap:?}");
+    assert!(snap.cross_check_mismatches >= 6, "{snap:?}");
+    assert!(snap.faults_injected > 0, "{snap:?}");
+}
+
+/// A stalled engine (latency fault) makes the first group overshoot the
+/// second request's deadline: the coordinator sheds it with a typed
+/// `DeadlineExceeded` instead of executing a dead answer, while the
+/// deadline-free request still serves correctly through the stall.
+#[test]
+fn stalled_engine_sheds_the_deadlined_request() {
+    let guard = fault::install_scoped(FaultPlan {
+        stalls: vec![StallSpec { engine: None, us: 20_000 }],
+        seed: 1,
+        ..Default::default()
+    });
+    let mut rng = XorShift::new(0xDEAD1);
+    let (m, n) = (16, 16);
+    let w1 = rng.vec_i64(m * n, -16, 15);
+    let w2 = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("slow", w1.clone(), m, n).unwrap();
+    reg.register_gemv("urgent", w2, m, n).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            batch: BatchPolicy { max_batch: 8, window: Duration::from_millis(100) },
+            ..Default::default()
+        },
+        reg,
+    );
+    let x = rng.vec_i64(n, -64, 63);
+    // both land in one drain; "slow" executes first (first-appearance
+    // group order) and stalls >= 20ms per engine run, so "urgent"'s
+    // 5ms deadline has long passed when its group is scheduled
+    let rx1 = coord.submit(Request::new("slow", x.clone())).unwrap();
+    let rx2 = coord
+        .submit(Request::new("urgent", x.clone()).with_deadline_us(5_000))
+        .unwrap();
+    let r1 = rx1.recv().unwrap().unwrap();
+    assert_eq!(r1.y, host_gemv(&w1, &x, m, n));
+    let e2 = rx2.recv().unwrap().unwrap_err();
+    assert!(
+        matches!(e2, SubmitError::DeadlineExceeded { deadline_us: 5_000, .. }),
+        "{e2:?}"
+    );
+    assert!(guard.faults().counts().stalls >= 1);
+    let snap = coord.shutdown();
+    assert_eq!(snap.deadline_misses, 1, "{snap:?}");
+    assert_eq!(snap.completed, 1, "{snap:?}");
+    assert_eq!(snap.failed, 1, "{snap:?}");
+}
+
+/// Kill every pool member the row tier could ever map (phys 0..16):
+/// the shard pool exhausts, and the auto backend must degrade to
+/// forced-native multi-pass — correct results, `degraded` flagged,
+/// quarantine/failover counts surfaced.
+#[test]
+fn exhausted_pool_degrades_to_native_multipass() {
+    let _guard = fault::install_scoped(FaultPlan {
+        dies: (0..16).map(|member| DieSpec { member, after: 0 }).collect(),
+        seed: 3,
+        ..Default::default()
+    });
+    let mut rng = XorShift::new(0xDE6);
+    // 768 rows on the 384-lane small() engine: auto promotes to the
+    // sharded pool, whose members all die on first dispatch
+    let (m, n) = (768, 48);
+    let w = rng.vec_i64(m * n, -8, 7);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("big", w.clone(), m, n).unwrap();
+    let coord = Coordinator::start(coord_cfg(1, BackendPolicy::Auto), reg);
+    for round in 0..2 {
+        let x = rng.vec_i64(n, -64, 63);
+        let resp = coord.call(Request::new("big", x.clone())).unwrap();
+        assert_eq!(resp.y, host_gemv(&w, &x, m, n), "round {round}");
+        assert!(resp.degraded, "round {round}: degradation must be flagged");
+        assert_eq!(resp.backend, "native", "round {round}");
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 2, "{snap:?}");
+    assert_eq!(snap.failed, 0, "{snap:?}");
+    assert_eq!(snap.degraded_responses, 2, "{snap:?}");
+    assert_eq!(snap.quarantined_engines, 16, "{snap:?}");
+    assert_eq!(snap.failovers, 16, "{snap:?}");
+}
+
+/// A member death *inside* a column-pool member (its internal row
+/// scheduler's sole engine) surfaces as a typed `MemberDead` group
+/// failure; the coordinator's bounded retry lands on the quarantined
+/// members' replacements and recovers without caller involvement.
+#[test]
+fn inner_member_death_recovers_via_coordinator_retry() {
+    let _guard = fault::install_scoped(FaultPlan {
+        dies: vec![DieSpec { member: 0, after: 0 }],
+        seed: 5,
+        ..Default::default()
+    });
+    let mut rng = XorShift::new(0xC01D);
+    // one row of 10_000 8-bit elements overflows chunk capacity: auto
+    // routes to the column tier (3 slices, members = row schedulers)
+    let (m, n) = (4, 10_000);
+    let w = rng.vec_i64(m * n, -8, 7);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("wide", w.clone(), m, n).unwrap();
+    let coord = Coordinator::start(coord_cfg(1, BackendPolicy::Auto), reg);
+    let x = rng.vec_i64(n, -64, 63);
+    let resp = coord.call(Request::new("wide", x.clone())).unwrap();
+    assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+    assert_eq!(resp.backend, "col_sharded");
+    assert!(!resp.degraded);
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 1, "{snap:?}");
+    assert_eq!(snap.failed, 0, "{snap:?}");
+    assert!(snap.retries >= 1, "recovery must have used the retry budget: {snap:?}");
+    assert!(snap.failovers >= 1, "{snap:?}");
+    assert!(snap.quarantined_engines >= 1, "{snap:?}");
+}
+
+/// Scheduled worker death (`panic:group=0`): the panic is deliberately
+/// NOT contained — the reply channel drops and `call` surfaces the
+/// typed `WorkerLost`, and the coordinator object itself stays safe to
+/// use and shut down (later submits fail typed, nothing hangs).
+#[test]
+fn scheduled_worker_panic_surfaces_as_worker_lost() {
+    let guard = fault::install_scoped(FaultPlan {
+        panics: vec![0],
+        seed: 11,
+        ..Default::default()
+    });
+    let mut rng = XorShift::new(0x10C7);
+    let (m, n) = (8, 8);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w, m, n).unwrap();
+    let coord = Coordinator::start(coord_cfg(1, BackendPolicy::Auto), reg);
+    let err = coord.call(Request::new("g", vec![1; n])).unwrap_err();
+    assert!(matches!(err, SubmitError::WorkerLost), "{err:?}");
+    assert_eq!(guard.faults().counts().panics, 1);
+    // the sole worker is gone: later submits fail typed, never hang
+    let err = coord.call(Request::new("g", vec![1; n])).unwrap_err();
+    assert!(
+        matches!(err, SubmitError::Closed | SubmitError::WorkerLost),
+        "{err:?}"
+    );
+    coord.shutdown();
+}
+
+/// A null plan installed (the disabled-hooks configuration, made
+/// explicit): zero faults fire, results are exact, and the fault
+/// counters stay at zero end to end.
+#[test]
+fn null_fault_plan_is_invisible() {
+    let guard = fault::install_scoped(FaultPlan::default());
+    let mut rng = XorShift::new(0x0FF);
+    let (m, n) = (24, 24);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w.clone(), m, n).unwrap();
+    let coord = Coordinator::start(coord_cfg(1, BackendPolicy::CrossCheck), reg);
+    for _ in 0..4 {
+        let x = rng.vec_i64(n, -64, 63);
+        let resp = coord.call(Request::new("g", x.clone())).unwrap();
+        assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+        assert!(!resp.degraded);
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 4, "{snap:?}");
+    assert_eq!(snap.cross_check_mismatches, 0, "{snap:?}");
+    assert_eq!(snap.retries, 0, "{snap:?}");
+    assert_eq!(snap.faults_injected, 0, "{snap:?}");
+    assert_eq!(guard.faults().counts().injected, 0);
+}
+
+/// The seed-matrix property test: take the spec from `IMAGINE_FAULT`
+/// (CI's chaos matrix) — or a representative mixed spec when unset —
+/// and require that NO outcome is silent corruption: every successful
+/// response matches the fault-free host reference exactly, and every
+/// failure is a typed `SubmitError`.
+#[test]
+fn env_spec_sweep_never_serves_silent_corruption() {
+    let plan = match std::env::var("IMAGINE_FAULT") {
+        Ok(spec) => FaultPlan::parse(&spec).expect("CI matrix spec must parse"),
+        Err(_) => FaultPlan {
+            bitflip_rate: 0.05,
+            dies: vec![DieSpec { member: 1, after: 2 }],
+            stalls: vec![StallSpec { engine: Some(0), us: 100 }],
+            seed: 42,
+            ..Default::default()
+        },
+    };
+    let _guard = fault::install_scoped(plan);
+    let mut rng = XorShift::new(0x5EED);
+    let (m, n) = (32, 32);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("g", w.clone(), m, n).unwrap();
+    // cross_check + bounded retry is the fault-tolerant serving
+    // configuration: flips are caught by the reference diff, dead
+    // members by quarantine + retry
+    let coord = Coordinator::start(coord_cfg(1, BackendPolicy::CrossCheck), reg);
+    let mut served = 0u64;
+    for round in 0..24 {
+        let x = rng.vec_i64(n, -64, 63);
+        match coord.call(Request::new("g", x.clone())) {
+            Ok(resp) => {
+                // degraded or not, a served result must be exact
+                assert_eq!(
+                    resp.y,
+                    host_gemv(&w, &x, m, n),
+                    "round {round}: silent corruption served"
+                );
+                served += 1;
+            }
+            // every failure is typed — reaching here at all proves it
+            Err(SubmitError::WorkerLost) | Err(SubmitError::Closed) => break,
+            Err(_) => {}
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, served, "{snap:?}");
+}

@@ -102,10 +102,10 @@ fn coordinator_survives_bad_requests_mixed_with_good() {
     reg.register_gemv("g", vec![1; 16], 4, 4).unwrap();
     let coord = Coordinator::start(CoordinatorConfig::default(), reg);
     // bad: unknown model / wrong dims — rejected synchronously
-    assert!(coord.submit(Request { model: "nope".into(), x: vec![1; 4] }).is_err());
-    assert!(coord.submit(Request { model: "g".into(), x: vec![1; 3] }).is_err());
+    assert!(coord.submit(Request::new("nope", vec![1; 4])).is_err());
+    assert!(coord.submit(Request::new("g", vec![1; 3])).is_err());
     // good requests still served afterwards
-    let r = coord.call(Request { model: "g".into(), x: vec![1; 4] }).unwrap();
+    let r = coord.call(Request::new("g", vec![1; 4])).unwrap();
     assert_eq!(r.y, vec![4; 4]);
     let m = coord.shutdown();
     assert_eq!(m.completed, 1);

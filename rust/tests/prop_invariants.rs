@@ -150,7 +150,7 @@ fn prop_coordinator_preserves_request_response_mapping() {
         let x = rng.vec_i64(8, -64, 63);
         let (model, m, w) = if i % 2 == 0 { ("a", 8, &w1) } else { ("b", 4, &w2) };
         expected.push(host(w, &x, m));
-        rxs.push(coord.submit(Request { model: model.into(), x }).unwrap());
+        rxs.push(coord.submit(Request::new(model, x)).unwrap());
     }
     for (want, rx) in expected.into_iter().zip(rxs) {
         let resp = rx.recv().unwrap().unwrap();

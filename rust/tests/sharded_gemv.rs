@@ -143,7 +143,7 @@ fn coordinator_promotes_oversized_gemv_to_sharded_pool() {
         } else {
             want.push(None);
         }
-        rxs.push(coord.submit(Request { model: model.into(), x }).unwrap());
+        rxs.push(coord.submit(Request::new(model, x)).unwrap());
     }
     for (rx, want) in rxs.into_iter().zip(want) {
         let resp = rx.recv().unwrap().unwrap();
