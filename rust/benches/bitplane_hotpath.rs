@@ -7,6 +7,7 @@
 //! Run: `cargo bench --bench bitplane_hotpath`
 //! (`BENCH_SMOKE=1` for the reduced CI run.)
 
+use imagine::analysis::{codegen_corpus, verify, VerifyCtx};
 use imagine::engine::{Engine, EngineConfig};
 use imagine::isa::encode::params;
 use imagine::isa::{Instr, Program};
@@ -205,6 +206,28 @@ fn main() {
         mf.per_iter_us()
     );
 
+    // -- static verifier over the codegen corpus ----------------------
+    // What registration-time verification costs per program (ISSUE 7):
+    // one full abstract-interpretation pass, reported as us/program and
+    // programs/s (the latter rides the bench gate's *reqps rule).
+    println!("\n== static ISA verifier (codegen corpus) ==");
+    let corpus = codegen_corpus();
+    let programs: usize = corpus.iter().map(|e| e.gemv.chunk_programs.len() + 1).sum();
+    let mv = bench(&format!("verify {programs} corpus programs"), warm, iters, || {
+        let mut accepted = 0usize;
+        for entry in &corpus {
+            let ctx = VerifyCtx::for_plan(&entry.gemv.plan);
+            for p in entry.gemv.chunk_programs.iter().chain([&entry.gemv.reduce_program]) {
+                accepted += verify(p, &ctx).accepts() as usize;
+            }
+        }
+        black_box(accepted)
+    });
+    println!("{}", mv.report());
+    let verify_program_us = mv.per_iter_us() / programs as f64;
+    let verify_reqps = 1e6 / verify_program_us;
+    println!("verifier: {verify_program_us:.3} us/program ({verify_reqps:.0} programs/s)");
+
     // anchor at the workspace root regardless of the bench's cwd
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let mut sink = BenchSink::load(path);
@@ -225,6 +248,8 @@ fn main() {
             ("sparse_noskip_us", Json::num(mno.per_iter_us())),
             ("sparse_skip_us", Json::num(myes.per_iter_us())),
             ("sparse_skip_speedup", Json::num(sparse_speedup)),
+            ("verify_program_us", Json::num(verify_program_us)),
+            ("verify_reqps", Json::num(verify_reqps)),
             ("smoke", Json::Bool(smoke())),
         ]),
     );

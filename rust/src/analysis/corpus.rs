@@ -1,0 +1,78 @@
+//! The built-in codegen corpus: a fixed, labeled set of mapping plans
+//! spanning the planner's regimes (precisions, radices, chunked k,
+//! multi-pass rows, fold replication), each generated into a full
+//! [`GemvProgram`]. `imagine lint --corpus`, the CI lint job, the
+//! soundness property tests and the verifier bench all walk this set,
+//! so "every codegen program verifies clean" is checked against one
+//! shared definition of "every".
+
+use crate::engine::EngineConfig;
+use crate::gemv::{plan, GemvProgram};
+
+/// One corpus entry: a named plan and its generated programs.
+pub struct CorpusEntry {
+    pub name: &'static str,
+    pub gemv: GemvProgram,
+}
+
+/// Build the corpus on the `small()` config (2x2 tiles: 384 PE rows,
+/// 4 block columns — small enough that plans exercise chunking and
+/// row passes at modest sizes).
+pub fn codegen_corpus() -> Vec<CorpusEntry> {
+    let cfg = EngineConfig::small();
+    // (name, m, n, precision, radix)
+    let cases: [(&'static str, usize, usize, usize, u8); 10] = [
+        ("tiny_p2", 8, 8, 2, 2),
+        ("p4_radix2", 16, 24, 4, 2),
+        ("p8_radix2", 40, 64, 8, 2),
+        ("p8_booth", 40, 64, 8, 4),
+        ("p8_chunked", 32, 512, 8, 2),
+        ("p12_booth", 64, 96, 12, 4),
+        ("p16_wide", 96, 32, 16, 2),
+        ("p8_row_passes", 800, 16, 8, 2),
+        ("p4_odd_shape", 33, 57, 4, 2),
+        ("p8_fold_heavy", 5, 64, 8, 2),
+    ];
+    cases
+        .into_iter()
+        .map(|(name, m, n, p, radix)| CorpusEntry {
+            name,
+            gemv: GemvProgram::generate(plan(&cfg, m, n, p, radix)),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance bar: zero diagnostics — not merely zero errors —
+    /// on every program of every corpus entry.
+    #[test]
+    fn corpus_verifies_clean() {
+        let corpus = codegen_corpus();
+        assert!(corpus.len() >= 10);
+        for entry in &corpus {
+            for (label, report) in entry.gemv.verify_reports() {
+                assert!(
+                    report.is_clean(),
+                    "corpus `{}` program `{label}` not clean:\n{report}",
+                    entry.name
+                );
+                assert!(report.cost.cycles > 0, "{}/{label}: empty cost", entry.name);
+            }
+        }
+    }
+
+    /// The corpus spans the planner's regimes (guards against the
+    /// corpus rotting into one easy case).
+    #[test]
+    fn corpus_spans_planner_regimes() {
+        let corpus = codegen_corpus();
+        assert!(corpus.iter().any(|e| e.gemv.plan.radix == 4));
+        assert!(corpus.iter().any(|e| e.gemv.plan.chunk_passes > 1));
+        assert!(corpus.iter().any(|e| e.gemv.plan.row_passes > 1));
+        assert!(corpus.iter().any(|e| e.gemv.plan.fold_factor > 1));
+        assert!(corpus.iter().any(|e| e.gemv.plan.precision == 16));
+    }
+}

@@ -1,0 +1,26 @@
+//! Static verification of ISA programs (the `imagine lint` engine).
+//!
+//! The overlay's compile-once/execute-many split means a program's
+//! safety invariants — FIFO depth, register windows, SELBLK bounds,
+//! spill pointers, operand aliasing — are all decidable before the
+//! first cycle runs. [`verify`] runs one abstract-interpretation pass
+//! over a sealed [`crate::isa::Program`] and returns a typed
+//! [`ProgramReport`]: error-severity diagnostics are *sound* (the
+//! program is guaranteed to fault at runtime; an accepted program is
+//! guaranteed to execute without `EngineError`), lints are advisory,
+//! and the cost summary reproduces the controller's exact cycle
+//! schedule per kernel segment.
+//!
+//! Consumers: `CompiledKernel::lower` (rejects statically-faulting
+//! programs before fusing), `ModelRegistry::register*` (rejects at
+//! registration time), `gemv/codegen.rs` (debug-asserted self-check),
+//! the `imagine lint` CLI, and the verifier bench rows in
+//! `BENCH_engine.json`. See docs/ANALYSIS.md.
+
+pub mod corpus;
+pub mod report;
+pub mod verifier;
+
+pub use corpus::{codegen_corpus, CorpusEntry};
+pub use report::{CostSummary, DiagKind, Diagnostic, ProgramReport, SegmentCost, Severity};
+pub use verifier::{verify, VerifyCtx};

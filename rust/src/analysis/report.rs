@@ -1,0 +1,230 @@
+//! Typed output of the static verifier ([`super::verify`]).
+//!
+//! A [`ProgramReport`] separates *errors* (the program is statically
+//! guaranteed to fault inside `Engine::execute` — see the soundness
+//! contract in docs/ANALYSIS.md) from *lints* (legal but suspicious:
+//! wrapped accumulators, dead writes, guaranteed-zero products), and
+//! carries the static cost summary the lowering/scheduling layers use.
+//! Everything derives `PartialEq + Eq` so the report can ride inside
+//! `RegistryError` (which is `Eq`) and be asserted on in tests.
+
+use std::fmt;
+
+/// Diagnostic severity. `Error` means "will fault at runtime under the
+/// verification context"; `Lint` means "executes, but is almost
+/// certainly not what the author meant".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Lint,
+}
+
+/// What a diagnostic is about. The severity is a function of the kind
+/// (one kind never straddles both classes), which keeps the
+/// verifier-vs-runtime soundness sweep assertable per kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagKind {
+    /// Stream does not end in HALT — `Engine::execute` refuses it
+    /// up front (`EngineError::NotHalted`).
+    NotSealed,
+    /// Instruction after a HALT has issued — the controller faults
+    /// with `AfterHalt` before the instruction reaches the PEs.
+    PostHalt,
+    /// SETP the Op-Params module rejects (bad index/range).
+    BadSetp,
+    /// SELBLK column index out of the array.
+    BadColumn,
+    /// Register number outside 0..32 (in-memory fields are unmasked).
+    BadReg,
+    /// Register window runs past the 1024-bit column.
+    WindowOverflow,
+    /// RSHIFT pops a shift FIFO that is statically known to be empty.
+    FifoUnderflow,
+    /// MULT/MAC spill pointer stages planes past the register column.
+    SpillOverflow,
+    /// MULT/MAC accumulator window aliases an operand window.
+    OperandAlias,
+    /// A known value bound reaches the accumulator sign bit — the
+    /// result may wrap (runtime wraps silently; lint, not error).
+    AccOverflow,
+    /// Reads a register no instruction (or assumed host staging) wrote.
+    UnwrittenRead,
+    /// LDI/WRITE result is fully overwritten before any read.
+    DeadWrite,
+    /// MULT/MAC with a known-zero operand: all-zero result planes.
+    ZeroResult,
+    /// FOLD group does not fit the column — an arithmetic no-op.
+    FoldNoop,
+    /// The verifier accepted but lowering could not proceed — a bug in
+    /// the verifier/lowering pair itself, never expected in the field.
+    Internal,
+}
+
+impl DiagKind {
+    pub fn severity(self) -> Severity {
+        match self {
+            DiagKind::AccOverflow
+            | DiagKind::UnwrittenRead
+            | DiagKind::DeadWrite
+            | DiagKind::ZeroResult
+            | DiagKind::FoldNoop => Severity::Lint,
+            _ => Severity::Error,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            DiagKind::NotSealed => "not-sealed",
+            DiagKind::PostHalt => "post-halt",
+            DiagKind::BadSetp => "bad-setp",
+            DiagKind::BadColumn => "bad-column",
+            DiagKind::BadReg => "bad-reg",
+            DiagKind::WindowOverflow => "window-overflow",
+            DiagKind::FifoUnderflow => "fifo-underflow",
+            DiagKind::SpillOverflow => "spill-overflow",
+            DiagKind::OperandAlias => "operand-alias",
+            DiagKind::AccOverflow => "acc-overflow",
+            DiagKind::UnwrittenRead => "unwritten-read",
+            DiagKind::DeadWrite => "dead-write",
+            DiagKind::ZeroResult => "zero-result",
+            DiagKind::FoldNoop => "fold-noop",
+            DiagKind::Internal => "internal",
+        }
+    }
+}
+
+/// One finding, anchored to an instruction index (`None` = whole
+/// program, e.g. a missing HALT).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    pub index: Option<usize>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(kind: DiagKind, index: impl Into<Option<usize>>, message: impl Into<String>) -> Self {
+        Diagnostic { kind, index: index.into(), message: message.into() }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.kind.severity()
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity() {
+            Severity::Error => "error",
+            Severity::Lint => "lint",
+        };
+        match self.index {
+            Some(i) => write!(f, "{sev}[{}] @{i}: {}", self.kind.name(), self.message),
+            None => write!(f, "{sev}[{}]: {}", self.kind.name(), self.message),
+        }
+    }
+}
+
+/// Static cost of one kernel segment: a maximal run of instructions
+/// between the barrier ops (READ / RSHIFT / ACCUM / FOLD — the same
+/// split `CompiledKernel::lower` uses), with each barrier instruction
+/// its own single-instruction segment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentCost {
+    /// Instruction range `[start, end)` of the segment.
+    pub start: usize,
+    pub end: usize,
+    /// Controller cycles the segment occupies (no fill latency).
+    pub cycles: u64,
+    /// Plane-word work estimate: `cycles x words-per-column x columns`.
+    pub plane_word_ops: u64,
+}
+
+/// Whole-program static cost summary. Mirrors the engine's timing
+/// model exactly (same `Controller` cost tables), so for a clean
+/// program `cycles` equals `ExecStats::cycles` of a run from the same
+/// entry state. `plane_word_ops` mirrors `estimate_plane_ops` but
+/// excludes host staging traffic, which is not visible statically.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CostSummary {
+    pub fill_latency: u64,
+    /// Total cycles including fill latency.
+    pub cycles: u64,
+    pub plane_word_ops: u64,
+    pub segments: Vec<SegmentCost>,
+}
+
+impl CostSummary {
+    pub fn busy_cycles(&self) -> u64 {
+        self.cycles.saturating_sub(self.fill_latency)
+    }
+}
+
+/// The verifier's verdict over one sealed program.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ProgramReport {
+    /// Statically-guaranteed runtime faults, in program order. The
+    /// scan stops at the first error (everything after it is
+    /// unreachable at runtime), so there is at most one today.
+    pub errors: Vec<Diagnostic>,
+    /// Suspicious-but-legal findings.
+    pub lints: Vec<Diagnostic>,
+    /// Entry shift-FIFO depth the program needs before its first READ
+    /// refills the FIFO (0 when it never pops an inherited FIFO). The
+    /// fused replay path is gated on this instead of re-simulating.
+    pub min_entry_fifo: usize,
+    /// Static cost summary (partial if the scan stopped at an error).
+    pub cost: CostSummary,
+}
+
+impl ProgramReport {
+    /// No errors: the program is statically guaranteed to execute
+    /// without `EngineError` from the verification context.
+    pub fn accepts(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    /// No diagnostics at all — the bar codegen output is held to.
+    pub fn is_clean(&self) -> bool {
+        self.errors.is_empty() && self.lints.is_empty()
+    }
+
+    /// All findings, errors first.
+    pub fn diagnostics(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.errors.iter().chain(self.lints.iter())
+    }
+
+    pub(crate) fn push(&mut self, d: Diagnostic) {
+        match d.severity() {
+            Severity::Error => self.errors.push(d),
+            Severity::Lint => self.lints.push(d),
+        }
+    }
+}
+
+impl fmt::Display for ProgramReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.accepts() {
+            writeln!(f, "verdict: accepted ({} lint(s))", self.lints.len())?;
+        } else {
+            writeln!(
+                f,
+                "verdict: rejected ({} error(s), {} lint(s))",
+                self.errors.len(),
+                self.lints.len()
+            )?;
+        }
+        for d in self.diagnostics() {
+            writeln!(f, "  {d}")?;
+        }
+        writeln!(
+            f,
+            "  cost: {} cycles (fill {}), ~{} plane-word ops, {} segment(s), needs entry FIFO >= {}",
+            self.cost.cycles,
+            self.cost.fill_latency,
+            self.cost.plane_word_ops,
+            self.cost.segments.len(),
+            self.min_entry_fifo
+        )
+    }
+}

@@ -1,0 +1,624 @@
+//! Abstract interpretation over a sealed ISA [`Program`].
+//!
+//! One forward pass mirrors the engine's exact issue-then-apply order
+//! — reusing the *real* [`Controller`] for issue faults and cycle
+//! costs and the *real* [`RegFile::resolve`] for window checks, so the
+//! error half of the report is sound by construction: an error-severity
+//! diagnostic means `Engine::execute` faults (typed `EngineError`) at
+//! that instruction from the same entry state, and an accepted program
+//! executes to completion. Lints ride on three abstract domains that
+//! are deliberately one-sided (absence of a lint proves nothing):
+//!
+//! * **FIFO depth** — `Option<usize>`: symbolic until the entry depth
+//!   is known or the first READ refills it to `lanes`; pre-READ pops
+//!   of a symbolic FIFO accumulate into `min_entry_fifo`.
+//! * **Written set** — which logical registers the program itself has
+//!   written (host DMA staging is assumed by default: `assume_staged`).
+//! * **Value bounds** — per-register magnitude bound (`|v| <= b` over
+//!   every lane/column) with saturation to Top; drives the
+//!   accumulator-overflow and guaranteed-zero lints.
+//!
+//! See docs/ANALYSIS.md for the full soundness contract and lint
+//! catalog.
+
+use crate::engine::config::EngineConfig;
+use crate::engine::SEL_ALL;
+use crate::gemv::mapper::{MappingPlan, SPILL_FIRST_REG};
+use crate::isa::{Instr, Opcode, Program, NUM_REGS};
+use crate::pim::regfile::RegError;
+use crate::pim::{RegFile, REGFILE_BITS, REG_BITS};
+use crate::tile::controller::{Controller, ControllerError, PipelineStages};
+use crate::tile::params::OpParams;
+
+use super::report::{CostSummary, DiagKind, Diagnostic, ProgramReport, SegmentCost};
+
+/// Entry state + array geometry a program is verified against. A
+/// report is only meaningful relative to its context: the same stream
+/// can be clean on a 64-column array and fault on a 4-column one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyCtx {
+    /// Block columns of the array (SELBLK bound).
+    pub ncols: usize,
+    /// PE rows per column (READ refills the shift FIFO to this depth).
+    pub lanes: usize,
+    /// Pipeline-fill cycles charged once per run.
+    pub fill_latency: u64,
+    /// Op-Params at entry (they persist across programs).
+    pub entry_params: OpParams,
+    /// Column selection at entry.
+    pub entry_sel: Option<usize>,
+    /// Shift-FIFO depth at entry; `None` = unknown (the report's
+    /// `min_entry_fifo` then tells the caller what the program needs).
+    pub entry_fifo: Option<usize>,
+    /// Assume the host staged operand registers by DMA before the run
+    /// (true for every codegen program), silencing `UnwrittenRead`.
+    pub assume_staged: bool,
+}
+
+impl VerifyCtx {
+    /// Context of a freshly built engine: default params, all columns
+    /// selected, FIFO holding `pe_rows` zeros.
+    pub fn for_engine(config: &EngineConfig) -> Self {
+        VerifyCtx {
+            ncols: config.block_cols(),
+            lanes: config.pe_rows(),
+            fill_latency: config.fill_latency(),
+            entry_params: OpParams::default(),
+            entry_sel: None,
+            entry_fifo: Some(config.pe_rows()),
+            assume_staged: true,
+        }
+    }
+
+    /// Context for verifying codegen output against its mapping plan
+    /// (engine-agnostic: the lane count is the plan's folded lane span
+    /// — replicas sit `replica_spacing()` lanes apart, so the last
+    /// replica's rows end at `spacing * fold_factor`, which every FOLD
+    /// group of the reduce program stays strictly below — and the
+    /// entry FIFO stays symbolic).
+    pub fn for_plan(plan: &MappingPlan) -> Self {
+        VerifyCtx {
+            ncols: plan.cols_used.max(1),
+            lanes: (plan.replica_spacing() * plan.fold_factor).max(1),
+            fill_latency: 0,
+            entry_params: OpParams::default(),
+            entry_sel: None,
+            entry_fifo: None,
+            assume_staged: true,
+        }
+    }
+
+    /// Same context with a known entry-FIFO depth.
+    pub fn with_entry_fifo(mut self, depth: Option<usize>) -> Self {
+        self.entry_fifo = depth;
+        self
+    }
+}
+
+/// Per-register magnitude bound: `Bound(b)` proves `|v| <= b` in every
+/// lane of every column; `Top` is "anything" (host-staged or merged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Abs {
+    Bound(u128),
+    Top,
+}
+
+struct State {
+    ctrl: Controller,
+    sel: Option<usize>,
+    fifo: Option<usize>,
+    seen_read: bool,
+    pre_read_pops: usize,
+    staged: Option<i64>,
+    written: [bool; NUM_REGS],
+    val: [Abs; NUM_REGS],
+}
+
+impl State {
+    fn new(ctx: &VerifyCtx) -> Self {
+        let mut ctrl = Controller::new(PipelineStages::NONE);
+        ctrl.params = ctx.entry_params;
+        State {
+            ctrl,
+            sel: ctx.entry_sel,
+            fifo: ctx.entry_fifo,
+            seen_read: false,
+            pre_read_pops: 0,
+            staged: None,
+            written: [false; NUM_REGS],
+            val: [Abs::Top; NUM_REGS],
+        }
+    }
+
+    /// Registers spanned by the window `[r*32, r*32 + width)`.
+    fn span(r: u8, width: usize) -> std::ops::Range<usize> {
+        let lo = r as usize;
+        let hi = (r as usize * REG_BITS + width).div_ceil(REG_BITS);
+        lo..hi.min(NUM_REGS)
+    }
+
+    /// Value read through a `width`-bit window based at `r`: the
+    /// stored bound, capped at what the window can represent. Top
+    /// stays Top — a cap on an unknown value carries no lint signal.
+    fn read_bound(&self, r: u8, width: usize) -> Abs {
+        match self.val[r as usize] {
+            Abs::Bound(b) => Abs::Bound(b.min(window_cap(width))),
+            Abs::Top => Abs::Top,
+        }
+    }
+
+    /// Record a write of `width` bits at `r`. Under partial column
+    /// selection the unselected columns keep their old values, so the
+    /// merged per-register bound degrades to Top.
+    fn write(&mut self, r: u8, width: usize, v: Abs) {
+        let v = if self.sel.is_some() { Abs::Top } else { v };
+        for reg in Self::span(r, width) {
+            self.written[reg] = true;
+            self.val[reg] = if reg == r as usize { v } else { Abs::Top };
+        }
+    }
+
+    /// Registers in the window the program never wrote.
+    fn unwritten_in(&self, r: u8, width: usize) -> Vec<usize> {
+        Self::span(r, width).filter(|&reg| !self.written[reg]).collect()
+    }
+}
+
+/// Largest magnitude representable through a `width`-bit two's
+/// complement window.
+fn window_cap(width: usize) -> u128 {
+    if width >= 128 {
+        u128::MAX
+    } else {
+        1u128 << (width.saturating_sub(1))
+    }
+}
+
+fn sign_extend10(imm: u16) -> i64 {
+    ((imm as i64) << 54) >> 54
+}
+
+/// Whether two plane windows `(base, width)` overlap — the exact
+/// condition `alu::assert_disjoint` panics on.
+fn windows_alias(a: (usize, usize), b: (usize, usize)) -> bool {
+    !(a.0 + a.1 <= b.0 || b.0 + b.1 <= a.0)
+}
+
+fn resolve_diag(r: u8, width: usize, idx: usize) -> Result<(), Diagnostic> {
+    match RegFile::resolve(r, width) {
+        Ok(_) => Ok(()),
+        Err(e @ RegError::BadReg(_)) => {
+            Err(Diagnostic::new(DiagKind::BadReg, idx, e.to_string()))
+        }
+        Err(e @ RegError::Overflow { .. }) => {
+            Err(Diagnostic::new(DiagKind::WindowOverflow, idx, e.to_string()))
+        }
+    }
+}
+
+/// Run the verifier over one program. Always returns a report; check
+/// [`ProgramReport::accepts`] / [`ProgramReport::is_clean`].
+pub fn verify(prog: &Program, ctx: &VerifyCtx) -> ProgramReport {
+    let mut report = ProgramReport {
+        cost: CostSummary { fill_latency: ctx.fill_latency, cycles: ctx.fill_latency, ..Default::default() },
+        ..Default::default()
+    };
+    if !prog.is_halted() {
+        report.push(Diagnostic::new(
+            DiagKind::NotSealed,
+            None,
+            "instruction stream does not end in HALT (engine refuses with NotHalted)",
+        ));
+        return report;
+    }
+
+    let words_per_col = ctx.lanes.div_ceil(64) as u64;
+    let ops_per_cycle = words_per_col * ctx.ncols as u64;
+    let mut seg_start = 0usize;
+    let mut seg_cycles = 0u64;
+    let mut flush_segment = |report: &mut ProgramReport, start: &mut usize, cycles: &mut u64, end: usize| {
+        if end > *start && *cycles > 0 {
+            report.cost.segments.push(SegmentCost {
+                start: *start,
+                end,
+                cycles: *cycles,
+                plane_word_ops: *cycles * ops_per_cycle,
+            });
+        }
+        *start = end;
+        *cycles = 0;
+    };
+
+    let mut st = State::new(ctx);
+    // Per-instruction issue params, for the dead-write post-pass.
+    let mut params_at: Vec<OpParams> = Vec::with_capacity(prog.len());
+    let mut clean_prefix = prog.len();
+
+    'scan: for (idx, instr) in prog.instrs.iter().enumerate() {
+        // --- issue (the real controller: AfterHalt, SETP validation,
+        //     exact cycle cost) ---
+        let cost = match st.ctrl.issue(instr) {
+            Ok(c) => c,
+            Err(ControllerError::AfterHalt(_)) => {
+                report.push(Diagnostic::new(
+                    DiagKind::PostHalt,
+                    idx,
+                    format!("`{instr}` can never issue: the stream already executed HALT"),
+                ));
+                clean_prefix = idx;
+                break 'scan;
+            }
+            Err(ControllerError::Param(e)) => {
+                report.push(Diagnostic::new(DiagKind::BadSetp, idx, format!("SETP rejected: {e}")));
+                clean_prefix = idx;
+                break 'scan;
+            }
+        };
+        params_at.push(st.ctrl.params);
+        report.cost.cycles += cost;
+
+        // Segment accounting: barriers close the running segment and
+        // stand alone, mirroring `CompiledKernel::lower`.
+        let barrier =
+            matches!(instr.op, Opcode::Read | Opcode::Rshift | Opcode::Accum | Opcode::Fold);
+        if barrier {
+            flush_segment(&mut report, &mut seg_start, &mut seg_cycles, idx);
+            report.cost.segments.push(SegmentCost {
+                start: idx,
+                end: idx + 1,
+                cycles: cost,
+                plane_word_ops: cost * ops_per_cycle,
+            });
+            seg_start = idx + 1;
+        } else {
+            seg_cycles += cost;
+        }
+
+        let p = st.ctrl.params.precision;
+        let aw = st.ctrl.params.acc_width;
+
+        // --- apply (mirrors `Engine::apply` fault order) ---
+        match instr.op {
+            Opcode::Nop | Opcode::Sync | Opcode::Halt | Opcode::Setp => {}
+
+            Opcode::Selblk => {
+                if instr.imm == SEL_ALL {
+                    st.sel = None;
+                } else if (instr.imm as usize) < ctx.ncols {
+                    st.sel = Some(instr.imm as usize);
+                } else {
+                    report.push(Diagnostic::new(
+                        DiagKind::BadColumn,
+                        idx,
+                        format!("SELBLK {} out of {} block columns", instr.imm, ctx.ncols),
+                    ));
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+            }
+
+            Opcode::Ldi => {
+                if let Err(d) = resolve_diag(instr.rd, REG_BITS, idx) {
+                    report.push(d);
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                let v = sign_extend10(instr.imm);
+                st.staged = Some(v);
+                st.write(instr.rd, REG_BITS, Abs::Bound(v.unsigned_abs() as u128));
+            }
+
+            Opcode::Write => {
+                if let Err(d) = resolve_diag(instr.rd, REG_BITS, idx) {
+                    report.push(d);
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                let v = match st.staged {
+                    Some(v) => Abs::Bound(v.unsigned_abs() as u128),
+                    None => Abs::Top, // entry staging register: host-owned
+                };
+                st.write(instr.rd, REG_BITS, v);
+            }
+
+            Opcode::Read => {
+                if let Err(d) = resolve_diag(instr.rs1, aw, idx) {
+                    report.push(d);
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rs1, aw)]);
+                st.fifo = Some(ctx.lanes);
+                st.seen_read = true;
+            }
+
+            Opcode::Rshift => {
+                if !st.seen_read {
+                    st.pre_read_pops += 1;
+                    report.min_entry_fifo = report.min_entry_fifo.max(st.pre_read_pops);
+                }
+                match st.fifo {
+                    Some(0) => {
+                        report.push(Diagnostic::new(
+                            DiagKind::FifoUnderflow,
+                            idx,
+                            format!(
+                                "RSHIFT pops an empty shift FIFO (drained after {} pop(s))",
+                                if st.seen_read { ctx.lanes } else { ctx.entry_fifo.unwrap_or(0) }
+                            ),
+                        ));
+                        clean_prefix = idx;
+                        break 'scan;
+                    }
+                    Some(d) => st.fifo = Some(d - 1),
+                    None => {}
+                }
+            }
+
+            Opcode::Mov => {
+                for (r, w) in [(instr.rd, aw), (instr.rs1, aw)] {
+                    if let Err(d) = resolve_diag(r, w, idx) {
+                        report.push(d);
+                        clean_prefix = idx;
+                        break 'scan;
+                    }
+                }
+                lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rs1, aw)]);
+                let v = st.read_bound(instr.rs1, aw);
+                st.write(instr.rd, aw, v);
+            }
+
+            Opcode::Add | Opcode::Sub => {
+                for r in [instr.rd, instr.rs1, instr.rs2] {
+                    if let Err(d) = resolve_diag(r, aw, idx) {
+                        report.push(d);
+                        clean_prefix = idx;
+                        break 'scan;
+                    }
+                }
+                lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rs1, aw), (instr.rs2, aw)]);
+                let v = match (st.read_bound(instr.rs1, aw), st.read_bound(instr.rs2, aw)) {
+                    (Abs::Bound(a), Abs::Bound(b)) => Abs::Bound(a.saturating_add(b)),
+                    _ => Abs::Top,
+                };
+                write_acc(&mut report, &mut st, idx, instr.rd, aw, v);
+            }
+
+            Opcode::Mult | Opcode::Mac => {
+                if let Err(d) = resolve_diag(instr.rd, aw, idx) {
+                    report.push(d);
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                for r in [instr.rs1, instr.rs2] {
+                    if let Err(d) = resolve_diag(r, p, idx) {
+                        report.push(d);
+                        clean_prefix = idx;
+                        break 'scan;
+                    }
+                }
+                // Spill staging runs before the ALU touches anything:
+                // pair `imm-1` stages plane windows `2e` and `2e+1`.
+                let spill = instr.imm.checked_sub(1).map(|e| e as usize);
+                if let Some(e) = spill {
+                    let end = SPILL_FIRST_REG as usize * REG_BITS + (2 * e + 2) * p;
+                    if end > REGFILE_BITS {
+                        report.push(Diagnostic::new(
+                            DiagKind::SpillOverflow,
+                            idx,
+                            format!(
+                                "spill pair {e} at precision {p} stages planes up to {end} \
+                                 past the {REGFILE_BITS}-bit register column"
+                            ),
+                        ));
+                        clean_prefix = idx;
+                        break 'scan;
+                    }
+                    // Spill staging overwrites both operand windows
+                    // with host-staged data.
+                    st.write(instr.rs1, p, Abs::Top);
+                    st.write(instr.rs2, p, Abs::Top);
+                }
+                let d = (instr.rd as usize * REG_BITS, aw);
+                let a = (instr.rs1 as usize * REG_BITS, p);
+                let b = (instr.rs2 as usize * REG_BITS, p);
+                if windows_alias(d, a) || windows_alias(d, b) {
+                    report.push(Diagnostic::new(
+                        DiagKind::OperandAlias,
+                        idx,
+                        format!(
+                            "accumulator r{} (width {aw}) aliases operand r{}/r{} (width {p})",
+                            instr.rd, instr.rs1, instr.rs2
+                        ),
+                    ));
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                if spill.is_none() {
+                    lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rs1, p), (instr.rs2, p)]);
+                }
+                let (ea, eb) = (st.read_bound(instr.rs1, p), st.read_bound(instr.rs2, p));
+                if ea == Abs::Bound(0) || eb == Abs::Bound(0) {
+                    report.push(Diagnostic::new(
+                        DiagKind::ZeroResult,
+                        idx,
+                        format!(
+                            "operand r{} is provably zero: the product planes are all zero",
+                            if ea == Abs::Bound(0) { instr.rs1 } else { instr.rs2 }
+                        ),
+                    ));
+                }
+                let prod = match (ea, eb) {
+                    (Abs::Bound(x), Abs::Bound(y)) => Abs::Bound(x.saturating_mul(y)),
+                    _ => Abs::Top,
+                };
+                let v = if instr.op == Opcode::Mult {
+                    prod
+                } else {
+                    lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rd, aw)]);
+                    match (st.read_bound(instr.rd, aw), prod) {
+                        (Abs::Bound(o), Abs::Bound(pr)) => Abs::Bound(o.saturating_add(pr)),
+                        _ => Abs::Top,
+                    }
+                };
+                write_acc(&mut report, &mut st, idx, instr.rd, aw, v);
+            }
+
+            Opcode::Accum => {
+                if let Err(d) = resolve_diag(instr.rd, aw, idx) {
+                    report.push(d);
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rd, aw)]);
+                // Column 0 ends up with at most the sum of all columns.
+                let v = match st.read_bound(instr.rd, aw) {
+                    Abs::Bound(b) => Abs::Bound(b.saturating_mul(ctx.ncols as u128)),
+                    Abs::Top => Abs::Top,
+                };
+                write_acc(&mut report, &mut st, idx, instr.rd, aw, v);
+            }
+
+            Opcode::Fold => {
+                if let Err(d) = resolve_diag(instr.rd, aw, idx) {
+                    report.push(d);
+                    clean_prefix = idx;
+                    break 'scan;
+                }
+                lint_unwritten(&mut report, &st, ctx, idx, &[(instr.rd, aw)]);
+                let group = crate::pim::fold_group(instr.imm as usize);
+                if group >= ctx.lanes {
+                    report.push(Diagnostic::new(
+                        DiagKind::FoldNoop,
+                        idx,
+                        format!(
+                            "FOLD level {} groups {group} lanes but the column has {} — \
+                             the shifted addend is all zeros",
+                            instr.imm, ctx.lanes
+                        ),
+                    ));
+                }
+                // Each step adds a lane-shifted copy: bound doubles.
+                let v = match st.read_bound(instr.rd, aw) {
+                    Abs::Bound(b) => Abs::Bound(b.saturating_mul(2)),
+                    Abs::Top => Abs::Top,
+                };
+                write_acc(&mut report, &mut st, idx, instr.rd, aw, v);
+            }
+        }
+    }
+
+    flush_segment(&mut report, &mut seg_start, &mut seg_cycles, clean_prefix.min(prog.len()));
+    report.cost.plane_word_ops = report.cost.segments.iter().map(|s| s.plane_word_ops).sum();
+
+    if report.accepts() {
+        dead_write_scan(&mut report, prog, &params_at);
+    }
+    report
+}
+
+/// Record an accumulator-window write, flagging a possible wrap when a
+/// known bound reaches the window's sign bit (runtime wraps silently —
+/// lint, never error).
+fn write_acc(report: &mut ProgramReport, st: &mut State, idx: usize, rd: u8, width: usize, v: Abs) {
+    let v = match v {
+        Abs::Bound(b) if b >= window_cap(width) => {
+            report.push(Diagnostic::new(
+                DiagKind::AccOverflow,
+                idx,
+                format!(
+                    "value bound {b} reaches the sign bit of the {width}-bit accumulator \
+                     window at r{rd}: the result may wrap"
+                ),
+            ));
+            Abs::Bound(window_cap(width))
+        }
+        other => other,
+    };
+    st.write(rd, width, v);
+}
+
+fn lint_unwritten(
+    report: &mut ProgramReport,
+    st: &State,
+    ctx: &VerifyCtx,
+    idx: usize,
+    reads: &[(u8, usize)],
+) {
+    if ctx.assume_staged {
+        return;
+    }
+    let mut regs: Vec<usize> = reads
+        .iter()
+        .flat_map(|&(r, w)| st.unwritten_in(r, w))
+        .collect();
+    regs.sort_unstable();
+    regs.dedup();
+    if !regs.is_empty() {
+        let list = regs.iter().map(|r| format!("r{r}")).collect::<Vec<_>>().join(", ");
+        report.push(Diagnostic::new(
+            DiagKind::UnwrittenRead,
+            idx,
+            format!("reads {list} before anything wrote it (reads back zeros)"),
+        ));
+    }
+}
+
+/// Flag LDI/WRITE results that are fully overwritten before any read.
+/// Conservative: bails out entirely when the program narrows the
+/// column selection (writes then diverge per column), and registers
+/// still live at program end are *not* dead — engine state persists
+/// across programs (codegen's chunk programs hand ACC to the reduce
+/// program that way).
+fn dead_write_scan(report: &mut ProgramReport, prog: &Program, params_at: &[OpParams]) {
+    if prog
+        .instrs
+        .iter()
+        .any(|i| i.op == Opcode::Selblk && i.imm != SEL_ALL)
+    {
+        return;
+    }
+    for (i, instr) in prog.instrs.iter().enumerate() {
+        if !matches!(instr.op, Opcode::Ldi | Opcode::Write) {
+            continue;
+        }
+        let r = instr.rd;
+        for (j, later) in prog.instrs.iter().enumerate().skip(i + 1) {
+            if params_at.len() <= j {
+                break;
+            }
+            let (p, aw) = (params_at[j].precision, params_at[j].acc_width);
+            let reads: &[(u8, usize)] = match later.op {
+                Opcode::Read => &[(later.rs1, aw)],
+                Opcode::Mov => &[(later.rs1, aw)],
+                Opcode::Add | Opcode::Sub => &[(later.rs1, aw), (later.rs2, aw)],
+                Opcode::Mult => &[(later.rs1, p), (later.rs2, p)],
+                Opcode::Mac => &[(later.rs1, p), (later.rs2, p), (later.rd, aw)],
+                Opcode::Accum | Opcode::Fold => &[(later.rd, aw)],
+                _ => &[],
+            };
+            if reads
+                .iter()
+                .any(|&(base, w)| State::span(base, w).contains(&(r as usize)))
+            {
+                break; // read first: alive
+            }
+            let overwritten = match later.op {
+                Opcode::Ldi | Opcode::Write => later.rd == r,
+                // a full-width accumulator write covering the register
+                Opcode::Mov | Opcode::Add | Opcode::Sub | Opcode::Mult => {
+                    later.rd == r && aw >= REG_BITS
+                }
+                _ => false,
+            };
+            if overwritten {
+                report.push(Diagnostic::new(
+                    DiagKind::DeadWrite,
+                    i,
+                    format!("r{r} is fully overwritten at @{j} before any read"),
+                ));
+                break;
+            }
+        }
+    }
+}

@@ -17,7 +17,9 @@
 //! from the dead model. Ids are never reused, so a recycled allocation
 //! can never alias a previous model's residency.
 
+use crate::engine::EngineConfig;
 use crate::gemv::scheduler::Layer;
+use crate::gemv::{plan, GemvError, GemvProgram};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -77,6 +79,32 @@ pub enum RegistryError {
     NotFound(String),
     #[error("model '{name}': {what} has wrong size (expected {expected}, got {got})")]
     Shape { name: String, what: &'static str, expected: usize, got: usize },
+    /// The model's generated instruction streams failed the static
+    /// verifier ([`crate::analysis`]) — they are guaranteed to fault at
+    /// runtime, so the registration is rejected at the front door with
+    /// the full typed report instead of surfacing an `EngineError` from
+    /// a serving worker mid-request.
+    #[error("model '{name}': program `{label}` rejected by the static verifier:\n{report}")]
+    InvalidProgram { name: String, label: String, report: Box<crate::analysis::ProgramReport> },
+}
+
+/// Geometry + numeric profile the registry verifies candidate models
+/// against at registration time: programs are generated for this
+/// engine config / precision / radix and run through the static
+/// verifier before the model is admitted. Serving backends plan
+/// against their own (usually identical) config; the profile exists so
+/// rejection happens where the caller can still handle it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VerifyProfile {
+    pub engine: EngineConfig,
+    pub precision: usize,
+    pub radix: u8,
+}
+
+impl Default for VerifyProfile {
+    fn default() -> Self {
+        VerifyProfile { engine: EngineConfig::u55(), precision: 8, radix: 2 }
+    }
 }
 
 /// Thread-safe, shared-by-handle model registry (clones share the same
@@ -84,9 +112,36 @@ pub enum RegistryError {
 #[derive(Debug, Clone, Default)]
 pub struct ModelRegistry {
     models: Arc<RwLock<BTreeMap<String, Model>>>,
+    profile: VerifyProfile,
 }
 
 impl ModelRegistry {
+    /// Use a non-default verification profile (engine geometry,
+    /// precision, radix) for registration-time program verification.
+    pub fn with_profile(mut self, profile: VerifyProfile) -> Self {
+        self.profile = profile;
+        self
+    }
+
+    /// Generate this shape's instruction streams under the registry's
+    /// profile and run the static verifier over them.
+    fn verify_shape(&self, name: &str, m: usize, n: usize) -> Result<(), RegistryError> {
+        let pr = &self.profile;
+        let gp = GemvProgram::generate(plan(&pr.engine, m, n, pr.precision, pr.radix));
+        Self::check_programs(name, &gp)
+    }
+
+    /// The rejection seam proper, split out so the unit tests can feed
+    /// it a hand-written faulting program (generated codegen output
+    /// never faults — the gate exists for everything else that may
+    /// construct a `GemvProgram`).
+    fn check_programs(name: &str, gp: &GemvProgram) -> Result<(), RegistryError> {
+        if let Err(GemvError::InvalidProgram { label, report }) = gp.verify_accepted() {
+            return Err(RegistryError::InvalidProgram { name: name.into(), label, report });
+        }
+        Ok(())
+    }
+
     pub fn register_gemv(
         &self,
         name: &str,
@@ -112,6 +167,7 @@ impl ModelRegistry {
                 got: w.len(),
             });
         }
+        self.verify_shape(name, m, n)?;
         let mut models = self.models.write().unwrap();
         if models.contains_key(name) {
             return Err(RegistryError::Duplicate(name.into()));
@@ -162,6 +218,9 @@ impl ModelRegistry {
                     got: pair[1].in_dim,
                 });
             }
+        }
+        for l in &layers {
+            self.verify_shape(name, l.out_dim, l.in_dim)?;
         }
         let mut models = self.models.write().unwrap();
         if models.contains_key(name) {
@@ -284,6 +343,31 @@ mod tests {
         assert_eq!(b.get("late").unwrap().input_dim(), 2);
         b.unregister("late").unwrap();
         assert!(a.get("late").is_err());
+    }
+
+    #[test]
+    fn faulting_programs_rejected_at_registration() {
+        // codegen output never faults (its debug self-check proves it
+        // per-generate), so exercise the rejection seam with a tampered
+        // program: SELBLK targeting a column the plan doesn't have
+        use crate::engine::EngineConfig;
+        use crate::gemv::{plan, GemvProgram};
+        use crate::isa::Instr;
+        let mut gp = GemvProgram::generate(plan(&EngineConfig::small(), 8, 8, 8, 2));
+        gp.reduce_program = [Instr::selblk(999), Instr::halt()].into_iter().collect();
+        match ModelRegistry::check_programs("bad", &gp).unwrap_err() {
+            RegistryError::InvalidProgram { name, label, report } => {
+                assert_eq!(name, "bad");
+                assert_eq!(label, "reduce");
+                assert!(!report.accepts());
+                assert_eq!(report.errors[0].kind, crate::analysis::DiagKind::BadColumn);
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        // the live registration path runs the same gate (clean models
+        // pass; their programs verify under the registry's profile)
+        let r = ModelRegistry::default();
+        r.register_gemv("good", vec![0; 64], 8, 8).unwrap();
     }
 
     #[test]

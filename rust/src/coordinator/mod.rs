@@ -25,7 +25,7 @@ pub use server::{Coordinator, CoordinatorConfig, Request, Response, RetryPolicy,
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;
 pub use batcher::BatchPolicy;
-pub use frontend::ModelRegistry;
+pub use frontend::{ModelRegistry, RegistryError, VerifyProfile};
 // the policy knob rides in `CoordinatorConfig`; re-export it so
 // serving callers don't need to import `crate::backend` separately
 pub use crate::backend::BackendPolicy;

@@ -16,7 +16,8 @@
 //! are cached per (program fingerprint, entry Op-Params, entry
 //! selection); `IMAGINE_FUSE=0` (or [`Engine::set_fuse`]) keeps the
 //! original per-instruction interpreter, which is also the automatic
-//! fallback for programs that refuse to lower (they fault). Cycle
+//! fallback for programs the static verifier ([`crate::analysis`])
+//! rejects at lowering time (they would fault). Cycle
 //! accounting is unchanged either way: the controller times the SIMD
 //! instruction stream itself, so stats are bit-identical across fused /
 //! interpreted / serial / parallel runs (asserted by the
@@ -64,6 +65,16 @@ pub enum EngineError {
     NotHalted,
     #[error("output FIFO read past end")]
     FifoEmpty,
+    #[error(
+        "MULT/MAC spill pair {pair} at precision {precision} stages planes \
+         past the register column (bit {end} > {cap})"
+    )]
+    SpillOutOfRange { pair: usize, precision: usize, end: usize, cap: usize },
+    #[error(
+        "MULT/MAC accumulator r{rd} (width {aw}) aliases operand window \
+         r{rs1}/r{rs2} (width {p})"
+    )]
+    RegAlias { rd: u8, rs1: u8, rs2: u8, aw: usize, p: usize },
 }
 
 /// A simulated IMAGine engine instance.
@@ -234,11 +245,12 @@ impl Engine {
                 // The data pass must be infallible for the replay's
                 // split timing/data structure to be observably
                 // identical to the interpreter; the one dynamic fault
-                // (RSHIFT past the shift column) is predictable from
-                // the entry state, so a program that would hit it runs
-                // on the interpreter, preserving its exact
+                // (RSHIFT past the shift column) depends only on the
+                // entry FIFO depth, which the verifier summarized as
+                // the kernel's `min_entry_fifo`. A shallower entry
+                // state runs on the interpreter, preserving its exact
                 // partial-effect fault semantics.
-                if self.rshift_safe(&kernel) {
+                if self.shift_col.len() >= kernel.min_entry_fifo {
                     return self.replay(prog, &kernel);
                 }
             }
@@ -246,29 +258,27 @@ impl Engine {
         self.execute_interp(prog)
     }
 
-    /// Whether replaying `kernel` from the current shift-column state
-    /// can ever underflow the output FIFO (READ refills to the full
-    /// lane count; each RSHIFT pops one element).
-    fn rshift_safe(&self, kernel: &CompiledKernel) -> bool {
-        let mut len = self.shift_col.len();
-        for item in &kernel.items {
-            match item {
-                KernelItem::Read { .. } => len = self.pe_rows(),
-                KernelItem::Rshift => {
-                    if len == 0 {
-                        return false;
-                    }
-                    len -= 1;
-                }
-                _ => {}
-            }
+    /// The verifier context matching this engine's live entry state:
+    /// geometry from the config, Op-Params/selection from the persistent
+    /// front-end registers, FIFO symbolic (the replay gate checks the
+    /// live depth against the report's `min_entry_fifo` instead, so one
+    /// cached kernel serves every entry depth).
+    fn verify_ctx(&self) -> crate::analysis::VerifyCtx {
+        crate::analysis::VerifyCtx {
+            ncols: self.columns.len(),
+            lanes: self.pe_rows(),
+            fill_latency: self.config.fill_latency(),
+            entry_params: self.controller.params,
+            entry_sel: self.sel,
+            entry_fifo: None,
+            assume_staged: true,
         }
-        true
     }
 
     /// Fetch the compiled kernel for `prog` at the current entry state,
     /// lowering and caching on miss (refusals are memoized too).
-    /// `None` = not lowerable (faulting program) — interpret instead.
+    /// `None` = statically rejected by the verifier — interpret
+    /// instead, so the fault surfaces with interpreter semantics.
     fn lookup_or_lower(&mut self, prog: &Program) -> Option<Arc<CompiledKernel>> {
         let key = (prog.fingerprint(), self.controller.params, self.sel);
         if let Some((cached_prog, kernel)) = self.kernels.get(&key) {
@@ -277,13 +287,9 @@ impl Engine {
             }
             // fingerprint collision: fall through and replace the slot
         }
-        let lowered = CompiledKernel::lower(
-            prog,
-            self.columns.len(),
-            self.sel,
-            self.controller.params,
-        )
-        .map(Arc::new);
+        let lowered = CompiledKernel::lower(prog, &self.verify_ctx())
+            .ok()
+            .map(Arc::new);
         if self.kernels.len() >= KERNEL_CACHE_CAP {
             self.kernels.clear();
         }
@@ -341,8 +347,10 @@ impl Engine {
                     self.shift_col = self.columns.buf(0).read_all(*base, *width).into();
                 }
                 KernelItem::Rshift => {
-                    // unreachable in practice: `rshift_safe` gates the
-                    // replay, so underflow routes to the interpreter
+                    // unreachable in practice: the `min_entry_fifo`
+                    // gate routes would-underflow runs to the
+                    // interpreter (and the verifier rejects programs
+                    // that underflow regardless of entry depth)
                     let v = self.shift_col.pop_front().ok_or(EngineError::FifoEmpty)?;
                     self.fifo_out.push(v);
                 }
@@ -454,6 +462,30 @@ impl Engine {
                 // with the previous op (zero additional cycles).
                 let spill = instr.imm.checked_sub(1).map(|e| e as usize);
                 let first = crate::gemv::mapper::SPILL_FIRST_REG;
+                if let Some(e) = spill {
+                    // the pair's second element ends at this bit-plane
+                    let end = first as usize * crate::pim::REG_BITS + (2 * e + 2) * p;
+                    if end > REGFILE_BITS {
+                        return Err(EngineError::SpillOutOfRange {
+                            pair: e,
+                            precision: p,
+                            end,
+                            cap: REGFILE_BITS,
+                        });
+                    }
+                }
+                let alias = |x: (usize, usize), y: (usize, usize)| {
+                    !(x.0 + x.1 <= y.0 || y.0 + y.1 <= x.0)
+                };
+                if alias(d.as_tuple(), a.as_tuple()) || alias(d.as_tuple(), b.as_tuple()) {
+                    return Err(EngineError::RegAlias {
+                        rd: instr.rd,
+                        rs1: instr.rs1,
+                        rs2: instr.rs2,
+                        aw,
+                        p,
+                    });
+                }
                 let sel = self.selected();
                 self.columns.for_each(sel, |_, col, scratch| {
                     if let Some(e) = spill {
@@ -490,8 +522,7 @@ impl Engine {
             }
             Opcode::Fold => {
                 let r = RegFile::resolve(instr.rd, aw)?;
-                let level = instr.imm as usize;
-                let group = crate::pim::PES_PER_BLOCK << level;
+                let group = crate::pim::fold_group(instr.imm as usize);
                 for c in self.selected() {
                     let (buf, scratch) = self.columns.buf_scratch_mut(c);
                     alu::fold_step_with(buf, r.base, r.width, group, scratch);
@@ -877,8 +908,7 @@ mod tests {
         let real: Program = [Instr::ldi(1, 5), Instr::halt()].into_iter().collect();
         let planted: Program = [Instr::ldi(1, 9), Instr::halt()].into_iter().collect();
         let key = (real.fingerprint(), e.controller.params, e.sel);
-        let wrong =
-            CompiledKernel::lower(&planted, e.block_cols(), None, e.controller.params).unwrap();
+        let wrong = CompiledKernel::lower(&planted, &e.verify_ctx()).unwrap();
         e.kernels.insert(key, (planted, Some(Arc::new(wrong))));
         e.execute(&real).unwrap();
         assert!(
@@ -890,8 +920,8 @@ mod tests {
     #[test]
     fn fused_fifo_underflow_takes_interpreter_semantics() {
         // an RSHIFT underflow is the one data-pass fault a lowered
-        // kernel can hit at replay time; `rshift_safe` must route such
-        // programs to the interpreter so the fault leaves the exact
+        // kernel could hit at replay time; the verifier must reject
+        // such programs so the fault leaves the exact
         // interpreter partial state (SELBLK/LDI applied up to the
         // faulting instruction)
         let mut fused = small();
@@ -945,5 +975,70 @@ mod tests {
         let sb = b.execute(&prog).unwrap();
         assert_eq!(sa, sb);
         assert_eq!(a.columns(), b.columns());
+    }
+
+    #[test]
+    fn fold_oversized_level_is_a_noop() {
+        // FOLD level >= 60 used to overflow the `16 << level` group
+        // shift (debug panic / silent wrap); `fold_group` saturates and
+        // the oversized fold is the arithmetic no-op the hardware
+        // semantics imply (the lane-shifted addend is all zeros).
+        let prog: Program = [Instr::fold(1, 60), Instr::halt()].into_iter().collect();
+        for fuse in [false, true] {
+            let mut e = small();
+            e.set_fuse(fuse);
+            let lanes = e.pe_rows();
+            let vals: Vec<i64> = (0..lanes).map(|l| (l % 23) as i64 - 11).collect();
+            e.write_reg_lanes(0, 1, 32, &vals).unwrap();
+            e.execute(&prog).unwrap();
+            assert_eq!(e.read_reg_lanes(0, 1, 32).unwrap(), vals, "fuse={fuse}");
+        }
+        assert_fused_matches_interp(&[prog]);
+    }
+
+    #[test]
+    fn oversized_spill_pointer_faults_typed() {
+        // spill pair 48 at the default precision 8 stages planes past
+        // bit 1024 — used to panic inside the plane copy; now a typed
+        // fault on both paths (the verifier rejects the lowering, so
+        // the fused engine reports through the interpreter)
+        let bad: Program = [Instr::new(Opcode::Mac, 4, 1, 2, 49), Instr::halt()]
+            .into_iter()
+            .collect();
+        for fuse in [false, true] {
+            let mut e = small();
+            e.set_fuse(fuse);
+            assert!(
+                matches!(
+                    e.execute(&bad),
+                    Err(EngineError::SpillOutOfRange { pair: 48, precision: 8, .. })
+                ),
+                "fuse={fuse}"
+            );
+        }
+        // the last in-range pair (element planes end exactly at 1024)
+        let ok: Program = [Instr::new(Opcode::Mac, 4, 1, 2, 48), Instr::halt()]
+            .into_iter()
+            .collect();
+        let mut e = small();
+        e.execute(&ok).unwrap();
+    }
+
+    #[test]
+    fn mac_aliasing_faults_typed_instead_of_panicking() {
+        // accumulator window overlapping an operand window used to trip
+        // the ALU's `assert_disjoint`; now a typed fault on both paths
+        let bad: Program = [Instr::mult(4, 4, 2), Instr::halt()].into_iter().collect();
+        for fuse in [false, true] {
+            let mut e = small();
+            e.set_fuse(fuse);
+            assert!(
+                matches!(
+                    e.execute(&bad),
+                    Err(EngineError::RegAlias { rd: 4, rs1: 4, rs2: 2, .. })
+                ),
+                "fuse={fuse}"
+            );
+        }
     }
 }

@@ -24,13 +24,18 @@
 //! staging register also persists, but is handled symbolically
 //! ([`StageVal::EntryStaged`]) so it never fragments the cache.
 //!
-//! Lowering is total on well-formed programs and *refuses* (returns
-//! `None`) anything the interpreter would fault on — a mid-stream HALT,
-//! an invalid SETP, an out-of-range SELBLK or register window. The
+//! Lowering is gated on the static verifier ([`crate::analysis`]): a
+//! program with any error-severity diagnostic — mid-stream HALT,
+//! invalid SETP, out-of-range SELBLK or register window, spill
+//! overflow, operand aliasing, statically-certain FIFO underflow —
+//! refuses to lower and returns the typed [`ProgramReport`]. The
 //! engine then falls back to the per-instruction interpreter, which
 //! reports the identical error with its usual partial-effect semantics
-//! (also the `IMAGINE_FUSE=0` escape hatch, docs/PERF.md).
+//! (also the `IMAGINE_FUSE=0` escape hatch, docs/PERF.md). The report
+//! also supplies `min_entry_fifo`, which replaces the old per-execute
+//! `rshift_safe` walk with an O(1) replay gate.
 
+use crate::analysis::{verify, DiagKind, Diagnostic, ProgramReport, VerifyCtx};
 use crate::isa::{Opcode, Program};
 use crate::pim::alu::{self, AluScratch};
 use crate::pim::{PlaneBuf, RegFile, REG_BITS};
@@ -157,6 +162,11 @@ pub struct CompiledKernel {
     pub final_sel: Option<Option<usize>>,
     /// LDI staging value after the program (`None` = no LDI executed).
     pub final_staged: Option<i64>,
+    /// Entry shift-FIFO depth the replay needs (from the verifier):
+    /// pops before the first READ drain whatever the engine inherited,
+    /// so the engine replays only when its live FIFO is at least this
+    /// deep and interprets otherwise.
+    pub min_entry_fifo: usize,
 }
 
 impl CompiledKernel {
@@ -169,11 +179,40 @@ impl CompiledKernel {
             .count()
     }
 
-    /// Lower `prog` against the given entry state. Returns `None` when
-    /// the program would fault in the interpreter (mid-stream HALT, bad
-    /// SETP/SELBLK, register overflow) — the caller falls back to the
+    /// Lower `prog` against the entry state in `ctx`. The static
+    /// verifier runs first: any error-severity diagnostic (mid-stream
+    /// HALT, bad SETP/SELBLK, register overflow, spill overflow,
+    /// operand alias, certain FIFO underflow) refuses the lowering and
+    /// returns the typed report — the caller falls back to the
     /// interpreter so the error surfaces exactly as before.
-    pub fn lower(
+    pub fn lower(prog: &Program, ctx: &VerifyCtx) -> Result<CompiledKernel, Box<ProgramReport>> {
+        let report = verify(prog, ctx);
+        if !report.accepts() {
+            return Err(Box::new(report));
+        }
+        match Self::lower_items(prog, ctx.ncols, ctx.entry_sel, ctx.entry_params) {
+            Some(mut kernel) => {
+                kernel.min_entry_fifo = report.min_entry_fifo;
+                Ok(kernel)
+            }
+            None => {
+                // Soundness backstop: the verifier accepted what the
+                // lowering body cannot express. This is a bug in the
+                // verifier/lowering pair, reported instead of panicking.
+                let mut report = report;
+                report.push(Diagnostic::new(
+                    DiagKind::Internal,
+                    None,
+                    "verifier accepted the program but lowering refused it",
+                ));
+                Err(Box::new(report))
+            }
+        }
+    }
+
+    /// The lowering body proper: builds the item list, assuming the
+    /// verifier already proved every resolution will succeed.
+    fn lower_items(
         prog: &Program,
         ncols: usize,
         entry_sel: Option<usize>,
@@ -295,7 +334,7 @@ impl CompiledKernel {
                         sel: cursel,
                         base: r.base,
                         width: r.width,
-                        group: crate::pim::PES_PER_BLOCK << instr.imm as usize,
+                        group: crate::pim::fold_group(instr.imm as usize),
                     });
                 }
             }
@@ -305,6 +344,7 @@ impl CompiledKernel {
             items,
             final_sel: sel_changed.then_some(sel),
             final_staged: staged,
+            min_entry_fifo: 0, // filled in by `lower` from the report
         })
     }
 }
@@ -331,8 +371,20 @@ mod tests {
     use crate::isa::Instr;
     use crate::isa::encode::params;
 
-    fn lower_default(prog: &Program) -> Option<CompiledKernel> {
-        CompiledKernel::lower(prog, 4, None, OpParams::default())
+    fn ctx4(entry_sel: Option<usize>) -> VerifyCtx {
+        VerifyCtx {
+            ncols: 4,
+            lanes: 64,
+            fill_latency: 0,
+            entry_params: OpParams::default(),
+            entry_sel,
+            entry_fifo: None,
+            assume_staged: true,
+        }
+    }
+
+    fn lower_default(prog: &Program) -> Result<CompiledKernel, Box<ProgramReport>> {
+        CompiledKernel::lower(prog, &ctx4(None))
     }
 
     #[test]
@@ -431,15 +483,16 @@ mod tests {
 
     #[test]
     fn faulting_programs_refuse_to_lower() {
+        let first_kind = |p: &Program| lower_default(p).unwrap_err().errors[0].kind;
         // mid-stream HALT
         let p: Program = [Instr::halt(), Instr::nop(), Instr::halt()].into_iter().collect();
-        assert!(lower_default(&p).is_none());
+        assert_eq!(first_kind(&p), DiagKind::PostHalt);
         // bad SETP value
         let p: Program = [Instr::setp(0, 1), Instr::halt()].into_iter().collect();
-        assert!(lower_default(&p).is_none());
+        assert_eq!(first_kind(&p), DiagKind::BadSetp);
         // SELBLK out of range for 4 columns
         let p: Program = [Instr::selblk(99), Instr::halt()].into_iter().collect();
-        assert!(lower_default(&p).is_none());
+        assert_eq!(first_kind(&p), DiagKind::BadColumn);
         // register window overflowing the 1024-bit column
         let p: Program = [
             Instr::setp(params::PRECISION, 16),
@@ -449,15 +502,53 @@ mod tests {
         ]
         .into_iter()
         .collect();
-        assert!(lower_default(&p).is_none());
+        assert_eq!(first_kind(&p), DiagKind::WindowOverflow);
+        // MULT/MAC accumulator aliasing an operand window
+        let p: Program = [Instr::mult(4, 4, 2), Instr::halt()].into_iter().collect();
+        assert_eq!(first_kind(&p), DiagKind::OperandAlias);
+        // spill pointer staging planes past the register column
+        let p: Program = [
+            Instr::setp(params::PRECISION, 16),
+            Instr::new(Opcode::Mac, 4, 1, 2, 25),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        assert_eq!(first_kind(&p), DiagKind::SpillOverflow);
+        // every rejection is error-severity and carries its index
+        let report = lower_default(&p).unwrap_err();
+        assert_eq!(report.errors.len(), 1);
+        assert_eq!(report.errors[0].index, Some(1));
+    }
+
+    #[test]
+    fn min_entry_fifo_counts_pre_read_pops() {
+        let prog: Program = [
+            Instr::rshift(),
+            Instr::rshift(),
+            Instr::read(4),
+            Instr::rshift(),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let k = lower_default(&prog).unwrap();
+        assert_eq!(k.min_entry_fifo, 2, "two pops before READ refills");
+        // post-READ pops are bounded by `lanes` regardless of entry
+        let over: Program = std::iter::once(Instr::read(4))
+            .chain(std::iter::repeat_with(Instr::rshift).take(65))
+            .chain(std::iter::once(Instr::halt()))
+            .collect();
+        let report = lower_default(&over).unwrap_err();
+        assert_eq!(report.errors[0].kind, DiagKind::FifoUnderflow);
     }
 
     #[test]
     fn entry_state_changes_the_lowering() {
         // the same WRITE lowers against whatever selection is live
         let prog: Program = [Instr::write(1, 0), Instr::halt()].into_iter().collect();
-        let all = CompiledKernel::lower(&prog, 4, None, OpParams::default()).unwrap();
-        let one = CompiledKernel::lower(&prog, 4, Some(3), OpParams::default()).unwrap();
+        let all = CompiledKernel::lower(&prog, &ctx4(None)).unwrap();
+        let one = CompiledKernel::lower(&prog, &ctx4(Some(3))).unwrap();
         let KernelItem::Segment(sa) = &all.items[0] else { panic!() };
         let KernelItem::Segment(so) = &one.items[0] else { panic!() };
         assert_eq!(sa[0].sel, ColSel::All);

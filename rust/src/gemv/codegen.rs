@@ -32,6 +32,12 @@ pub struct GemvProgram {
 pub enum GemvError {
     #[error("engine: {0}")]
     Engine(#[from] EngineError),
+    /// A generated (or registered) program failed the static verifier
+    /// ([`crate::analysis`]): it is guaranteed to fault at runtime.
+    /// Carries the full typed report — surfaced at registration time by
+    /// [`RegistryError::InvalidProgram`](crate::coordinator::RegistryError).
+    #[error("program `{label}` rejected by the static verifier:\n{report}")]
+    InvalidProgram { label: String, report: Box<crate::analysis::ProgramReport> },
     #[error("operand shape mismatch: expected {expected}, got {got} ({what})")]
     Shape { what: &'static str, expected: usize, got: usize },
     #[error("operand value {0} out of range for precision {1}")]
@@ -123,7 +129,46 @@ impl GemvProgram {
         reduce.push(Instr::read(regs::ACC));
         reduce.seal();
 
-        GemvProgram { plan, chunk_programs, reduce_program: reduce }
+        let gp = GemvProgram { plan, chunk_programs, reduce_program: reduce };
+        // Codegen self-check: every stream this generator emits must
+        // verify with zero diagnostics (not merely zero errors) — the
+        // static-analysis acceptance bar, also enforced over the full
+        // corpus by `analysis::corpus` and the CI lint job.
+        #[cfg(debug_assertions)]
+        for (label, report) in gp.verify_reports() {
+            debug_assert!(
+                report.is_clean(),
+                "codegen emitted a flagged program `{label}` for {:?}:\n{report}",
+                gp.plan
+            );
+        }
+        gp
+    }
+
+    /// Run the static verifier over every generated stream (each chunk
+    /// program and the reduce program), labeled, against this plan's
+    /// [`VerifyCtx`](crate::analysis::VerifyCtx). Drives `imagine lint
+    /// --corpus`, the registration gate and the codegen self-check.
+    pub fn verify_reports(&self) -> Vec<(String, crate::analysis::ProgramReport)> {
+        let ctx = crate::analysis::VerifyCtx::for_plan(&self.plan);
+        let mut out = Vec::with_capacity(self.chunk_programs.len() + 1);
+        for (i, prog) in self.chunk_programs.iter().enumerate() {
+            out.push((format!("chunk[{i}]"), crate::analysis::verify(prog, &ctx)));
+        }
+        out.push(("reduce".into(), crate::analysis::verify(&self.reduce_program, &ctx)));
+        out
+    }
+
+    /// Registration-time gate: `Err(GemvError::InvalidProgram)` with
+    /// the first rejecting report if any stream carries error-severity
+    /// diagnostics (lints pass — they are advisory).
+    pub fn verify_accepted(&self) -> Result<(), GemvError> {
+        for (label, report) in self.verify_reports() {
+            if !report.accepts() {
+                return Err(GemvError::InvalidProgram { label, report: Box::new(report) });
+            }
+        }
+        Ok(())
     }
 
     /// Host-side staging: write the w/x spill pairs for `row_pass` /
@@ -421,6 +466,20 @@ mod tests {
         assert_eq!(rf.y, host_gemv(&w, &x, 48, 64));
         // the kernel cache holds the chunk + reduce programs
         assert!(fused.kernel_cache_len() >= 2, "{}", fused.kernel_cache_len());
+    }
+
+    #[test]
+    fn generated_programs_verify_clean() {
+        let gp = GemvProgram::generate(plan(&EngineConfig::small(), 40, 64, 8, 2));
+        gp.verify_accepted().unwrap();
+        let reports = gp.verify_reports();
+        assert_eq!(reports.len(), gp.chunk_programs.len() + 1);
+        assert!(reports.iter().all(|(_, r)| r.is_clean()), "{reports:?}");
+        // the cost summary reproduces the controller schedule: the MAC
+        // burst dominates the chunk program's cycles
+        let (_, chunk) = &reports[0];
+        assert!(chunk.cost.cycles > 0);
+        assert!(chunk.cost.plane_word_ops > 0);
     }
 
     #[test]

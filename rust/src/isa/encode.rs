@@ -109,6 +109,8 @@ pub enum DecodeError {
     Oversize(u32),
     #[error("field {field} value {value} out of range (max {max})")]
     FieldRange { field: &'static str, value: u32, max: u32 },
+    #[error("instruction stream is not sealed (must end in HALT)")]
+    NotSealed,
 }
 
 /// A decoded instruction with named fields.

@@ -52,12 +52,22 @@ impl Program {
     }
 
     /// Decode from raw words.
+    ///
+    /// The stream must be *sealed* — non-empty and HALT-terminated.
+    /// An unsealed stream is not a runnable program (the engine would
+    /// walk past the end of the instruction memory), so decode rejects
+    /// it at the boundary rather than letting it reach the verifier or
+    /// the controller.
     pub fn decode(words: &[RawInstr]) -> Result<Self, super::DecodeError> {
         let instrs = words
             .iter()
             .map(|&w| Instr::decode(w))
             .collect::<Result<Vec<_>, _>>()?;
-        Ok(Program { instrs })
+        let prog = Program { instrs };
+        if !prog.is_halted() {
+            return Err(super::DecodeError::NotSealed);
+        }
+        Ok(prog)
     }
 
     /// Count instructions per driver class: (single_cycle, multicycle).
@@ -125,6 +135,19 @@ mod tests {
         .collect();
         let q = Program::decode(&p.encode()).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn decode_rejects_unsealed_streams() {
+        // empty stream: no HALT, not runnable
+        assert_eq!(Program::decode(&[]), Err(crate::isa::DecodeError::NotSealed));
+        // non-empty but missing the terminator
+        let p: Program = [Instr::setp(0, 8), Instr::mac(2, 3, 4)].into_iter().collect();
+        assert_eq!(Program::decode(&p.encode()), Err(crate::isa::DecodeError::NotSealed));
+        // sealing the same stream makes it decodable again
+        let mut q = p;
+        q.seal();
+        assert!(Program::decode(&q.encode()).is_ok());
     }
 
     #[test]

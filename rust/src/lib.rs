@@ -1,6 +1,7 @@
 //! IMAGine: An In-Memory Accelerated GEMV Engine Overlay — reproduction.
 //!
 //! Cycle-accurate simulator + analytical models of the FPL 2024 paper.
+pub mod analysis;
 pub mod isa;
 pub mod pim;
 pub mod tile;

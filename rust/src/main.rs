@@ -6,6 +6,7 @@
 //! imagine serve --requests 64 --workers 2 [--batch 16] [--backend auto]
 //! imagine devices
 //! imagine model --d 1024 --precision 8      # analytic latency point
+//! imagine lint [FILE...] [--corpus] [--small]   # static ISA verifier
 //! ```
 //!
 //! `serve --backend` takes an execution-backend policy
@@ -13,6 +14,7 @@
 //! `gemv --verify` needs a build with the `pjrt` feature and the AOT
 //! artifacts.
 
+use imagine::analysis::{codegen_corpus, verify, VerifyCtx};
 use imagine::backend::BackendPolicy;
 use imagine::baselines::latency::{all_engines, comparison_engines};
 use imagine::baselines::ImagineModel;
@@ -21,6 +23,7 @@ use imagine::coordinator::{
 };
 use imagine::engine::{Engine, EngineConfig};
 use imagine::gemv::{plan, GemvProgram};
+use imagine::isa::{Program, RawInstr};
 use imagine::report;
 #[cfg(feature = "pjrt")]
 use imagine::runtime::Runtime;
@@ -38,9 +41,10 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("devices") => cmd_devices(),
         Some("model") => cmd_model(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: imagine <reproduce|gemv|serve|devices|model> [options]\n\
+                "usage: imagine <reproduce|gemv|serve|devices|model|lint> [options]\n\
                  see rust/src/main.rs header for details"
             );
             2
@@ -204,6 +208,92 @@ fn cmd_serve(args: &Args) -> i32 {
 fn cmd_devices() -> i32 {
     println!("{}", report::table4());
     0
+}
+
+/// `imagine lint [FILE...] [--corpus] [--small]`
+///
+/// Runs the static ISA verifier ([`imagine::analysis`]) over programs
+/// and prints one report per program. Each FILE is a text listing of
+/// raw 30-bit instruction words, one hex word per line (`#` comments
+/// and blank lines ignored). `--corpus` lints every program the GEMV
+/// codegen emits for the built-in shape corpus instead. Exit status:
+/// 0 when every program is accepted (lints are advisory and do not
+/// fail the run unless `--strict` is given), 1 when any program is
+/// rejected (or flagged, under `--strict`), 2 on usage/parse errors.
+fn cmd_lint(args: &Args) -> i32 {
+    #[derive(Default)]
+    struct Tally {
+        linted: usize,
+        rejected: bool,
+        flagged: bool,
+    }
+    impl Tally {
+        fn show(&mut self, name: &str, report: &imagine::analysis::ProgramReport) {
+            println!("{name}:");
+            for line in report.to_string().lines() {
+                println!("  {line}");
+            }
+            self.linted += 1;
+            self.rejected |= !report.accepts();
+            self.flagged |= !report.is_clean();
+        }
+    }
+    let mut tally = Tally::default();
+    if args.has("corpus") {
+        for entry in codegen_corpus() {
+            for (label, report) in entry.gemv.verify_reports() {
+                tally.show(&format!("corpus/{}/{label}", entry.name), &report);
+            }
+        }
+    }
+    let files = &args.positional[1..];
+    if files.is_empty() && !args.has("corpus") {
+        eprintln!("usage: imagine lint [FILE...] [--corpus] [--small] [--strict]");
+        return 2;
+    }
+    let config = if args.has("small") { EngineConfig::small() } else { EngineConfig::u55() };
+    let ctx = VerifyCtx::for_engine(&config);
+    for path in files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 2;
+            }
+        };
+        let mut words = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let tok = line.split('#').next().unwrap_or("").trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let hex = tok.trim_start_matches("0x").trim_start_matches("0X");
+            match u32::from_str_radix(hex, 16) {
+                Ok(w) => words.push(RawInstr(w)),
+                Err(e) => {
+                    eprintln!("{path}:{}: bad instruction word '{tok}': {e}", lineno + 1);
+                    return 2;
+                }
+            }
+        }
+        match Program::decode(&words) {
+            Ok(prog) => tally.show(path, &verify(&prog, &ctx)),
+            Err(e) => {
+                // undecodable streams are rejections, not usage errors:
+                // keep linting the rest and fail the run at the end
+                println!("{path}:\n  error[decode]: {e}");
+                tally.rejected = true;
+            }
+        }
+    }
+    if tally.rejected || (args.has("strict") && tally.flagged) {
+        1
+    } else {
+        if tally.linted > 0 {
+            println!("{} program(s) accepted", tally.linted);
+        }
+        0
+    }
 }
 
 fn cmd_model(args: &Args) -> i32 {

@@ -30,3 +30,18 @@ pub const REGFILE_BITS: usize = 1024;
 pub const REG_BITS: usize = 32;
 /// Bit-serial PEs per PiCaSO block (bitlines of one BRAM18).
 pub const PES_PER_BLOCK: usize = 16;
+
+/// Lane-group size of FOLD level `level`: `PES_PER_BLOCK << level`,
+/// saturating instead of overflowing the shift. An oversized level is
+/// an arithmetic no-op (the lane-shifted addend is all zeros), so
+/// saturating to `usize::MAX` preserves that semantics where a raw
+/// shift would panic in debug builds (level >= 60) or silently wrap
+/// the group to a small value and corrupt the fold. Shared by the
+/// interpreter and the fused kernel path so both stay bit-identical.
+pub fn fold_group(level: usize) -> usize {
+    if level >= PES_PER_BLOCK.leading_zeros() as usize {
+        usize::MAX
+    } else {
+        PES_PER_BLOCK << level
+    }
+}

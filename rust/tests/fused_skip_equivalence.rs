@@ -9,8 +9,10 @@
 //! process-global: a single test body flips it deterministically
 //! (other test binaries are separate processes and unaffected).
 
+use imagine::analysis::{verify, VerifyCtx};
 use imagine::engine::{Engine, EngineConfig};
 use imagine::gemv::{plan, GemvProgram};
+use imagine::isa::{Instr, Program};
 use imagine::pim::alu;
 use imagine::util::XorShift;
 
@@ -110,5 +112,86 @@ fn fused_skip_bit_identical_across_densities() {
             assert_eq!(hot_opt.y, hot_ref.y, "resident y diverged [{tag}]");
             assert_eq!(hot_opt.stats, hot_ref.stats, "resident stats diverged [{tag}]");
         }
+    }
+}
+
+/// `k` pre-READ FIFO pops, then a small compute/readout tail.
+fn fifo_prog(k: usize) -> Program {
+    let mut p = Program::new();
+    for _ in 0..k {
+        p.push(Instr::rshift());
+    }
+    p.push(Instr::ldi(1, 7))
+        .push(Instr::ldi(2, 9))
+        .push(Instr::mult(4, 1, 2))
+        .push(Instr::read(4))
+        .push(Instr::rshift())
+        .seal();
+    p
+}
+
+/// The fused replay gate (ISSUE 7) admits a kernel only when the live
+/// shift FIFO holds at least the verifier's `min_entry_fifo` pre-READ
+/// pops. Across the boundary — drain below, at, and past the entry
+/// depth — the fused leg must stay bit-identical to the interpreter:
+/// same FIFO output, same `ExecStats`, same column state, and the same
+/// typed fault when the program over-pops. Doesn't touch the
+/// process-global skip switch, so it can ride outside the sweep above.
+#[test]
+fn fused_replay_gate_matches_interp_at_fifo_boundary() {
+    let config = EngineConfig::small();
+    let lanes = config.pe_rows();
+    let ctx = VerifyCtx::for_engine(&config).with_entry_fifo(None);
+
+    for k in [0, 1, 16, lanes] {
+        let prog = fifo_prog(k);
+        let report = verify(&prog, &ctx);
+        assert!(report.accepts(), "k={k}:\n{report}");
+        assert_eq!(report.min_entry_fifo, k, "pre-READ pop count");
+
+        let legs = [false, true].map(|fuse| {
+            let mut e = Engine::with_threads(config, 1);
+            e.set_fuse(fuse);
+            let stats = e.execute(&prog).unwrap();
+            (e.drain_fifo(), stats, e)
+        });
+        let (y_i, stats_i, e_i) = &legs[0];
+        let (y_f, stats_f, e_f) = &legs[1];
+        assert_eq!(y_f, y_i, "FIFO output diverged [k={k}]");
+        assert_eq!(stats_f, stats_i, "ExecStats diverged [k={k}]");
+        assert_eq!(stats_f.cycles, report.cost.cycles, "static cycles [k={k}]");
+        assert_eq!(e_f.columns(), e_i.columns(), "column state diverged [k={k}]");
+        // the fused leg must have actually replayed a kernel (the gate
+        // admitted it), visible as a populated kernel cache
+        assert_eq!(legs[1].2.kernel_cache_len(), 1, "kernel not cached [k={k}]");
+    }
+
+    // one past the entry depth: the verifier still accepts (the entry
+    // FIFO is symbolic — min_entry_fifo tells the caller what it
+    // needs), the gate routes the run to the interpreter, and both
+    // legs fault with the same typed error
+    let over = fifo_prog(lanes + 1);
+    let report = verify(&over, &ctx);
+    assert!(report.accepts());
+    assert_eq!(report.min_entry_fifo, lanes + 1);
+    // ...and against the *concrete* fresh-engine context it's rejected
+    assert!(!verify(&over, &VerifyCtx::for_engine(&config)).accepts());
+    for fuse in [false, true] {
+        let mut e = Engine::with_threads(config, 1);
+        e.set_fuse(fuse);
+        assert!(e.execute(&over).is_err(), "over-pop must fault [fuse={fuse}]");
+    }
+
+    // the gate reads the *live* FIFO depth, not the entry depth: after
+    // a run drains all but one entry, a 1-pop kernel still replays and
+    // a 2-pop one falls back and faults — identically on both legs
+    for fuse in [false, true] {
+        let mut e = Engine::with_threads(config, 1);
+        e.set_fuse(fuse);
+        let drain: Program = (0..lanes - 1).map(|_| Instr::rshift()).chain([Instr::halt()]).collect();
+        e.execute(&drain).unwrap();
+        let one: Program = [Instr::rshift(), Instr::halt()].into_iter().collect();
+        assert!(e.execute(&one).is_ok(), "one entry left, one pop [fuse={fuse}]");
+        assert!(e.execute(&one).is_err(), "FIFO empty now [fuse={fuse}]");
     }
 }

@@ -1,0 +1,225 @@
+//! Verifier ⇔ runtime soundness sweep (in-repo `run_prop` driver).
+//!
+//! The static verifier's contract (docs/ANALYSIS.md): relative to the
+//! entry context of a freshly built engine,
+//!
+//! * **accepted ⇒ runs clean** — `Engine::execute` returns `Ok` on
+//!   both execution legs (fused replay and the reference interpreter),
+//!   and the report's static cycle count equals the executed one;
+//! * **rejected ⇒ faults** — `Engine::execute` returns a typed
+//!   `EngineError` (never a panic) on both legs.
+//!
+//! The generator draws instructions with deliberately out-of-range
+//! fields (registers ≥ 32, SELBLK columns past the array, SETP values
+//! the Op-Params module rejects, spill pairs past the register column,
+//! aliasing MAC windows, FOLD levels that saturate the group size) and
+//! sometimes leaves the stream unsealed, so every diagnostic class the
+//! verifier can emit shows up in the sweep.
+
+use imagine::analysis::{verify, DiagKind, VerifyCtx};
+use imagine::engine::{Engine, EngineConfig, SEL_ALL};
+use imagine::isa::{Instr, Opcode, Program};
+use imagine::util::rng::{run_prop, XorShift};
+
+/// Mostly-valid register field, occasionally architectural-max or out
+/// of range (the encoder would mask it; the verifier must not).
+fn gen_reg(rng: &mut XorShift) -> u8 {
+    match rng.below(8) {
+        0..=4 => rng.range(0, 7) as u8,
+        5 | 6 => rng.range(0, 31) as u8,
+        _ => rng.range(32, 63) as u8,
+    }
+}
+
+fn gen_instr(rng: &mut XorShift) -> Instr {
+    let op = *rng.pick(&Opcode::ALL);
+    match op {
+        Opcode::Nop | Opcode::Sync | Opcode::Halt | Opcode::Rshift => {
+            Instr::new(op, 0, 0, 0, 0)
+        }
+        Opcode::Selblk => Instr::selblk(*rng.pick(&[0, 1, 2, 3, 4, 5, 64, 999, SEL_ALL])),
+        // param index 3 is unknown; values cover both sides of every
+        // Op-Params bound (precision 2..=16, acc_width <=64, radix 2|4)
+        Opcode::Setp => Instr::setp(
+            rng.range(0, 3) as u8,
+            *rng.pick(&[0, 1, 2, 4, 8, 12, 16, 17, 32, 48, 64, 65]),
+        ),
+        Opcode::Ldi | Opcode::Write => {
+            Instr::new(op, gen_reg(rng), 0, 0, rng.below(1024) as u16)
+        }
+        Opcode::Read => Instr::read(gen_reg(rng)),
+        Opcode::Mov => Instr::mov(gen_reg(rng), gen_reg(rng)),
+        Opcode::Add | Opcode::Sub => Instr::new(op, gen_reg(rng), gen_reg(rng), gen_reg(rng), 0),
+        // imm > 0 is a spill-pair pointer: 48/49 straddle the p=8
+        // register-column boundary (pair 47 ends exactly at bit 1024)
+        Opcode::Mult | Opcode::Mac => Instr::new(
+            op,
+            gen_reg(rng),
+            gen_reg(rng),
+            gen_reg(rng),
+            *rng.pick(&[0, 0, 0, 0, 1, 2, 8, 47, 48, 49, 50, 300]),
+        ),
+        Opcode::Accum => Instr::accum(gen_reg(rng), rng.below(8) as u16),
+        // levels >= 59 saturate the fold group (lint, never a fault)
+        Opcode::Fold => {
+            Instr::fold(gen_reg(rng), *rng.pick(&[0, 1, 2, 3, 4, 5, 6, 10, 59, 60, 63, 1023]))
+        }
+    }
+}
+
+fn dump(prog: &Program) -> String {
+    prog.instrs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| format!("  @{i}: {x}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn verifier_matches_runtime_on_random_programs() {
+    let cfg = EngineConfig::small();
+    let ctx = VerifyCtx::for_engine(&cfg);
+    run_prop("verifier soundness", 250, |rng| {
+        let mut prog: Program = (0..rng.range(1, 10)).map(|_| gen_instr(rng)).collect();
+        if rng.below(8) != 0 {
+            prog.seal();
+        }
+        let report = verify(&prog, &ctx);
+        for fuse in [false, true] {
+            let mut e = Engine::with_threads(cfg, 1);
+            e.set_fuse(fuse);
+            match e.execute(&prog) {
+                Ok(stats) => {
+                    assert!(
+                        report.accepts(),
+                        "verifier rejected but the engine (fuse={fuse}) ran clean\n\
+                         program:\n{}\nreport:\n{report}",
+                        dump(&prog)
+                    );
+                    assert_eq!(
+                        stats.cycles,
+                        report.cost.cycles,
+                        "static cycle count diverges (fuse={fuse})\nprogram:\n{}",
+                        dump(&prog)
+                    );
+                }
+                Err(err) => {
+                    assert!(
+                        !report.accepts(),
+                        "verifier accepted but the engine (fuse={fuse}) faulted: {err}\n\
+                         program:\n{}\nreport:\n{report}",
+                        dump(&prog)
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// One hand-built program per error class: the verifier must reject
+/// with exactly that diagnostic kind, and the engine must fault on
+/// both legs from the matching entry state.
+#[test]
+fn every_error_class_is_rejected_and_faults() {
+    let cfg = EngineConfig::small();
+    let ctx = VerifyCtx::for_engine(&cfg);
+    let lanes = cfg.pe_rows();
+
+    let mut underflow: Program =
+        std::iter::once(Instr::read(4)).chain((0..=lanes).map(|_| Instr::rshift())).collect();
+    underflow.seal();
+
+    let cases: Vec<(&str, Program, DiagKind)> = vec![
+        (
+            "post_halt",
+            [Instr::halt(), Instr::nop(), Instr::halt()].into_iter().collect(),
+            DiagKind::PostHalt,
+        ),
+        (
+            "bad_setp_value",
+            [Instr::setp(0, 1), Instr::halt()].into_iter().collect(),
+            DiagKind::BadSetp,
+        ),
+        (
+            "bad_setp_index",
+            [Instr::setp(3, 8), Instr::halt()].into_iter().collect(),
+            DiagKind::BadSetp,
+        ),
+        (
+            "bad_column",
+            [Instr::selblk(999), Instr::halt()].into_iter().collect(),
+            DiagKind::BadColumn,
+        ),
+        (
+            "bad_reg",
+            [Instr::mov(40, 0), Instr::halt()].into_iter().collect(),
+            DiagKind::BadReg,
+        ),
+        (
+            "window_overflow",
+            [Instr::setp(1, 64), Instr::mov(31, 0), Instr::halt()].into_iter().collect(),
+            DiagKind::WindowOverflow,
+        ),
+        ("fifo_underflow", underflow, DiagKind::FifoUnderflow),
+        (
+            "spill_overflow",
+            [Instr::new(Opcode::Mac, 4, 1, 2, 49), Instr::halt()].into_iter().collect(),
+            DiagKind::SpillOverflow,
+        ),
+        (
+            "operand_alias",
+            [Instr::mult(4, 4, 2), Instr::halt()].into_iter().collect(),
+            DiagKind::OperandAlias,
+        ),
+        ("not_sealed", [Instr::nop()].into_iter().collect(), DiagKind::NotSealed),
+    ];
+
+    for (name, prog, kind) in cases {
+        let report = verify(&prog, &ctx);
+        assert!(!report.accepts(), "{name}: expected rejection, got:\n{report}");
+        assert!(
+            report.errors.iter().any(|d| d.kind == kind),
+            "{name}: expected {kind:?}, got:\n{report}"
+        );
+        for fuse in [false, true] {
+            let mut e = Engine::with_threads(cfg, 1);
+            e.set_fuse(fuse);
+            assert!(
+                e.execute(&prog).is_err(),
+                "{name}: verifier rejected but the engine (fuse={fuse}) ran clean"
+            );
+        }
+    }
+}
+
+/// The flip side, pinned on a known-good stream: accepted, zero lints,
+/// identical cycles on both legs, and the result readback matches.
+#[test]
+fn accepted_program_runs_clean_on_both_legs() {
+    let cfg = EngineConfig::small();
+    let ctx = VerifyCtx::for_engine(&cfg);
+    let prog: Program = [
+        Instr::setp(0, 8),
+        Instr::ldi(1, 3),
+        Instr::ldi(2, 5),
+        Instr::mult(4, 1, 2),
+        // ncols-1 hops gather every column's product into column 0
+        Instr::accum(4, 3),
+        Instr::read(4),
+        Instr::rshift(),
+        Instr::halt(),
+    ]
+    .into_iter()
+    .collect();
+    let report = verify(&prog, &ctx);
+    assert!(report.accepts(), "{report}");
+    for fuse in [false, true] {
+        let mut e = Engine::with_threads(cfg, 1);
+        e.set_fuse(fuse);
+        let stats = e.execute(&prog).unwrap();
+        assert_eq!(stats.cycles, report.cost.cycles, "fuse={fuse}");
+        // 3 * 5, accumulated across the 4 columns by the systolic hop
+        assert_eq!(e.drain_fifo()[0], 3 * 5 * cfg.block_cols() as i64, "fuse={fuse}");
+    }
+}
