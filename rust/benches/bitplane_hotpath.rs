@@ -181,6 +181,35 @@ fn main() {
     let fused_speedup = mi.median.as_secs_f64() / mf.median.as_secs_f64();
     println!("fused-dispatch speedup: {fused_speedup:.2}x over per-instruction");
 
+    // -- compiled-trace replay: flat op stream + precomputed schedule -
+    // Third tier (ISSUE 8): zero controller round-trips, ExecStats
+    // committed from the lowering-time cycle schedule. Bit-identical
+    // to both legs above (tests/trace_equivalence.rs); best-of-3 like
+    // the other gated *reqps rows.
+    println!("\n== compiled-trace replay ==");
+    let mut traced = Engine::new(cfg);
+    traced.set_trace_mode(true);
+    stage_operands(&mut traced, 21);
+    let mut mt = bench("engine mac-burst, compiled-trace replay", warm, iters, || {
+        black_box(traced.execute(&prog).unwrap().cycles)
+    });
+    for _ in 1..3 {
+        let m = bench("engine mac-burst, compiled-trace replay", warm, iters, || {
+            black_box(traced.execute(&prog).unwrap().cycles)
+        });
+        if m.median < mt.median {
+            mt = m;
+        }
+    }
+    println!("{}", mt.report());
+    let trace_speedup = mi.median.as_secs_f64() / mt.median.as_secs_f64();
+    let trace_dense_reqps = 1e6 / mt.per_iter_us();
+    println!(
+        "trace-replay speedup: {trace_speedup:.2}x over per-instruction \
+         ({:.2}x over fused, {trace_dense_reqps:.0} runs/s)",
+        mf.median.as_secs_f64() / mt.median.as_secs_f64()
+    );
+
     // -- occupancy-aware zero skipping: dense vs ~3% sparse x ---------
     println!("\n== occupancy-aware plane skipping (sparse activations) ==");
     let mut sparse_ref = Engine::new(cfg);
@@ -204,6 +233,29 @@ fn main() {
     println!(
         "sparse zero-skip speedup: {sparse_speedup:.2}x (dense fused = {:.3} us)",
         mf.per_iter_us()
+    );
+
+    // the sparse-skew shape on the trace tier (skip stays on: the
+    // trace's flat op stream runs the same occupancy-aware ALU)
+    let mut sparse_tr = Engine::new(cfg);
+    sparse_tr.set_trace_mode(true);
+    stage_sparse_x(&mut sparse_tr, 33, 3);
+    let mut mst = bench("mac-burst, sparse x (~3%), compiled-trace replay", warm, iters, || {
+        black_box(sparse_tr.execute(&prog).unwrap().cycles)
+    });
+    for _ in 1..3 {
+        let m = bench("mac-burst, sparse x (~3%), compiled-trace replay", warm, iters, || {
+            black_box(sparse_tr.execute(&prog).unwrap().cycles)
+        });
+        if m.median < mst.median {
+            mst = m;
+        }
+    }
+    println!("{}", mst.report());
+    let trace_sparse_reqps = 1e6 / mst.per_iter_us();
+    println!(
+        "sparse trace replay: {:.2}x over fused skip-on ({trace_sparse_reqps:.0} runs/s)",
+        myes.median.as_secs_f64() / mst.median.as_secs_f64()
     );
 
     // -- static verifier over the codegen corpus ----------------------
@@ -244,6 +296,11 @@ fn main() {
             ("per_instr_us", Json::num(mi.per_iter_us())),
             ("fused_us", Json::num(mf.per_iter_us())),
             ("fused_speedup", Json::num(fused_speedup)),
+            ("trace_us", Json::num(mt.per_iter_us())),
+            ("trace_speedup", Json::num(trace_speedup)),
+            ("trace_dense_reqps", Json::num(trace_dense_reqps)),
+            ("trace_sparse_us", Json::num(mst.per_iter_us())),
+            ("trace_sparse_reqps", Json::num(trace_sparse_reqps)),
             ("dense_us", Json::num(mf.per_iter_us())),
             ("sparse_noskip_us", Json::num(mno.per_iter_us())),
             ("sparse_skip_us", Json::num(myes.per_iter_us())),

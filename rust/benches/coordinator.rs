@@ -265,15 +265,22 @@ fn main() {
     // subset of policies updates its own rows without clobbering the
     // rest (the old array form made repeated runs overwrite each other)
     let mut backend_rows = std::collections::BTreeMap::new();
+    let mut trace_coord_reqps = 0.0;
     for policy in [
         BackendPolicy::Auto,
         BackendPolicy::Native,
         BackendPolicy::Sharded,
         BackendPolicy::ColSharded,
+        BackendPolicy::Trace,
         BackendPolicy::CrossCheck,
     ] {
         let reqps = best_reqps(3, || coord_backend_policy(policy, breqs));
         println!("backend {:<12} {reqps:>8.0} req/s", policy.name());
+        if policy == BackendPolicy::Trace {
+            // also lands as a top-level gated row (*reqps naming):
+            // the compiled-trace serving path must not regress >15%
+            trace_coord_reqps = reqps;
+        }
         backend_rows.insert(
             policy.name().to_string(),
             Json::obj([("reqps", Json::num(reqps))]),
@@ -362,6 +369,7 @@ fn main() {
             ("coord_col_sharded_8x24000_reqps", Json::num(col_sharded_reqps)),
             ("coord_fault_layer_off_reqps", Json::num(fault_off)),
             ("coord_fault_layer_null_reqps", Json::num(fault_null)),
+            ("trace_coord_reqps", Json::num(trace_coord_reqps)),
             ("backends", Json::Obj(backend_rows)),
             ("smoke", Json::Bool(smoke())),
         ]),

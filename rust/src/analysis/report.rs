@@ -10,6 +10,8 @@
 
 use std::fmt;
 
+use crate::tile::params::OpParams;
+
 /// Diagnostic severity. `Error` means "will fault at runtime under the
 /// verification context"; `Lint` means "executes, but is almost
 /// certainly not what the author meant".
@@ -152,6 +154,20 @@ pub struct CostSummary {
     pub cycles: u64,
     pub plane_word_ops: u64,
     pub segments: Vec<SegmentCost>,
+    /// Instructions issued (the clean prefix only).
+    pub instrs: u64,
+    /// Cycles attributed to each opcode, indexed by `Opcode as usize`
+    /// — the same histogram `ExecStats::record` accumulates at runtime,
+    /// so a trace replay can reproduce `ExecStats` without issuing.
+    pub cycles_by_op: [u64; 16],
+    /// Issue count per opcode, same indexing.
+    pub count_by_op: [u64; 16],
+    /// Op-Params after the last issued instruction (they persist
+    /// across programs; a replay commits these to the controller).
+    pub exit_params: OpParams,
+    /// `(single, multi)` instructions retired, as the controller's
+    /// retired counters would advance over this program.
+    pub retired: (u64, u64),
 }
 
 impl CostSummary {

@@ -256,6 +256,9 @@ pub fn verify(prog: &Program, ctx: &VerifyCtx) -> ProgramReport {
         };
         params_at.push(st.ctrl.params);
         report.cost.cycles += cost;
+        report.cost.cycles_by_op[instr.op as usize] += cost;
+        report.cost.count_by_op[instr.op as usize] += 1;
+        report.cost.instrs += 1;
 
         // Segment accounting: barriers close the running segment and
         // stand alone, mirroring `CompiledKernel::lower`.
@@ -510,6 +513,12 @@ pub fn verify(prog: &Program, ctx: &VerifyCtx) -> ProgramReport {
 
     flush_segment(&mut report, &mut seg_start, &mut seg_cycles, clean_prefix.min(prog.len()));
     report.cost.plane_word_ops = report.cost.segments.iter().map(|s| s.plane_word_ops).sum();
+    // Exit controller state for schedule replay: the scan's controller
+    // started fresh (retired = (0,0)) with the entry params, so its
+    // final counters are exactly the per-run deltas a real execution
+    // of the clean prefix would apply.
+    report.cost.exit_params = st.ctrl.params;
+    report.cost.retired = st.ctrl.retired;
 
     if report.accepts() {
         dead_write_scan(&mut report, prog, &params_at);

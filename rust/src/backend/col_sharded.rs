@@ -31,6 +31,9 @@ pub struct ColShardedBackend {
     /// Lazily built slice pool (each member row-shards internally on
     /// one thread; the slice fan-out uses the backend's whole budget).
     sched: Mutex<Option<ColShardedScheduler>>,
+    /// Forced compiled-trace replay mode for the pool (`None` = the
+    /// engines keep their `IMAGINE_TRACE` default).
+    trace: Option<bool>,
 }
 
 impl ColShardedBackend {
@@ -41,6 +44,18 @@ impl ColShardedBackend {
             precision: ctx.precision,
             radix: ctx.radix,
             sched: Mutex::new(None),
+            trace: None,
+        }
+    }
+
+    /// Build with every pool member's compiled-trace replay mode forced
+    /// on or off, overriding the `IMAGINE_TRACE` default — propagated
+    /// through the members' internal row-shard engines
+    /// (docs/BACKENDS.md §Compiled-trace backend).
+    pub fn with_trace_mode(ctx: &BackendContext, on: bool) -> Self {
+        ColShardedBackend {
+            trace: Some(on),
+            ..Self::new(ctx)
         }
     }
 }
@@ -106,8 +121,13 @@ impl ExecBackend for ColShardedBackend {
                 .collect();
         };
         let mut guard = self.sched.lock().unwrap();
-        let sched = guard
-            .get_or_insert_with(|| ColShardedScheduler::with_threads(self.engine, self.threads, 1));
+        let sched = guard.get_or_insert_with(|| {
+            let mut s = ColShardedScheduler::with_threads(self.engine, self.threads, 1);
+            if let Some(on) = self.trace {
+                s.set_trace_mode(on);
+            }
+            s
+        });
         let resident = sched.is_resident(id, cp);
         let reduce_adds = cp.reduce_adds();
         let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();

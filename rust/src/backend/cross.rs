@@ -46,12 +46,29 @@ impl CrossCheckBackend {
     /// [`OracleBackend`] reference (golden per model when it applies,
     /// complementary simulator path otherwise). Honors the
     /// `IMAGINE_XCHECK_FAULT` fault-injection toggle.
+    ///
+    /// Under `IMAGINE_TRACE=1` the primary's engines replay compiled
+    /// traces while the reference complement stays pinned to the fused
+    /// interpreter, so this pairing doubles as a live trace-vs-fused
+    /// oracle on the trace CI leg.
     pub fn auto(ctx: &BackendContext) -> Self {
         let primary: Arc<dyn ExecBackend> = Arc::new(AutoBackend::new(ctx));
         let mut reference: Arc<dyn ExecBackend> = Arc::new(OracleBackend::new(ctx));
         if std::env::var("IMAGINE_XCHECK_FAULT").as_deref() == Ok("1") {
             reference = Arc::new(FaultInjector::new(reference));
         }
+        CrossCheckBackend::new(primary, reference)
+    }
+
+    /// The explicit trace pairing: the compiled-trace backend served
+    /// against the fused-interpreter single-engine path (trace replay
+    /// forced *off* on the reference), diffing every y element-wise —
+    /// the strongest end-to-end check that trace replay changes
+    /// nothing but host cost (docs/BACKENDS.md §Compiled-trace
+    /// backend; exercised by `tests/backend_equivalence.rs`).
+    pub fn trace(ctx: &BackendContext) -> Self {
+        let primary: Arc<dyn ExecBackend> = Arc::new(super::TraceBackend::new(ctx));
+        let reference: Arc<dyn ExecBackend> = Arc::new(NativeBackend::with_trace_mode(ctx, false));
         CrossCheckBackend::new(primary, reference)
     }
 }
@@ -165,7 +182,10 @@ impl ExecBackend for OracleBackend {
 /// re-executes as a forced 2-way row-shard, a promoted (or even
 /// unshardable) model re-executes on one engine. Same arithmetic,
 /// different instruction schedule: the strongest oracle available
-/// without PJRT.
+/// without PJRT. Its engines keep compiled-trace replay forced *off*
+/// (the reference role runs the fused/per-instruction path), so under
+/// `IMAGINE_TRACE=1` a cross-check diffs trace replay against a
+/// genuinely different execution mechanism instead of trace-vs-trace.
 pub struct ComplementBackend {
     engine: EngineConfig,
     precision: usize,
@@ -180,8 +200,8 @@ impl ComplementBackend {
             engine: ctx.engine,
             precision: ctx.precision,
             radix: ctx.radix,
-            native: NativeBackend::new(ctx),
-            sharded: ShardedBackend::new(ctx),
+            native: NativeBackend::with_trace_mode(ctx, false),
+            sharded: ShardedBackend::with_trace_mode(ctx, false),
         }
     }
 }

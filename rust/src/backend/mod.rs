@@ -21,6 +21,11 @@
 //!   residency — a typed [`GemvError::Unshardable`] remains only for
 //!   models exceeding the pool's aggregate BRAM, never a silent
 //!   multi-pass;
+//! * [`TraceBackend`] — the auto selection over engines forced into
+//!   compiled-trace replay: cached programs execute as pre-resolved
+//!   flat op streams with precomputed cycle schedules, bit-identical
+//!   y and `ExecStats` at a fraction of the host cost
+//!   (docs/BACKENDS.md §Compiled-trace backend);
 //! * [`GoldenBackend`] — the PJRT-executed AOT artifacts (`pjrt`
 //!   feature; a typed [`BackendError::Unavailable`] without it);
 //! * [`CrossCheckBackend`] — runs every request on two backends and
@@ -37,12 +42,14 @@ pub mod cross;
 pub mod golden;
 pub mod native;
 pub mod sharded;
+pub mod trace;
 
 pub use col_sharded::ColShardedBackend;
 pub use cross::CrossCheckBackend;
 pub use golden::GoldenBackend;
 pub use native::NativeBackend;
 pub use sharded::ShardedBackend;
+pub use trace::TraceBackend;
 
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
@@ -68,6 +75,10 @@ pub enum BackendPolicy {
     /// Force the column-sharded pool (models the row tier serves run
     /// as one slice).
     ColSharded,
+    /// The auto selection over compiled-trace engines: cached programs
+    /// replay as pre-resolved flat op streams with precomputed cycle
+    /// schedules (bit-identical y and stats, minimal host overhead).
+    Trace,
     /// The PJRT golden runtime (requires the `pjrt` feature and AOT
     /// artifacts; numeric-only, no cycle model).
     Golden,
@@ -79,13 +90,14 @@ pub enum BackendPolicy {
 
 impl BackendPolicy {
     /// Parse a policy name (`auto | native | sharded | col_sharded |
-    /// golden | cross_check`).
+    /// trace | golden | cross_check`).
     pub fn parse(s: &str) -> Option<BackendPolicy> {
         match s {
             "auto" => Some(BackendPolicy::Auto),
             "native" => Some(BackendPolicy::Native),
             "sharded" => Some(BackendPolicy::Sharded),
             "col_sharded" => Some(BackendPolicy::ColSharded),
+            "trace" => Some(BackendPolicy::Trace),
             "golden" => Some(BackendPolicy::Golden),
             "cross_check" => Some(BackendPolicy::CrossCheck),
             _ => None,
@@ -98,6 +110,7 @@ impl BackendPolicy {
             BackendPolicy::Native => "native",
             BackendPolicy::Sharded => "sharded",
             BackendPolicy::ColSharded => "col_sharded",
+            BackendPolicy::Trace => "trace",
             BackendPolicy::Golden => "golden",
             BackendPolicy::CrossCheck => "cross_check",
         }
@@ -319,6 +332,7 @@ pub fn build(policy: BackendPolicy, ctx: &BackendContext) -> Arc<dyn ExecBackend
         BackendPolicy::Native => Arc::new(NativeBackend::new(ctx)),
         BackendPolicy::Sharded => Arc::new(ShardedBackend::new(ctx)),
         BackendPolicy::ColSharded => Arc::new(ColShardedBackend::new(ctx)),
+        BackendPolicy::Trace => Arc::new(TraceBackend::new(ctx)),
         BackendPolicy::Golden => golden::build(ctx),
         BackendPolicy::CrossCheck => Arc::new(CrossCheckBackend::auto(ctx)),
     }

@@ -31,6 +31,21 @@ impl NativeBackend {
         }
     }
 
+    /// Build with the engine's compiled-trace replay mode forced on or
+    /// off, overriding the `IMAGINE_TRACE` default — `true` is the
+    /// trace backend's single-engine path, `false` pins the fused
+    /// interpreter (the cross-check reference role). Numerics and
+    /// `ExecStats` are bit-identical either way.
+    pub fn with_trace_mode(ctx: &BackendContext, on: bool) -> Self {
+        let mut engine = Engine::with_threads(ctx.engine, ctx.threads);
+        engine.set_trace_mode(on);
+        NativeBackend {
+            precision: ctx.precision,
+            radix: ctx.radix,
+            sched: Mutex::new(GemvScheduler::from_engine(ctx.engine, engine)),
+        }
+    }
+
     /// Build with explicit parts (tests and composed backends).
     pub fn with_config(engine: EngineConfig, threads: usize, precision: usize, radix: u8) -> Self {
         Self::new(&BackendContext {

@@ -30,6 +30,9 @@ pub struct ShardedBackend {
     /// Lazily built engine pool (one column thread per member; the
     /// shard fan-out uses the backend's whole thread budget).
     sched: Mutex<Option<ShardedScheduler>>,
+    /// Forced compiled-trace replay mode for the pool (`None` = the
+    /// engines keep their `IMAGINE_TRACE` default).
+    trace: Option<bool>,
 }
 
 impl ShardedBackend {
@@ -40,6 +43,17 @@ impl ShardedBackend {
             precision: ctx.precision,
             radix: ctx.radix,
             sched: Mutex::new(None),
+            trace: None,
+        }
+    }
+
+    /// Build with every pool member's compiled-trace replay mode forced
+    /// on or off, overriding the `IMAGINE_TRACE` default
+    /// (docs/BACKENDS.md §Compiled-trace backend).
+    pub fn with_trace_mode(ctx: &BackendContext, on: bool) -> Self {
+        ShardedBackend {
+            trace: Some(on),
+            ..Self::new(ctx)
         }
     }
 }
@@ -103,8 +117,13 @@ impl ExecBackend for ShardedBackend {
                 .collect();
         };
         let mut guard = self.sched.lock().unwrap();
-        let sched = guard
-            .get_or_insert_with(|| ShardedScheduler::with_threads(self.engine, self.threads, 1));
+        let sched = guard.get_or_insert_with(|| {
+            let mut s = ShardedScheduler::with_threads(self.engine, self.threads, 1);
+            if let Some(on) = self.trace {
+                s.set_trace_mode(on);
+            }
+            s
+        });
         let resident = sched.is_resident(id, sp);
         let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
         sched

@@ -1,0 +1,153 @@
+//! The compiled-trace backend: the auto backend's per-model selection
+//! with every engine forced into compiled-trace replay mode
+//! (docs/BACKENDS.md §Compiled-trace backend).
+//!
+//! A trace-mode engine executes a cached program by replaying its
+//! [`CompiledTrace`](crate::engine::CompiledTrace): a fully
+//! pre-resolved flat op stream over the column array with **zero**
+//! controller round-trips, and `ExecStats` committed in O(1) from the
+//! cycle schedule the verifier computed once at lowering time. The y
+//! vector and the stats are bit-identical to the fused and
+//! per-instruction paths (`tests/trace_equivalence.rs`,
+//! `tests/backend_equivalence.rs`), so the whole serving promotion
+//! ladder — native, row shards, column slices, graceful degradation —
+//! carries over unchanged: the pools simply run trace-mode engines,
+//! which means the replay speedup composes with both sharding tiers.
+//!
+//! Programs that refuse to lower (statically faulting, or an entry
+//! FIFO below the kernel's floor) fall back to the per-instruction
+//! interpreter inside the engine, exactly like the fused path — the
+//! backend never sees the difference.
+
+use super::{
+    select, BackendContext, BackendError, BackendHealth, BackendResult, ColShardedBackend,
+    ExecBackend, NativeBackend, PreparedExec, PreparedModel, Selection, ShardedBackend,
+};
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::codegen::GemvError;
+
+/// Auto-style per-model selection over trace-mode engine pools.
+pub struct TraceBackend {
+    engine: EngineConfig,
+    precision: usize,
+    radix: u8,
+    native: NativeBackend,
+    sharded: ShardedBackend,
+    col_sharded: ColShardedBackend,
+}
+
+impl TraceBackend {
+    pub fn new(ctx: &BackendContext) -> Self {
+        TraceBackend {
+            engine: ctx.engine,
+            precision: ctx.precision,
+            radix: ctx.radix,
+            native: NativeBackend::with_trace_mode(ctx, true),
+            sharded: ShardedBackend::with_trace_mode(ctx, true),
+            col_sharded: ColShardedBackend::with_trace_mode(ctx, true),
+        }
+    }
+}
+
+impl ExecBackend for TraceBackend {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        match select(model, &self.engine, self.precision, self.radix)? {
+            Selection::Native => self.native.prepare(model),
+            Selection::Sharded(sp) => Ok(PreparedModel {
+                model: model.clone(),
+                concurrency: sp.k(),
+                exec: PreparedExec::Sharded(sp),
+            }),
+            Selection::ColSharded(cp) => Ok(PreparedModel {
+                model: model.clone(),
+                concurrency: cp.engine_concurrency(&self.engine),
+                exec: PreparedExec::ColSharded(cp),
+            }),
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        prepared: &PreparedModel,
+        xs: &[Vec<i64>],
+    ) -> Vec<Result<BackendResult, BackendError>> {
+        let out = match &prepared.exec {
+            PreparedExec::Sharded(_) => self.sharded.execute_batch(prepared, xs),
+            PreparedExec::ColSharded(_) => self.col_sharded.execute_batch(prepared, xs),
+            _ => return self.native.execute_batch(prepared, xs),
+        };
+        let exhausted = out
+            .iter()
+            .any(|r| matches!(r, Err(BackendError::Gemv(GemvError::PoolExhausted { .. }))));
+        if !exhausted {
+            return out;
+        }
+        // Same graceful degradation as the auto backend: a pool whose
+        // quarantines exhausted its member budget hands the group to
+        // the single trace-mode engine (multi-pass, no residency,
+        // exact numerics), flagged `degraded`.
+        match self.native.prepare(&prepared.model) {
+            Ok(native_prep) => {
+                let mut out = self.native.execute_batch(&native_prep, xs);
+                for r in out.iter_mut().flatten() {
+                    r.degraded = true;
+                }
+                out
+            }
+            Err(e) => {
+                let reason = e.to_string();
+                xs.iter()
+                    .map(|_| {
+                        Err(BackendError::Unavailable { backend: "trace", reason: reason.clone() })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn health(&self) -> BackendHealth {
+        self.sharded.health().merged(self.col_sharded.health())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AutoBackend;
+    use crate::util::XorShift;
+    use std::sync::Arc;
+
+    fn gemv_model(id: u64, m: usize, n: usize, seed: u64) -> Model {
+        let mut rng = XorShift::new(seed);
+        Model::Gemv { id, w: Arc::new(rng.vec_i64(m * n, -100, 100)), m, n }
+    }
+
+    /// The trace policy serves the same y AND the same ExecStats as the
+    /// auto policy, on both the native path and the sharded promotion.
+    #[test]
+    fn trace_backend_matches_auto_bit_for_bit() {
+        let ctx = BackendContext::new(EngineConfig::small(), 8, 2);
+        let trace = TraceBackend::new(&ctx);
+        let auto = AutoBackend::new(&ctx);
+        let mut rng = XorShift::new(91);
+        // (48, 64) is single-pass native; (768, 64) promotes to shards
+        for (id, m, n) in [(1u64, 48, 64), (2u64, 768, 64)] {
+            let model = gemv_model(id, m, n, id + 7);
+            let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -100, 100)).collect();
+            let pt = trace.prepare(&model).unwrap();
+            let pa = auto.prepare(&model).unwrap();
+            let rt = trace.execute_batch(&pt, &xs);
+            let ra = auto.execute_batch(&pa, &xs);
+            for (t, a) in rt.into_iter().zip(ra) {
+                let (t, a) = (t.unwrap(), a.unwrap());
+                assert_eq!(t.y, a.y, "{m}x{n}");
+                assert_eq!(t.stats, a.stats, "{m}x{n}: stats must replay identically");
+            }
+        }
+    }
+}

@@ -20,7 +20,7 @@ use crate::pim::alu::AluScratch;
 use crate::pim::PlaneBuf;
 use crate::util::ThreadPool;
 use std::ops::Range;
-use super::kernel::{ColSel, KernelStep};
+use super::kernel::{ColSel, KernelOp, KernelStep};
 
 /// Minimum total plane words across the selected columns before a
 /// dispatch goes parallel (below this the condvar wake costs more than
@@ -160,6 +160,39 @@ impl ColumnArray {
                 if step.sel.contains(c) {
                     step.op.apply(buf, scratch, entry_staged);
                 }
+            }
+        });
+    }
+
+    /// Execute a uniform compiled-trace segment: every column applies
+    /// the same pre-resolved flat op list — the trace replay's hot
+    /// loop (`engine::trace`), with no per-step selection checks.
+    pub fn run_ops(&mut self, ops: &[KernelOp], entry_staged: i64) {
+        let n = self.cols.len();
+        self.for_each(0..n, |_, buf, scratch| {
+            for op in ops {
+                op.apply(buf, scratch, entry_staged);
+            }
+        });
+    }
+
+    /// Execute a mixed-selection compiled-trace segment from
+    /// per-column pre-filtered op lists (`ops[c]` is column `c`'s
+    /// work). A single active column skips the pool round-trip.
+    pub fn run_ops_per_col(&mut self, ops: &[Vec<KernelOp>], entry_staged: i64) {
+        debug_assert_eq!(ops.len(), self.cols.len());
+        let mut active = ops.iter().enumerate().filter(|(_, list)| !list.is_empty());
+        if let (Some((c, list)), None) = (active.next(), active.next()) {
+            let (buf, scratch) = self.buf_scratch_mut(c);
+            for op in list {
+                op.apply(buf, scratch, entry_staged);
+            }
+            return;
+        }
+        let n = self.cols.len();
+        self.for_each(0..n, |c, buf, scratch| {
+            for op in &ops[c] {
+                op.apply(buf, scratch, entry_staged);
             }
         });
     }

@@ -34,14 +34,18 @@ use std::sync::Arc;
 use super::column_array::ColumnArray;
 use super::config::EngineConfig;
 use super::kernel::{stage_spill_planes, CompiledKernel, KernelItem};
+use super::trace::{CompiledTrace, TraceOp};
 
 /// Block-column select value meaning "all columns" (SELBLK 0x3FF).
 pub const SEL_ALL: u16 = 0x3FF;
 
 /// Compiled-kernel cache key: a kernel bakes in the entry Op-Params and
-/// SELBLK state (both persist across programs), so it is only
-/// replayable from the same entry state.
-type KernelKey = (u64, OpParams, Option<usize>);
+/// SELBLK state (both persist across programs) **and** the verifier
+/// context's geometry `(ncols, lanes, fill_latency)` — `config` is
+/// public and mutable, so the same program sealed under a different
+/// entry context (say, after a pipeline-stage change) must never
+/// replay a stale kernel or cycle schedule.
+type KernelKey = (u64, OpParams, Option<usize>, usize, usize, u64);
 
 /// Cache slot: the exact program (hits verify full equality — a 64-bit
 /// fingerprint collision must never silently replay the wrong kernel)
@@ -104,6 +108,12 @@ pub struct Engine {
     /// Fused execution (compiled-kernel replay). `IMAGINE_FUSE=0`
     /// forces the per-instruction interpreter (docs/PERF.md).
     fuse: bool,
+    /// Compiled-trace execution: replay the flat op stream with the
+    /// precomputed cycle schedule — zero controller round-trips
+    /// (docs/BACKENDS.md "Compiled-trace backend"; `IMAGINE_TRACE=1`
+    /// sets the process default, the `trace` backend policy sets it
+    /// per engine).
+    trace_mode: bool,
     /// Lowered kernels, keyed by program fingerprint + entry state.
     kernels: HashMap<KernelKey, KernelSlot>,
     /// Identity of this engine for the fault-injection stall seam
@@ -135,6 +145,7 @@ impl Engine {
             stats: ExecStats::default(),
             trace: Trace::off(),
             fuse: crate::util::env_flag("IMAGINE_FUSE", true),
+            trace_mode: crate::util::env_flag("IMAGINE_TRACE", false),
             kernels: HashMap::new(),
             fault_slot: 0,
         }
@@ -156,6 +167,21 @@ impl Engine {
     /// Whether this engine replays compiled kernels (vs interpreting).
     pub fn fused(&self) -> bool {
         self.fuse
+    }
+
+    /// Toggle compiled-trace execution: lowered programs replay as a
+    /// flat op stream with `ExecStats` committed from the precomputed
+    /// cycle schedule (bit-identical to the interpreter; see
+    /// `engine::trace`). Programs that refuse to lower, runs below the
+    /// kernel's `min_entry_fifo` gate, and engines with instruction
+    /// tracing enabled all fall back exactly as the fused path does.
+    pub fn set_trace_mode(&mut self, on: bool) {
+        self.trace_mode = on;
+    }
+
+    /// Whether this engine replays compiled traces when possible.
+    pub fn trace_mode(&self) -> bool {
+        self.trace_mode
     }
 
     /// Number of compiled kernels currently cached (introspection).
@@ -240,7 +266,7 @@ impl Engine {
         if !prog.is_halted() {
             return Err(EngineError::NotHalted);
         }
-        if self.fuse {
+        if self.fuse || self.trace_mode {
             if let Some(kernel) = self.lookup_or_lower(prog) {
                 // The data pass must be infallible for the replay's
                 // split timing/data structure to be observably
@@ -251,7 +277,17 @@ impl Engine {
                 // state runs on the interpreter, preserving its exact
                 // partial-effect fault semantics.
                 if self.shift_col.len() >= kernel.min_entry_fifo {
-                    return self.replay(prog, &kernel);
+                    // Trace replay skips per-instruction bookkeeping
+                    // entirely, so it cannot feed the instruction
+                    // trace ring: a recording engine replays fused.
+                    if self.trace_mode && !self.trace.is_recording() {
+                        if let Some(ct) = kernel.trace.clone() {
+                            return self.replay_trace(&ct);
+                        }
+                    }
+                    if self.fuse {
+                        return self.replay(prog, &kernel);
+                    }
                 }
             }
         }
@@ -280,7 +316,14 @@ impl Engine {
     /// `None` = statically rejected by the verifier — interpret
     /// instead, so the fault surfaces with interpreter semantics.
     fn lookup_or_lower(&mut self, prog: &Program) -> Option<Arc<CompiledKernel>> {
-        let key = (prog.fingerprint(), self.controller.params, self.sel);
+        let key = (
+            prog.fingerprint(),
+            self.controller.params,
+            self.sel,
+            self.columns.len(),
+            self.pe_rows(),
+            self.config.fill_latency(),
+        );
         if let Some((cached_prog, kernel)) = self.kernels.get(&key) {
             if cached_prog == prog {
                 return kernel.clone();
@@ -374,6 +417,59 @@ impl Engine {
             self.staged = v;
         }
         if let Some(sel) = kernel.final_sel {
+            self.sel = sel;
+        }
+        Ok(self.finish_run(run))
+    }
+
+    /// Replay a compiled trace: the flat pre-resolved op stream with
+    /// `ExecStats` and controller state committed from the kernel's
+    /// precomputed cycle schedule — zero controller round-trips and
+    /// zero per-step selection checks. The schedule was derived by the
+    /// static verifier issuing the same stream through a real
+    /// controller from the same entry state (the cache key pins the
+    /// geometry), so stats are bit-identical to the interpreter's.
+    fn replay_trace(&mut self, trace: &CompiledTrace) -> Result<ExecStats, EngineError> {
+        let sched = &trace.schedule;
+        let mut run = self.begin_run();
+        run.cycles = sched.cycles;
+        run.instrs = sched.instrs;
+        run.cycles_by_op = sched.cycles_by_op;
+        run.count_by_op = sched.count_by_op;
+        self.controller
+            .commit_schedule(sched.exit_params, sched.busy_cycles(), sched.retired);
+        let entry_staged = self.staged;
+        for op in &trace.ops {
+            match op {
+                TraceOp::Uniform(ops) => self.columns.run_ops(ops, entry_staged),
+                TraceOp::PerColumn(per) => self.columns.run_ops_per_col(per, entry_staged),
+                TraceOp::Read { base, width } => {
+                    self.shift_col = self.columns.buf(0).read_all(*base, *width).into();
+                }
+                TraceOp::Rshift => {
+                    // unreachable in practice: same `min_entry_fifo`
+                    // gate as the fused replay
+                    let v = self.shift_col.pop_front().ok_or(EngineError::FifoEmpty)?;
+                    self.fifo_out.push(v);
+                }
+                TraceOp::Accum { base, width, hops } => {
+                    for _ in 0..*hops {
+                        self.accum_hop(*base, *width);
+                    }
+                }
+                TraceOp::Fold { cols, base, width, group } => {
+                    for &c in cols {
+                        let (buf, scratch) = self.columns.buf_scratch_mut(c);
+                        alu::fold_step_with(buf, *base, *width, *group, scratch);
+                    }
+                }
+            }
+        }
+        // commit the persistent front-end state the program left behind
+        if let Some(v) = trace.final_staged {
+            self.staged = v;
+        }
+        if let Some(sel) = trace.final_sel {
             self.sel = sel;
         }
         Ok(self.finish_run(run))
@@ -907,7 +1003,14 @@ mod tests {
         e.set_fuse(true);
         let real: Program = [Instr::ldi(1, 5), Instr::halt()].into_iter().collect();
         let planted: Program = [Instr::ldi(1, 9), Instr::halt()].into_iter().collect();
-        let key = (real.fingerprint(), e.controller.params, e.sel);
+        let key = (
+            real.fingerprint(),
+            e.controller.params,
+            e.sel,
+            e.block_cols(),
+            e.pe_rows(),
+            e.config.fill_latency(),
+        );
         let wrong = CompiledKernel::lower(&planted, &e.verify_ctx()).unwrap();
         e.kernels.insert(key, (planted, Some(Arc::new(wrong))));
         e.execute(&real).unwrap();
@@ -915,6 +1018,104 @@ mod tests {
             e.read_reg_lanes(0, 1, 8).unwrap().iter().all(|&v| v == 5),
             "collision slot must be replaced, not replayed"
         );
+    }
+
+    #[test]
+    fn kernel_cache_keyed_on_verify_ctx_geometry() {
+        // two entry contexts sharing a program fingerprint: `config` is
+        // public, so mutating the pipeline stages changes the fill
+        // latency mid-life — the kernel (and its cycle schedule)
+        // cached under the old context must not replay
+        use crate::tile::controller::PipelineStages;
+        let mut e = small();
+        e.set_fuse(true);
+        let prog: Program = [Instr::mult(4, 1, 2), Instr::halt()].into_iter().collect();
+        let s1 = e.execute(&prog).unwrap();
+        assert_eq!(e.kernel_cache_len(), 1);
+        e.config.stages = PipelineStages { a: true, b: true, c: true };
+        e.controller.stages = e.config.stages;
+        let s2 = e.execute(&prog).unwrap();
+        assert_eq!(e.kernel_cache_len(), 2, "new geometry: separate kernel");
+        assert_eq!(s2.fill_latency, e.config.fill_latency());
+        assert_eq!(s2.busy_cycles(), s1.busy_cycles(), "busy work unchanged");
+        assert_eq!(
+            s2.cycles,
+            s1.busy_cycles() + e.config.fill_latency(),
+            "cycles must reflect the NEW fill latency, not a stale schedule"
+        );
+    }
+
+    #[test]
+    fn trace_replay_matches_interpreter_bit_for_bit() {
+        let cfg = EngineConfig::small();
+        let mut interp = Engine::new(cfg);
+        interp.set_fuse(false);
+        let mut traced = Engine::new(cfg);
+        traced.set_fuse(false);
+        traced.set_trace_mode(true);
+        let lanes = interp.pe_rows();
+        for e in [&mut interp, &mut traced] {
+            for c in 0..e.block_cols() {
+                let vals: Vec<i64> = (0..lanes).map(|l| ((l + c) % 200) as i64 - 100).collect();
+                e.write_reg_lanes(c, 1, 8, &vals).unwrap();
+                e.write_reg_lanes(c, 2, 8, &vals).unwrap();
+            }
+        }
+        let prog: Program = [
+            Instr::setp(0, 8),
+            Instr::setp(1, 32),
+            Instr::selblk(1),
+            Instr::ldi(3, 55),
+            Instr::selblk(SEL_ALL),
+            Instr::new(Opcode::Mult, 4, 1, 2, 0),
+            Instr::new(Opcode::Mac, 4, 1, 2, 0),
+            Instr::accum(4, 3),
+            Instr::fold(4, 1),
+            Instr::read(4),
+            Instr::rshift(),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let si = interp.execute(&prog).unwrap();
+        let st = traced.execute(&prog).unwrap();
+        assert_eq!(si, st, "trace-replayed ExecStats must equal the interpreter's");
+        assert_eq!(interp.columns(), traced.columns());
+        assert_eq!(interp.drain_fifo(), traced.drain_fifo());
+        // controller state replays too: params, cycles, retired, halted
+        assert_eq!(interp.controller().params, traced.controller().params);
+        assert_eq!(interp.controller().cycles, traced.controller().cycles);
+        assert_eq!(interp.controller().retired, traced.controller().retired);
+        assert!(traced.controller().is_halted());
+        // and the persistent staging value replays into the next stream
+        let p2: Program = [Instr::write(6, 0), Instr::halt()].into_iter().collect();
+        interp.execute(&p2).unwrap();
+        traced.execute(&p2).unwrap();
+        assert_eq!(interp.columns(), traced.columns());
+    }
+
+    #[test]
+    fn trace_mode_faulting_programs_fall_back_typed() {
+        let mut e = small();
+        e.set_fuse(false);
+        e.set_trace_mode(true);
+        let bad: Program = [Instr::selblk(99), Instr::halt()].into_iter().collect();
+        assert!(matches!(e.execute(&bad), Err(EngineError::BadColumn(99, _))));
+        e.reset();
+        let bad: Program = [Instr::mult(4, 4, 2), Instr::halt()].into_iter().collect();
+        assert!(matches!(e.execute(&bad), Err(EngineError::RegAlias { .. })));
+    }
+
+    #[test]
+    fn trace_mode_with_instruction_trace_recording_falls_back() {
+        // the instruction-trace ring needs per-instruction retirement
+        // events, which trace replay skips — a recording engine must
+        // take the fused/interpreter path and still fill the ring
+        let mut e = Engine::new(EngineConfig::small()).with_trace(32);
+        e.set_trace_mode(true);
+        let prog: Program = [Instr::mult(4, 1, 2), Instr::halt()].into_iter().collect();
+        e.execute(&prog).unwrap();
+        assert_eq!(e.trace.len(), 2, "both instructions recorded");
     }
 
     #[test]

@@ -40,7 +40,9 @@ use crate::isa::{Opcode, Program};
 use crate::pim::alu::{self, AluScratch};
 use crate::pim::{PlaneBuf, RegFile, REG_BITS};
 use crate::tile::params::OpParams;
+use std::sync::Arc;
 use super::engine::SEL_ALL;
+use super::trace::CompiledTrace;
 
 /// Column selection of one kernel step, resolved at lowering time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -167,6 +169,10 @@ pub struct CompiledKernel {
     /// so the engine replays only when its live FIFO is at least this
     /// deep and interprets otherwise.
     pub min_entry_fifo: usize,
+    /// The fully flattened replay form + precomputed cycle schedule
+    /// (`engine::trace`), built by `lower` from the verifier's accepted
+    /// cost summary. `None` only for kernels not produced by `lower`.
+    pub trace: Option<Arc<CompiledTrace>>,
 }
 
 impl CompiledKernel {
@@ -193,6 +199,11 @@ impl CompiledKernel {
         match Self::lower_items(prog, ctx.ncols, ctx.entry_sel, ctx.entry_params) {
             Some(mut kernel) => {
                 kernel.min_entry_fifo = report.min_entry_fifo;
+                kernel.trace = Some(Arc::new(CompiledTrace::from_kernel(
+                    &kernel,
+                    ctx.ncols,
+                    &report.cost,
+                )));
                 Ok(kernel)
             }
             None => {
@@ -345,6 +356,7 @@ impl CompiledKernel {
             final_sel: sel_changed.then_some(sel),
             final_staged: staged,
             min_entry_fifo: 0, // filled in by `lower` from the report
+            trace: None,       // attached by `lower` (needs the report)
         })
     }
 }

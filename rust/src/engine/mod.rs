@@ -5,9 +5,11 @@
 pub mod config;
 pub mod column_array;
 pub mod kernel;
+pub mod trace;
 pub mod engine;
 
 pub use column_array::ColumnArray;
 pub use config::EngineConfig;
 pub use engine::{Engine, EngineError, SEL_ALL};
 pub use kernel::{ColSel, CompiledKernel, KernelItem, KernelOp, KernelStep};
+pub use trace::{CompiledTrace, TraceOp, TraceSchedule};

@@ -1,0 +1,240 @@
+//! Compiled-trace execution: the lowered [`CompiledKernel`] flattened
+//! one step further into a pre-resolved flat op stream plus a
+//! precomputed cycle schedule — the compiler→metasim split.
+//!
+//! The fused replay still pays per-instruction host bookkeeping: every
+//! run re-issues the whole stream through the [`Controller`] for
+//! timing, and every segment step re-checks its column selection
+//! inside the dispatch loop. Both are loop-invariant for a given
+//! kernel, so the trace compilation hoists them too:
+//!
+//! * **Data**: each [`KernelItem::Segment`] becomes either a
+//!   [`TraceOp::Uniform`] flat op list (every column runs the same
+//!   stream, zero per-step checks — the common case: GEMV bursts are
+//!   all-columns) or a [`TraceOp::PerColumn`] list pre-filtered per
+//!   column at compile time. FOLD selections resolve to an explicit
+//!   column list.
+//! * **Timing**: the static verifier already issues every instruction
+//!   through a *real* controller to compute the per-segment
+//!   [`CostSummary`] (op costs depend only on Op-Params, never on the
+//!   pipeline config, so static cycles equal runtime cycles exactly —
+//!   pinned by `tests/fused_skip_equivalence.rs`). The
+//!   [`TraceSchedule`] captures that one-time result — total cycles,
+//!   the per-opcode histograms, the exit Op-Params and the retired
+//!   deltas — and the replay commits it in O(1)
+//!   ([`Controller::commit_schedule`]) instead of re-issuing. The
+//!   resulting `ExecStats` are bit-identical to the interpreter's
+//!   (`tests/trace_equivalence.rs`).
+//!
+//! A trace is built at lowering time (inside [`CompiledKernel::lower`])
+//! from the verifier's accepted report, so it exists exactly when the
+//! kernel does and shares its cache entry: same entry-state +
+//! geometry key, same `min_entry_fifo` replay gate, same
+//! interpreter fallback for programs that refuse to lower. Replay is
+//! additionally gated on the engine's instruction [`Trace`] ring being
+//! off — per-instruction trace recording needs the per-instruction
+//! path.
+//!
+//! [`Controller`]: crate::tile::controller::Controller
+//! [`Controller::commit_schedule`]: crate::tile::controller::Controller::commit_schedule
+//! [`Trace`]: crate::sim::Trace
+
+use crate::analysis::CostSummary;
+use crate::tile::params::OpParams;
+use super::kernel::{ColSel, CompiledKernel, KernelItem, KernelOp};
+
+/// The one-time cycle schedule of a compiled kernel: everything the
+/// engine needs to reproduce the interpreter's `ExecStats` and
+/// controller state without issuing a single instruction. Derived from
+/// the verifier's [`CostSummary`] (same controller cost tables), valid
+/// only for the entry state + geometry the kernel was lowered against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSchedule {
+    /// Total run cycles including the pipeline fill.
+    pub cycles: u64,
+    /// The fill-latency component (the lowering context's).
+    pub fill_latency: u64,
+    /// Instructions the run retires.
+    pub instrs: u64,
+    /// Cycles per opcode class, indexed by `Opcode as usize` — the
+    /// exact histogram `ExecStats::record` would accumulate.
+    pub cycles_by_op: [u64; 16],
+    /// Issue count per opcode class.
+    pub count_by_op: [u64; 16],
+    /// Op-Params after the program (they persist across programs).
+    pub exit_params: OpParams,
+    /// `(single, multi)` retired-instruction deltas for the controller.
+    pub retired: (u64, u64),
+}
+
+impl TraceSchedule {
+    pub fn from_cost(cost: &CostSummary) -> Self {
+        TraceSchedule {
+            cycles: cost.cycles,
+            fill_latency: cost.fill_latency,
+            instrs: cost.instrs,
+            cycles_by_op: cost.cycles_by_op,
+            count_by_op: cost.count_by_op,
+            exit_params: cost.exit_params,
+            retired: cost.retired,
+        }
+    }
+
+    pub fn busy_cycles(&self) -> u64 {
+        self.cycles.saturating_sub(self.fill_latency)
+    }
+}
+
+/// One item of the flat replay stream. Segments arrive pre-dispatched:
+/// the replay loop never looks at a column selection again.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceOp {
+    /// Every column runs the same flat op list (one pool dispatch,
+    /// zero per-step checks).
+    Uniform(Vec<KernelOp>),
+    /// Mixed-selection segment: `ops[c]` is column `c`'s pre-filtered
+    /// work list (columns with nothing to do hold an empty list).
+    PerColumn(Vec<Vec<KernelOp>>),
+    /// READ: stage column 0's accumulator into the output shift column.
+    Read { base: usize, width: usize },
+    /// RSHIFT: pop one element off the shift column into FIFO-out.
+    Rshift,
+    /// ACCUM: `hops` sequential east->west accumulation hops.
+    Accum { base: usize, width: usize, hops: usize },
+    /// FOLD: one lane-network fold step on the pre-resolved columns.
+    Fold { cols: Vec<usize>, base: usize, width: usize, group: usize },
+}
+
+/// A kernel's fully pre-resolved replay form: flat op stream + cycle
+/// schedule + the persistent front-end state the program leaves behind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompiledTrace {
+    pub ops: Vec<TraceOp>,
+    pub schedule: TraceSchedule,
+    /// SELBLK state after the program (`None` = left as-is).
+    pub final_sel: Option<Option<usize>>,
+    /// LDI staging value after the program (`None` = no LDI executed).
+    pub final_staged: Option<i64>,
+}
+
+impl CompiledTrace {
+    /// Flatten a lowered kernel (already verified/accepted) against the
+    /// `ncols`-column geometry it was lowered for, attaching the cycle
+    /// schedule from the verifier's cost summary.
+    pub fn from_kernel(kernel: &CompiledKernel, ncols: usize, cost: &CostSummary) -> Self {
+        let ops = kernel
+            .items
+            .iter()
+            .map(|item| match item {
+                KernelItem::Segment(steps) => {
+                    if steps.iter().all(|s| s.sel == ColSel::All) {
+                        TraceOp::Uniform(steps.iter().map(|s| s.op.clone()).collect())
+                    } else {
+                        let mut per: Vec<Vec<KernelOp>> = vec![Vec::new(); ncols];
+                        for step in steps {
+                            for (c, list) in per.iter_mut().enumerate() {
+                                if step.sel.contains(c) {
+                                    list.push(step.op.clone());
+                                }
+                            }
+                        }
+                        TraceOp::PerColumn(per)
+                    }
+                }
+                KernelItem::Read { base, width } => {
+                    TraceOp::Read { base: *base, width: *width }
+                }
+                KernelItem::Rshift => TraceOp::Rshift,
+                KernelItem::Accum { base, width, hops } => {
+                    TraceOp::Accum { base: *base, width: *width, hops: *hops }
+                }
+                KernelItem::Fold { sel, base, width, group } => TraceOp::Fold {
+                    cols: (0..ncols).filter(|&c| sel.contains(c)).collect(),
+                    base: *base,
+                    width: *width,
+                    group: *group,
+                },
+            })
+            .collect();
+        CompiledTrace {
+            ops,
+            schedule: TraceSchedule::from_cost(cost),
+            final_sel: kernel.final_sel,
+            final_staged: kernel.final_staged,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::VerifyCtx;
+    use crate::isa::encode::params;
+    use crate::isa::{Instr, Opcode, Program};
+    use crate::engine::SEL_ALL;
+
+    fn ctx4() -> VerifyCtx {
+        VerifyCtx {
+            ncols: 4,
+            lanes: 64,
+            fill_latency: 3,
+            entry_params: OpParams::default(),
+            entry_sel: None,
+            entry_fifo: None,
+            assume_staged: true,
+        }
+    }
+
+    #[test]
+    fn all_columns_burst_flattens_uniform() {
+        let mut prog = Program::new();
+        prog.push(Instr::setp(params::PRECISION, 8));
+        prog.push(Instr::setp(params::ACC_WIDTH, 32));
+        prog.push(Instr::mult(4, 1, 2));
+        for _ in 0..7 {
+            prog.push(Instr::mac(4, 1, 2));
+        }
+        prog.seal();
+        let k = CompiledKernel::lower(&prog, &ctx4()).unwrap();
+        let t = k.trace.as_ref().expect("lowered kernels carry a trace");
+        assert_eq!(t.ops.len(), 1);
+        let TraceOp::Uniform(ops) = &t.ops[0] else {
+            panic!("all-columns segment must flatten uniform: {:?}", t.ops)
+        };
+        assert_eq!(ops.len(), 8, "SETPs are timing-only; 8 data ops remain");
+        // schedule mirrors the verifier's cost summary exactly
+        assert_eq!(t.schedule.cycles, t.schedule.busy_cycles() + 3);
+        assert_eq!(t.schedule.instrs, prog.len() as u64);
+        assert_eq!(t.schedule.count_by_op[Opcode::Mac as usize], 7);
+        assert_eq!(t.schedule.exit_params.precision, 8);
+        assert_eq!(t.schedule.exit_params.acc_width, 32);
+        // MULT/MAC/SETP split: 2 single-cycle SETPs + HALT, 8 multi
+        assert_eq!(t.schedule.retired, (3, 8));
+    }
+
+    #[test]
+    fn mixed_selection_prefilters_per_column() {
+        let prog: Program = [
+            Instr::ldi(1, 5),
+            Instr::selblk(2),
+            Instr::ldi(1, 7),
+            Instr::selblk(SEL_ALL),
+            Instr::fold(4, 1),
+            Instr::halt(),
+        ]
+        .into_iter()
+        .collect();
+        let k = CompiledKernel::lower(&prog, &ctx4()).unwrap();
+        let t = k.trace.as_ref().unwrap();
+        let TraceOp::PerColumn(per) = &t.ops[0] else {
+            panic!("mixed selection must pre-filter: {:?}", t.ops)
+        };
+        assert_eq!(per.len(), 4);
+        assert_eq!(per[0].len(), 1, "col 0 only sees the all-columns LDI");
+        assert_eq!(per[2].len(), 2, "col 2 sees both LDIs");
+        let TraceOp::Fold { cols, .. } = &t.ops[1] else { panic!() };
+        assert_eq!(cols, &[0, 1, 2, 3]);
+        assert_eq!(t.final_sel, Some(None));
+        assert_eq!(t.final_staged, Some(7));
+    }
+}

@@ -79,6 +79,9 @@ pub struct ColShardedScheduler {
     calls: Vec<AtomicU64>,
     /// Slot remaps performed after member deaths.
     failovers: u64,
+    /// Forced compiled-trace replay mode for pool members (`None` =
+    /// each engine keeps its `IMAGINE_TRACE` default).
+    trace: Option<bool>,
 }
 
 impl ColShardedScheduler {
@@ -106,11 +109,23 @@ impl ColShardedScheduler {
             quarantined: Vec::new(),
             calls: Vec::new(),
             failovers: 0,
+            trace: None,
         }
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.config
+    }
+
+    /// Force compiled-trace replay mode on (or off) for every pool
+    /// member, existing and future — propagated into each member's
+    /// internal row-shard engines, so the trace path composes across
+    /// both sharding tiers (docs/BACKENDS.md §Compiled-trace backend).
+    pub fn set_trace_mode(&mut self, on: bool) {
+        self.trace = Some(on);
+        for m in &self.members {
+            m.lock().unwrap().set_trace_mode(on);
+        }
     }
 
     /// Pool members created so far.
@@ -206,7 +221,10 @@ impl ColShardedScheduler {
 
     fn ensure_members(&mut self, k: usize) {
         while self.members.len() < k {
-            let member = ShardedScheduler::with_threads(self.config, self.member_threads, 1);
+            let mut member = ShardedScheduler::with_threads(self.config, self.member_threads, 1);
+            if let Some(on) = self.trace {
+                member.set_trace_mode(on);
+            }
             self.members.push(Mutex::new(member));
             self.calls.push(AtomicU64::new(0));
         }

@@ -81,6 +81,13 @@ impl GemvScheduler {
         self.resident == Some((token, m, n, p, radix))
     }
 
+    /// Force the engine's compiled-trace replay mode on or off
+    /// (docs/BACKENDS.md §Compiled-trace backend). Numerics and
+    /// `ExecStats` are bit-identical either way.
+    pub fn set_trace_mode(&mut self, on: bool) {
+        self.engine.set_trace_mode(on);
+    }
+
     /// Run one GEMV: y = W @ x (exact int32 accumulation).
     pub fn gemv(
         &mut self,

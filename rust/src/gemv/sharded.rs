@@ -66,6 +66,9 @@ pub struct ShardedScheduler {
     calls: Vec<AtomicU64>,
     /// Slot remaps performed after member deaths.
     failovers: u64,
+    /// Forced compiled-trace replay mode for pool members (`None` =
+    /// each engine keeps its `IMAGINE_TRACE` default).
+    trace: Option<bool>,
 }
 
 impl ShardedScheduler {
@@ -91,11 +94,23 @@ impl ShardedScheduler {
             quarantined: Vec::new(),
             calls: Vec::new(),
             failovers: 0,
+            trace: None,
         }
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.config
+    }
+
+    /// Force compiled-trace replay mode on (or off) for every pool
+    /// member, existing and future — the trace backend's pool wiring
+    /// (docs/BACKENDS.md §Compiled-trace backend). Numerics and
+    /// `ExecStats` are bit-identical either way.
+    pub fn set_trace_mode(&mut self, on: bool) {
+        self.trace = Some(on);
+        for e in &self.engines {
+            e.lock().unwrap().set_trace_mode(on);
+        }
     }
 
     /// Pool members created so far.
@@ -193,6 +208,9 @@ impl ShardedScheduler {
             let idx = self.engines.len();
             let mut engine = Engine::with_threads(self.config, self.engine_threads);
             engine.set_fault_slot(idx);
+            if let Some(on) = self.trace {
+                engine.set_trace_mode(on);
+            }
             self.engines.push(Mutex::new(GemvScheduler::from_engine(self.config, engine)));
             self.calls.push(AtomicU64::new(0));
         }

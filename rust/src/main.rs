@@ -6,11 +6,12 @@
 //! imagine serve --requests 64 --workers 2 [--batch 16] [--backend auto]
 //! imagine devices
 //! imagine model --d 1024 --precision 8      # analytic latency point
-//! imagine lint [FILE...] [--corpus] [--small]   # static ISA verifier
+//! imagine lint [FILE...] [--corpus] [--small] [--cost]   # static ISA verifier
 //! ```
 //!
 //! `serve --backend` takes an execution-backend policy
-//! (`auto | native | sharded | col_sharded | golden | cross_check`);
+//! (`auto | native | sharded | col_sharded | trace | golden |
+//! cross_check`);
 //! `gemv --verify` needs a build with the `pjrt` feature and the AOT
 //! artifacts.
 
@@ -146,7 +147,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let Some(backend) = BackendPolicy::parse(&policy) else {
         eprintln!(
             "unknown backend policy '{policy}' \
-             (auto|native|sharded|col_sharded|golden|cross_check)"
+             (auto|native|sharded|col_sharded|trace|golden|cross_check)"
         );
         return 2;
     };
@@ -210,13 +211,16 @@ fn cmd_devices() -> i32 {
     0
 }
 
-/// `imagine lint [FILE...] [--corpus] [--small]`
+/// `imagine lint [FILE...] [--corpus] [--small] [--cost]`
 ///
 /// Runs the static ISA verifier ([`imagine::analysis`]) over programs
 /// and prints one report per program. Each FILE is a text listing of
 /// raw 30-bit instruction words, one hex word per line (`#` comments
 /// and blank lines ignored). `--corpus` lints every program the GEMV
-/// codegen emits for the built-in shape corpus instead. Exit status:
+/// codegen emits for the built-in shape corpus instead. `--cost`
+/// additionally prints the per-segment static cost schedule (cycles
+/// and plane-word ops per kernel segment — the exact schedule the
+/// compiled-trace backend replays, docs/BACKENDS.md). Exit status:
 /// 0 when every program is accepted (lints are advisory and do not
 /// fail the run unless `--strict` is given), 1 when any program is
 /// rejected (or flagged, under `--strict`), 2 on usage/parse errors.
@@ -226,6 +230,8 @@ fn cmd_lint(args: &Args) -> i32 {
         linted: usize,
         rejected: bool,
         flagged: bool,
+        /// Print each report's per-segment static cost schedule.
+        cost: bool,
     }
     impl Tally {
         fn show(&mut self, name: &str, report: &imagine::analysis::ProgramReport) {
@@ -233,12 +239,30 @@ fn cmd_lint(args: &Args) -> i32 {
             for line in report.to_string().lines() {
                 println!("  {line}");
             }
+            if self.cost {
+                let c = &report.cost;
+                println!(
+                    "  cost: total {} cycles ({} busy + {} fill), {} instr(s), \
+                     ~{} plane-word ops",
+                    c.cycles,
+                    c.cycles.saturating_sub(c.fill_latency),
+                    c.fill_latency,
+                    c.instrs,
+                    c.plane_word_ops
+                );
+                for (i, seg) in c.segments.iter().enumerate() {
+                    println!(
+                        "    segment {i}: instrs [{}, {}) — {} cycles, ~{} plane-word ops",
+                        seg.start, seg.end, seg.cycles, seg.plane_word_ops
+                    );
+                }
+            }
             self.linted += 1;
             self.rejected |= !report.accepts();
             self.flagged |= !report.is_clean();
         }
     }
-    let mut tally = Tally::default();
+    let mut tally = Tally { cost: args.has("cost"), ..Tally::default() };
     if args.has("corpus") {
         for entry in codegen_corpus() {
             for (label, report) in entry.gemv.verify_reports() {
@@ -248,7 +272,7 @@ fn cmd_lint(args: &Args) -> i32 {
     }
     let files = &args.positional[1..];
     if files.is_empty() && !args.has("corpus") {
-        eprintln!("usage: imagine lint [FILE...] [--corpus] [--small] [--strict]");
+        eprintln!("usage: imagine lint [FILE...] [--corpus] [--small] [--strict] [--cost]");
         return 2;
     }
     let config = if args.has("small") { EngineConfig::small() } else { EngineConfig::u55() };

@@ -20,6 +20,12 @@ impl Trace {
         Self::new(0)
     }
 
+    /// Whether this trace records anything — execution paths that skip
+    /// per-instruction bookkeeping (trace replay) are gated on this.
+    pub fn is_recording(&self) -> bool {
+        self.cap > 0
+    }
+
     pub fn push(&mut self, cycle: u64, instr: Instr) {
         if self.cap == 0 {
             return;

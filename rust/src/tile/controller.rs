@@ -157,6 +157,22 @@ impl Controller {
         Ok(cost)
     }
 
+    /// Commit a whole precomputed run in one step: the exit Op-Params,
+    /// busy-cycle total, and retired deltas a statically-verified
+    /// schedule derived by issuing the same stream through a fresh
+    /// controller (analysis::CostSummary). Leaves the controller in
+    /// the same state a per-instruction replay of a sealed program
+    /// would: halted, single-cycle driver (sealed streams end on the
+    /// single-cycle HALT).
+    pub fn commit_schedule(&mut self, exit_params: OpParams, busy_cycles: u64, retired: (u64, u64)) {
+        self.params = exit_params;
+        self.cycles += busy_cycles;
+        self.retired.0 += retired.0;
+        self.retired.1 += retired.1;
+        self.state = DriverState::Single;
+        self.halted = true;
+    }
+
     /// Fixed pipeline-fill latency before the first instruction reaches
     /// the PEs: top input register + enabled controller stages (the tile
     /// fanout tree adds its own; see `FanoutTree::latency`).

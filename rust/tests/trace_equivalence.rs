@@ -1,0 +1,166 @@
+//! Equivalence sweep for the compiled-trace execution backend
+//! (ISSUE 8): replaying a kernel's pre-resolved flat op stream with a
+//! precomputed cycle schedule must be *observably invisible* — `y`,
+//! `ExecStats.cycles`, `plane_word_ops`, the full stats struct and the
+//! column state bit-identical to the non-trace path — across sparsity
+//! (0%, ~3%, ~50%, 100% nonzero), precision, radix and thread count.
+//!
+//! The reference engine keeps its environment defaults, so under the
+//! normal CI leg this pins trace-vs-fused and under the
+//! `IMAGINE_FUSE=0`/`IMAGINE_SKIP=0` leg it pins trace-vs-interpreter
+//! — the trace path must match both.
+
+use imagine::backend::{BackendContext, CrossCheckBackend, ExecBackend};
+use imagine::coordinator::ModelRegistry;
+use imagine::engine::{Engine, EngineConfig, EngineError};
+use imagine::gemv::{plan, GemvProgram};
+use imagine::isa::{Instr, Program};
+use imagine::util::XorShift;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+/// `density_pct`% of entries nonzero (0 = all zero, 100 = none zero).
+fn sparse_vec(rng: &mut XorShift, n: usize, half: i64, density_pct: u64) -> Vec<i64> {
+    (0..n)
+        .map(|_| {
+            if density_pct > 0 && (density_pct >= 100 || rng.below(100) < density_pct) {
+                loop {
+                    let v = rng.range_i64(-half, half - 1);
+                    if v != 0 {
+                        break v;
+                    }
+                }
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn trace_bit_identical_across_densities() {
+    let config = EngineConfig::small();
+    // (m, n, p, radix, w density %, x density %, threads)
+    let cases = [
+        (40, 64, 8, 2, 100, 0, 1),
+        (40, 64, 8, 2, 100, 3, 4),
+        (40, 64, 8, 4, 100, 3, 4),
+        (33, 57, 4, 2, 50, 50, 4),
+        (33, 57, 4, 4, 3, 100, 1),
+        (64, 96, 8, 2, 3, 3, 4),
+        (64, 96, 12, 4, 50, 100, 4),
+        (16, 16, 2, 2, 100, 100, 1),
+        (8, 8, 8, 2, 0, 0, 1),
+    ];
+    let mut rng = XorShift::new(0x7A5C_E5C4);
+    for &(m, n, p, radix, wd, xd, threads) in &cases {
+        let tag = format!("m={m} n={n} p={p} r={radix} wd={wd}% xd={xd}% t={threads}");
+        let half = 1i64 << (p - 1);
+        let w = sparse_vec(&mut rng, m * n, half, wd);
+        let x = sparse_vec(&mut rng, n, half, xd);
+        let gp = GemvProgram::generate(plan(&config, m, n, p, radix));
+
+        // reference: the environment's default path (fused normally,
+        // per-instruction interpreter on the IMAGINE_FUSE=0 leg)
+        let mut r_eng = Engine::with_threads(config, 1);
+        r_eng.set_trace_mode(false);
+        let reference = gp.execute(&mut r_eng, &w, &x).unwrap();
+
+        // traced: compiled-trace replay, worker pool
+        let mut t_eng = Engine::with_threads(config, threads);
+        t_eng.set_trace_mode(true);
+        let traced = gp.execute(&mut t_eng, &w, &x).unwrap();
+
+        assert_eq!(traced.y, reference.y, "y diverged [{tag}]");
+        assert_eq!(
+            traced.stats.cycles, reference.stats.cycles,
+            "cycle schedule changed [{tag}]"
+        );
+        assert_eq!(
+            traced.stats.plane_word_ops, reference.stats.plane_word_ops,
+            "work metric changed [{tag}]"
+        );
+        assert_eq!(traced.stats, reference.stats, "ExecStats diverged [{tag}]");
+        assert_eq!(
+            r_eng.columns(),
+            t_eng.columns(),
+            "column state diverged [{tag}]"
+        );
+        assert_eq!(reference.y, host_gemv(&w, &x, m, n), "reference wrong [{tag}]");
+
+        // weight-resident replay (the serving fast path) must agree too
+        if gp.supports_residency() {
+            let hot_ref = gp.execute_opts(&mut r_eng, &w, &x, true).unwrap();
+            let hot_tr = gp.execute_opts(&mut t_eng, &w, &x, true).unwrap();
+            assert_eq!(hot_tr.y, hot_ref.y, "resident y diverged [{tag}]");
+            assert_eq!(hot_tr.stats, hot_ref.stats, "resident stats diverged [{tag}]");
+            assert_eq!(
+                r_eng.columns(),
+                t_eng.columns(),
+                "resident column state diverged [{tag}]"
+            );
+        }
+    }
+}
+
+/// A program the verifier rejects never lowers, so trace mode must
+/// fall back to the interpreter and surface the *same typed fault* —
+/// never a panic, never a silent wrong answer.
+#[test]
+fn faulting_programs_fall_back_to_the_interpreter_typed() {
+    let config = EngineConfig::small();
+    let bad_col: Program = [Instr::ldi(1, 3), Instr::selblk(99), Instr::halt()]
+        .into_iter()
+        .collect();
+    let alias: Program = [
+        Instr::ldi(1, 2),
+        Instr::ldi(2, 3),
+        Instr::mult(4, 4, 2),
+        Instr::halt(),
+    ]
+    .into_iter()
+    .collect();
+
+    let mut e = Engine::with_threads(config, 1);
+    e.set_trace_mode(true);
+    assert!(matches!(
+        e.execute(&bad_col),
+        Err(EngineError::BadColumn(99, _))
+    ));
+    assert!(matches!(
+        e.execute(&alias),
+        Err(EngineError::RegAlias { rd: 4, .. })
+    ));
+    // the engine stays serviceable after the faults
+    let ok: Program = [Instr::ldi(1, 5), Instr::halt()].into_iter().collect();
+    e.execute(&ok).unwrap();
+}
+
+/// The explicit cross-check pairing: the trace backend served against
+/// the fused-interpreter reference must report zero element-wise
+/// mismatches — on the native shape and on the sharded promotion.
+#[test]
+fn cross_check_pairs_trace_against_fused_clean() {
+    let ctx = BackendContext::new(EngineConfig::small(), 8, 2);
+    let xc = CrossCheckBackend::trace(&ctx);
+    assert_eq!(xc.name(), "cross_check");
+    let reg = ModelRegistry::default();
+    let mut rng = XorShift::new(0xC4_05);
+    // 48x64 runs native; 768x64 promotes to row shards on the primary
+    reg.register_gemv("small", rng.vec_i64(48 * 64, -100, 100), 48, 64).unwrap();
+    reg.register_gemv("tall", rng.vec_i64(768 * 64, -16, 15), 768, 64).unwrap();
+    for name in ["small", "tall"] {
+        let model = reg.get(name).unwrap();
+        let n = model.input_dim();
+        let prep = xc.prepare(&model).unwrap();
+        let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -64, 63)).collect();
+        for r in xc.execute_batch(&prep, &xs) {
+            let r = r.unwrap();
+            assert_eq!(r.mismatches, 0, "trace disagreed with fused [{name}]");
+        }
+    }
+}
