@@ -136,7 +136,10 @@ fn main() {
     let macs = if smoke() { 4 } else { 16 };
     let prog = mac_program(macs);
 
+    // trace replay is the engine default now; these legs bench the
+    // dispatch tiers underneath it, so each pins its own mode
     let mut serial = Engine::with_threads(cfg, 1);
+    serial.set_trace_mode(false);
     stage_operands(&mut serial, 21);
     let ms = bench("engine mac-burst, serial", warm, iters, || {
         black_box(serial.execute(&prog).unwrap().cycles)
@@ -144,6 +147,7 @@ fn main() {
     println!("{}", ms.report());
 
     let mut parallel = Engine::new(cfg);
+    parallel.set_trace_mode(false);
     stage_operands(&mut parallel, 21);
     let threads = parallel.threads();
     let mp = bench(
@@ -165,6 +169,7 @@ fn main() {
     println!("\n== fused column-kernel dispatch ==");
     let mut interp = Engine::new(cfg);
     interp.set_fuse(false);
+    interp.set_trace_mode(false);
     stage_operands(&mut interp, 21);
     let mi = bench("engine mac-burst, per-instruction dispatch", warm, iters, || {
         black_box(interp.execute(&prog).unwrap().cycles)
@@ -173,6 +178,7 @@ fn main() {
 
     let mut fused = Engine::new(cfg);
     fused.set_fuse(true);
+    fused.set_trace_mode(false);
     stage_operands(&mut fused, 21);
     let mf = bench("engine mac-burst, fused kernel replay", warm, iters, || {
         black_box(fused.execute(&prog).unwrap().cycles)
@@ -214,6 +220,7 @@ fn main() {
     println!("\n== occupancy-aware plane skipping (sparse activations) ==");
     let mut sparse_ref = Engine::new(cfg);
     sparse_ref.set_fuse(true);
+    sparse_ref.set_trace_mode(false);
     stage_sparse_x(&mut sparse_ref, 33, 3);
     alu::set_skip(false);
     let mno = bench("mac-burst, sparse x (~3%), skip off", warm, iters, || {
@@ -223,6 +230,7 @@ fn main() {
 
     let mut sparse_opt = Engine::new(cfg);
     sparse_opt.set_fuse(true);
+    sparse_opt.set_trace_mode(false);
     stage_sparse_x(&mut sparse_opt, 33, 3);
     alu::set_skip(true);
     let myes = bench("mac-burst, sparse x (~3%), skip on", warm, iters, || {

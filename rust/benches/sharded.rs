@@ -11,9 +11,14 @@
 //! (`BENCH_SMOKE=1` for the reduced CI run.)
 
 use imagine::engine::EngineConfig;
-use imagine::gemv::{plan, plan_shards, GemvOutcome, GemvScheduler, ShardedScheduler};
+use imagine::gemv::{
+    col_work_estimates, imbalance_milli, plan, plan_col_shards_k, plan_col_shards_k_weighted,
+    plan_shards, plan_shards_k, plan_shards_k_weighted, row_work_estimates, ColShardedScheduler,
+    GemvOutcome, GemvScheduler, ShardedScheduler,
+};
 use imagine::util::bench::{bench, black_box, smoke, BenchSink};
 use imagine::util::{Json, XorShift};
+use std::time::Instant;
 
 /// Oversized serving shape: 768 rows on a 384-lane x 16-column engine
 /// is 2 row passes solo (no residency) and exactly 2 resident shards.
@@ -112,6 +117,117 @@ fn main() {
         single_us / resident_us,
     );
 
+    // --- occupancy-skew shapes: weighted vs geometric balancing ---
+    // Column-structured row skew (the shape occupancy skipping can
+    // exploit): the top M/8 rows are fully dense, the rest are nonzero
+    // only in the first N/8 columns. The geometric split gives one
+    // member almost all the plane work; the weighted split divides it
+    // (docs/PERF.md §Occupancy-weighted shard balancing). Under
+    // IMAGINE_SKIP=0 the planner falls back to geometric, so the two
+    // plans — and both measured rows — coincide.
+    // sparse rows keep N/8 dense columns: with this ratio the tallest
+    // weighted shard stays ~360 rows < the 384-lane single-pass
+    // ceiling, so every member of the forced K=4 plan stays resident
+    let skew_k = 4usize;
+    let mut w_skew = vec![0i64; M * N];
+    for r in 0..M {
+        let cols = if r < M / 8 { N } else { N / 8 };
+        let vals = rng.vec_i64(cols, -half, half - 1);
+        w_skew[r * N..r * N + cols].copy_from_slice(&vals);
+    }
+    let row_est = row_work_estimates(&w_skew, M, N);
+    let geo_sp = plan_shards_k(M, N, P, 2, skew_k);
+    let wtd_sp = plan_shards_k_weighted(M, N, P, 2, skew_k, Some(&row_est));
+    assert!(
+        wtd_sp.shards.iter().all(|s| plan(&cfg, s.rows, N, P, 2).is_single_pass()),
+        "weighted skew shards must stay resident"
+    );
+    let skew_host: Vec<i64> = (0..M)
+        .map(|r| (0..N).map(|j| w_skew[r * N + j] * xs[0][j]).sum())
+        .collect();
+    let mut skew_pool = ShardedScheduler::new(cfg);
+    // warm each plan to residency (distinct tokens: the boundaries
+    // differ) and read the hot batch's measured per-member work
+    let mut hot_work = |sp: &imagine::gemv::ShardPlan, token: u64| -> u64 {
+        for _ in 0..2 {
+            let out = skew_pool.run_plan(sp, token, &w_skew, &xrefs);
+            assert_eq!(out[0].as_ref().unwrap().0, skew_host, "skew plan must stay exact");
+            for r in out {
+                black_box(r.unwrap().1.cycles);
+            }
+        }
+        imbalance_milli(skew_pool.last_shard_work())
+    };
+    let geo_imb = hot_work(&geo_sp, 500);
+    let wtd_imb = hot_work(&wtd_sp, 501);
+    println!(
+        "skew {M}x{N} K={skew_k}: measured work imbalance (max/mean x1000) \
+         geometric {geo_imb}   weighted {wtd_imb}"
+    );
+
+    // best-of-3 resident throughput under the weighted plan — the
+    // gated row (max over runs: stable estimator on noisy runners)
+    let skew_iters = if smoke() { 2u32 } else { 6 };
+    let skew_reqps = (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..skew_iters {
+                for r in skew_pool.run_plan(&wtd_sp, 501, &w_skew, &xrefs) {
+                    black_box(r.unwrap().0[0]);
+                }
+            }
+            (skew_iters as usize * BATCH) as f64 / t0.elapsed().as_secs_f64()
+        })
+        .fold(0.0, f64::max);
+    println!("skew sharded resident: {skew_reqps:.0} req/s (weighted plan)");
+
+    // column tier: dense-left column skew (first quarter of the
+    // columns dense, the rest zero); per-column estimates are exact
+    // for the column tier, so the weighted boundaries track the work
+    let (mc, nc) = (64usize, 1024usize);
+    let mut wc_skew = vec![0i64; mc * nc];
+    for r in 0..mc {
+        let vals = rng.vec_i64(nc / 4, -half, half - 1);
+        wc_skew[r * nc..r * nc + nc / 4].copy_from_slice(&vals);
+    }
+    let col_est = col_work_estimates(&wc_skew, mc, nc);
+    let geo_cp = plan_col_shards_k(mc, nc, P, 2, skew_k);
+    let wtd_cp = plan_col_shards_k_weighted(mc, nc, P, 2, skew_k, Some(&col_est));
+    let xc: Vec<Vec<i64>> = (0..BATCH).map(|_| rng.vec_i64(nc, -half, half - 1)).collect();
+    let xc_refs: Vec<&[i64]> = xc.iter().map(|x| x.as_slice()).collect();
+    let col_host: Vec<i64> = (0..mc)
+        .map(|r| (0..nc).map(|j| wc_skew[r * nc + j] * xc[0][j]).sum())
+        .collect();
+    let mut col_pool = ColShardedScheduler::with_threads(cfg, skew_k, 1);
+    let mut col_hot = |cp: &imagine::gemv::ColShardPlan, token: u64| -> u64 {
+        for _ in 0..2 {
+            let out = col_pool.run_plan(cp, token, &wc_skew, &xc_refs);
+            assert_eq!(out[0].as_ref().unwrap().0, col_host, "col skew plan must stay exact");
+            for r in out {
+                black_box(r.unwrap().1.cycles);
+            }
+        }
+        imbalance_milli(col_pool.last_slice_work())
+    };
+    let col_geo_imb = col_hot(&geo_cp, 600);
+    let col_wtd_imb = col_hot(&wtd_cp, 601);
+    println!(
+        "col skew {mc}x{nc} K={skew_k}: measured work imbalance \
+         geometric {col_geo_imb}   weighted {col_wtd_imb}"
+    );
+    let col_skew_reqps = (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..skew_iters {
+                for r in col_pool.run_plan(&wtd_cp, 601, &wc_skew, &xc_refs) {
+                    black_box(r.unwrap().0[0]);
+                }
+            }
+            (skew_iters as usize * BATCH) as f64 / t0.elapsed().as_secs_f64()
+        })
+        .fold(0.0, f64::max);
+    println!("col skew sharded resident: {col_skew_reqps:.0} req/s (weighted plan)");
+
     // anchor at the workspace root regardless of the bench's cwd
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let mut sink = BenchSink::load(path);
@@ -130,6 +246,16 @@ fn main() {
             ("single_plane_ops_per_batch", Json::num(single_ops as f64)),
             ("sharded_cold_plane_ops_per_batch", Json::num(cold_ops as f64)),
             ("sharded_resident_plane_ops_per_batch", Json::num(resident_ops as f64)),
+            // gated (best-of-3, *reqps rule): resident throughput on
+            // the skewed shapes under occupancy-weighted plans
+            ("sharded_skew_reqps", Json::num(skew_reqps)),
+            ("col_sharded_skew_reqps", Json::num(col_skew_reqps)),
+            // informational (names dodge the reqps/plane_ops gate
+            // patterns): measured max/mean work ratio x1000 per plan
+            ("shard_imbalance_weighted_milli", Json::num(wtd_imb as f64)),
+            ("shard_imbalance_geometric_milli", Json::num(geo_imb as f64)),
+            ("col_shard_imbalance_weighted_milli", Json::num(col_wtd_imb as f64)),
+            ("col_shard_imbalance_geometric_milli", Json::num(col_geo_imb as f64)),
             ("smoke", Json::Bool(smoke())),
         ]),
     );

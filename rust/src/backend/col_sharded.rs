@@ -20,7 +20,9 @@ use super::{
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::col_sharded::ColShardedScheduler;
-use crate::gemv::mapper::{plan_col_shards_checked, plan_col_shards_k};
+use crate::gemv::mapper::{
+    col_work_estimates, imbalance_milli, plan_col_shards_checked_weighted, plan_col_shards_k,
+};
 use std::sync::Mutex;
 
 pub struct ColShardedBackend {
@@ -71,9 +73,18 @@ impl ExecBackend for ColShardedBackend {
                 backend: "col_sharded",
                 what: "mlp models (column-sharding applies to one weight matrix)",
             }),
-            Model::Gemv { m, n, .. } => {
-                let planned =
-                    plan_col_shards_checked(&self.engine, *m, *n, self.precision, self.radix);
+            Model::Gemv { w, m, n, .. } => {
+                // occupancy-weighted boundaries (geometric fallback
+                // inside the planner when skipping is off/infeasible)
+                let est = col_work_estimates(w, *m, *n);
+                let planned = plan_col_shards_checked_weighted(
+                    &self.engine,
+                    *m,
+                    *n,
+                    self.precision,
+                    self.radix,
+                    Some(&est),
+                );
                 let cp = match planned? {
                     Some(cp) => cp,
                     // the row tier (or one engine) already serves this
@@ -131,9 +142,11 @@ impl ExecBackend for ColShardedBackend {
         let resident = sched.is_resident(id, cp);
         let reduce_adds = cp.reduce_adds();
         let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
-        sched
-            .run_plan(cp, id, w, &xrefs)
-            .into_iter()
+        let out = sched.run_plan(cp, id, w, &xrefs);
+        // group-level measured balance: max/mean of per-slice plane
+        // visits, 0 when the plan ran as a single slice
+        let imbalance = if cp.k() > 1 { imbalance_milli(sched.last_slice_work()) } else { 0 };
+        out.into_iter()
             .map(|r| {
                 r.map(|(y, stats)| BackendResult {
                     y,
@@ -141,6 +154,7 @@ impl ExecBackend for ColShardedBackend {
                     resident,
                     mismatches: 0,
                     reduce_adds,
+                    shard_imbalance_milli: imbalance,
                     backend: "col_sharded",
                     degraded: false,
                 })

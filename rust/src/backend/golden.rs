@@ -172,6 +172,7 @@ mod enabled {
                             resident: false,
                             mismatches: 0,
                             reduce_adds: 0,
+                            shard_imbalance_milli: 0,
                             backend: "golden",
                             degraded: false,
                         })

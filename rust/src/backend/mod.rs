@@ -54,7 +54,10 @@ pub use trace::TraceBackend;
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::codegen::GemvError;
-use crate::gemv::mapper::{plan_col_shards_checked, plan_shards_checked, ColShardPlan, ShardPlan};
+use crate::gemv::mapper::{
+    col_work_estimates, plan_col_shards_checked_weighted, plan_shards_checked_weighted,
+    row_work_estimates, ColShardPlan, ShardPlan,
+};
 use crate::sim::ExecStats;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -213,6 +216,12 @@ pub struct BackendResult {
     /// 0 everywhere else). Host arithmetic, so it is reported here
     /// instead of inside the engine work metric.
     pub reduce_adds: u64,
+    /// Measured per-member work imbalance of the sharded batch this
+    /// request rode in: max/mean of the members' plane-word visits,
+    /// x1000 (1000 = perfectly balanced). 0 when the request ran
+    /// unsharded or the backend does not measure (golden). Group-level:
+    /// every request in a fused group reports the same value.
+    pub shard_imbalance_milli: u64,
     /// Name of the backend that produced `y`.
     pub backend: &'static str,
     /// Graceful degradation: true when the preferred (sharded) path
@@ -295,6 +304,16 @@ pub enum Selection {
 /// each slice). Only a model exceeding the aggregate BRAM of
 /// [`MAX_SHARDS`](crate::gemv::mapper::MAX_SHARDS) slices remains a
 /// typed [`GemvError::Unshardable`] — never a silent multi-pass.
+///
+/// Sharded plans are occupancy-weighted: the model's quantized weights
+/// feed [`row_work_estimates`]/[`col_work_estimates`], so partition
+/// boundaries equalize estimated `plane_word_ops` instead of row or
+/// column counts (geometric fallback when occupancy skipping is off —
+/// work *is* the row count then — or the weighted split is
+/// infeasible). Prepare-time only: the O(m*n) estimator pass runs once
+/// per fused group, never per request — one scalar pass over the
+/// weights, strictly cheaper than serving a single request of the
+/// group (each request pays m*n MACs).
 pub fn select(
     model: &Model,
     engine: &EngineConfig,
@@ -303,12 +322,21 @@ pub fn select(
 ) -> Result<Selection, GemvError> {
     match model {
         Model::Mlp { .. } => Ok(Selection::Native),
-        Model::Gemv { m, n, .. } => {
-            match plan_shards_checked(engine, *m, *n, precision, radix) {
+        Model::Gemv { w, m, n, .. } => {
+            let row_est = row_work_estimates(w, *m, *n);
+            match plan_shards_checked_weighted(engine, *m, *n, precision, radix, Some(&row_est)) {
                 Ok(None) => Ok(Selection::Native),
                 Ok(Some(sp)) => Ok(Selection::Sharded(sp)),
                 Err(row_err) => {
-                    match plan_col_shards_checked(engine, *m, *n, precision, radix)? {
+                    let col_est = col_work_estimates(w, *m, *n);
+                    match plan_col_shards_checked_weighted(
+                        engine,
+                        *m,
+                        *n,
+                        precision,
+                        radix,
+                        Some(&col_est),
+                    )? {
                         Some(cp) => Ok(Selection::ColSharded(cp)),
                         // unreachable in practice: the column planner
                         // returns `Ok(None)` only when the row tier

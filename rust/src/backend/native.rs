@@ -91,6 +91,7 @@ impl ExecBackend for NativeBackend {
                             resident,
                             mismatches: 0,
                             reduce_adds: 0,
+                            shard_imbalance_milli: 0,
                             backend: "native",
                             degraded: false,
                         })
@@ -111,6 +112,7 @@ impl ExecBackend for NativeBackend {
                             resident: false,
                             mismatches: 0,
                             reduce_adds: 0,
+                            shard_imbalance_milli: 0,
                             backend: "native",
                             degraded: false,
                         })

@@ -18,7 +18,9 @@ use super::{
 };
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
-use crate::gemv::mapper::{plan_shards_checked, plan_shards_k};
+use crate::gemv::mapper::{
+    imbalance_milli, plan_shards_checked_weighted, plan_shards_k, row_work_estimates,
+};
 use crate::gemv::sharded::ShardedScheduler;
 use std::sync::Mutex;
 
@@ -69,8 +71,18 @@ impl ExecBackend for ShardedBackend {
                 backend: "sharded",
                 what: "mlp models (row-sharding applies to one weight matrix)",
             }),
-            Model::Gemv { m, n, .. } => {
-                let planned = plan_shards_checked(&self.engine, *m, *n, self.precision, self.radix);
+            Model::Gemv { w, m, n, .. } => {
+                // occupancy-weighted boundaries (geometric fallback
+                // inside the planner when skipping is off/infeasible)
+                let est = row_work_estimates(w, *m, *n);
+                let planned = plan_shards_checked_weighted(
+                    &self.engine,
+                    *m,
+                    *n,
+                    self.precision,
+                    self.radix,
+                    Some(&est),
+                );
                 let sp = match planned? {
                     Some(sp) => sp,
                     // already single-pass on one engine: run as one
@@ -126,9 +138,11 @@ impl ExecBackend for ShardedBackend {
         });
         let resident = sched.is_resident(id, sp);
         let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
-        sched
-            .run_plan(sp, id, w, &xrefs)
-            .into_iter()
+        let out = sched.run_plan(sp, id, w, &xrefs);
+        // group-level measured balance: max/mean of per-member plane
+        // visits, 0 when the plan ran as a single shard
+        let imbalance = if sp.k() > 1 { imbalance_milli(sched.last_shard_work()) } else { 0 };
+        out.into_iter()
             .map(|r| {
                 r.map(|(y, stats)| BackendResult {
                     y,
@@ -136,6 +150,7 @@ impl ExecBackend for ShardedBackend {
                     resident,
                     mismatches: 0,
                     reduce_adds: 0,
+                    shard_imbalance_milli: imbalance,
                     backend: "sharded",
                     degraded: false,
                 })

@@ -57,6 +57,12 @@ pub struct Metrics {
     /// Requests shed before execution because their deadline had
     /// already passed when their group was scheduled.
     pub deadline_misses: AtomicU64,
+    /// Measured work imbalance (max/mean x1000, 1000 = balanced) of
+    /// the most recent sharded fused group — a gauge sampled from
+    /// `BackendResult::shard_imbalance_milli`, 0 until a sharded group
+    /// runs. Observability for the occupancy-weighted shard planner
+    /// (docs/PERF.md §Occupancy-weighted shard balancing).
+    pub shard_imbalance_milli: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -80,6 +86,8 @@ pub struct MetricsSnapshot {
     pub quarantined_engines: u64,
     pub degraded_responses: u64,
     pub deadline_misses: u64,
+    /// Last sharded group's measured work imbalance (max/mean x1000).
+    pub shard_imbalance_milli: u64,
     /// Faults the active [`FaultPlan`](crate::sim::fault::FaultPlan)
     /// has injected process-wide (0 when `IMAGINE_FAULT` is unset and
     /// no scoped plan is installed). Sampled at snapshot time from the
@@ -113,6 +121,7 @@ impl Metrics {
             quarantined_engines: self.quarantined_engines.load(Ordering::Relaxed),
             degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            shard_imbalance_milli: self.shard_imbalance_milli.load(Ordering::Relaxed),
             faults_injected: crate::sim::fault::global()
                 .map(|f| f.counts().injected)
                 .unwrap_or(0),
@@ -202,12 +211,14 @@ mod tests {
         m.cross_check_mismatches.fetch_add(1, Ordering::Relaxed);
         m.col_sharded_groups.fetch_add(3, Ordering::Relaxed);
         m.host_reduce_adds.fetch_add(96, Ordering::Relaxed);
+        m.shard_imbalance_milli.store(1250, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(
             (s.residency_hits, s.cross_checked, s.cross_check_mismatches),
             (2, 5, 1)
         );
         assert_eq!((s.col_sharded_groups, s.host_reduce_adds), (3, 96));
+        assert_eq!(s.shard_imbalance_milli, 1250);
     }
 
     #[test]

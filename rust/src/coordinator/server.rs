@@ -485,6 +485,13 @@ fn execute_batch(
             if first_ok.backend == "col_sharded" {
                 metrics.col_sharded_groups.fetch_add(1, Ordering::Relaxed);
             }
+            // gauge, not a counter: the last sharded group's measured
+            // max/mean work ratio (0 = the group ran unsharded)
+            if first_ok.shard_imbalance_milli > 0 {
+                metrics
+                    .shard_imbalance_milli
+                    .store(first_ok.shard_imbalance_milli, Ordering::Relaxed);
+            }
         }
         let reduce_adds: u64 = results
             .iter()

@@ -91,6 +91,14 @@ impl ColumnArray {
         }
     }
 
+    /// Drain every column's measured-work counter (plane-word visits,
+    /// see [`AluScratch::take_work`]) and return the sum. Safe to call
+    /// between dispatches: `ThreadPool::run` joins before returning, so
+    /// no worker holds a scratch when this runs.
+    pub fn take_alu_work(&mut self) -> u64 {
+        self.scratch.iter_mut().map(|s| s.take_work()).sum()
+    }
+
     /// Adjacent column pair for the east->west accumulation barrier:
     /// `(west = cols[c], east = cols[c + 1])` plus the west scratch.
     pub fn hop_pair_mut(&mut self, c: usize) -> (&mut PlaneBuf, &mut PlaneBuf, &mut AluScratch) {

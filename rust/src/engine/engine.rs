@@ -110,10 +110,18 @@ pub struct Engine {
     fuse: bool,
     /// Compiled-trace execution: replay the flat op stream with the
     /// precomputed cycle schedule — zero controller round-trips
-    /// (docs/BACKENDS.md "Compiled-trace backend"; `IMAGINE_TRACE=1`
-    /// sets the process default, the `trace` backend policy sets it
-    /// per engine).
+    /// (docs/BACKENDS.md "Compiled-trace backend"). Default **on**
+    /// since PR 9; `IMAGINE_TRACE=0` restores the fused/interpreted
+    /// paths process-wide and the backend policies set it per engine.
     trace_mode: bool,
+    /// Cumulative measured ALU work (plane-word visits, drained from
+    /// the column scratches) — the occupancy-*dependent* counterpart
+    /// of `ExecStats::plane_word_ops`, which is cycle-derived and
+    /// deliberately identical across skip on/off. The sharded
+    /// schedulers difference this around each member dispatch to
+    /// observe real per-shard load (docs/PERF.md "Occupancy-weighted
+    /// shard balancing").
+    alu_work: u64,
     /// Lowered kernels, keyed by program fingerprint + entry state.
     kernels: HashMap<KernelKey, KernelSlot>,
     /// Identity of this engine for the fault-injection stall seam
@@ -145,7 +153,8 @@ impl Engine {
             stats: ExecStats::default(),
             trace: Trace::off(),
             fuse: crate::util::env_flag("IMAGINE_FUSE", true),
-            trace_mode: crate::util::env_flag("IMAGINE_TRACE", false),
+            trace_mode: crate::util::env_flag("IMAGINE_TRACE", true),
+            alu_work: 0,
             kernels: HashMap::new(),
             fault_slot: 0,
         }
@@ -172,9 +181,10 @@ impl Engine {
     /// Toggle compiled-trace execution: lowered programs replay as a
     /// flat op stream with `ExecStats` committed from the precomputed
     /// cycle schedule (bit-identical to the interpreter; see
-    /// `engine::trace`). Programs that refuse to lower, runs below the
-    /// kernel's `min_entry_fifo` gate, and engines with instruction
-    /// tracing enabled all fall back exactly as the fused path does.
+    /// `engine::trace`). On by default (`IMAGINE_TRACE=0` opts out).
+    /// Programs that refuse to lower, runs below the kernel's
+    /// `min_entry_fifo` gate, and engines with instruction tracing
+    /// enabled all fall back exactly as the fused path does.
     pub fn set_trace_mode(&mut self, on: bool) {
         self.trace_mode = on;
     }
@@ -197,6 +207,16 @@ impl Engine {
 
     pub fn stats(&self) -> &ExecStats {
         &self.stats
+    }
+
+    /// Cumulative measured ALU work: plane-words the bit-serial inner
+    /// loops actually visited since construction (or [`Engine::reset`]).
+    /// Unlike `plane_word_ops` this shrinks under occupancy skipping,
+    /// so differencing it around a dispatch measures real shard load.
+    /// `&mut` because it drains the column scratch counters first.
+    pub fn alu_work(&mut self) -> u64 {
+        self.alu_work += self.columns.take_alu_work();
+        self.alu_work
     }
 
     pub fn controller(&self) -> &Controller {
@@ -233,6 +253,8 @@ impl Engine {
         self.staged_words = 0;
         self.controller = Controller::new(self.config.stages);
         self.stats = ExecStats::default();
+        self.columns.take_alu_work();
+        self.alu_work = 0;
     }
 
     fn selected(&self) -> std::ops::Range<usize> {
@@ -361,6 +383,7 @@ impl Engine {
         run.plane_word_ops =
             self.estimate_plane_ops(&run) + std::mem::take(&mut self.staged_words);
         self.stats.merge(&run);
+        self.alu_work += self.columns.take_alu_work();
         run
     }
 
@@ -758,7 +781,11 @@ mod tests {
     use crate::isa::Instr;
 
     fn small() -> Engine {
-        Engine::new(EngineConfig::small())
+        let mut e = Engine::new(EngineConfig::small());
+        // these tests target the fused/interpreter paths; pin the
+        // (default-on) trace tier off so they keep exercising them
+        e.set_trace_mode(false);
+        e
     }
 
     #[test]
@@ -887,8 +914,10 @@ mod tests {
         let cfg = EngineConfig::small();
         let mut interp = Engine::new(cfg);
         interp.set_fuse(false);
+        interp.set_trace_mode(false);
         let mut fused = Engine::new(cfg);
         fused.set_fuse(true);
+        fused.set_trace_mode(false);
         let lanes = interp.pe_rows();
         for e in [&mut interp, &mut fused] {
             for c in 0..e.block_cols() {
@@ -947,7 +976,7 @@ mod tests {
             .collect();
         assert_fused_matches_interp(&[p1.clone(), p2.clone()]);
         // and the fused engine's own semantics are right in absolute terms
-        let mut e = Engine::new(EngineConfig::small());
+        let mut e = small();
         e.set_fuse(true);
         e.execute(&p1).unwrap();
         e.execute(&p2).unwrap();
@@ -1050,6 +1079,7 @@ mod tests {
         let cfg = EngineConfig::small();
         let mut interp = Engine::new(cfg);
         interp.set_fuse(false);
+        interp.set_trace_mode(false);
         let mut traced = Engine::new(cfg);
         traced.set_fuse(false);
         traced.set_trace_mode(true);

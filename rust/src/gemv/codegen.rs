@@ -452,10 +452,14 @@ mod tests {
         let config = EngineConfig::small();
         let pl = plan(&config, 48, 64, 8, 2);
         let gp = GemvProgram::generate(pl);
+        // pin the default-on trace tier off: this test compares the
+        // two dispatch paths *underneath* it
         let mut fused = Engine::new(config);
         fused.set_fuse(true);
+        fused.set_trace_mode(false);
         let mut interp = Engine::new(config);
         interp.set_fuse(false);
+        interp.set_trace_mode(false);
         let mut rng = XorShift::new(41);
         let w = rng.vec_i64(48 * 64, -128, 127);
         let x = rng.vec_i64(64, -128, 127);

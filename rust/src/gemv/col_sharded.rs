@@ -63,14 +63,21 @@ pub struct ColShardedScheduler {
     members: Vec<Mutex<ShardedScheduler>>,
     /// Per-slice merged stats of the last column-sharded batch.
     slice_stats: Vec<ExecStats>,
+    /// Per-slice measured ALU work (plane-word visits) of the last
+    /// column-sharded batch — feeds the `shard_imbalance` metric.
+    slice_work: Vec<u64>,
     /// Host-side reduction adds performed by the last batch (summing K
     /// partial vectors costs (K-1) * m adds per request).
     reduce_adds: u64,
     /// One-slot cache of the resident model's sliced weights, keyed by
-    /// residency token: re-slicing an `m x n` matrix on every hot batch
-    /// would cost O(m * n) host copies per call for a model whose whole
-    /// point is that nothing but vectors move.
-    sliced: Option<(u64, Vec<Vec<i64>>)>,
+    /// residency token AND the slice plan's boundary hash: re-slicing
+    /// an `m x n` matrix on every hot batch would cost O(m * n) host
+    /// copies per call for a model whose whole point is that nothing
+    /// but vectors move. The plan hash matters: a replan for the same
+    /// token with different boundaries (occupancy-weighted planning
+    /// after a quarantine/failover, a forced-K test plan) must rebuild
+    /// — a token-only key would serve stale column ranges.
+    sliced: Option<(u64, u64, Vec<Vec<i64>>)>,
     /// Logical slice slot -> physical member (identity until failover).
     assign: Vec<usize>,
     /// Physical members quarantined after a death.
@@ -103,6 +110,7 @@ impl ColShardedScheduler {
             pool: (extra > 0).then(|| ThreadPool::new(extra)),
             members: Vec::new(),
             slice_stats: Vec::new(),
+            slice_work: Vec::new(),
             reduce_adds: 0,
             sliced: None,
             assign: Vec::new(),
@@ -138,6 +146,14 @@ impl ColShardedScheduler {
     /// equals the sum over the batch's per-vector outcome stats.
     pub fn last_slice_stats(&self) -> &[ExecStats] {
         &self.slice_stats
+    }
+
+    /// Per-slice *measured* ALU work of the last column-sharded batch
+    /// (empty after an unsharded fallback or a failed batch) — the
+    /// column tier's analog of
+    /// [`ShardedScheduler::last_shard_work`].
+    pub fn last_slice_work(&self) -> &[u64] {
+        &self.slice_work
     }
 
     /// Host-side reduction adds of the last column-sharded batch
@@ -230,14 +246,35 @@ impl ColShardedScheduler {
         }
     }
 
+    /// FNV-1a over the plan's shape and slice boundaries. Two plans for
+    /// the same token can differ (weighted vs geometric boundaries,
+    /// forced-K test plans), and the sliced-weight cache must miss when
+    /// they do — same slice *count* is not enough.
+    fn plan_hash(cp: &ColShardPlan) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        mix(cp.m as u64);
+        mix(cp.n as u64);
+        for sl in &cp.slices {
+            mix(sl.col0 as u64);
+            mix(sl.cols as u64);
+        }
+        h
+    }
+
     /// Build (or reuse) the per-slice weight copies for `token`. The
     /// caller contract matches the row tier: one token always maps to
-    /// one (weights, plan) pair, so a token hit can reuse the slices.
+    /// one weight matrix, so a (token, plan-hash) hit can reuse the
+    /// slices.
     fn ensure_sliced(&mut self, cp: &ColShardPlan, token: u64, w: &[i64]) {
+        let hash = Self::plan_hash(cp);
         let hit = self
             .sliced
             .as_ref()
-            .is_some_and(|(t, v)| *t == token && v.len() == cp.slices.len());
+            .is_some_and(|(t, h, _)| *t == token && *h == hash);
         if hit {
             return;
         }
@@ -253,7 +290,7 @@ impl ColShardedScheduler {
                 ws
             })
             .collect();
-        self.sliced = Some((token, slices));
+        self.sliced = Some((token, hash, slices));
     }
 
     /// Run a fused multi-vector GEMV, column-sharding across the pool
@@ -277,6 +314,7 @@ impl ColShardedScheduler {
             Some(cp) => self.run_plan(&cp, token, w, xs),
             None => {
                 self.slice_stats.clear();
+                self.slice_work.clear();
                 self.reduce_adds = 0;
                 self.ensure_assign(1);
                 let phys = self.assign[0];
@@ -333,6 +371,7 @@ impl ColShardedScheduler {
         let k = cp.slices.len();
         let (m, n, p, radix) = (cp.m, cp.n, cp.precision, cp.radix);
         self.slice_stats.clear();
+        self.slice_work.clear();
         self.reduce_adds = 0;
         if w.len() != m * n {
             return xs
@@ -375,6 +414,13 @@ impl ColShardedScheduler {
                     .collect();
             }
             self.ensure_members(max_phys + 1);
+            // Snapshot each slice member's cumulative ALU work so the
+            // post-batch delta is this batch's measured per-slice work.
+            // Re-taken per failover iteration: a re-run must not count
+            // the aborted attempt's work against the surviving members.
+            let work_before: Vec<u64> = (0..k)
+                .map(|i| self.members[self.assign[i]].lock().unwrap().total_alu_work())
+                .collect();
             let slots: Vec<Mutex<Vec<GemvOutcome>>> =
                 (0..k).map(|_| Mutex::new(Vec::new())).collect();
             let dead: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
@@ -382,7 +428,7 @@ impl ColShardedScheduler {
                 let members = &self.members;
                 let calls = &self.calls;
                 let assign = &self.assign;
-                let (_, sliced) = self.sliced.as_ref().expect("sliced weights just ensured");
+                let (_, _, sliced) = self.sliced.as_ref().expect("sliced weights just ensured");
                 let slices = &cp.slices;
                 let faults = fault::global();
                 let run_slice = |i: usize| {
@@ -416,6 +462,13 @@ impl ColShardedScheduler {
             }
             let mut died = dead.into_inner().unwrap();
             if died.is_empty() {
+                self.slice_work = (0..k)
+                    .map(|i| {
+                        let now =
+                            self.members[self.assign[i]].lock().unwrap().total_alu_work();
+                        now.saturating_sub(work_before[i])
+                    })
+                    .collect();
                 break slots;
             }
             // Failover: quarantine dead members, remap, re-run.
@@ -479,7 +532,9 @@ impl ColShardedScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gemv::mapper::{plan_col_shards, plan_col_shards_k, plan_shards_checked};
+    use crate::gemv::mapper::{
+        plan_col_shards, plan_col_shards_k, plan_col_shards_k_weighted, plan_shards_checked,
+    };
     use crate::util::XorShift;
 
     fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
@@ -634,6 +689,75 @@ mod tests {
         assert_eq!(sched.quarantined(), 1);
         // slot 1 now lives on the replacement member (index 3)
         assert_eq!(sched.members(), 4);
+    }
+
+    #[test]
+    fn replan_same_token_rebuilds_sliced_weights() {
+        // Regression: the sliced-weight cache used to key on token
+        // only, so a second plan for the SAME token with the same K
+        // but different boundaries (an occupancy-weighted rebalance)
+        // reused stale column ranges and produced wrong partials.
+        let _skip = crate::pim::alu::force_skip(true);
+        let cfg = tiny();
+        let (m, n, p) = (16, 96, 8);
+        let mut rng = XorShift::new(58);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let expect = host_gemv(&w, &x, m, n);
+        let geo = plan_col_shards_k(m, n, p, 2, 2);
+        // heavy first quarter: the weighted boundary moves off n/2
+        let mut est = vec![1u64; n];
+        for e in est.iter_mut().take(n / 4) {
+            *e = 100;
+        }
+        let weighted = plan_col_shards_k_weighted(m, n, p, 2, 2, Some(&est));
+        assert_ne!(geo.slices, weighted.slices, "skewed estimates must move the boundary");
+        let mut sched = ColShardedScheduler::with_threads(cfg, 1, 1);
+        let first = sched.run_plan(&geo, 42, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(first.0, expect);
+        assert_eq!(sched.last_slice_work().len(), 2);
+        let second = sched.run_plan(&weighted, 42, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(second.0, expect, "stale sliced weights served after a replan");
+    }
+
+    #[test]
+    fn death_mid_batch_after_replan_stays_correct() {
+        use crate::sim::fault::{install_scoped, DieSpec, FaultPlan};
+        // member 1's SECOND contact dies: the first (geometric) batch
+        // succeeds, the replanned batch loses member 1 mid-batch and
+        // must fail over with the NEW slice boundaries (member 1 as in
+        // member_death_quarantines_and_fails_over — the internal row
+        // tiers only touch their own member 0)
+        let _skip = crate::pim::alu::force_skip(true);
+        let _g = install_scoped(FaultPlan {
+            dies: vec![DieSpec { member: 1, after: 1 }],
+            ..FaultPlan::default()
+        });
+        let cfg = tiny();
+        let (m, n, p) = (16, 96, 8);
+        let mut rng = XorShift::new(59);
+        let w = rng.vec_i64(m * n, -100, 100);
+        let x = rng.vec_i64(n, -100, 100);
+        let xrefs: Vec<&[i64]> = vec![&x];
+        let expect = host_gemv(&w, &x, m, n);
+        let mut est = vec![1u64; n];
+        for e in est.iter_mut().take(n / 4) {
+            *e = 100;
+        }
+        let geo = plan_col_shards_k(m, n, p, 2, 2);
+        let weighted = plan_col_shards_k_weighted(m, n, p, 2, 2, Some(&est));
+        assert_ne!(geo.slices, weighted.slices);
+        let mut sched = ColShardedScheduler::with_threads(cfg, 1, 1);
+        let first = sched.run_plan(&geo, 43, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(first.0, expect);
+        let second = sched.run_plan(&weighted, 43, &w, &xrefs).remove(0).unwrap();
+        assert_eq!(second.0, expect, "failover after a replan must use the new slices");
+        assert_eq!(sched.failovers(), 1);
+        assert_eq!(sched.quarantined(), 1);
+        // measured work reflects the surviving assignment, one entry
+        // per slice
+        assert_eq!(sched.last_slice_work().len(), 2);
     }
 
     #[test]

@@ -224,6 +224,13 @@ pub struct ShardPlan {
     pub radix: u8,
     /// Contiguous row ranges covering `0..m`, one per pool member.
     pub shards: Vec<Shard>,
+    /// Per-member estimated work, parallel to `shards`. Weighted plans
+    /// record the summed per-row `plane_word_ops` estimates
+    /// ([`row_work_estimates`]); geometric plans record plain row
+    /// counts (the trivial uniform estimate). Informational — the
+    /// schedulers report it next to measured work so the estimator's
+    /// accuracy is observable (docs/PERF.md).
+    pub estimated_work: Vec<u64>,
 }
 
 impl ShardPlan {
@@ -261,7 +268,53 @@ pub fn shard_rows(m: usize, k: usize) -> Vec<Shard> {
 /// serving path uses [`plan_shards`], which sizes K to the BRAM
 /// budget).
 pub fn plan_shards_k(m: usize, n: usize, p: usize, radix: u8, k: usize) -> ShardPlan {
-    ShardPlan { m, n, precision: p, radix, shards: shard_rows(m, k) }
+    let shards = shard_rows(m, k);
+    let estimated_work = shards.iter().map(|s| s.rows as u64).collect();
+    ShardPlan { m, n, precision: p, radix, shards, estimated_work }
+}
+
+/// [`plan_shards_k`] with optional per-row work estimates
+/// ([`row_work_estimates`]): when estimates are given, occupancy
+/// skipping is live, and a feasible weighted split exists, the K
+/// partition boundaries equalize estimated work instead of row counts.
+/// Falls back to the geometric split otherwise — with skipping off,
+/// work *is* row count, so geometric is already work-balanced.
+pub fn plan_shards_k_weighted(
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+    k: usize,
+    est: Option<&[u64]>,
+) -> ShardPlan {
+    weighted_row_plan(m, n, p, radix, k, m, est)
+        .unwrap_or_else(|| plan_shards_k(m, n, p, radix, k))
+}
+
+/// Build a weighted row plan, or `None` when the estimator does not
+/// apply (no estimates / wrong length / skip disabled / degenerate
+/// totals / cap infeasible). `cap` is the residency ceiling on shard
+/// height: every weighted shard stays `<= cap` rows so the plan keeps
+/// the checked planner's single-pass guarantee.
+fn weighted_row_plan(
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+    k: usize,
+    cap: usize,
+    est: Option<&[u64]>,
+) -> Option<ShardPlan> {
+    let est = est?;
+    if !crate::pim::alu::skip_enabled() {
+        return None;
+    }
+    let shards = shard_rows_weighted(m, k, cap, est)?;
+    let estimated_work = shards
+        .iter()
+        .map(|s| est[s.row0..s.row0 + s.rows].iter().sum())
+        .collect();
+    Some(ShardPlan { m, n, precision: p, radix, shards, estimated_work })
 }
 
 /// Decide whether an `m x n` GEMV should be row-sharded across an
@@ -289,6 +342,24 @@ pub fn plan_shards_checked(
     n: usize,
     p: usize,
     radix: u8,
+) -> Result<Option<ShardPlan>, crate::gemv::codegen::GemvError> {
+    plan_shards_checked_weighted(config, m, n, p, radix, None)
+}
+
+/// [`plan_shards_checked`] with optional per-row work estimates: the
+/// K and the per-member single-pass ceiling are decided exactly as the
+/// geometric planner does (the residency budget is a hard constraint,
+/// not a preference), then the partition *boundaries* within that
+/// ceiling equalize estimated work when the estimator applies
+/// (occupancy skipping on, feasible weighted split) — geometric
+/// otherwise.
+pub fn plan_shards_checked_weighted(
+    config: &EngineConfig,
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+    est: Option<&[u64]>,
 ) -> Result<Option<ShardPlan>, crate::gemv::codegen::GemvError> {
     let unshardable = || crate::gemv::codegen::GemvError::Unshardable {
         rows: m,
@@ -326,8 +397,12 @@ pub fn plan_shards_checked(
         return Err(unshardable());
     }
     // balanced shards are no taller than lo (ceil(m / ceil(m/lo)) <= lo),
-    // so every member stays single-pass / resident
-    Ok(Some(plan_shards_k(m, n, p, radix, k)))
+    // so every member stays single-pass / resident; weighted boundaries
+    // keep the same `lo` ceiling, so residency is unaffected
+    Ok(Some(
+        weighted_row_plan(m, n, p, radix, k, lo, est)
+            .unwrap_or_else(|| plan_shards_k(m, n, p, radix, k)),
+    ))
 }
 
 /// [`plan_shards_checked`] with the unshardable case folded into
@@ -342,6 +417,153 @@ pub fn plan_shards(
     radix: u8,
 ) -> Option<ShardPlan> {
     plan_shards_checked(config, m, n, p, radix).ok().flatten()
+}
+
+// ---------------------------------------------------------------------
+// Occupancy-weighted shard balancing (docs/PERF.md).
+//
+// The occupancy-skipping ALU's work tracks nonzero bit-planes, not row
+// counts, so a geometrically balanced partition of a sparsity-skewed
+// matrix leaves one dense straggler gating the fan-out barrier. The
+// host-side estimator below scores each row/column by the bit-planes
+// its quantized magnitudes populate — the same planes PlaneBuf's
+// occupancy index spans at staging, derivable from the weights alone —
+// and the planners cut the partition at work quantiles instead of unit
+// quantiles. Estimates are a monotone proxy, not a cycle model: shard
+// skip savings are union-of-lanes effects (a plane is skipped only
+// when *every* lane in a word is zero there), so the estimator is
+// deliberately cheap and its accuracy is kept observable through the
+// measured `shard_imbalance` metric.
+
+/// Bit-planes the magnitude of `v` populates (0 for zero). The
+/// estimator's per-element score: a weight only forces mask/plane work
+/// in the planes up to its magnitude's top set bit.
+pub fn plane_bits(v: i64) -> u64 {
+    if v == 0 {
+        0
+    } else {
+        u64::from(64 - v.unsigned_abs().leading_zeros())
+    }
+}
+
+/// Per-row work estimates for an `m x n` row-major weight matrix:
+/// `1 + sum(plane_bits)` over the row (the `+1` keeps every row's
+/// weight positive so all-zero bands still split feasibly).
+pub fn row_work_estimates(w: &[i64], m: usize, n: usize) -> Vec<u64> {
+    debug_assert_eq!(w.len(), m * n);
+    (0..m)
+        .map(|r| 1 + w[r * n..(r + 1) * n].iter().map(|&v| plane_bits(v)).sum::<u64>())
+        .collect()
+}
+
+/// Per-column work estimates for an `m x n` row-major weight matrix
+/// (the column tier's analog of [`row_work_estimates`]).
+pub fn col_work_estimates(w: &[i64], m: usize, n: usize) -> Vec<u64> {
+    debug_assert_eq!(w.len(), m * n);
+    let mut est = vec![1u64; n];
+    for r in 0..m {
+        for (e, &v) in est.iter_mut().zip(&w[r * n..(r + 1) * n]) {
+            *e += plane_bits(v);
+        }
+    }
+    est
+}
+
+/// Greedy prefix-sum split: cut `est` into `k` contiguous parts of
+/// near-equal estimated work, each part between 1 and `cap` units.
+/// Returns the `k + 1` cut positions (`cuts[0] = 0`,
+/// `cuts[k] = est.len()`), or `None` when no such partition exists
+/// (`k == 0`, fewer units than parts, more units than `k * cap`) or
+/// the total estimate is zero (nothing to balance).
+///
+/// Each cut lands at the total-work quantile `part/k`, clamped into
+/// the window that keeps the remaining parts feasible: at least one
+/// unit per remaining part above, at most `cap` units per remaining
+/// part below. The window is never empty (induction on `part`:
+/// `units - pos <= cap * parts_left` and `units - pos >= parts_left`
+/// hold at entry and are preserved by any cut inside the window), so
+/// the split always produces exactly `k` parts when the preconditions
+/// hold.
+fn weighted_boundaries(est: &[u64], k: usize, cap: usize) -> Option<Vec<usize>> {
+    let units = est.len();
+    if k == 0 || units < k || cap == 0 || units > cap.saturating_mul(k) {
+        return None;
+    }
+    let mut pref: Vec<u128> = Vec::with_capacity(units + 1);
+    let mut acc = 0u128;
+    pref.push(0);
+    for &e in est {
+        acc += u128::from(e);
+        pref.push(acc);
+    }
+    let total = acc;
+    if total == 0 {
+        return None;
+    }
+    let mut cuts = Vec::with_capacity(k + 1);
+    cuts.push(0usize);
+    let mut pos = 0usize;
+    for part in 1..k {
+        let parts_left_after = k - part;
+        let lo = (pos + 1).max(units.saturating_sub(cap.saturating_mul(parts_left_after)));
+        let hi = (pos + cap).min(units - parts_left_after);
+        let target = total * part as u128 / k as u128;
+        let b = (lo + pref[lo..=hi].partition_point(|&v| v < target)).min(hi);
+        cuts.push(b);
+        pos = b;
+    }
+    cuts.push(units);
+    Some(cuts)
+}
+
+/// Partition `m` rows into `k` contiguous shards of near-equal
+/// *estimated work* (per-row estimates from [`row_work_estimates`]),
+/// every shard at most `cap` rows tall. `None` when no feasible
+/// weighted partition exists — callers fall back to [`shard_rows`].
+pub fn shard_rows_weighted(m: usize, k: usize, cap: usize, est: &[u64]) -> Option<Vec<Shard>> {
+    if est.len() != m {
+        return None;
+    }
+    let k = k.clamp(1, m.max(1));
+    let cuts = weighted_boundaries(est, k, cap)?;
+    Some(
+        cuts.windows(2)
+            .enumerate()
+            .map(|(index, c)| Shard { index, row0: c[0], rows: c[1] - c[0] })
+            .collect(),
+    )
+}
+
+/// Column analog of [`shard_rows_weighted`] (estimates from
+/// [`col_work_estimates`]).
+pub fn shard_cols_weighted(n: usize, k: usize, cap: usize, est: &[u64]) -> Option<Vec<ColShard>> {
+    if est.len() != n {
+        return None;
+    }
+    let k = k.clamp(1, n.max(1));
+    let cuts = weighted_boundaries(est, k, cap)?;
+    Some(
+        cuts.windows(2)
+            .enumerate()
+            .map(|(index, c)| ColShard { index, col0: c[0], cols: c[1] - c[0] })
+            .collect(),
+    )
+}
+
+/// Max/mean ratio of a per-member work vector in milli-units
+/// (1000 = perfectly balanced; 2000 = the slowest member carries twice
+/// the average). 0 for an empty vector; an all-zero vector reports
+/// 1000 (trivially balanced). The `shard_imbalance` observable.
+pub fn imbalance_milli(work: &[u64]) -> u64 {
+    if work.is_empty() {
+        return 0;
+    }
+    let total: u128 = work.iter().map(|&v| u128::from(v)).sum();
+    if total == 0 {
+        return 1000;
+    }
+    let max = u128::from(*work.iter().max().unwrap());
+    (max * work.len() as u128 * 1000 / total) as u64
 }
 
 /// One column-shard of a matrix: columns `[col0, col0 + cols)` of every
@@ -377,6 +599,10 @@ pub struct ColShardPlan {
     pub radix: u8,
     /// Contiguous column ranges covering `0..n`, one per pool member.
     pub slices: Vec<ColShard>,
+    /// Per-member estimated work, parallel to `slices` (weighted:
+    /// summed [`col_work_estimates`]; geometric: column counts) —
+    /// see [`ShardPlan::estimated_work`].
+    pub estimated_work: Vec<u64>,
 }
 
 impl ColShardPlan {
@@ -442,7 +668,47 @@ pub fn shard_cols(n: usize, k: usize) -> Vec<ColShard> {
 /// serving path uses [`plan_col_shards`], which sizes K so every slice
 /// serves resident).
 pub fn plan_col_shards_k(m: usize, n: usize, p: usize, radix: u8, k: usize) -> ColShardPlan {
-    ColShardPlan { m, n, precision: p, radix, slices: shard_cols(n, k) }
+    let slices = shard_cols(n, k);
+    let estimated_work = slices.iter().map(|s| s.cols as u64).collect();
+    ColShardPlan { m, n, precision: p, radix, slices, estimated_work }
+}
+
+/// [`plan_col_shards_k`] with optional per-column work estimates —
+/// the column tier's analog of [`plan_shards_k_weighted`].
+pub fn plan_col_shards_k_weighted(
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+    k: usize,
+    est: Option<&[u64]>,
+) -> ColShardPlan {
+    weighted_col_plan(m, n, p, radix, k, n, est)
+        .unwrap_or_else(|| plan_col_shards_k(m, n, p, radix, k))
+}
+
+/// Build a weighted column plan, or `None` when the estimator does not
+/// apply — see [`weighted_row_plan`]. `cap` bounds slice width so
+/// every member keeps the checked planner's residency guarantee.
+fn weighted_col_plan(
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+    k: usize,
+    cap: usize,
+    est: Option<&[u64]>,
+) -> Option<ColShardPlan> {
+    let est = est?;
+    if !crate::pim::alu::skip_enabled() {
+        return None;
+    }
+    let slices = shard_cols_weighted(n, k, cap, est)?;
+    let estimated_work = slices
+        .iter()
+        .map(|s| est[s.col0..s.col0 + s.cols].iter().sum())
+        .collect();
+    Some(ColShardPlan { m, n, precision: p, radix, slices, estimated_work })
 }
 
 /// Decide whether an `m x n` GEMV needs column-sharding across an
@@ -474,6 +740,20 @@ pub fn plan_col_shards_checked(
     p: usize,
     radix: u8,
 ) -> Result<Option<ColShardPlan>, crate::gemv::codegen::GemvError> {
+    plan_col_shards_checked_weighted(config, m, n, p, radix, None)
+}
+
+/// [`plan_col_shards_checked`] with optional per-column work estimates
+/// — boundaries equalize estimated work within the residency width
+/// ceiling, exactly as [`plan_shards_checked_weighted`] does for rows.
+pub fn plan_col_shards_checked_weighted(
+    config: &EngineConfig,
+    m: usize,
+    n: usize,
+    p: usize,
+    radix: u8,
+    est: Option<&[u64]>,
+) -> Result<Option<ColShardPlan>, crate::gemv::codegen::GemvError> {
     let unshardable = || crate::gemv::codegen::GemvError::Unshardable {
         rows: m,
         budget_bits: config.bram_budget_bits(),
@@ -502,8 +782,12 @@ pub fn plan_col_shards_checked(
         return Err(unshardable());
     }
     // balanced slices are no wider than lo (ceil(n / ceil(n/lo)) <= lo),
-    // so every member serves its slice resident
-    Ok(Some(plan_col_shards_k(m, n, p, radix, k)))
+    // so every member serves its slice resident; weighted boundaries
+    // keep the same `lo` ceiling, so residency is unaffected
+    Ok(Some(
+        weighted_col_plan(m, n, p, radix, k, lo, est)
+            .unwrap_or_else(|| plan_col_shards_k(m, n, p, radix, k)),
+    ))
 }
 
 /// [`plan_col_shards_checked`] with the unshardable case folded into
@@ -791,5 +1075,151 @@ mod tests {
         assert!(cp.resident_on(&cfg));
         let fewer = plan_col_shards_k(8, 10_000, 8, 2, cp.k() - 1);
         assert!(!fewer.resident_on(&cfg), "{fewer:?}");
+    }
+
+    #[test]
+    fn plane_bits_counts_magnitude_planes() {
+        assert_eq!(plane_bits(0), 0);
+        assert_eq!(plane_bits(1), 1);
+        assert_eq!(plane_bits(-1), 1);
+        assert_eq!(plane_bits(2), 2);
+        assert_eq!(plane_bits(127), 7);
+        assert_eq!(plane_bits(-128), 8);
+        assert_eq!(plane_bits(i64::MIN), 64);
+    }
+
+    #[test]
+    fn work_estimates_score_dense_units_higher() {
+        // 4x4: row 0 dense at full 8-bit magnitude, rest sparse
+        let mut w = vec![0i64; 16];
+        w[..4].copy_from_slice(&[-100, 100, 100, 100]);
+        w[5] = 1; // row 1, col 1
+        let re = row_work_estimates(&w, 4, 4);
+        assert_eq!(re.len(), 4);
+        assert_eq!(re[0], 1 + 4 * 7);
+        assert_eq!(re[1], 2);
+        assert_eq!(re[2], 1);
+        let ce = col_work_estimates(&w, 4, 4);
+        assert_eq!(ce.len(), 4);
+        assert_eq!(ce[0], 1 + 7);
+        assert_eq!(ce[1], 1 + 7 + 1);
+        assert_eq!(ce[3], 1 + 7);
+    }
+
+    #[test]
+    fn weighted_split_equalizes_work_within_cap() {
+        let _guard = crate::pim::alu::force_skip(true);
+        // 8 units, unit 0 carries ~all the work
+        let est = [800u64, 1, 1, 1, 1, 1, 1, 1];
+        let shards = shard_rows_weighted(8, 4, 8, &est).expect("feasible");
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards.iter().map(|s| s.rows).sum::<usize>(), 8);
+        let mut next = 0;
+        for s in &shards {
+            assert_eq!(s.row0, next, "contiguous");
+            assert!(s.rows >= 1);
+            next += s.rows;
+        }
+        // the dense unit gets a shard of its own
+        assert_eq!(shards[0].rows, 1, "{shards:?}");
+        // cap is honored even when work says "merge everything"
+        let capped = shard_rows_weighted(8, 4, 2, &est).expect("feasible");
+        assert!(capped.iter().all(|s| s.rows <= 2), "{capped:?}");
+        assert_eq!(capped.iter().map(|s| s.rows).sum::<usize>(), 8);
+        // infeasible cap declines
+        assert!(shard_rows_weighted(8, 2, 2, &est).is_none());
+    }
+
+    #[test]
+    fn weighted_planner_beats_geometric_on_skewed_estimates() {
+        let _guard = crate::pim::alu::force_skip(true);
+        // dense-top band: rows 0..16 heavy, the rest light
+        let m = 128;
+        let est: Vec<u64> = (0..m).map(|r| if r < 16 { 65 } else { 2 }).collect();
+        for k in [2usize, 4, 8] {
+            let wp = plan_shards_k_weighted(m, 64, 8, 2, k, Some(&est));
+            let gp = plan_shards_k(m, 64, 8, 2, k);
+            assert_eq!(wp.k(), k);
+            assert_eq!(wp.shards.iter().map(|s| s.rows).sum::<usize>(), m);
+            let spread = |pl: &ShardPlan| {
+                imbalance_milli(
+                    &pl.shards
+                        .iter()
+                        .map(|s| est[s.row0..s.row0 + s.rows].iter().sum::<u64>())
+                        .collect::<Vec<_>>(),
+                )
+            };
+            assert!(
+                spread(&wp) <= spread(&gp),
+                "k={k}: weighted {} > geometric {}",
+                spread(&wp),
+                spread(&gp)
+            );
+            // estimated_work matches the boundaries it planned
+            for (s, &ew) in wp.shards.iter().zip(&wp.estimated_work) {
+                assert_eq!(ew, est[s.row0..s.row0 + s.rows].iter().sum::<u64>());
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_planner_falls_back_when_skip_disabled() {
+        let _guard = crate::pim::alu::force_skip(false);
+        let est: Vec<u64> = (0..128).map(|r| if r < 16 { 65 } else { 2 }).collect();
+        let wp = plan_shards_k_weighted(128, 64, 8, 2, 4, Some(&est));
+        let gp = plan_shards_k(128, 64, 8, 2, 4);
+        assert_eq!(wp, gp, "skip off: work is row count, split stays geometric");
+        let cw = plan_col_shards_k_weighted(8, 128, 8, 2, 4, Some(&est));
+        assert_eq!(cw, plan_col_shards_k(8, 128, 8, 2, 4));
+    }
+
+    #[test]
+    fn weighted_checked_planner_keeps_residency_and_k() {
+        let _guard = crate::pim::alu::force_skip(true);
+        let cfg = EngineConfig::small();
+        let (m, n) = (768, 96);
+        // all the occupancy in the top band
+        let w: Vec<i64> = (0..m * n)
+            .map(|i| if i / n < 96 { 100 } else { i64::from(i % 7 == 0) })
+            .collect();
+        let est = row_work_estimates(&w, m, n);
+        let wp = plan_shards_checked_weighted(&cfg, m, n, 8, 2, Some(&est))
+            .unwrap()
+            .expect("shardable");
+        let gp = plan_shards(&cfg, m, n, 8, 2).unwrap();
+        assert_eq!(wp.k(), gp.k(), "K is budget-determined, not estimate-determined");
+        assert!(wp.resident_on(&cfg), "{wp:?}");
+        assert_eq!(wp.shards.iter().map(|s| s.rows).sum::<usize>(), m);
+        // the dense band is spread thinner than the geometric split
+        assert!(wp.shards[0].rows <= gp.shards[0].rows, "{wp:?} vs {gp:?}");
+    }
+
+    #[test]
+    fn weighted_col_checked_planner_keeps_residency() {
+        let _guard = crate::pim::alu::force_skip(true);
+        let cfg = EngineConfig::small();
+        let (m, n) = (8, 10_000);
+        let w: Vec<i64> = (0..m * n)
+            .map(|i| if i % n < 1000 { 100 } else { 0 })
+            .collect();
+        let est = col_work_estimates(&w, m, n);
+        let cp = plan_col_shards_checked_weighted(&cfg, m, n, 8, 2, Some(&est))
+            .unwrap()
+            .expect("col-shardable");
+        assert!(cp.resident_on(&cfg), "{cp:?}");
+        assert_eq!(cp.slices.iter().map(|s| s.cols).sum::<usize>(), n);
+        let gp = plan_col_shards(&cfg, m, n, 8, 2).unwrap();
+        assert_eq!(cp.k(), gp.k());
+        // dense first band -> first slice narrower than geometric
+        assert!(cp.slices[0].cols <= gp.slices[0].cols, "{cp:?}");
+    }
+
+    #[test]
+    fn imbalance_milli_reports_max_over_mean() {
+        assert_eq!(imbalance_milli(&[]), 0);
+        assert_eq!(imbalance_milli(&[0, 0]), 1000);
+        assert_eq!(imbalance_milli(&[5, 5, 5, 5]), 1000);
+        assert_eq!(imbalance_milli(&[30, 10]), 1500);
+        assert_eq!(imbalance_milli(&[40, 0, 0, 0]), 4000);
     }
 }

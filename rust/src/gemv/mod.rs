@@ -11,8 +11,11 @@ pub mod sharded;
 pub use codegen::GemvProgram;
 pub use col_sharded::ColShardedScheduler;
 pub use mapper::{
-    plan, plan_col_shards, plan_col_shards_checked, plan_col_shards_k, plan_shards,
-    plan_shards_checked, plan_shards_k, ColShard, ColShardPlan, MappingPlan, Shard, ShardPlan,
+    col_work_estimates, imbalance_milli, plan, plan_col_shards, plan_col_shards_checked,
+    plan_col_shards_checked_weighted, plan_col_shards_k, plan_col_shards_k_weighted, plan_shards,
+    plan_shards_checked, plan_shards_checked_weighted, plan_shards_k, plan_shards_k_weighted,
+    plane_bits, row_work_estimates, shard_cols_weighted, shard_rows_weighted, ColShard,
+    ColShardPlan, MappingPlan, Shard, ShardPlan,
 };
 pub use scheduler::{GemvOutcome, GemvScheduler};
 pub use sharded::ShardedScheduler;

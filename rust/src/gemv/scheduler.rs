@@ -88,6 +88,14 @@ impl GemvScheduler {
         self.engine.set_trace_mode(on);
     }
 
+    /// Cumulative measured ALU work of the underlying engine
+    /// (plane-word visits; see [`crate::engine::Engine::alu_work`]).
+    /// The sharded tiers difference this around member dispatches to
+    /// observe real per-shard load.
+    pub fn alu_work(&mut self) -> u64 {
+        self.engine.alu_work()
+    }
+
     /// Run one GEMV: y = W @ x (exact int32 accumulation).
     pub fn gemv(
         &mut self,

@@ -54,6 +54,10 @@ pub struct ShardedScheduler {
     engines: Vec<Mutex<GemvScheduler>>,
     /// Per-shard merged stats of the last sharded batch.
     shard_stats: Vec<ExecStats>,
+    /// Per-shard measured ALU work (plane-word visits) of the last
+    /// sharded batch — the occupancy-dependent observable the
+    /// `shard_imbalance` metric is computed from.
+    shard_work: Vec<u64>,
     /// Logical shard slot -> physical member. Identity until a member
     /// death remaps a slot onto a fresh replacement engine.
     assign: Vec<usize>,
@@ -90,6 +94,7 @@ impl ShardedScheduler {
             pool: (extra > 0).then(|| ThreadPool::new(extra)),
             engines: Vec::new(),
             shard_stats: Vec::new(),
+            shard_work: Vec::new(),
             assign: Vec::new(),
             quarantined: Vec::new(),
             calls: Vec::new(),
@@ -123,6 +128,26 @@ impl ShardedScheduler {
     /// the sum over the batch's per-vector outcome stats.
     pub fn last_shard_stats(&self) -> &[ExecStats] {
         &self.shard_stats
+    }
+
+    /// Per-shard *measured* ALU work of the last sharded batch (empty
+    /// after an unsharded fallback or a failed batch): plane-word
+    /// visits each member's bit-serial inner loops actually performed,
+    /// shrinking with occupancy skipping — unlike `plane_word_ops`,
+    /// which is cycle-derived and occupancy-independent. Feed to
+    /// [`super::mapper::imbalance_milli`] for the max/mean spread.
+    pub fn last_shard_work(&self) -> &[u64] {
+        &self.shard_work
+    }
+
+    /// Sum of every pool member's cumulative measured ALU work — the
+    /// column tier differences this around a slice dispatch the same
+    /// way this tier differences per-member counters around a shard.
+    pub fn total_alu_work(&mut self) -> u64 {
+        self.engines
+            .iter_mut()
+            .map(|e| e.get_mut().unwrap().alu_work())
+            .sum()
     }
 
     /// Whether every shard of `sp` is resident on its pool member for
@@ -235,6 +260,7 @@ impl ShardedScheduler {
             Some(sp) => self.run_plan(&sp, token, w, xs),
             None => {
                 self.shard_stats.clear();
+                self.shard_work.clear();
                 self.ensure_assign(1);
                 let phys = self.assign[0];
                 if phys >= MAX_SHARDS {
@@ -294,6 +320,7 @@ impl ShardedScheduler {
         if w.len() != m * n {
             // nothing ran: don't leave a previous batch's shard stats
             self.shard_stats.clear();
+            self.shard_work.clear();
             return xs
                 .iter()
                 .map(|_| Err(GemvError::Shape { what: "matrix", expected: m * n, got: w.len() }))
@@ -308,6 +335,7 @@ impl ShardedScheduler {
             let max_phys = (0..k).map(|i| self.assign[i]).max().unwrap_or(0);
             if max_phys >= MAX_SHARDS {
                 self.shard_stats.clear();
+                self.shard_work.clear();
                 let q = self.quarantined.len();
                 return xs
                     .iter()
@@ -315,6 +343,13 @@ impl ShardedScheduler {
                     .collect();
             }
             self.ensure_engines(max_phys + 1);
+            // Per-member work snapshot: the delta across this dispatch
+            // is the shard's measured load. Re-snapshotted on every
+            // failover iteration so a replacement member's re-staging
+            // run measures from its own baseline.
+            let work_before: Vec<u64> = (0..k)
+                .map(|i| self.engines[self.assign[i]].lock().unwrap().alu_work())
+                .collect();
             let slots: Vec<Mutex<Vec<GemvOutcome>>> =
                 (0..k).map(|_| Mutex::new(Vec::new())).collect();
             let dead: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
@@ -352,10 +387,17 @@ impl ShardedScheduler {
                 // lost-and-replaced worker): the batch's outcomes are
                 // unusable — fail it typed; the pool has recovered
                 self.shard_stats.clear();
+                self.shard_work.clear();
                 return xs.iter().map(|_| Err(GemvError::Pool(e.clone()))).collect();
             }
             let mut died = dead.into_inner().unwrap();
             if died.is_empty() {
+                self.shard_work = (0..k)
+                    .map(|i| {
+                        let now = self.engines[self.assign[i]].lock().unwrap().alu_work();
+                        now.saturating_sub(work_before[i])
+                    })
+                    .collect();
                 break slots;
             }
             // Failover: quarantine dead members, remap their slots onto

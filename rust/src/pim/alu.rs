@@ -75,6 +75,34 @@ pub fn reset_skip() {
     SKIP_MODE.store(0, Ordering::Relaxed);
 }
 
+/// Serializes every test that flips the process-global skip switch —
+/// one lock shared by the unit suites here and the integration suites
+/// (balanced shards, fused/skip equivalence), so concurrent tests in
+/// one binary cannot race each other's forced mode.
+static SKIP_FORCE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// RAII skip override for tests: holds the process-wide force lock,
+/// pins the skip paths to `on`, and re-latches the `IMAGINE_SKIP`
+/// default on drop — even on panic, so a failing assertion cannot
+/// leave the rest of the test binary pinned to one path.
+pub struct SkipForceGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for SkipForceGuard {
+    fn drop(&mut self) {
+        reset_skip();
+    }
+}
+
+/// Acquire the skip-force lock and pin the skip paths to `on` until
+/// the returned guard drops (test/bench hook).
+pub fn force_skip(on: bool) -> SkipForceGuard {
+    let g = SKIP_FORCE_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    set_skip(on);
+    SkipForceGuard(g)
+}
+
 /// Reusable plane-word scratch for the ALU inner loops. All buffers are
 /// (re)sized on use; contents never carry meaning across calls.
 #[derive(Debug, Clone, Default)]
@@ -98,6 +126,21 @@ pub struct AluScratch {
     wext: Vec<u64>,
     /// Word indices active in the current pass (occupancy skip).
     active: Vec<u32>,
+    /// Measured occupancy work: plane-words the inner full-adder walks
+    /// actually visited. Unlike the returned cycle costs (always the
+    /// full hardware schedule), this counter shrinks with the skip
+    /// paths — it is the observable the shard balancer's
+    /// `shard_imbalance` metric is built on. Monotone; harvested with
+    /// [`AluScratch::take_work`].
+    work: u64,
+}
+
+impl AluScratch {
+    /// Drain the measured-work counter (returns the accumulated
+    /// plane-word visits since the last take and resets to zero).
+    pub fn take_work(&mut self) -> u64 {
+        std::mem::take(&mut self.work)
+    }
 }
 
 /// Two's-complement sign-extended bit `i` of a `width`-bit register.
@@ -201,6 +244,9 @@ pub fn add_sub_with(
                 dp[slo..shi].copy_from_slice(&s.sum[slo..shi]);
             }
         }
+        if slo < shi {
+            s.work += (dst_w * (shi - slo)) as u64;
+        }
     } else {
         // reference path (IMAGINE_SKIP=0): the naive full-width ripple
         s.carry.fill(if subtract { !0u64 } else { 0 });
@@ -217,6 +263,7 @@ pub fn add_sub_with(
             }
             buf.plane_mut(dst_base + i).copy_from_slice(&s.sum);
         }
+        s.work += (dst_w * words) as u64;
     }
     mask_reg_tail(buf, dst_base, dst_w);
     (dst_w as u64) + 1
@@ -293,6 +340,7 @@ pub fn mac_radix2_with(
             if s.active.is_empty() {
                 continue; // all-zero mask plane or blank multiplicand
             }
+            s.work += (win * s.active.len()) as u64;
             for i in 0..win {
                 let vp = &s.wext[i * words..(i + 1) * words];
                 let acc_p = buf.plane_mut(acc_base + j + i);
@@ -311,6 +359,7 @@ pub fn mac_radix2_with(
             for (c, m) in s.carry.iter_mut().zip(&s.mask) {
                 *c = if subtract { *m } else { 0 };
             }
+            s.work += (win * words) as u64;
             for i in 0..win {
                 let vp = &s.wext[i * words..(i + 1) * words];
                 let acc_p = buf.plane_mut(acc_base + j + i);
@@ -427,6 +476,7 @@ pub fn mac_booth4_with(
             if s.active.is_empty() {
                 continue; // every lane's digit is 0 in this span
             }
+            s.work += (win * s.active.len()) as u64;
             for i in 0..win {
                 let v1 = &s.wext[i * words..(i + 1) * words];
                 let acc_p = buf.plane_mut(acc_base + j + i);
@@ -443,6 +493,7 @@ pub fn mac_booth4_with(
             }
         } else {
             s.carry.copy_from_slice(&s.neg); // +1 where negated
+            s.work += (win * words) as u64;
             for i in 0..win {
                 let v1 = &s.wext[i * words..(i + 1) * words];
                 let acc_p = buf.plane_mut(acc_base + j + i);
@@ -497,6 +548,7 @@ pub fn accum_from_with(
     };
     if lo < hi {
         s.carry[lo..hi].fill(0);
+        s.work += (width * (hi - lo)) as u64;
         for i in 0..width {
             let sp = src.plane(base + i);
             let dp = dst.plane_mut(base + i);
@@ -541,6 +593,7 @@ pub fn fold_step_with(
     s.carry.resize(words, 0);
     s.carry.fill(0);
     s.sum.resize(words, 0);
+    s.work += (width * words) as u64;
     for i in 0..width {
         // lane-shifted snapshot of the original plane
         super::bitplane::lane_shift_words(buf.plane(base + i), &mut s.sum, group_lanes);
@@ -579,6 +632,7 @@ pub fn mov_with(
             buf.plane_mut(dst.0 + i).copy_from_slice(&s.sa);
         }
     }
+    s.work += (dst.1 * buf.words()) as u64;
     dst.1 as u64
 }
 
@@ -834,25 +888,14 @@ mod tests {
     }
 
     /// Serializes the tests that flip the process-global skip switch
-    /// so they cannot race each other's reference/skip measurements,
-    /// and re-latches `IMAGINE_SKIP` on drop — even on panic, so a
-    /// failing assertion cannot leave the whole test binary pinned to
-    /// one path. (Other concurrent tests are unaffected either way:
-    /// both paths produce bit-identical results — that is the property
-    /// under test.)
-    static SKIP_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
-    struct SkipGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
-
-    impl Drop for SkipGuard {
-        fn drop(&mut self) {
-            reset_skip();
-        }
-    }
-
-    fn skip_test_guard() -> SkipGuard {
-        SkipGuard(
-            SKIP_TEST_LOCK
+    /// so they cannot race each other's reference/skip measurements —
+    /// the shared [`SKIP_FORCE_LOCK`] via [`force_skip`]'s machinery,
+    /// re-latching `IMAGINE_SKIP` on drop even on panic. (Other
+    /// concurrent tests are unaffected either way: both paths produce
+    /// bit-identical results — that is the property under test.)
+    fn skip_test_guard() -> SkipForceGuard {
+        SkipForceGuard(
+            SKIP_FORCE_LOCK
                 .lock()
                 .unwrap_or_else(|poisoned| poisoned.into_inner()),
         )

@@ -1,0 +1,258 @@
+//! Occupancy-weighted shard balancing properties (docs/PERF.md
+//! §Occupancy-weighted shard balancing).
+//!
+//! The weighted planner must be a pure re-partitioning: same K, same
+//! coverage, bit-identical `y` — only the boundaries move. On
+//! column-structured skew (the sparsity shape bit-serial occupancy
+//! skipping can actually exploit: a plane word skips only when ALL
+//! lanes packed into it are zero) the weighted boundaries must reduce
+//! the measured per-member work spread vs the geometric split, and the
+//! host-side estimator's per-member shares must track the measured
+//! shares. With skipping disabled the weighted planner must fall back
+//! to the geometric split exactly — work *is* the row count then.
+//!
+//! Skip mode is forced per test (`force_skip`), so every assertion
+//! here is deterministic across the `IMAGINE_SKIP` / `IMAGINE_TRACE`
+//! CI legs; trace replay drives the same column ALU ops, so measured
+//! work is mode-independent.
+
+use imagine::engine::EngineConfig;
+use imagine::gemv::{
+    col_work_estimates, imbalance_milli, plan_col_shards_k, plan_col_shards_k_weighted,
+    plan_shards_k, plan_shards_k_weighted, row_work_estimates, ColShardedScheduler, GemvScheduler,
+    ShardedScheduler,
+};
+use imagine::pim::alu::force_skip;
+use imagine::util::rng::XorShift;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Pattern {
+    DenseTop,
+    DenseBottom,
+    Banded,
+    Uniform,
+}
+
+const PATTERNS: [Pattern; 4] =
+    [Pattern::DenseTop, Pattern::DenseBottom, Pattern::Banded, Pattern::Uniform];
+
+/// Column-structured row skew: dense rows carry full-range values in
+/// every column; sparse rows are nonzero only in the first n/10
+/// columns. Dense rows are contiguous, so the 64-lane plane words of a
+/// row shard are either dominated by dense rows or all-sparse — the
+/// shape where occupancy skipping changes per-shard work.
+fn skewed_matrix(pat: Pattern, m: usize, n: usize, p: usize, rng: &mut XorShift) -> Vec<i64> {
+    let half = 1i64 << (p - 1);
+    let dense = |r: usize| match pat {
+        Pattern::DenseTop => r < m / 4,
+        Pattern::DenseBottom => r >= 3 * m / 4,
+        // asymmetric on purpose: a band centered on m/2 would make the
+        // balanced k=2 boundary coincide with the geometric one
+        Pattern::Banded => (m / 8..3 * m / 8).contains(&r),
+        Pattern::Uniform => true,
+    };
+    let mut w = vec![0i64; m * n];
+    for r in 0..m {
+        let cols = if dense(r) { n } else { n / 10 };
+        let vals = rng.vec_i64(cols, -half, half - 1);
+        w[r * n..r * n + cols].copy_from_slice(&vals);
+    }
+    w
+}
+
+/// Run `sp` twice (cold then resident) and return the hot batch's
+/// measured per-shard work — the compute-dominated measurement where
+/// occupancy, not staging, sets the spread.
+fn hot_shard_work(
+    sched: &mut ShardedScheduler,
+    sp: &imagine::gemv::ShardPlan,
+    token: u64,
+    w: &[i64],
+    x: &[i64],
+    expect: &[i64],
+) -> Vec<u64> {
+    let xrefs: Vec<&[i64]> = vec![x];
+    for round in 0..2 {
+        let out = sched.run_plan(sp, token, w, &xrefs);
+        let (y, _) = out.into_iter().next().unwrap().unwrap();
+        assert_eq!(y, expect, "round {round} token {token}");
+    }
+    sched.last_shard_work().to_vec()
+}
+
+#[test]
+fn weighted_row_shards_bit_identical_and_balanced() {
+    let _skip = force_skip(true);
+    let config = EngineConfig::small();
+    let (m, n) = (192, 64);
+    let mut rng = XorShift::new(81);
+    let mut token = 9000u64;
+    for pat in PATTERNS {
+        for p in [4usize, 8, 16] {
+            let half = 1i64 << (p - 1);
+            let w = skewed_matrix(pat, m, n, p, &mut rng);
+            let x = rng.vec_i64(n, -half, half - 1);
+            let expect = host_gemv(&w, &x, m, n);
+            let est = row_work_estimates(&w, m, n);
+            for k in [2usize, 4, 8] {
+                let geo = plan_shards_k(m, n, p, 2, k);
+                let wp = plan_shards_k_weighted(m, n, p, 2, k, Some(&est));
+                assert_eq!(wp.k(), k, "weighted planning must not change K");
+                assert_eq!(
+                    wp.shards.iter().map(|s| s.rows).sum::<usize>(),
+                    m,
+                    "weighted shards must cover every row"
+                );
+                if pat != Pattern::Uniform {
+                    assert_ne!(
+                        geo.shards, wp.shards,
+                        "{pat:?} p={p} k={k}: skew must move the boundaries"
+                    );
+                    // planner-level: estimated work spread shrinks
+                    let geo_est: Vec<u64> = geo
+                        .shards
+                        .iter()
+                        .map(|s| est[s.row0..s.row0 + s.rows].iter().sum())
+                        .collect();
+                    assert!(
+                        imbalance_milli(&wp.estimated_work) <= imbalance_milli(&geo_est),
+                        "{pat:?} p={p} k={k}: weighted estimated spread must not exceed geometric"
+                    );
+                }
+                // fresh pool + distinct tokens per plan: a member keys
+                // staged weights by (token, shape), and these two plans
+                // intentionally disagree about shapes
+                let mut sched = ShardedScheduler::with_threads(config, 2, 1);
+                token += 2;
+                let gw = hot_shard_work(&mut sched, &geo, token, &w, &x, &expect);
+                let ww = hot_shard_work(&mut sched, &wp, token + 1, &w, &x, &expect);
+                let (g_imb, w_imb) = (imbalance_milli(&gw), imbalance_milli(&ww));
+                if matches!(pat, Pattern::DenseTop | Pattern::DenseBottom) {
+                    assert!(
+                        w_imb <= g_imb * 105 / 100 + 60,
+                        "{pat:?} p={p} k={k}: weighted measured imbalance {w_imb} \
+                         worse than geometric {g_imb}"
+                    );
+                }
+                // estimator accuracy: per-member estimated share tracks
+                // the measured share (banded boundaries can split a
+                // plane word mid-band, where additive row estimates and
+                // union-semantics measurement legitimately diverge)
+                if pat != Pattern::Banded {
+                    let est_total: u64 = wp.estimated_work.iter().sum();
+                    let meas_total: u64 = ww.iter().sum();
+                    assert!(meas_total > 0, "{pat:?} p={p} k={k}: no measured work");
+                    for (i, (e, mw)) in wp.estimated_work.iter().zip(&ww).enumerate() {
+                        let es = *e as f64 / est_total as f64;
+                        let ms = *mw as f64 / meas_total as f64;
+                        assert!(
+                            (es - ms).abs() <= 0.35,
+                            "{pat:?} p={p} k={k} shard {i}: estimated share {es:.3} \
+                             vs measured {ms:.3}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn weighted_row_shards_match_native_engine() {
+    let _skip = force_skip(true);
+    let config = EngineConfig::small();
+    let (m, n, p) = (192, 64, 8);
+    let mut rng = XorShift::new(83);
+    let w = skewed_matrix(Pattern::DenseTop, m, n, p, &mut rng);
+    let x = rng.vec_i64(n, -128, 127);
+    let mut native = GemvScheduler::new(config);
+    let want = native.gemv(&w, &x, m, n, p, 2).unwrap().0;
+    let est = row_work_estimates(&w, m, n);
+    let wp = plan_shards_k_weighted(m, n, p, 2, 4, Some(&est));
+    let mut sched = ShardedScheduler::with_threads(config, 2, 1);
+    let xrefs: Vec<&[i64]> = vec![&x];
+    let out = sched.run_plan(&wp, 7100, &w, &xrefs);
+    assert_eq!(out.into_iter().next().unwrap().unwrap().0, want);
+}
+
+#[test]
+fn weighted_col_slices_bit_identical_and_balanced() {
+    let _skip = force_skip(true);
+    let config = EngineConfig::single_tile();
+    let (m, n, p) = (16, 96, 8);
+    let half = 1i64 << (p - 1);
+    let mut rng = XorShift::new(85);
+    // dense-left column skew: the first quarter of the columns carries
+    // full-range values, the rest are zero — for the column tier the
+    // per-column estimate is exact (a slice owns whole columns, so no
+    // lane-packing union effects)
+    let mut w = vec![0i64; m * n];
+    for r in 0..m {
+        let vals = rng.vec_i64(n / 4, -half, half - 1);
+        w[r * n..r * n + n / 4].copy_from_slice(&vals);
+    }
+    let x = rng.vec_i64(n, -half, half - 1);
+    let expect = host_gemv(&w, &x, m, n);
+    let est = col_work_estimates(&w, m, n);
+    let xrefs: Vec<&[i64]> = vec![&x];
+    let mut token = 9500u64;
+    for k in [2usize, 4, 8] {
+        let geo = plan_col_shards_k(m, n, p, 2, k);
+        let wp = plan_col_shards_k_weighted(m, n, p, 2, k, Some(&est));
+        assert_eq!(wp.k(), k);
+        assert_eq!(wp.slices.iter().map(|s| s.cols).sum::<usize>(), n);
+        assert_ne!(geo.slices, wp.slices, "k={k}: column skew must move the boundaries");
+        let mut sched = ColShardedScheduler::with_threads(config, 2, 1);
+        token += 2;
+        let mut run = |cp: &imagine::gemv::ColShardPlan, t: u64| -> Vec<u64> {
+            for round in 0..2 {
+                let out = sched.run_plan(cp, t, &w, &xrefs);
+                let (y, _) = out.into_iter().next().unwrap().unwrap();
+                assert_eq!(y, expect, "k={k} round {round}");
+            }
+            sched.last_slice_work().to_vec()
+        };
+        let gw = run(&geo, token);
+        let ww = run(&wp, token + 1);
+        let (g_imb, w_imb) = (imbalance_milli(&gw), imbalance_milli(&ww));
+        assert!(
+            w_imb <= g_imb * 105 / 100 + 60,
+            "k={k}: weighted measured imbalance {w_imb} worse than geometric {g_imb}"
+        );
+    }
+}
+
+#[test]
+fn skip_disabled_falls_back_to_geometric_plans() {
+    let _skip = force_skip(false);
+    let (m, n, p) = (192, 64, 8);
+    let mut rng = XorShift::new(87);
+    let w = skewed_matrix(Pattern::DenseTop, m, n, p, &mut rng);
+    let row_est = row_work_estimates(&w, m, n);
+    let col_est = col_work_estimates(&w, m, n);
+    for k in [2usize, 4, 8] {
+        assert_eq!(
+            plan_shards_k_weighted(m, n, p, 2, k, Some(&row_est)),
+            plan_shards_k(m, n, p, 2, k),
+            "k={k}: with skipping off, work is the row count — geometric is already balanced"
+        );
+        assert_eq!(
+            plan_col_shards_k_weighted(m, n, p, 2, k, Some(&col_est)),
+            plan_col_shards_k(m, n, p, 2, k),
+            "k={k}: column tier must fall back too"
+        );
+    }
+    // and the geometric plan still serves bit-identically with skip off
+    let x = rng.vec_i64(n, -128, 127);
+    let xrefs: Vec<&[i64]> = vec![&x];
+    let mut sched = ShardedScheduler::with_threads(EngineConfig::small(), 2, 1);
+    let sp = plan_shards_k_weighted(m, n, p, 2, 4, Some(&row_est));
+    let out = sched.run_plan(&sp, 9900, &w, &xrefs);
+    assert_eq!(out.into_iter().next().unwrap().unwrap().0, host_gemv(&w, &x, m, n));
+}

@@ -74,16 +74,20 @@ fn fused_skip_bit_identical_across_densities() {
         let x = sparse_vec(&mut rng, n, half, xd);
         let gp = GemvProgram::generate(plan(&config, m, n, p, radix));
 
-        // reference: serial per-instruction interpreter, full-width walks
+        // reference: serial per-instruction interpreter, full-width
+        // walks (trace replay is the default tier now — pin it off so
+        // both legs exercise the dispatch paths under comparison)
         alu::set_skip(false);
         let mut r_eng = Engine::with_threads(config, 1);
         r_eng.set_fuse(false);
+        r_eng.set_trace_mode(false);
         let reference = gp.execute(&mut r_eng, &w, &x).unwrap();
 
         // optimized: fused kernel replay + occupancy skip, worker pool
         alu::set_skip(true);
         let mut o_eng = Engine::with_threads(config, threads);
         o_eng.set_fuse(true);
+        o_eng.set_trace_mode(false);
         let optimized = gp.execute(&mut o_eng, &w, &x).unwrap();
 
         assert_eq!(optimized.y, reference.y, "y diverged [{tag}]");
@@ -150,8 +154,12 @@ fn fused_replay_gate_matches_interp_at_fifo_boundary() {
         assert_eq!(report.min_entry_fifo, k, "pre-READ pop count");
 
         let legs = [false, true].map(|fuse| {
+            // pin trace off: this test probes the fused-vs-interp gate
+            // itself, and the kernel-cache assert below requires the
+            // fused leg to really take the fused path
             let mut e = Engine::with_threads(config, 1);
             e.set_fuse(fuse);
+            e.set_trace_mode(false);
             let stats = e.execute(&prog).unwrap();
             (e.drain_fifo(), stats, e)
         });
@@ -179,6 +187,7 @@ fn fused_replay_gate_matches_interp_at_fifo_boundary() {
     for fuse in [false, true] {
         let mut e = Engine::with_threads(config, 1);
         e.set_fuse(fuse);
+        e.set_trace_mode(false);
         assert!(e.execute(&over).is_err(), "over-pop must fault [fuse={fuse}]");
     }
 
@@ -188,6 +197,7 @@ fn fused_replay_gate_matches_interp_at_fifo_boundary() {
     for fuse in [false, true] {
         let mut e = Engine::with_threads(config, 1);
         e.set_fuse(fuse);
+        e.set_trace_mode(false);
         let drain: Program = (0..lanes - 1).map(|_| Instr::rshift()).chain([Instr::halt()]).collect();
         e.execute(&drain).unwrap();
         let one: Program = [Instr::rshift(), Instr::halt()].into_iter().collect();

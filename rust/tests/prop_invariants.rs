@@ -241,10 +241,14 @@ fn prop_fused_engine_bit_identical_to_interpreter() {
     // register persist between streams and parameterize the lowering).
     run_prop("fused == interpreter", 6, |rng| {
         let config = EngineConfig { tile_rows: 24, tile_cols: 2, ..EngineConfig::u55() };
+        // pin the default-on trace tier off on both legs: the property
+        // compares the two dispatch paths underneath it
         let mut interp = Engine::with_threads(config, 4);
         interp.set_fuse(false);
+        interp.set_trace_mode(false);
         let mut fused = Engine::with_threads(config, 4);
         fused.set_fuse(true);
+        fused.set_trace_mode(false);
         let lanes = interp.pe_rows();
         let cols = interp.block_cols();
         for c in 0..cols {
