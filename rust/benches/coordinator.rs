@@ -9,7 +9,9 @@
 //! (`BENCH_SMOKE=1` for the reduced CI run.)
 
 use imagine::backend::BackendPolicy;
-use imagine::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request};
+use imagine::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, ModelSpec, Request,
+};
 use imagine::engine::EngineConfig;
 use imagine::gemv::GemvScheduler;
 use imagine::sim::fault::{self, FaultPlan};
@@ -195,6 +197,58 @@ fn coord_backend_policy(policy: BackendPolicy, requests: usize) -> f64 {
     requests as f64 / wall
 }
 
+/// Registration churn under live serving: a steady request stream over
+/// two resident base models while side models are registered and
+/// unregistered every few requests — the placement admission/release
+/// path (reservation bookkeeping, packing, eviction checks) rides the
+/// serving hot path. Returns (req/s of the served stream, final fleet
+/// occupancy in milli-units) — the former is a gated row, the latter
+/// informational.
+fn fleet_churn(requests: usize) -> (f64, u64) {
+    let mut rng = XorShift::new(59);
+    let half = 1i64 << (P - 1);
+    let reg = ModelRegistry::default();
+    reg.register_gemv("a", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
+    reg.register_gemv("b", rng.vec_i64(M * N, -half, half - 1), M, N).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 8, window: std::time::Duration::from_millis(5) },
+            engine: batch_engine_config(),
+            ..Default::default()
+        },
+        reg.clone(),
+    );
+    let d = 64;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        if i % 8 == 0 {
+            let gen = i / 8;
+            reg.register(
+                &format!("churn{gen}"),
+                ModelSpec::gemv(rng.vec_i64(d * d, -half, half - 1), d, d),
+            )
+            .unwrap();
+            if gen > 0 {
+                reg.unregister(&format!("churn{}", gen - 1)).unwrap();
+            }
+        }
+        let model = if i % 2 == 0 { "a" } else { "b" };
+        rxs.push(
+            coord
+                .submit(Request::new(model, rng.vec_i64(N, -half, half - 1)))
+                .unwrap(),
+        );
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    (requests as f64 / wall, m.fleet_occupancy_milli)
+}
+
 fn throughput(workers: usize, policy: BatchPolicy, requests: usize) -> (f64, f64, f64) {
     let mut rng = XorShift::new(3);
     let reg = ModelRegistry::default();
@@ -339,6 +393,21 @@ fn main() {
     println!("{}", m.report());
     coord.shutdown();
 
+    println!("\n== registration churn (admit/release on the serving path) ==");
+    let churn_reqs = if smoke() { 32 } else { 256 };
+    let churn_runs = if smoke() { 1 } else { 3 };
+    let mut churn_reqps = 0.0_f64;
+    let mut churn_occ = 0u64;
+    for _ in 0..churn_runs {
+        let (rps, occ) = fleet_churn(churn_reqs);
+        if rps > churn_reqps {
+            churn_reqps = rps;
+            churn_occ = occ;
+        }
+    }
+    let churn_label = format!("2 workers, churn/8 ({churn_reqs} reqs)");
+    println!("{churn_label:<28} {churn_reqps:>12.0} req/s   occupancy {churn_occ}/1000");
+
     // anchor at the workspace root regardless of the bench's cwd
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let mut sink = BenchSink::load(path);
@@ -370,6 +439,8 @@ fn main() {
             ("coord_fault_layer_off_reqps", Json::num(fault_off)),
             ("coord_fault_layer_null_reqps", Json::num(fault_null)),
             ("trace_coord_reqps", Json::num(trace_coord_reqps)),
+            ("fleet_churn_reqps", Json::num(churn_reqps)),
+            ("fleet_occupancy_milli", Json::num(churn_occ as f64)),
             ("backends", Json::Obj(backend_rows)),
             ("smoke", Json::Bool(smoke())),
         ]),

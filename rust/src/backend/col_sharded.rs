@@ -23,6 +23,7 @@ use crate::gemv::col_sharded::ColShardedScheduler;
 use crate::gemv::mapper::{
     col_work_estimates, imbalance_milli, plan_col_shards_checked_weighted, plan_col_shards_k,
 };
+use crate::placement::PlacementLease;
 use std::sync::Mutex;
 
 pub struct ColShardedBackend {
@@ -67,7 +68,11 @@ impl ExecBackend for ColShardedBackend {
         "col_sharded"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         match model {
             Model::Mlp { .. } => Err(BackendError::Unsupported {
                 backend: "col_sharded",
@@ -95,6 +100,7 @@ impl ExecBackend for ColShardedBackend {
                 Ok(PreparedModel {
                     model: model.clone(),
                     concurrency: cp.engine_concurrency(&self.engine),
+                    token: lease.token,
                     exec: PreparedExec::ColSharded(cp),
                 })
             }
@@ -107,7 +113,7 @@ impl ExecBackend for ColShardedBackend {
         xs: &[Vec<i64>],
     ) -> Vec<Result<BackendResult, BackendError>> {
         let (id, w) = match &prepared.model {
-            Model::Gemv { id, w, .. } => (*id, w),
+            Model::Gemv { w, .. } => (prepared.token, w),
             Model::Mlp { .. } => {
                 return xs
                     .iter()

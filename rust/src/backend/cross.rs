@@ -28,6 +28,7 @@ use super::{
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::mapper::plan_shards_k;
+use crate::placement::PlacementLease;
 use std::sync::Arc;
 
 /// Runs `primary` and `reference` on every request, serves the primary
@@ -78,12 +79,17 @@ impl ExecBackend for CrossCheckBackend {
         "cross_check"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
-        let prim = self.primary.prepare(model)?;
-        let refr = self.reference.prepare(model)?;
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
+        let prim = self.primary.prepare(model, lease)?;
+        let refr = self.reference.prepare(model, lease)?;
         Ok(PreparedModel {
             model: model.clone(),
             concurrency: prim.concurrency,
+            token: lease.token,
             exec: PreparedExec::Pair(Box::new(prim), Box::new(refr)),
         })
     }
@@ -152,13 +158,17 @@ impl ExecBackend for OracleBackend {
         "oracle"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         if let Some(golden) = &self.golden {
-            if let Ok(prep) = golden.prepare(model) {
+            if let Ok(prep) = golden.prepare(model, lease) {
                 return Ok(prep);
             }
         }
-        self.complement.prepare(model)
+        self.complement.prepare(model, lease)
     }
 
     fn execute_batch(
@@ -211,9 +221,13 @@ impl ExecBackend for ComplementBackend {
         "complement"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         match model {
-            Model::Mlp { .. } => self.native.prepare(model),
+            Model::Mlp { .. } => self.native.prepare(model, lease),
             Model::Gemv { m, n, .. } => {
                 match super::select(model, &self.engine, self.precision, self.radix) {
                     // single-pass natively -> force a 2-way shard; the
@@ -224,6 +238,7 @@ impl ExecBackend for ComplementBackend {
                         Ok(PreparedModel {
                             model: model.clone(),
                             concurrency: sp.k(),
+                            token: lease.token,
                             exec: PreparedExec::Sharded(sp),
                         })
                     }
@@ -232,7 +247,7 @@ impl ExecBackend for ComplementBackend {
                     // reference role, re-staging cost is the price of
                     // the check
                     Ok(Selection::Sharded(_)) | Ok(Selection::ColSharded(_)) | Err(_) => {
-                        self.native.prepare(model)
+                        self.native.prepare(model, lease)
                     }
                 }
             }
@@ -274,8 +289,12 @@ impl ExecBackend for FaultInjector {
         "fault"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
-        self.inner.prepare(model)
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
+        self.inner.prepare(model, lease)
     }
 
     fn execute_batch(

@@ -16,6 +16,7 @@
 
 use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedModel};
 use crate::coordinator::frontend::Model;
+use crate::placement::PlacementLease;
 use std::sync::Arc;
 
 /// Build the golden backend for the `golden` policy
@@ -55,7 +56,11 @@ impl ExecBackend for UnavailableBackend {
         self.backend
     }
 
-    fn prepare(&self, _model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        _model: &Model,
+        _lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         Err(self.err())
     }
 
@@ -74,6 +79,7 @@ mod enabled {
         BackendContext, BackendError, BackendResult, ExecBackend, PreparedExec, PreparedModel,
     };
     use crate::coordinator::frontend::Model;
+    use crate::placement::PlacementLease;
     use crate::runtime::Runtime;
     use std::path::PathBuf;
     use std::sync::Mutex;
@@ -118,7 +124,11 @@ mod enabled {
             "golden"
         }
 
-        fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        fn prepare(
+            &self,
+            model: &Model,
+            lease: &PlacementLease,
+        ) -> Result<PreparedModel, BackendError> {
             match model {
                 Model::Mlp { .. } => Err(BackendError::Unsupported {
                     backend: "golden",
@@ -138,6 +148,7 @@ mod enabled {
                     Ok(PreparedModel {
                         model: model.clone(),
                         concurrency: 1,
+                        token: lease.token,
                         exec: PreparedExec::Golden(meta.name.clone()),
                     })
                 }
@@ -222,7 +233,11 @@ impl ExecBackend for GoldenBackend {
         "golden"
     }
 
-    fn prepare(&self, _model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        _model: &Model,
+        _lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         Err(self.err())
     }
 

@@ -54,6 +54,7 @@ pub use trace::TraceBackend;
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::codegen::GemvError;
+use crate::placement::PlacementLease;
 use crate::gemv::mapper::{
     col_work_estimates, plan_col_shards_checked_weighted, plan_shards_checked_weighted,
     row_work_estimates, ColShardPlan, ShardPlan,
@@ -176,6 +177,11 @@ pub struct PreparedModel {
     /// Engine-level concurrency of one request's execution (shards run
     /// in parallel): the divisor for the modeled device-time estimate.
     pub concurrency: usize,
+    /// Weight-residency token execution stages under — the placement
+    /// lease's token (= the registry model id for planner leases and
+    /// local preparation alike; ids are never reused, so staleness
+    /// stays detectable).
+    pub token: u64,
     pub exec: PreparedExec,
 }
 
@@ -265,8 +271,21 @@ pub trait ExecBackend: Send + Sync {
     /// Short stable name (metrics, bench rows, `Response::backend`).
     fn name(&self) -> &'static str;
 
-    /// Validate + plan `model` for this backend.
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError>;
+    /// Validate + plan `model` for this backend under a placement
+    /// lease: the fleet scheduler issues the lease (residency token +
+    /// placement member) instead of each backend constructing its own
+    /// pool identity. Direct callers use
+    /// [`prepare_local`](ExecBackend::prepare_local).
+    fn prepare(&self, model: &Model, lease: &PlacementLease)
+        -> Result<PreparedModel, BackendError>;
+
+    /// [`prepare`](ExecBackend::prepare) under the identity lease
+    /// (`token == model.id()`) — bit-identical to the pre-lease
+    /// `prepare(model)`; the entry point for tests, benches and
+    /// ablations driving a backend without a fleet.
+    fn prepare_local(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+        self.prepare(model, &PlacementLease::local(model))
+    }
 
     /// Execute one fused group against a prepared model.
     fn execute_batch(
@@ -396,17 +415,23 @@ impl ExecBackend for AutoBackend {
         "auto"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         match select(model, &self.engine, self.precision, self.radix)? {
-            Selection::Native => self.native.prepare(model),
+            Selection::Native => self.native.prepare(model, lease),
             Selection::Sharded(sp) => Ok(PreparedModel {
                 model: model.clone(),
                 concurrency: sp.k(),
+                token: lease.token,
                 exec: PreparedExec::Sharded(sp),
             }),
             Selection::ColSharded(cp) => Ok(PreparedModel {
                 model: model.clone(),
                 concurrency: cp.engine_concurrency(&self.engine),
+                token: lease.token,
                 exec: PreparedExec::ColSharded(cp),
             }),
         }
@@ -433,7 +458,8 @@ impl ExecBackend for AutoBackend {
         // the group on the single native engine instead. Multi-pass
         // and without residency, but exact and available; results are
         // flagged so responses carry `degraded = true`.
-        match self.native.prepare(&prepared.model) {
+        let fallback_lease = PlacementLease::with_token(&prepared.model, prepared.token);
+        match self.native.prepare(&prepared.model, &fallback_lease) {
             Ok(native_prep) => {
                 let mut out = self.native.execute_batch(&native_prep, xs);
                 for r in out.iter_mut().flatten() {

@@ -13,6 +13,7 @@ use super::{BackendContext, BackendError, BackendResult, ExecBackend, PreparedEx
 use crate::coordinator::frontend::Model;
 use crate::engine::{Engine, EngineConfig};
 use crate::gemv::scheduler::GemvScheduler;
+use crate::placement::PlacementLease;
 use std::sync::Mutex;
 
 pub struct NativeBackend {
@@ -63,10 +64,15 @@ impl ExecBackend for NativeBackend {
         "native"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         Ok(PreparedModel {
             model: model.clone(),
             concurrency: 1,
+            token: lease.token,
             exec: PreparedExec::Native,
         })
     }
@@ -78,11 +84,12 @@ impl ExecBackend for NativeBackend {
     ) -> Vec<Result<BackendResult, BackendError>> {
         let mut sched = self.sched.lock().unwrap();
         match &prepared.model {
-            Model::Gemv { id, w, m, n } => {
-                let resident = sched.is_resident(*id, *m, *n, self.precision, self.radix);
+            Model::Gemv { w, m, n, .. } => {
+                let token = prepared.token;
+                let resident = sched.is_resident(token, *m, *n, self.precision, self.radix);
                 let xrefs: Vec<&[i64]> = xs.iter().map(|x| x.as_slice()).collect();
                 sched
-                    .gemv_batch(*id, w, &xrefs, *m, *n, self.precision, self.radix)
+                    .gemv_batch(token, w, &xrefs, *m, *n, self.precision, self.radix)
                     .into_iter()
                     .map(|r| {
                         r.map(|(y, stats)| BackendResult {

@@ -22,6 +22,7 @@ use crate::gemv::mapper::{
     imbalance_milli, plan_shards_checked_weighted, plan_shards_k, row_work_estimates,
 };
 use crate::gemv::sharded::ShardedScheduler;
+use crate::placement::PlacementLease;
 use std::sync::Mutex;
 
 pub struct ShardedBackend {
@@ -65,7 +66,11 @@ impl ExecBackend for ShardedBackend {
         "sharded"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         match model {
             Model::Mlp { .. } => Err(BackendError::Unsupported {
                 backend: "sharded",
@@ -92,6 +97,7 @@ impl ExecBackend for ShardedBackend {
                 Ok(PreparedModel {
                     model: model.clone(),
                     concurrency: sp.k(),
+                    token: lease.token,
                     exec: PreparedExec::Sharded(sp),
                 })
             }
@@ -104,7 +110,7 @@ impl ExecBackend for ShardedBackend {
         xs: &[Vec<i64>],
     ) -> Vec<Result<BackendResult, BackendError>> {
         let (id, w) = match &prepared.model {
-            Model::Gemv { id, w, .. } => (*id, w),
+            Model::Gemv { w, .. } => (prepared.token, w),
             Model::Mlp { .. } => {
                 return xs
                     .iter()

@@ -26,6 +26,7 @@ use super::{
 use crate::coordinator::frontend::Model;
 use crate::engine::EngineConfig;
 use crate::gemv::codegen::GemvError;
+use crate::placement::PlacementLease;
 
 /// Auto-style per-model selection over trace-mode engine pools.
 pub struct TraceBackend {
@@ -55,17 +56,23 @@ impl ExecBackend for TraceBackend {
         "trace"
     }
 
-    fn prepare(&self, model: &Model) -> Result<PreparedModel, BackendError> {
+    fn prepare(
+        &self,
+        model: &Model,
+        lease: &PlacementLease,
+    ) -> Result<PreparedModel, BackendError> {
         match select(model, &self.engine, self.precision, self.radix)? {
-            Selection::Native => self.native.prepare(model),
+            Selection::Native => self.native.prepare(model, lease),
             Selection::Sharded(sp) => Ok(PreparedModel {
                 model: model.clone(),
                 concurrency: sp.k(),
+                token: lease.token,
                 exec: PreparedExec::Sharded(sp),
             }),
             Selection::ColSharded(cp) => Ok(PreparedModel {
                 model: model.clone(),
                 concurrency: cp.engine_concurrency(&self.engine),
+                token: lease.token,
                 exec: PreparedExec::ColSharded(cp),
             }),
         }
@@ -91,7 +98,8 @@ impl ExecBackend for TraceBackend {
         // quarantines exhausted its member budget hands the group to
         // the single trace-mode engine (multi-pass, no residency,
         // exact numerics), flagged `degraded`.
-        match self.native.prepare(&prepared.model) {
+        let fallback_lease = PlacementLease::with_token(&prepared.model, prepared.token);
+        match self.native.prepare(&prepared.model, &fallback_lease) {
             Ok(native_prep) => {
                 let mut out = self.native.execute_batch(&native_prep, xs);
                 for r in out.iter_mut().flatten() {
@@ -139,8 +147,8 @@ mod tests {
         for (id, m, n) in [(1u64, 48, 64), (2u64, 768, 64)] {
             let model = gemv_model(id, m, n, id + 7);
             let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -100, 100)).collect();
-            let pt = trace.prepare(&model).unwrap();
-            let pa = auto.prepare(&model).unwrap();
+            let pt = trace.prepare_local(&model).unwrap();
+            let pa = auto.prepare_local(&model).unwrap();
             let rt = trace.execute_batch(&pt, &xs);
             let ra = auto.execute_batch(&pa, &xs);
             for (t, a) in rt.into_iter().zip(ra) {

@@ -20,6 +20,7 @@
 use crate::engine::EngineConfig;
 use crate::gemv::scheduler::Layer;
 use crate::gemv::{plan, GemvError, GemvProgram};
+use crate::placement::{FleetConfig, FleetPlanner};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -86,6 +87,83 @@ pub enum RegistryError {
     /// a serving worker mid-request.
     #[error("model '{name}': program `{label}` rejected by the static verifier:\n{report}")]
     InvalidProgram { name: String, label: String, report: Box<crate::analysis::ProgramReport> },
+    /// The model's weight footprint does not fit the fleet: either it
+    /// exceeds one member's BRAM budget (it could never be placed), or
+    /// the fleet's aggregate unreserved capacity is smaller than the
+    /// request. Only an *enforcing* fleet
+    /// ([`FleetConfig::enforce`](crate::placement::FleetConfig)) denies;
+    /// the default tracking planner admits everything. Freeing capacity
+    /// (`unregister`) makes the same registration admissible again —
+    /// admission never evicts a live reservation (docs/PLACEMENT.md).
+    #[error(
+        "fleet capacity exceeded: requested {requested_bits} bits, {available_bits} available"
+    )]
+    CapacityExceeded { requested_bits: u64, available_bits: u64 },
+}
+
+/// One model registration, fully described: the payload plus the
+/// numeric/verification hints admission should use — the single typed
+/// entry point [`ModelRegistry::register`] consumes. Replaces the
+/// `register_gemv`/`register_mlp` pair (kept as thin wrappers), so
+/// shape validation, program verification, and placement admission all
+/// flow through one path.
+///
+/// ```
+/// # use imagine::coordinator::{ModelRegistry, ModelSpec};
+/// let reg = ModelRegistry::default();
+/// reg.register("small", ModelSpec::gemv(vec![1; 12], 3, 4)).unwrap();
+/// reg.register("quant", ModelSpec::gemv(vec![1; 16], 4, 4).precision(4))
+///     .unwrap();
+/// ```
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    kind: SpecKind,
+    precision: Option<usize>,
+    profile: Option<VerifyProfile>,
+}
+
+#[derive(Debug, Clone)]
+enum SpecKind {
+    Gemv { w: Vec<i64>, m: usize, n: usize },
+    Mlp { layers: Vec<Layer>, scales: Vec<f64> },
+}
+
+impl ModelSpec {
+    /// A single `m x n` weight matrix served as GEMV.
+    pub fn gemv(w: Vec<i64>, m: usize, n: usize) -> Self {
+        ModelSpec { kind: SpecKind::Gemv { w, m, n }, precision: None, profile: None }
+    }
+
+    /// An MLP layer stack with inter-layer requantization scales.
+    pub fn mlp(layers: Vec<Layer>, scales: Vec<f64>) -> Self {
+        ModelSpec { kind: SpecKind::Mlp { layers, scales }, precision: None, profile: None }
+    }
+
+    /// Served operand precision (bits) — the footprint admission
+    /// reserves and the precision programs are verified at. Defaults to
+    /// the registry profile's precision.
+    pub fn precision(mut self, p: usize) -> Self {
+        self.precision = Some(p);
+        self
+    }
+
+    /// Override the registry's [`VerifyProfile`] for this one model
+    /// (engine geometry / precision / radix used by the registration-
+    /// time static verification).
+    pub fn verify_profile(mut self, profile: VerifyProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Resident weight elements this spec will occupy (the placement
+    /// footprint is [`weight_footprint_bits`](crate::gemv::mapper::weight_footprint_bits)
+    /// of this at the effective precision).
+    fn weight_elems(&self) -> u64 {
+        match &self.kind {
+            SpecKind::Gemv { m, n, .. } => (*m as u64) * (*n as u64),
+            SpecKind::Mlp { layers, .. } => layers.iter().map(|l| l.w.len() as u64).sum(),
+        }
+    }
 }
 
 /// Geometry + numeric profile the registry verifies candidate models
@@ -113,6 +191,10 @@ impl Default for VerifyProfile {
 pub struct ModelRegistry {
     models: Arc<RwLock<BTreeMap<String, Model>>>,
     profile: VerifyProfile,
+    /// The fleet placement planner admission reserves against. Shared
+    /// with the coordinator's scheduler; `Default` is a non-enforcing
+    /// tracking planner.
+    fleet: FleetPlanner,
 }
 
 impl ModelRegistry {
@@ -123,10 +205,29 @@ impl ModelRegistry {
         self
     }
 
-    /// Generate this shape's instruction streams under the registry's
-    /// profile and run the static verifier over them.
-    fn verify_shape(&self, name: &str, m: usize, n: usize) -> Result<(), RegistryError> {
-        let pr = &self.profile;
+    /// Attach an explicit fleet shape: admission reserves (and, when
+    /// `cfg.enforce`, denies with
+    /// [`RegistryError::CapacityExceeded`]) against this fleet's
+    /// aggregate capacity, and a coordinator started over this registry
+    /// dispatches by its placement plan.
+    pub fn with_fleet(mut self, cfg: FleetConfig) -> Self {
+        self.fleet = FleetPlanner::with_config(cfg);
+        self
+    }
+
+    /// The placement planner this registry admits against.
+    pub fn fleet(&self) -> &FleetPlanner {
+        &self.fleet
+    }
+
+    /// Generate a shape's instruction streams under `profile` and run
+    /// the static verifier over them.
+    fn verify_shape(
+        pr: &VerifyProfile,
+        name: &str,
+        m: usize,
+        n: usize,
+    ) -> Result<(), RegistryError> {
         let gp = GemvProgram::generate(plan(&pr.engine, m, n, pr.precision, pr.radix));
         Self::check_programs(name, &gp)
     }
@@ -142,6 +243,103 @@ impl ModelRegistry {
         Ok(())
     }
 
+    /// Register one model from its [`ModelSpec`] — the single typed
+    /// entry point: shape validation, static program verification
+    /// (under the spec's profile/precision overrides, else the
+    /// registry's), then placement admission (an enforcing fleet denies
+    /// with [`RegistryError::CapacityExceeded`]), then insertion.
+    pub fn register(&self, name: &str, spec: ModelSpec) -> Result<(), RegistryError> {
+        let mut profile = spec.profile.unwrap_or(self.profile);
+        if let Some(p) = spec.precision {
+            profile.precision = p;
+        }
+        match &spec.kind {
+            SpecKind::Gemv { w, m, n } => {
+                // a 0 x n (or m x 0) model would panic the mapping
+                // planner on a worker thread; reject at the front door
+                if *m == 0 || *n == 0 {
+                    return Err(RegistryError::Shape {
+                        name: name.into(),
+                        what: "matrix dims",
+                        expected: 1,
+                        got: 0,
+                    });
+                }
+                if w.len() != m * n {
+                    return Err(RegistryError::Shape {
+                        name: name.into(),
+                        what: "matrix",
+                        expected: m * n,
+                        got: w.len(),
+                    });
+                }
+                Self::verify_shape(&profile, name, *m, *n)?;
+            }
+            SpecKind::Mlp { layers, scales } => {
+                if layers.is_empty() {
+                    return Err(RegistryError::Shape {
+                        name: name.into(),
+                        what: "layers",
+                        expected: 1,
+                        got: 0,
+                    });
+                }
+                if scales.len() + 1 < layers.len() {
+                    return Err(RegistryError::Shape {
+                        name: name.into(),
+                        what: "scales",
+                        expected: layers.len() - 1,
+                        got: scales.len(),
+                    });
+                }
+                if layers.iter().any(|l| l.in_dim == 0 || l.out_dim == 0) {
+                    return Err(RegistryError::Shape {
+                        name: name.into(),
+                        what: "layer dims",
+                        expected: 1,
+                        got: 0,
+                    });
+                }
+                for pair in layers.windows(2) {
+                    if pair[1].in_dim != pair[0].out_dim {
+                        return Err(RegistryError::Shape {
+                            name: name.into(),
+                            what: "layer chain",
+                            expected: pair[0].out_dim,
+                            got: pair[1].in_dim,
+                        });
+                    }
+                }
+                for l in layers {
+                    Self::verify_shape(&profile, name, l.out_dim, l.in_dim)?;
+                }
+            }
+        }
+        let elems = spec.weight_elems();
+        let mut models = self.models.write().unwrap();
+        if models.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.into()));
+        }
+        let id = next_model_id();
+        self.fleet
+            .admit(id, name, elems, profile.precision)
+            .map_err(|d| RegistryError::CapacityExceeded {
+                requested_bits: d.requested_bits,
+                available_bits: d.available_bits,
+            })?;
+        let model = match spec.kind {
+            SpecKind::Gemv { w, m, n } => Model::Gemv { id, w: Arc::new(w), m, n },
+            SpecKind::Mlp { layers, scales } => {
+                Model::Mlp { id, layers: Arc::new(layers), scales: Arc::new(scales) }
+            }
+        };
+        models.insert(name.into(), model);
+        Ok(())
+    }
+
+    /// Deprecated shim: use [`ModelRegistry::register`] with
+    /// [`ModelSpec::gemv`]. Routes through the unified path (same
+    /// validation, verification, and placement admission).
     pub fn register_gemv(
         &self,
         name: &str,
@@ -149,100 +347,36 @@ impl ModelRegistry {
         m: usize,
         n: usize,
     ) -> Result<(), RegistryError> {
-        // a 0 x n (or m x 0) model would panic the mapping planner on
-        // a worker thread; reject it at the front door
-        if m == 0 || n == 0 {
-            return Err(RegistryError::Shape {
-                name: name.into(),
-                what: "matrix dims",
-                expected: 1,
-                got: 0,
-            });
-        }
-        if w.len() != m * n {
-            return Err(RegistryError::Shape {
-                name: name.into(),
-                what: "matrix",
-                expected: m * n,
-                got: w.len(),
-            });
-        }
-        self.verify_shape(name, m, n)?;
-        let mut models = self.models.write().unwrap();
-        if models.contains_key(name) {
-            return Err(RegistryError::Duplicate(name.into()));
-        }
-        models.insert(
-            name.into(),
-            Model::Gemv { id: next_model_id(), w: Arc::new(w), m, n },
-        );
-        Ok(())
+        self.register(name, ModelSpec::gemv(w, m, n))
     }
 
+    /// Deprecated shim: use [`ModelRegistry::register`] with
+    /// [`ModelSpec::mlp`]. Routes through the unified path.
     pub fn register_mlp(
         &self,
         name: &str,
         layers: Vec<Layer>,
         scales: Vec<f64>,
     ) -> Result<(), RegistryError> {
-        if layers.is_empty() {
-            return Err(RegistryError::Shape {
-                name: name.into(),
-                what: "layers",
-                expected: 1,
-                got: 0,
-            });
-        }
-        if scales.len() + 1 < layers.len() {
-            return Err(RegistryError::Shape {
-                name: name.into(),
-                what: "scales",
-                expected: layers.len() - 1,
-                got: scales.len(),
-            });
-        }
-        if layers.iter().any(|l| l.in_dim == 0 || l.out_dim == 0) {
-            return Err(RegistryError::Shape {
-                name: name.into(),
-                what: "layer dims",
-                expected: 1,
-                got: 0,
-            });
-        }
-        for pair in layers.windows(2) {
-            if pair[1].in_dim != pair[0].out_dim {
-                return Err(RegistryError::Shape {
-                    name: name.into(),
-                    what: "layer chain",
-                    expected: pair[0].out_dim,
-                    got: pair[1].in_dim,
-                });
-            }
-        }
-        for l in &layers {
-            self.verify_shape(name, l.out_dim, l.in_dim)?;
-        }
-        let mut models = self.models.write().unwrap();
-        if models.contains_key(name) {
-            return Err(RegistryError::Duplicate(name.into()));
-        }
-        models.insert(
-            name.into(),
-            Model::Mlp { id: next_model_id(), layers: Arc::new(layers), scales: Arc::new(scales) },
-        );
-        Ok(())
+        self.register(name, ModelSpec::mlp(layers, scales))
     }
 
     /// Drop a model. Requests already holding a `Model` clone finish
     /// against the old weights; later lookups fail `NotFound`. The
-    /// removed model is returned (its `Arc`s keep the weights alive
-    /// until the caller drops them).
+    /// placement lease is released eagerly — the freed budget is
+    /// admittable before any pool slot is physically overwritten
+    /// (stale weights left in engine pools can never serve: residency
+    /// tokens are never reused). The removed model is returned (its
+    /// `Arc`s keep the weights alive until the caller drops them).
     pub fn unregister(&self, name: &str) -> Result<Model, RegistryError> {
-        self.models
+        let model = self
+            .models
             .write()
             .unwrap()
             .remove(name)
-            .ok_or_else(|| RegistryError::NotFound(name.into()))
+            .ok_or_else(|| RegistryError::NotFound(name.into()))?;
+        self.fleet.release(model.id());
+        Ok(model)
     }
 
     pub fn get(&self, name: &str) -> Result<Model, RegistryError> {

@@ -88,6 +88,20 @@ pub struct MetricsSnapshot {
     pub deadline_misses: u64,
     /// Last sharded group's measured work imbalance (max/mean x1000).
     pub shard_imbalance_milli: u64,
+    /// Models displaced from a fleet member by placement-level LRU
+    /// bin-packing pressure. Sourced from the fleet planner at
+    /// snapshot time by the coordinator (zero in a bare
+    /// `Metrics::snapshot()`); docs/PLACEMENT.md.
+    pub evictions: u64,
+    /// Models re-homed after a fleet member died (planner-sourced,
+    /// like `evictions`).
+    pub migrations: u64,
+    /// Transparent re-admissions of previously evicted models on
+    /// their next serve (planner-sourced, like `evictions`).
+    pub readmissions: u64,
+    /// Placed weight bits over aggregate fleet capacity, x1000
+    /// (planner-sourced gauge; 0 with no configured members).
+    pub fleet_occupancy_milli: u64,
     /// Faults the active [`FaultPlan`](crate::sim::fault::FaultPlan)
     /// has injected process-wide (0 when `IMAGINE_FAULT` is unset and
     /// no scoped plan is installed). Sampled at snapshot time from the
@@ -122,6 +136,10 @@ impl Metrics {
             degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             shard_imbalance_milli: self.shard_imbalance_milli.load(Ordering::Relaxed),
+            evictions: 0,
+            migrations: 0,
+            readmissions: 0,
+            fleet_occupancy_milli: 0,
             faults_injected: crate::sim::fault::global()
                 .map(|f| f.counts().injected)
                 .unwrap_or(0),

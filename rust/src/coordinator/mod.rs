@@ -1,31 +1,37 @@
 //! The L3 coordinator: an asynchronous GEMV/MLP serving front-end over
-//! a pool of simulated IMAGine engines.
+//! one shared fleet of simulated IMAGine engines.
 //!
-//! Requests are dispatched to the least-loaded worker (model-affinity
-//! tiebreak keeps compiled `GemvProgram`s and staged weights hot on an
-//! idle pool), dynamically batched inside each worker, and executed
-//! through the worker's pluggable [`ExecBackend`](crate::backend):
-//! the auto-selecting simulator pair by default (single-engine for
+//! Requests are dispatched by the placement-aware
+//! [`FleetScheduler`](crate::placement::FleetScheduler): a placed model
+//! goes to its planner member (falling back to least-loaded dispatch
+//! with name-hash affinity tiebreak, which keeps compiled
+//! `GemvProgram`s and staged weights hot on an idle pool), is
+//! dynamically batched inside each worker, and executes through the
+//! member's pluggable [`ExecBackend`](crate::backend): the
+//! auto-selecting simulator pair by default (single-engine for
 //! single-pass mappings, the sharded engine pool with per-shard weight
 //! residency for multi-pass ones), or — by
 //! [`BackendPolicy`](crate::backend::BackendPolicy) — a forced
 //! native/sharded path, the PJRT golden runtime, or a cross-checking
 //! backend pair that diffs every result against a numeric oracle.
+//! Admission (and, on enforcing fleets, typed
+//! [`RegistryError::CapacityExceeded`] denial) runs against the fleet
+//! planner's aggregate BRAM capacity — docs/PLACEMENT.md.
 //! Built on std threads + channels (this environment has no async
 //! runtime crate; the event loop is in-repo by design — see Cargo.toml
 //! note).
 
 pub mod server;
 pub mod batcher;
-pub mod router;
 pub mod metrics;
 pub mod frontend;
 
 pub use server::{Coordinator, CoordinatorConfig, Request, Response, RetryPolicy, SubmitError};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::Router;
 pub use batcher::BatchPolicy;
-pub use frontend::{ModelRegistry, RegistryError, VerifyProfile};
+pub use frontend::{ModelRegistry, ModelSpec, RegistryError, VerifyProfile};
 // the policy knob rides in `CoordinatorConfig`; re-export it so
 // serving callers don't need to import `crate::backend` separately
 pub use crate::backend::BackendPolicy;
+// the fleet types serving callers configure admission/dispatch with
+pub use crate::placement::{FleetConfig, FleetPlan, FleetScheduler, PlacementMode};

@@ -22,12 +22,12 @@
 use super::batcher::{group_by_key, BatchPolicy};
 use super::frontend::{Model, ModelRegistry, RegistryError};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::Router;
 use crate::backend::{
     self, BackendContext, BackendError, BackendHealth, BackendPolicy, ExecBackend,
 };
 use crate::engine::EngineConfig;
 use crate::gemv::codegen::GemvError;
+use crate::placement::{FleetPlan, FleetScheduler, LoadToken};
 use crate::sim::{fault, U55_FMAX_MHZ};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -200,6 +200,11 @@ struct Pending {
     model: Model,
     enqueued: Instant,
     reply: Sender<Result<Response, SubmitError>>,
+    /// The fleet load slot this request holds. RAII: dropped (eagerly,
+    /// right before the reply is sent, or implicitly with the
+    /// `Pending`) it releases the member's outstanding-load count —
+    /// shed, failed, and panicked requests can no longer leak load.
+    token: Option<LoadToken>,
 }
 
 enum Job {
@@ -207,39 +212,59 @@ enum Job {
     Stop,
 }
 
-/// The coordinator: routes requests to engine workers.
+/// The coordinator: dispatches requests to the fleet's engine workers
+/// through the placement-aware [`FleetScheduler`].
 pub struct Coordinator {
     config: CoordinatorConfig,
     registry: ModelRegistry,
-    router: Router,
+    fleet: FleetScheduler,
     queues: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    /// Build the worker pool. The registry handle is shared with the
-    /// workers: models registered (or unregistered) after `start` are
-    /// visible to the live pool.
+    /// Build the fleet. The registry handle is shared with the workers
+    /// (models registered or unregistered after `start` are visible to
+    /// the live pool), and the registry's placement planner becomes the
+    /// fleet's: the scheduler owns one execution backend per member —
+    /// the per-worker private pools are gone — and dispatches each
+    /// request to its plan member.
     pub fn start(config: CoordinatorConfig, registry: ModelRegistry) -> Self {
         let metrics = Arc::new(Metrics::default());
-        let router = Router::new(config.workers);
+        let planner = registry.fleet().clone();
+        planner.adopt_runtime(config.workers, &config.engine);
+        // Split the machine's thread budget across the fleet so N
+        // members don't each spawn a full-machine column pool and
+        // contend.
+        let threads =
+            (crate::util::ThreadPool::default_threads() / config.workers.max(1)).max(1);
+        let ctx = BackendContext {
+            engine: config.engine,
+            threads,
+            precision: config.precision,
+            radix: config.radix,
+            artifacts: config.artifacts.clone(),
+        };
+        let backends: Vec<Arc<dyn ExecBackend>> =
+            (0..config.workers).map(|_| backend::build(config.backend, &ctx)).collect();
+        let fleet = FleetScheduler::new(backends, planner);
         let mut queues = Vec::with_capacity(config.workers);
         let mut handles = Vec::with_capacity(config.workers);
         for wid in 0..config.workers {
             let (tx, rx) = channel::<Job>();
             let cfg = config.clone();
             let met = metrics.clone();
-            let rtr = router.clone();
+            let flt = fleet.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("imagine-worker-{wid}"))
-                    .spawn(move || worker_loop(cfg, met, rtr, wid, rx))
+                    .spawn(move || worker_loop(cfg, met, flt, wid, rx))
                     .expect("spawn worker"),
             );
             queues.push(tx);
         }
-        Coordinator { config, registry, router, queues, handles, metrics }
+        Coordinator { config, registry, fleet, queues, handles, metrics }
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -252,7 +277,22 @@ impl Coordinator {
         &self.registry
     }
 
-    /// Submit a request; returns the reply channel immediately.
+    /// The placement-aware scheduler (load counters, member backends).
+    pub fn fleet(&self) -> &FleetScheduler {
+        &self.fleet
+    }
+
+    /// Point-in-time snapshot of the fleet placement plan (per-member
+    /// occupancy, resident models, last-served ages — the `imagine
+    /// fleet` dump).
+    pub fn fleet_plan(&self) -> FleetPlan {
+        self.fleet.planner().plan()
+    }
+
+    /// Submit a request; returns the reply channel immediately. A
+    /// member whose queue is gone (worker died) is marked dead — its
+    /// models migrate — and the request re-dispatches to a survivor;
+    /// only a fleet with no live member left answers [`SubmitError::Closed`].
     pub fn submit(
         &self,
         req: Request,
@@ -266,14 +306,24 @@ impl Coordinator {
             });
         }
         let (reply, rx) = channel();
-        let worker = self.router.dispatch(&req.model);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        let pending = Pending { req, model, enqueued: Instant::now(), reply };
-        if self.queues[worker].send(Job::Run(pending)).is_err() {
-            self.router.complete(worker);
-            return Err(SubmitError::Closed);
+        let mut pending =
+            Pending { req, model, enqueued: Instant::now(), reply, token: None };
+        for _ in 0..self.config.workers.max(1) {
+            let token = self.fleet.dispatch(&pending.req.model, pending.model.id());
+            let wid = token.member();
+            pending.token = Some(token);
+            match self.queues[wid].send(Job::Run(pending)) {
+                Ok(()) => return Ok(rx),
+                Err(err) => {
+                    let Job::Run(mut p) = err.0 else { return Err(SubmitError::Closed) };
+                    p.token = None; // release the dead member's slot
+                    self.fleet.note_member_down(wid);
+                    pending = p;
+                }
+            }
         }
-        Ok(rx)
+        Err(SubmitError::Closed)
     }
 
     /// Submit and wait. A reply channel that drops without an answer
@@ -284,8 +334,19 @@ impl Coordinator {
         self.submit(req)?.recv().map_err(|_| SubmitError::WorkerLost)?
     }
 
+    /// Fold the planner's lifecycle counters into a metrics snapshot.
+    fn enrich(&self, mut snap: MetricsSnapshot) -> MetricsSnapshot {
+        let planner = self.fleet.planner();
+        let stats = planner.stats();
+        snap.evictions = stats.evictions;
+        snap.migrations = stats.migrations;
+        snap.readmissions = stats.readmissions;
+        snap.fleet_occupancy_milli = planner.occupancy_milli();
+        snap
+    }
+
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.enrich(self.metrics.snapshot())
     }
 
     /// Drain and stop all workers. Every request accepted by `submit`
@@ -297,32 +358,23 @@ impl Coordinator {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        self.metrics.snapshot()
+        self.enrich(self.metrics.snapshot())
     }
 }
 
 fn worker_loop(
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
-    router: Router,
+    fleet: FleetScheduler,
     wid: usize,
     rx: Receiver<Job>,
 ) {
-    // Split the machine's thread budget across the worker pool so N
-    // workers don't each spawn a full-machine column pool and contend.
-    let threads = (crate::util::ThreadPool::default_threads() / cfg.workers.max(1)).max(1);
-    let ctx = BackendContext {
-        engine: cfg.engine,
-        threads,
-        precision: cfg.precision,
-        radix: cfg.radix,
-        artifacts: cfg.artifacts.clone(),
-    };
-    // The worker's executor. All dispatch below goes through the trait:
+    // The member's executor, owned by the fleet scheduler (built once
+    // at coordinator start). All dispatch below goes through the trait:
     // the policy decides what actually runs (auto-selected simulator
     // engines, golden PJRT, a cross-checking pair, ...).
-    let backend: Arc<dyn ExecBackend> = backend::build(cfg.backend, &ctx);
-    // This worker's last-seen backend health; execute_batch feeds the
+    let backend: Arc<dyn ExecBackend> = fleet.backend(wid).clone();
+    // This member's last-seen backend health; execute_batch feeds the
     // deltas (failovers, newly quarantined members) into the metrics.
     let mut health_seen = BackendHealth::default();
     'outer: loop {
@@ -352,12 +404,12 @@ fn worker_loop(
                 Job::Run(p) => batch.push(p),
                 Job::Stop => {
                     let be = backend.as_ref();
-                    execute_batch(&cfg, &metrics, &router, wid, be, batch, &mut health_seen);
+                    execute_batch(&cfg, &metrics, &fleet, be, batch, &mut health_seen);
                     break 'outer;
                 }
             }
         }
-        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch, &mut health_seen);
+        execute_batch(&cfg, &metrics, &fleet, backend.as_ref(), batch, &mut health_seen);
     }
     // Drain-after-stop: requests accepted before shutdown can still sit
     // behind the Stop sentinel (e.g. submitted while the final batch
@@ -373,7 +425,7 @@ fn worker_loop(
     while !rest.is_empty() {
         let take = rest.len().min(chunk);
         let batch: Vec<_> = rest.drain(..take).collect();
-        execute_batch(&cfg, &metrics, &router, wid, backend.as_ref(), batch, &mut health_seen);
+        execute_batch(&cfg, &metrics, &fleet, backend.as_ref(), batch, &mut health_seen);
     }
 }
 
@@ -387,13 +439,11 @@ fn is_transient(e: &BackendError) -> bool {
 fn execute_batch(
     cfg: &CoordinatorConfig,
     metrics: &Arc<Metrics>,
-    router: &Router,
-    wid: usize,
+    fleet: &FleetScheduler,
     backend: &dyn ExecBackend,
     mut batch: Vec<Pending>,
     health_seen: &mut BackendHealth,
 ) {
-    let drained = batch.len() as u64;
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     // Group by model *id* (not name): two registrations sharing a name
     // must never fuse, each request runs against the model it was
@@ -411,10 +461,16 @@ fn execute_batch(
         // caller has already given up on the result.
         let mut live = Vec::with_capacity(idxs.len());
         for &i in &idxs {
-            let p = &batch[i];
+            let p = &mut batch[i];
             let waited_us = p.enqueued.elapsed().as_micros() as u64;
             match p.req.deadline_us {
                 Some(d) if waited_us > d => {
+                    // release the load slot *before* answering: the old
+                    // router's accounting drifted here (shed groups
+                    // never reached `complete_n`), and dropping first
+                    // makes load-zero observable as soon as the caller
+                    // sees the reply
+                    p.token.take();
                     metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
                     let _ = p.reply.send(Err(SubmitError::DeadlineExceeded {
@@ -448,8 +504,12 @@ fn execute_batch(
         // retry policy (prepare is pure planning, so re-preparing per
         // attempt is cheap and picks up post-failover pool state).
         let mut attempt: u32 = 0;
+        // the planner-issued placement lease (residency token == model
+        // id) — stable across retry attempts, so re-preparation after a
+        // failover keeps the same residency identity
+        let lease = fleet.lease(&model);
         let (results, concurrency): (Vec<Result<_, Arc<BackendError>>>, usize) = loop {
-            let (outs, concurrency) = match backend.prepare(&model) {
+            let (outs, concurrency) = match backend.prepare(&model, &lease) {
                 Ok(prep) => {
                     let concurrency = prep.concurrency.max(1);
                     (backend.execute_batch(&prep, &xs), concurrency)
@@ -502,7 +562,9 @@ fn execute_batch(
             metrics.host_reduce_adds.fetch_add(reduce_adds, Ordering::Relaxed);
         }
         for (&i, result) in live.iter().zip(results) {
-            let pending = &batch[i];
+            let pending = &mut batch[i];
+            // release the load slot before replying (see the shed path)
+            pending.token.take();
             let result = match result {
                 // cross-check metrics record what the last attempt saw,
                 // *before* escalation — a mismatch that persisted to a
@@ -563,7 +625,8 @@ fn execute_batch(
         metrics.quarantined_engines.fetch_add(newly_quarantined, Ordering::Relaxed);
     }
     *health_seen = h;
-    router.complete_n(wid, drained);
+    // any tokens not eagerly taken (e.g. a reply channel gone) release
+    // here with the batch
 }
 
 #[cfg(test)]

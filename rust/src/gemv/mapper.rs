@@ -202,6 +202,32 @@ pub fn plan(config: &EngineConfig, m: usize, n: usize, p: usize, radix: u8) -> M
 /// buffers), not an algorithmic limit.
 pub const MAX_SHARDS: usize = 16;
 
+/// Spill-pair bits one engine has for resident weights: the BRAM
+/// budget minus the reserved working registers every PE keeps. The
+/// single-pass ceiling in [`plan_shards_checked_weighted`] and the
+/// fleet planner's capacity math both derive from this number, so
+/// admission and shardability agree on what "fits" means.
+pub fn engine_usable_bits(config: &EngineConfig) -> u64 {
+    let reserved = (config.total_pes() * RESERVED_REGS * REG_BITS) as u64;
+    config.bram_budget_bits() - reserved
+}
+
+/// Aggregate resident-weight bits one fleet member can host: up to
+/// [`MAX_SHARDS`] pool engines' usable spill bits (a member's sharded
+/// tiers fan out to at most that many engines). The fleet planner's
+/// default per-member budget.
+pub fn member_capacity_bits(config: &EngineConfig) -> u64 {
+    MAX_SHARDS as u64 * engine_usable_bits(config)
+}
+
+/// BRAM footprint of `elems` resident weight elements at precision
+/// `p`: each element occupies one p-bit spill *pair* slot (the weight
+/// plus its x companion) — the same `2 * n * p` per-row accounting the
+/// shard planner's residency ceiling uses.
+pub fn weight_footprint_bits(elems: u64, p: usize) -> u64 {
+    2 * p as u64 * elems
+}
+
 /// One row-shard of a matrix: rows `[row0, row0 + rows)`, always
 /// executed on engine-pool member `index`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -378,9 +404,8 @@ pub fn plan_shards_checked_weighted(
     // reserved working registers — so rows past `cap` can never be
     // single-pass and the search range tightens straight from the
     // budget (`EngineConfig::bram_budget_bits`).
-    let reserved = (config.total_pes() * RESERVED_REGS * REG_BITS) as u64;
-    let usable = config.bram_budget_bits() - reserved;
-    let cap = (usable / (2 * n as u64 * p as u64)).clamp(1, m as u64) as usize;
+    let usable = engine_usable_bits(config);
+    let cap = (usable / weight_footprint_bits(n as u64, p)).clamp(1, m as u64) as usize;
     // invariant: single(lo) && !single(hi) — hi = m is multi-pass per
     // the early return; hi = cap + 1 overflows the spill budget
     let (mut lo, mut hi) = (1usize, m.min(cap + 1));

@@ -13,6 +13,7 @@ pub mod baselines;
 pub mod gemv;
 pub mod runtime;
 pub mod backend;
+pub mod placement;
 pub mod coordinator;
 pub mod report;
 pub mod util;

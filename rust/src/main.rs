@@ -4,6 +4,7 @@
 //! imagine reproduce [all|table1|table2|table3|table4|table5|fig1|fig4|fig5|fig6|asic]
 //! imagine gemv --m 256 --n 256 --precision 8 [--booth] [--verify]
 //! imagine serve --requests 64 --workers 2 [--batch 16] [--backend auto]
+//! imagine fleet --workers 2 --models 3 [--requests 24] [--d 64] [--enforce]
 //! imagine devices
 //! imagine model --d 1024 --precision 8      # analytic latency point
 //! imagine lint [FILE...] [--corpus] [--small] [--cost]   # static ISA verifier
@@ -20,7 +21,7 @@ use imagine::backend::BackendPolicy;
 use imagine::baselines::latency::{all_engines, comparison_engines};
 use imagine::baselines::ImagineModel;
 use imagine::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, ModelRegistry, Request,
+    BatchPolicy, Coordinator, CoordinatorConfig, FleetConfig, ModelRegistry, ModelSpec, Request,
 };
 use imagine::engine::{Engine, EngineConfig};
 use imagine::gemv::{plan, GemvProgram};
@@ -40,12 +41,13 @@ fn main() {
         Some("reproduce") => cmd_reproduce(&args),
         Some("gemv") => cmd_gemv(&args),
         Some("serve") => cmd_serve(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("devices") => cmd_devices(),
         Some("model") => cmd_model(&args),
         Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: imagine <reproduce|gemv|serve|devices|model|lint> [options]\n\
+                "usage: imagine <reproduce|gemv|serve|fleet|devices|model|lint> [options]\n\
                  see rust/src/main.rs header for details"
             );
             2
@@ -204,6 +206,92 @@ fn cmd_serve(args: &Args) -> i32 {
         return 1;
     }
     (m.failed > 0) as i32
+}
+
+/// `imagine fleet --workers W --models K [--requests N] [--d D]
+/// [--enforce]`
+///
+/// Registers K demo GEMV models, drives N requests round-robin across
+/// them, and dumps the live [`FleetPlan`](imagine::coordinator::FleetPlan):
+/// per-member occupancy, resident models with their last-served ages,
+/// unplaced models, and the planner's lifecycle counters
+/// (docs/PLACEMENT.md). `--enforce` attaches an enforcing fleet so
+/// over-capacity registrations fail typed instead of tracking.
+fn cmd_fleet(args: &Args) -> i32 {
+    let workers = args.get_usize("workers", 2);
+    let models = args.get_usize("models", 3).max(1);
+    let requests = args.get_usize("requests", 24);
+    let d = args.get_usize("d", 64);
+    let reg = if args.has("enforce") {
+        ModelRegistry::default().with_fleet(FleetConfig::enforced(workers, EngineConfig::small()))
+    } else {
+        ModelRegistry::default()
+    };
+    let mut rng = XorShift::new(9);
+    for i in 0..models {
+        let spec = ModelSpec::gemv(rng.vec_i64(d * d, -64, 63), d, d);
+        if let Err(e) = reg.register(&format!("demo{i}"), spec) {
+            eprintln!("register demo{i}: {e}");
+            return 1;
+        }
+    }
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers, batch: BatchPolicy::none(), ..Default::default() },
+        reg,
+    );
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            coord
+                .submit(Request::new(format!("demo{}", i % models), rng.vec_i64(d, -64, 63)))
+                .unwrap()
+        })
+        .collect();
+    let mut failed = 0usize;
+    for rx in rxs {
+        if !matches!(rx.recv(), Ok(Ok(_))) {
+            failed += 1;
+        }
+    }
+    let plan = coord.fleet_plan();
+    println!(
+        "fleet: {} member(s), member budget {} bits, aggregate {} bits",
+        plan.members.len(),
+        plan.member_budget_bits,
+        plan.aggregate_bits
+    );
+    println!("reserved (admission-level): {} bits", plan.reserved_bits);
+    for m in &plan.members {
+        println!(
+            "  member {} [{}]: {}/{} bits placed, {} model(s)",
+            m.index,
+            if m.alive { "alive" } else { "DEAD" },
+            m.used_bits,
+            m.budget_bits,
+            m.models.len()
+        );
+        for pm in &m.models {
+            println!(
+                "    id {} '{}': {} bits, last served {} tick(s) ago",
+                pm.id, pm.name, pm.bits, pm.last_served_age
+            );
+        }
+    }
+    if !plan.unplaced.is_empty() {
+        println!("  unplaced ({}):", plan.unplaced.len());
+        for pm in &plan.unplaced {
+            println!("    id {} '{}': {} bits", pm.id, pm.name, pm.bits);
+        }
+    }
+    println!(
+        "lifecycle: evictions={} migrations={} readmissions={} denials={}",
+        plan.stats.evictions, plan.stats.migrations, plan.stats.readmissions, plan.stats.denials
+    );
+    let m = coord.shutdown();
+    println!(
+        "served: completed={} failed={} residency_hits={} occupancy={}/1000",
+        m.completed, m.failed, m.residency_hits, m.fleet_occupancy_milli
+    );
+    (failed > 0 || m.failed > 0) as i32
 }
 
 fn cmd_devices() -> i32 {

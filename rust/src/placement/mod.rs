@@ -1,0 +1,156 @@
+//! Fleet-level placement: one global planner over the shared device
+//! fleet, instead of per-worker private pools and per-request-group
+//! placement decisions.
+//!
+//! The serving stack used to fragment the fleet three ways: each
+//! coordinator worker owned a private engine pool, shard placement was
+//! re-decided per fused group, and a registered model squatted on its
+//! residency forever — aggregate BRAM capacity was invisible to
+//! admission. This module centralizes those decisions
+//! (cf. "Balanced Data Placement for GEMV Acceleration with PIM",
+//! PAPERS.md: placement, not raw compute, determines PIM GEMV
+//! throughput):
+//!
+//! * [`FleetPlanner`] — the shared placement state: per-member BRAM
+//!   budgets, the registration-level capacity reservation admission
+//!   checks against ([`RegistryError::CapacityExceeded`] when an
+//!   enforced fleet is over-subscribed), the model→member packing
+//!   (most-free-bits member, LRU-by-last-served eviction when a member
+//!   must make room), and migration off dead members;
+//! * [`FleetScheduler`] — the placement-aware dispatcher that replaced
+//!   the old `Router` *and* the per-worker backend ownership: it owns
+//!   the fleet's execution backends, routes each request to its
+//!   placement member (falling back to stable name-hash affinity for
+//!   unplaced models), spills past a small slack to the least-loaded
+//!   live member, and accounts load with RAII [`LoadToken`]s so shed,
+//!   failed, and panicked requests can no longer leak load;
+//! * [`PlacementLease`] — what [`ExecBackend::prepare`] now consumes:
+//!   the planner-issued residency token + reserved footprint for a
+//!   model, instead of each backend inventing its own pool identity.
+//!   Direct callers (tests, ablations) use
+//!   [`ExecBackend::prepare_local`], whose lease is the identity lease
+//!   (`token == model.id()`), which keeps every pre-fleet behavior
+//!   bit-identical.
+//!
+//! Capacity model, admission contract and the eviction/migration
+//! lifecycle are documented in docs/PLACEMENT.md.
+//!
+//! [`ExecBackend::prepare`]: crate::backend::ExecBackend::prepare
+//! [`ExecBackend::prepare_local`]: crate::backend::ExecBackend::prepare_local
+//! [`RegistryError::CapacityExceeded`]: crate::coordinator::RegistryError::CapacityExceeded
+
+pub mod planner;
+pub mod scheduler;
+
+pub use planner::{FleetPlan, FleetPlanner, MemberPlan, PlacedModel, PlannerStats};
+pub use scheduler::{FleetScheduler, LoadToken};
+
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::mapper::member_capacity_bits;
+
+/// How the fleet scheduler picks a request's home member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementMode {
+    /// Placement-aware dispatch: a placed model's home is its planner
+    /// member; unplaced models fall back to name-hash affinity.
+    #[default]
+    Fleet,
+    /// The pre-planner policy, kept for bit-for-bit equivalence
+    /// testing: pure name-hash affinity, placement state maintained but
+    /// never consulted for dispatch.
+    Legacy,
+}
+
+/// Fleet shape + admission policy for a [`FleetPlanner`]. Attached to a
+/// registry with
+/// [`ModelRegistry::with_fleet`](crate::coordinator::ModelRegistry::with_fleet);
+/// a registry built without one gets a *tracking* planner (admission
+/// never denies, placement still planned) whose member count and
+/// budgets are adopted from the coordinator at `start`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    /// Fleet members (engine-owning workers). Keep this equal to
+    /// `CoordinatorConfig::workers`; a mismatch folds placement members
+    /// onto workers modulo the worker count.
+    pub members: usize,
+    /// Geometry the default per-member budget is derived from
+    /// ([`member_capacity_bits`]): one member can host up to
+    /// `MAX_SHARDS` single-pass engines' usable spill bits.
+    pub engine: EngineConfig,
+    /// Explicit per-member budget override (bits) — exact-boundary
+    /// tests and capacity ablations.
+    pub member_budget_bits: Option<u64>,
+    /// Deny registration (typed `CapacityExceeded`) when the model's
+    /// footprint exceeds one member's budget or the fleet's unreserved
+    /// aggregate. `false` = track reservations but admit everything.
+    pub enforce: bool,
+    pub mode: PlacementMode,
+}
+
+impl FleetConfig {
+    /// An enforcing fleet of `members` over `engine`-sized members.
+    pub fn enforced(members: usize, engine: EngineConfig) -> Self {
+        FleetConfig {
+            members,
+            engine,
+            member_budget_bits: None,
+            enforce: true,
+            mode: PlacementMode::Fleet,
+        }
+    }
+
+    /// The per-member budget this config resolves to.
+    pub fn budget_bits(&self) -> u64 {
+        self.member_budget_bits
+            .unwrap_or_else(|| member_capacity_bits(&self.engine))
+    }
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            members: 0,
+            engine: EngineConfig::small(),
+            member_budget_bits: None,
+            enforce: false,
+            mode: PlacementMode::Fleet,
+        }
+    }
+}
+
+/// A planner-issued placement for one registered model — the value
+/// [`ExecBackend::prepare`](crate::backend::ExecBackend::prepare)
+/// consumes instead of constructing its own pool identity. The `token`
+/// is the weight-residency token execution stages under; it equals the
+/// registry model id (ids are process-unique and never reused, so
+/// staleness stays detectable exactly as before the fleet existed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacementLease {
+    /// Registry id of the leased model.
+    pub model_id: u64,
+    /// Residency token `execute_batch` stages weights under.
+    pub token: u64,
+    /// Fleet member the plan pinned the model to (the dispatch home; a
+    /// spilled request may still execute elsewhere).
+    pub member: usize,
+    /// Footprint bits reserved for the model (0 for local leases).
+    pub bits: u64,
+}
+
+impl PlacementLease {
+    /// The identity lease direct callers use ([`prepare_local`]):
+    /// token = model id, member 0, no reservation — bit-identical to
+    /// the pre-lease `prepare(model)` behavior.
+    ///
+    /// [`prepare_local`]: crate::backend::ExecBackend::prepare_local
+    pub fn local(model: &Model) -> Self {
+        PlacementLease { model_id: model.id(), token: model.id(), member: 0, bits: 0 }
+    }
+
+    /// A lease carrying an explicit token (degradation paths re-prepare
+    /// a fallback plan without changing the residency identity).
+    pub fn with_token(model: &Model, token: u64) -> Self {
+        PlacementLease { token, ..Self::local(model) }
+    }
+}

@@ -1,0 +1,551 @@
+//! The fleet placement planner: capacity reservations, model→member
+//! packing, LRU eviction, and migration off dead members.
+//!
+//! Two capacity levels keep admission and packing separable:
+//!
+//! * **Reservation (registration-level).** `admit` reserves a model's
+//!   footprint against the fleet aggregate for the model's whole
+//!   registered life; an *enforcing* planner denies the registration
+//!   when the footprint exceeds one member's budget (it could never be
+//!   placed) or the unreserved aggregate (the fleet is full). Eviction
+//!   never frees a reservation — only `release` (unregister) does —
+//!   so `CapacityExceeded` is a real boundary, not something eviction
+//!   can argue with.
+//! * **Placement (residency-level).** A reserved model is packed onto
+//!   the member with the most free budget bits; when bin-packing
+//!   pressure leaves no member with room, the target member evicts its
+//!   least-recently-served models until the newcomer fits. Evicted
+//!   models keep their reservation and re-place transparently on their
+//!   next dispatch (`ensure_placed`); a member death unplaces its
+//!   models, which then migrate to survivors the same lazy way.
+//!
+//! Tokens: placement never re-mints residency tokens — the token *is*
+//! the registry model id, process-unique and never reused, so a
+//! re-placed model serves resident when its weights genuinely still
+//! sit in the member's pools and re-stages otherwise. The planner's
+//! eviction bookkeeping decides *where* models live; the schedulers'
+//! token checks keep staleness impossible, exactly as before.
+
+use super::{FleetConfig, PlacementLease, PlacementMode};
+use crate::coordinator::frontend::Model;
+use crate::engine::EngineConfig;
+use crate::gemv::mapper::member_capacity_bits;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Typed admission denial ([`FleetPlanner::admit`]); the registry maps
+/// it onto `RegistryError::CapacityExceeded`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CapacityDenied {
+    pub requested_bits: u64,
+    pub available_bits: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    bits: u64,
+    placed: Option<usize>,
+    /// True once the model has held a placement (re-placements after
+    /// that count as readmissions, not first placements).
+    was_placed: bool,
+    /// Logical last-served clock tick (planner-wide counter), the LRU
+    /// key for eviction.
+    last_served: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct MemberState {
+    used_bits: u64,
+    dead: bool,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    cfg: FleetConfig,
+    /// Set by [`FleetPlanner::with_config`]; an explicit fleet keeps
+    /// its shape when a coordinator adopts it at start.
+    explicit: bool,
+    member_bits: u64,
+    members: Vec<MemberState>,
+    entries: BTreeMap<u64, Entry>,
+    /// Registration-level reservation total (survives eviction).
+    reserved_bits: u64,
+    clock: u64,
+    stats: PlannerStats,
+}
+
+/// Lifecycle counters the planner accumulates (surfaced through
+/// `MetricsSnapshot` and the `imagine fleet` dump).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    /// Models unplaced by LRU pressure to make room on a member.
+    pub evictions: u64,
+    /// Models displaced off a dead member.
+    pub migrations: u64,
+    /// Re-placements of previously evicted/migrated models on dispatch.
+    pub readmissions: u64,
+    /// Enforced admissions denied (`CapacityExceeded`).
+    pub denials: u64,
+}
+
+/// Shared-by-handle placement planner (clones share one state). A
+/// `Default` planner is a *tracking* fleet: no members yet (the
+/// coordinator adopts its worker count at start), admission never
+/// denies.
+#[derive(Debug, Clone, Default)]
+pub struct FleetPlanner {
+    inner: Arc<Mutex<State>>,
+}
+
+impl FleetPlanner {
+    /// Planner with an explicit fleet shape ([`FleetConfig`]).
+    pub fn with_config(cfg: FleetConfig) -> Self {
+        let planner = FleetPlanner::default();
+        {
+            let mut s = planner.inner.lock().unwrap();
+            s.member_bits = cfg.budget_bits();
+            s.members = vec![MemberState::default(); cfg.members];
+            s.cfg = cfg;
+            s.explicit = true;
+        }
+        planner
+    }
+
+    /// Adopt the coordinator's runtime shape: a tracking planner takes
+    /// the worker count and the engine-derived member budget; an
+    /// explicit fleet keeps its configured shape (only filling in a
+    /// zero member count).
+    pub fn adopt_runtime(&self, workers: usize, engine: &EngineConfig) {
+        let mut s = self.inner.lock().unwrap();
+        if !s.explicit {
+            s.cfg.engine = *engine;
+            s.member_bits = s.cfg.member_budget_bits.unwrap_or_else(|| member_capacity_bits(engine));
+        }
+        if s.members.len() != workers && (!s.explicit || s.cfg.members == 0) {
+            s.cfg.members = workers;
+            s.members = vec![MemberState::default(); workers];
+            // placements indexed a stale member set; re-place lazily
+            for e in s.entries.values_mut() {
+                e.placed = None;
+            }
+        }
+    }
+
+    pub fn mode(&self) -> PlacementMode {
+        self.inner.lock().unwrap().cfg.mode
+    }
+
+    pub fn members(&self) -> usize {
+        self.inner.lock().unwrap().members.len()
+    }
+
+    /// Reserve `elems` weight elements at `precision` for model `id`
+    /// and pack it onto a member. An enforcing planner denies with the
+    /// exact requested/available bit counts; a tracking planner always
+    /// admits (a model too big for one member simply stays unplaced
+    /// and serves through name-hash dispatch).
+    pub fn admit(
+        &self,
+        id: u64,
+        name: &str,
+        elems: u64,
+        precision: usize,
+    ) -> Result<(), CapacityDenied> {
+        let bits = crate::gemv::mapper::weight_footprint_bits(elems, precision);
+        let mut s = self.inner.lock().unwrap();
+        if s.cfg.enforce && !s.members.is_empty() {
+            let aggregate = s.member_bits * s.members.len() as u64;
+            let unreserved = aggregate.saturating_sub(s.reserved_bits);
+            let available = unreserved.min(s.member_bits);
+            if bits > available {
+                s.stats.denials += 1;
+                return Err(CapacityDenied { requested_bits: bits, available_bits: available });
+            }
+        }
+        s.reserved_bits += bits;
+        let tick = s.next_tick();
+        s.entries.insert(
+            id,
+            Entry { name: name.into(), bits, placed: None, was_placed: false, last_served: tick },
+        );
+        s.place(id);
+        Ok(())
+    }
+
+    /// Release model `id`'s placement *and* its reservation eagerly
+    /// (unregister): the freed budget is admittable again before any
+    /// pool slot is physically overwritten — tokens are never reused,
+    /// so the stale weights left behind in engine pools can never be
+    /// served.
+    pub fn release(&self, id: u64) {
+        let mut s = self.inner.lock().unwrap();
+        if let Some(e) = s.entries.remove(&id) {
+            if let Some(m) = e.placed {
+                s.members[m].used_bits = s.members[m].used_bits.saturating_sub(e.bits);
+            }
+            s.reserved_bits = s.reserved_bits.saturating_sub(e.bits);
+        }
+    }
+
+    /// Bump model `id`'s last-served clock (dispatch-time LRU signal)
+    /// and re-place it if eviction or a member death unplaced it.
+    pub fn touch(&self, id: u64) {
+        let mut s = self.inner.lock().unwrap();
+        let tick = s.next_tick();
+        if let Some(e) = s.entries.get_mut(&id) {
+            e.last_served = tick;
+        }
+        if s.entries.get(&id).is_some_and(|e| e.placed.is_none()) {
+            let readmission = s.entries.get(&id).is_some_and(|e| e.was_placed);
+            if s.place(id) && readmission {
+                s.stats.readmissions += 1;
+            }
+        }
+    }
+
+    /// The dispatch home the plan assigns model `id` (`None`: unplaced
+    /// or legacy mode — fall back to name-hash affinity).
+    pub fn home(&self, id: u64) -> Option<usize> {
+        let s = self.inner.lock().unwrap();
+        if s.cfg.mode == PlacementMode::Legacy {
+            return None;
+        }
+        s.entries.get(&id).and_then(|e| e.placed).filter(|&m| !s.members[m].dead)
+    }
+
+    /// Is fleet member `m` believed alive? (Out-of-range members are
+    /// dead by definition.)
+    pub fn is_alive(&self, m: usize) -> bool {
+        let s = self.inner.lock().unwrap();
+        s.members.get(m).map(|ms| !ms.dead).unwrap_or(false)
+    }
+
+    /// Mark member `m` dead (its worker stopped answering) and displace
+    /// its models; they migrate to survivors on their next dispatch.
+    pub fn note_member_down(&self, m: usize) {
+        let mut s = self.inner.lock().unwrap();
+        let Some(ms) = s.members.get_mut(m) else { return };
+        if ms.dead {
+            return;
+        }
+        ms.dead = true;
+        ms.used_bits = 0;
+        let mut displaced = 0;
+        for e in s.entries.values_mut() {
+            if e.placed == Some(m) {
+                e.placed = None;
+                displaced += 1;
+            }
+        }
+        s.stats.migrations += displaced;
+    }
+
+    /// The lease `ExecBackend::prepare` consumes for `model`:
+    /// planner-known models carry their placement member and reserved
+    /// bits; unknown ones (direct backend callers, foreign registries)
+    /// get the identity lease.
+    pub fn lease(&self, model: &Model) -> PlacementLease {
+        let s = self.inner.lock().unwrap();
+        match s.entries.get(&model.id()) {
+            Some(e) => PlacementLease {
+                model_id: model.id(),
+                token: model.id(),
+                member: e.placed.unwrap_or(0),
+                bits: e.bits,
+            },
+            None => PlacementLease::local(model),
+        }
+    }
+
+    pub fn stats(&self) -> PlannerStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Placed bits as a share of the fleet aggregate, x1000 (0 when the
+    /// fleet has no members yet).
+    pub fn occupancy_milli(&self) -> u64 {
+        let s = self.inner.lock().unwrap();
+        let aggregate = s.member_bits * s.members.len() as u64;
+        if aggregate == 0 {
+            return 0;
+        }
+        let placed: u64 = s.members.iter().map(|m| m.used_bits).sum();
+        placed * 1000 / aggregate
+    }
+
+    /// Point-in-time snapshot of the whole plan (the `imagine fleet`
+    /// dump and the property suite's packing checks).
+    pub fn plan(&self) -> FleetPlan {
+        let s = self.inner.lock().unwrap();
+        let mut members: Vec<MemberPlan> = (0..s.members.len())
+            .map(|i| MemberPlan {
+                index: i,
+                alive: !s.members[i].dead,
+                budget_bits: s.member_bits,
+                used_bits: s.members[i].used_bits,
+                models: Vec::new(),
+            })
+            .collect();
+        let mut unplaced = Vec::new();
+        for (&id, e) in &s.entries {
+            let pm = PlacedModel {
+                id,
+                name: e.name.clone(),
+                bits: e.bits,
+                last_served_age: s.clock.saturating_sub(e.last_served),
+            };
+            match e.placed {
+                Some(m) => members[m].models.push(pm),
+                None => unplaced.push(pm),
+            }
+        }
+        FleetPlan {
+            member_budget_bits: s.member_bits,
+            aggregate_bits: s.member_bits * s.members.len() as u64,
+            reserved_bits: s.reserved_bits,
+            members,
+            unplaced,
+            stats: s.stats,
+        }
+    }
+}
+
+impl State {
+    fn next_tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Pack entry `id` onto the member with the most free bits (lowest
+    /// index wins ties), evicting that member's least-recently-served
+    /// models until it fits. Returns false when no live member can ever
+    /// hold it (footprint over the member budget, or no members yet).
+    fn place(&mut self, id: u64) -> bool {
+        let Some(e) = self.entries.get(&id) else { return false };
+        if e.placed.is_some() {
+            return true;
+        }
+        let bits = e.bits;
+        if bits > self.member_bits {
+            return false;
+        }
+        let target = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| !m.dead)
+            .min_by_key(|(i, m)| (m.used_bits, *i))
+            .map(|(i, _)| i);
+        let Some(target) = target else { return false };
+        while self.member_bits - self.members[target].used_bits < bits {
+            // evict the target's LRU resident (never the newcomer —
+            // it is not placed yet). The loop terminates: each pass
+            // frees a placed model's bits, and bits <= member_bits.
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(vid, v)| v.placed == Some(target) && **vid != id)
+                .min_by_key(|(_, v)| v.last_served)
+                .map(|(vid, _)| *vid);
+            let Some(victim) = victim else { return false };
+            let vbits = self.entries.get(&victim).map(|v| v.bits).unwrap_or(0);
+            if let Some(v) = self.entries.get_mut(&victim) {
+                v.placed = None;
+            }
+            self.members[target].used_bits =
+                self.members[target].used_bits.saturating_sub(vbits);
+            self.stats.evictions += 1;
+        }
+        self.members[target].used_bits += bits;
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.placed = Some(target);
+            e.was_placed = true;
+        }
+        true
+    }
+}
+
+/// Snapshot of the fleet plan: per-member occupancy and residents,
+/// reservation totals, lifecycle counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPlan {
+    pub member_budget_bits: u64,
+    pub aggregate_bits: u64,
+    /// Registration-level reservations (admission's view of fullness).
+    pub reserved_bits: u64,
+    pub members: Vec<MemberPlan>,
+    /// Registered models currently holding no placement (evicted,
+    /// displaced by a death, or larger than one member's budget).
+    pub unplaced: Vec<PlacedModel>,
+    pub stats: PlannerStats,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberPlan {
+    pub index: usize,
+    pub alive: bool,
+    pub budget_bits: u64,
+    /// Placed (residency-level) bits, always `<= budget_bits`.
+    pub used_bits: u64,
+    pub models: Vec<PlacedModel>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacedModel {
+    pub id: u64,
+    pub name: String,
+    pub bits: u64,
+    /// Planner clock ticks since this model was last dispatched (the
+    /// LRU eviction key, rendered as an age).
+    pub last_served_age: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(members: usize, budget: u64, enforce: bool) -> FleetPlanner {
+        FleetPlanner::with_config(FleetConfig {
+            members,
+            member_budget_bits: Some(budget),
+            enforce,
+            ..FleetConfig::default()
+        })
+    }
+
+    // weight_footprint_bits(elems, 8) = 16 * elems; keep test sizes in
+    // element units for readability
+    fn bits(elems: u64) -> u64 {
+        crate::gemv::mapper::weight_footprint_bits(elems, 8)
+    }
+
+    #[test]
+    fn admit_reserves_and_places_on_most_free_member() {
+        let p = planner(2, bits(100), true);
+        p.admit(1, "a", 60, 8).unwrap();
+        p.admit(2, "b", 60, 8).unwrap();
+        let plan = p.plan();
+        assert_eq!(plan.members[0].models.len(), 1);
+        assert_eq!(plan.members[1].models.len(), 1);
+        assert_eq!(plan.reserved_bits, bits(120));
+    }
+
+    #[test]
+    fn enforced_admission_is_exact_at_the_aggregate_boundary() {
+        let p = planner(2, bits(100), true);
+        p.admit(1, "a", 100, 8).unwrap();
+        p.admit(2, "b", 100, 8).unwrap();
+        let err = p.admit(3, "c", 1, 8).unwrap_err();
+        assert_eq!(err.requested_bits, bits(1));
+        assert_eq!(err.available_bits, 0);
+        assert_eq!(p.stats().denials, 1);
+        // release frees the reservation eagerly: the denied size admits
+        p.release(1);
+        p.admit(3, "c", 100, 8).unwrap();
+    }
+
+    #[test]
+    fn over_member_budget_denied_even_with_aggregate_free() {
+        let p = planner(4, bits(10), true);
+        let err = p.admit(1, "huge", 11, 8).unwrap_err();
+        assert_eq!(err.available_bits, bits(10));
+        assert_eq!(err.requested_bits, bits(11));
+    }
+
+    #[test]
+    fn tracking_planner_admits_everything() {
+        let p = planner(1, bits(10), false);
+        p.admit(1, "huge", 1000, 8).unwrap();
+        // too big for any member: stays unplaced, never denied
+        assert_eq!(p.plan().unplaced.len(), 1);
+        assert_eq!(p.home(1), None);
+    }
+
+    #[test]
+    fn bin_packing_pressure_evicts_lru_and_readmits_on_touch() {
+        // one member of 100; two 60-elem models can never cohabit
+        let p = planner(1, bits(100), false);
+        p.admit(1, "a", 60, 8).unwrap();
+        p.admit(2, "b", 60, 8).unwrap(); // evicts a (LRU)
+        assert_eq!(p.stats().evictions, 1);
+        assert_eq!(p.home(1), None);
+        assert_eq!(p.home(2), Some(0));
+        p.touch(1); // a re-places, evicting b
+        assert_eq!(p.home(1), Some(0));
+        assert_eq!(p.home(2), None);
+        assert_eq!(p.stats().readmissions, 1);
+        assert_eq!(p.stats().evictions, 2);
+    }
+
+    #[test]
+    fn packing_never_exceeds_member_budget() {
+        let p = planner(3, bits(100), false);
+        for (i, elems) in [40u64, 70, 30, 90, 55, 20, 100, 10].iter().enumerate() {
+            p.admit(i as u64 + 1, &format!("m{i}"), *elems, 8).unwrap();
+            for m in &p.plan().members {
+                assert!(m.used_bits <= m.budget_bits, "{:?}", p.plan());
+                let placed: u64 = m.models.iter().map(|pm| pm.bits).sum();
+                assert_eq!(placed, m.used_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn member_death_migrates_models_to_survivors() {
+        let p = planner(2, bits(100), false);
+        p.admit(1, "a", 50, 8).unwrap();
+        p.admit(2, "b", 50, 8).unwrap();
+        let dead = p.home(1).unwrap();
+        p.note_member_down(dead);
+        assert!(!p.is_alive(dead));
+        assert_eq!(p.home(1), None);
+        assert_eq!(p.stats().migrations, 1);
+        p.touch(1);
+        let new_home = p.home(1).unwrap();
+        assert_ne!(new_home, dead, "must land on a survivor");
+        assert_eq!(p.stats().readmissions, 1);
+    }
+
+    #[test]
+    fn legacy_mode_reports_no_homes() {
+        let p = FleetPlanner::with_config(FleetConfig {
+            members: 2,
+            member_budget_bits: Some(bits(100)),
+            mode: PlacementMode::Legacy,
+            ..FleetConfig::default()
+        });
+        p.admit(1, "a", 10, 8).unwrap();
+        assert_eq!(p.home(1), None, "legacy dispatch ignores placement");
+        // ...but the plan itself is still maintained for observability
+        assert_eq!(p.plan().members[0].models.len(), 1);
+    }
+
+    #[test]
+    fn adopt_runtime_configures_tracking_planners_only_once_explicit() {
+        let tracking = FleetPlanner::default();
+        tracking.admit(1, "a", 10, 8).unwrap(); // no members yet: unplaced
+        assert_eq!(tracking.members(), 0);
+        tracking.adopt_runtime(3, &EngineConfig::small());
+        assert_eq!(tracking.members(), 3);
+        tracking.touch(1);
+        assert!(tracking.home(1).is_some(), "re-placed after adoption");
+
+        let explicit = planner(2, bits(100), true);
+        explicit.adopt_runtime(5, &EngineConfig::small());
+        assert_eq!(explicit.members(), 2, "explicit fleets keep their shape");
+        assert_eq!(explicit.plan().member_budget_bits, bits(100));
+    }
+
+    #[test]
+    fn occupancy_tracks_placed_bits() {
+        let p = planner(2, bits(100), false);
+        assert_eq!(p.occupancy_milli(), 0);
+        p.admit(1, "a", 100, 8).unwrap();
+        assert_eq!(p.occupancy_milli(), 500);
+        p.admit(2, "b", 100, 8).unwrap();
+        assert_eq!(p.occupancy_milli(), 1000);
+        p.release(1);
+        assert_eq!(p.occupancy_milli(), 500);
+    }
+}

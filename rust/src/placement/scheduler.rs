@@ -1,0 +1,346 @@
+//! Placement-aware dispatch over fleet-owned execution backends.
+//!
+//! [`FleetScheduler`] replaces two pre-fleet structures at once:
+//!
+//! * the `Router` (least-loaded dispatch with name-hash affinity
+//!   tiebreak) — its policy survives verbatim as the *fallback* for
+//!   models the planner has not placed, and as the whole policy under
+//!   [`PlacementMode::Legacy`](super::PlacementMode::Legacy);
+//! * the per-worker private backend pools — the scheduler owns one
+//!   backend per fleet member, built once at coordinator start, so the
+//!   planner's placement decisions and the workers' execution engines
+//!   refer to the same fleet.
+//!
+//! Dispatch for a placed model goes to its plan member (folded onto the
+//! worker set modulo the worker count), with the same
+//! [`AFFINITY_SLACK`](FleetScheduler::AFFINITY_SLACK) spill the router
+//! had: the home member serves while its backlog is within the slack of
+//! the idlest live member, past that the request spills to the
+//! least-loaded live member. Dead members (a worker that stopped
+//! answering) are never picked; their models migrate via the planner.
+//!
+//! Load accounting is RAII: [`dispatch`](FleetScheduler::dispatch)
+//! returns a [`LoadToken`] whose `Drop` decrements the member's
+//! outstanding-load counter. The old router required a manual
+//! `complete_n` after execution, which silently leaked load for groups
+//! shed on deadline before execution (and on reply-channel errors) —
+//! with tokens, shed, failed, panicked and served requests all release
+//! exactly once, whenever their `Pending` is dropped.
+
+use super::planner::FleetPlanner;
+use super::PlacementLease;
+use crate::backend::ExecBackend;
+use crate::coordinator::frontend::Model;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// FNV-1a over the model name — stable across runs, so each model has a
+/// deterministic fallback home whose program cache and staged weights
+/// favour it (the pre-planner affinity function, unchanged).
+pub fn affinity(model: &str, workers: usize) -> usize {
+    if workers == 0 {
+        return 0;
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in model.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % workers as u64) as usize
+}
+
+/// One dispatched request's claim on a fleet member's queue. Dropping
+/// the token releases the load — exactly once, on every exit path.
+#[derive(Debug)]
+pub struct LoadToken {
+    loads: Arc<Vec<AtomicU64>>,
+    member: usize,
+}
+
+impl LoadToken {
+    /// The fleet member (worker queue) this request was dispatched to.
+    pub fn member(&self) -> usize {
+        self.member
+    }
+}
+
+impl Drop for LoadToken {
+    fn drop(&mut self) {
+        self.loads[self.member].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The fleet's dispatcher: owns one execution backend per member, the
+/// shared outstanding-load counters, and a handle to the placement
+/// planner. Clones share counters, backends and the plan.
+#[derive(Clone)]
+pub struct FleetScheduler {
+    backends: Vec<Arc<dyn ExecBackend>>,
+    workers: usize,
+    /// Outstanding (queued + in-flight) requests per member.
+    loads: Arc<Vec<AtomicU64>>,
+    planner: FleetPlanner,
+}
+
+impl std::fmt::Debug for FleetScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FleetScheduler")
+            .field("workers", &self.workers)
+            .field("backends", &self.backends.len())
+            .field("planner", &self.planner)
+            .finish()
+    }
+}
+
+impl FleetScheduler {
+    /// Scheduler over `backends` (one per fleet member) dispatching by
+    /// `planner`'s placement.
+    pub fn new(backends: Vec<Arc<dyn ExecBackend>>, planner: FleetPlanner) -> Self {
+        let workers = backends.len();
+        assert!(workers > 0);
+        FleetScheduler {
+            backends,
+            workers,
+            loads: Arc::new((0..workers).map(|_| AtomicU64::new(0)).collect()),
+            planner,
+        }
+    }
+
+    /// Routing-only scheduler (no backends) for dispatch-policy tests.
+    #[cfg(test)]
+    fn routing(workers: usize, planner: FleetPlanner) -> Self {
+        assert!(workers > 0);
+        FleetScheduler {
+            backends: Vec::new(),
+            workers,
+            loads: Arc::new((0..workers).map(|_| AtomicU64::new(0)).collect()),
+            planner,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The execution backend owned by fleet member `wid`.
+    pub fn backend(&self, wid: usize) -> &Arc<dyn ExecBackend> {
+        &self.backends[wid]
+    }
+
+    pub fn planner(&self) -> &FleetPlanner {
+        &self.planner
+    }
+
+    /// The placement lease `ExecBackend::prepare` consumes for `model`.
+    pub fn lease(&self, model: &Model) -> PlacementLease {
+        self.planner.lease(model)
+    }
+
+    /// Outstanding-load headroom the home member is allowed over the
+    /// least-loaded live member before a request spills away from home.
+    /// Zero would scatter a steadily loaded model across the pool and
+    /// thrash the single-slot weight residency; one keeps a model home
+    /// (staged weights + program cache hot) until its queue is
+    /// measurably deeper than the idlest member's.
+    const AFFINITY_SLACK: u64 = 1;
+
+    /// Is member `w` believed alive? A planner that has not adopted a
+    /// member set yet (routing-only use) treats everyone as alive.
+    fn alive(&self, w: usize) -> bool {
+        self.planner.members() == 0 || self.planner.is_alive(w)
+    }
+
+    /// Pick the member for one request and claim a load slot on it: the
+    /// model's home member (its plan placement, else name-hash
+    /// affinity) while its backlog is within
+    /// [`AFFINITY_SLACK`](Self::AFFINITY_SLACK) of the least-loaded
+    /// live member, otherwise the least-loaded live member (lowest
+    /// index wins equal loads). Dead members are never picked. The
+    /// returned [`LoadToken`] releases the slot on drop.
+    pub fn dispatch(&self, name: &str, model_id: u64) -> LoadToken {
+        self.planner.touch(model_id);
+        let home = match self.planner.home(model_id) {
+            Some(m) => m % self.workers,
+            None => affinity(name, self.workers),
+        };
+        let home_alive = self.alive(home);
+        let home_load = self.loads[home].load(Ordering::Relaxed);
+        let mut best = home;
+        let mut best_load = if home_alive { home_load } else { u64::MAX };
+        for (w, load) in self.loads.iter().enumerate() {
+            if !self.alive(w) {
+                continue;
+            }
+            let load = load.load(Ordering::Relaxed);
+            if load < best_load {
+                best = w;
+                best_load = load;
+            }
+        }
+        if home_alive && home_load <= best_load.saturating_add(Self::AFFINITY_SLACK) {
+            best = home;
+        }
+        self.loads[best].fetch_add(1, Ordering::Relaxed);
+        LoadToken { loads: Arc::clone(&self.loads), member: best }
+    }
+
+    /// Mark member `m` dead: future dispatch avoids it and its placed
+    /// models migrate to survivors on their next request.
+    pub fn note_member_down(&self, m: usize) {
+        self.planner.note_member_down(m);
+    }
+
+    /// Current outstanding load of member `w` (diagnostics/tests).
+    pub fn load(&self, w: usize) -> u64 {
+        self.loads[w].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{FleetConfig, PlacementMode};
+
+    fn routing(workers: usize) -> FleetScheduler {
+        FleetScheduler::routing(workers, FleetPlanner::default())
+    }
+
+    // model id 0 is never minted by the registry, so the planner knows
+    // nothing about it: pure name-hash dispatch, the old router policy
+    const UNPLACED: u64 = 0;
+
+    #[test]
+    fn affinity_is_stable_and_in_range() {
+        for model in ["mlp", "gemv_64", "gemv_256", "x"] {
+            let w = affinity(model, 4);
+            assert!(w < 4);
+            assert_eq!(w, affinity(model, 4), "stable for {model}");
+        }
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let s = routing(1);
+        assert_eq!(affinity("anything", 1), 0);
+        let t = s.dispatch("anything", UNPLACED);
+        assert_eq!(t.member(), 0);
+    }
+
+    #[test]
+    fn affinity_spreads_across_workers() {
+        let names: Vec<String> = (0..64).map(|i| format!("model-{i}")).collect();
+        let used: std::collections::BTreeSet<usize> =
+            names.iter().map(|n| affinity(n, 8)).collect();
+        assert!(used.len() >= 4, "only {used:?}");
+    }
+
+    #[test]
+    fn idle_pool_dispatches_to_affinity_worker() {
+        let s = routing(4);
+        let t = s.dispatch("m", UNPLACED);
+        assert_eq!(t.member(), affinity("m", 4), "tie must favour the home worker");
+        let w = t.member();
+        drop(t);
+        assert_eq!(s.load(w), 0, "token drop releases the load");
+    }
+
+    #[test]
+    fn hot_model_spills_to_idle_workers() {
+        // regression: FNV pinning sent every request of a hot model to
+        // one queue while the rest of the pool idled — once the home
+        // queue is past the slack, the rest of the pool must be used
+        let s = routing(4);
+        let tokens: Vec<LoadToken> = (0..8).map(|_| s.dispatch("hot", UNPLACED)).collect();
+        let used: std::collections::BTreeSet<usize> =
+            tokens.iter().map(|t| t.member()).collect();
+        assert_eq!(used.len(), 4, "outstanding load must spread: {used:?}");
+        let total: u64 = (0..4).map(|w| s.load(w)).sum();
+        assert_eq!(total, 8);
+        drop(tokens);
+        let total: u64 = (0..4).map(|w| s.load(w)).sum();
+        assert_eq!(total, 0, "every token must release exactly once");
+    }
+
+    #[test]
+    fn dispatch_sticks_home_within_slack_then_spills() {
+        let s = routing(3);
+        let home = affinity("m", 3);
+        // within the slack the model stays home (residency hot)...
+        let first = s.dispatch("m", UNPLACED);
+        let second = s.dispatch("m", UNPLACED);
+        assert_eq!((first.member(), second.member()), (home, home));
+        // ...past it, the backlog spills to an idle worker
+        let third = s.dispatch("m", UNPLACED);
+        assert_ne!(third.member(), home, "deep home backlog must spill");
+        drop(first);
+        drop(second);
+        drop(third);
+        assert_eq!(s.dispatch("m", UNPLACED).member(), home, "drained pool goes home again");
+    }
+
+    #[test]
+    fn shed_requests_release_load_on_token_drop() {
+        // regression (the router bug): a group shed on deadline before
+        // execution never reached complete_n, leaking load forever —
+        // here dropping the tokens (as shedding drops the Pendings)
+        // restores every counter to zero
+        let s = routing(2);
+        let shed: Vec<LoadToken> = (0..6).map(|_| s.dispatch("m", UNPLACED)).collect();
+        assert_eq!(s.load(0) + s.load(1), 6);
+        drop(shed); // the deadline shed path: Pendings dropped unserved
+        assert_eq!((s.load(0), s.load(1)), (0, 0));
+    }
+
+    #[test]
+    fn placed_model_dispatches_to_its_plan_member() {
+        let planner = FleetPlanner::with_config(FleetConfig {
+            members: 4,
+            member_budget_bits: Some(1 << 20),
+            ..FleetConfig::default()
+        });
+        planner.admit(7, "m", 64, 8).unwrap();
+        let s = FleetScheduler::routing(4, planner.clone());
+        let home = planner.home(7).unwrap();
+        let t = s.dispatch("m", 7);
+        assert_eq!(t.member(), home, "placed model must go to its plan member");
+    }
+
+    #[test]
+    fn legacy_mode_ignores_placement_for_dispatch() {
+        let planner = FleetPlanner::with_config(FleetConfig {
+            members: 4,
+            member_budget_bits: Some(1 << 20),
+            mode: PlacementMode::Legacy,
+            ..FleetConfig::default()
+        });
+        planner.admit(7, "m", 64, 8).unwrap();
+        let s = FleetScheduler::routing(4, planner);
+        let t = s.dispatch("m", 7);
+        assert_eq!(t.member(), affinity("m", 4), "legacy dispatch is pure name-hash");
+    }
+
+    #[test]
+    fn dead_members_are_never_picked() {
+        let planner = FleetPlanner::with_config(FleetConfig {
+            members: 3,
+            member_budget_bits: Some(1 << 20),
+            ..FleetConfig::default()
+        });
+        planner.admit(9, "m", 64, 8).unwrap();
+        let s = FleetScheduler::routing(3, planner.clone());
+        let home = planner.home(9).unwrap();
+        s.note_member_down(home);
+        for _ in 0..6 {
+            let t = s.dispatch("m", 9);
+            assert_ne!(t.member(), home, "dead member must not receive dispatch");
+            std::mem::forget(t); // keep load held for spread check
+        }
+        assert_eq!(s.load(home), 0);
+        // clean up the forgotten loads for hygiene
+        for w in 0..3 {
+            while s.load(w) > 0 {
+                s.loads[w].fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}

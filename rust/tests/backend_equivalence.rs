@@ -45,7 +45,7 @@ fn run_gemv(
     xs: &[Vec<i64>],
 ) -> Vec<BackendResult> {
     let model = reg.get(name).unwrap();
-    let prep = backend.prepare(&model).unwrap();
+    let prep = backend.prepare_local(&model).unwrap();
     backend
         .execute_batch(&prep, xs)
         .into_iter()
@@ -126,7 +126,7 @@ fn sharded_backend_refuses_mlp_typed() {
     let layer = imagine::gemv::scheduler::Layer::new(vec![1; 16], vec![0; 4], 4, 4);
     reg.register_mlp("m", vec![layer], vec![]).unwrap();
     let sharded = ShardedBackend::new(&ctx(1));
-    let err = sharded.prepare(&reg.get("m").unwrap()).unwrap_err();
+    let err = sharded.prepare_local(&reg.get("m").unwrap()).unwrap_err();
     assert!(matches!(err, BackendError::Unsupported { backend: "sharded", .. }), "{err:?}");
 }
 

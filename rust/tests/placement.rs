@@ -1,0 +1,366 @@
+//! Fleet placement property suite: packing invariants, the typed
+//! admission boundary, eviction/re-admission and member-death migration
+//! under live serving, and bit-identity of fleet dispatch against the
+//! legacy (pure name-hash) policy.
+//!
+//! The capacity model under test is two-level (docs/PLACEMENT.md):
+//! registration-level *reservations* (what `CapacityExceeded` guards;
+//! only `unregister` frees them) and placement-level *residency* (what
+//! LRU eviction moves around; evicted models re-admit transparently on
+//! their next dispatch). Every serving assertion below also checks
+//! results stay bit-identical to the host reference — placement decides
+//! where a model runs, never what it computes.
+
+use imagine::coordinator::{
+    BackendPolicy, BatchPolicy, Coordinator, CoordinatorConfig, FleetConfig, ModelRegistry,
+    ModelSpec, PlacementMode, RegistryError, Request, SubmitError,
+};
+use imagine::engine::EngineConfig;
+use imagine::gemv::mapper::{member_capacity_bits, weight_footprint_bits};
+use imagine::placement::FleetPlanner;
+use imagine::sim::fault::{self, FaultPlan};
+use imagine::util::XorShift;
+use std::time::Duration;
+
+fn host_gemv(w: &[i64], x: &[i64], m: usize, n: usize) -> Vec<i64> {
+    (0..m)
+        .map(|r| (0..n).map(|j| w[r * n + j] * x[j]).sum())
+        .collect()
+}
+
+fn coord_cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batch: BatchPolicy::none(),
+        backend: BackendPolicy::Auto,
+        ..Default::default()
+    }
+}
+
+/// Packing property under a randomized admit/touch/release churn: no
+/// member ever exceeds its budget, per-member used bits always equal
+/// the sum of its placed models' bits, and the reservation total always
+/// equals the sum of registered footprints (eviction frees placement,
+/// never reservations).
+#[test]
+fn packing_invariants_hold_under_random_churn() {
+    let budget = weight_footprint_bits(100, 8);
+    let planner = FleetPlanner::with_config(FleetConfig {
+        members: 3,
+        member_budget_bits: Some(budget),
+        ..FleetConfig::default()
+    });
+    let mut rng = XorShift::new(0xF1EE7);
+    let mut live: Vec<(u64, u64)> = Vec::new(); // (id, bits)
+    let mut next_id = 1u64;
+    for step in 0..400 {
+        match rng.below(4) {
+            // admit a random model (sometimes too big for any member:
+            // a tracking planner leaves it unplaced, never denies)
+            0 | 1 => {
+                let elems = 10 + rng.below(120);
+                planner
+                    .admit(next_id, &format!("m{next_id}"), elems, 8)
+                    .unwrap();
+                live.push((next_id, weight_footprint_bits(elems, 8)));
+                next_id += 1;
+            }
+            // serve (touch) a random live model: evicted ones re-place
+            2 if !live.is_empty() => {
+                let (id, _) = live[rng.below(live.len() as u64) as usize];
+                planner.touch(id);
+            }
+            // unregister a random live model
+            _ if !live.is_empty() => {
+                let i = rng.below(live.len() as u64) as usize;
+                let (id, _) = live.swap_remove(i);
+                planner.release(id);
+            }
+            _ => {}
+        }
+        let plan = planner.plan();
+        for m in &plan.members {
+            assert!(
+                m.used_bits <= m.budget_bits,
+                "step {step}: member {} over budget: {plan:?}",
+                m.index
+            );
+            let placed: u64 = m.models.iter().map(|pm| pm.bits).sum();
+            assert_eq!(placed, m.used_bits, "step {step}: used-bits drift: {plan:?}");
+        }
+        let expect_reserved: u64 = live.iter().map(|(_, b)| b).sum();
+        assert_eq!(plan.reserved_bits, expect_reserved, "step {step}");
+        let accounted = plan.members.iter().map(|m| m.models.len()).sum::<usize>()
+            + plan.unplaced.len();
+        assert_eq!(accounted, live.len(), "step {step}: model lost by the plan");
+    }
+}
+
+/// The typed admission boundary is exact: an enforcing fleet admits up
+/// to the aggregate, denies past it with the precise
+/// requested/available bit counts (a denial leaks no reservation), and
+/// `unregister` eagerly frees budget that then admits a *larger* model
+/// than the one removed (the satellite regression: release must not be
+/// deferred to pool-slot reuse).
+#[test]
+fn admission_boundary_is_exact_and_unregister_frees_budget() {
+    // one member of exactly 100 8-bit elements (1600 bits)
+    let budget = weight_footprint_bits(100, 8);
+    let reg = ModelRegistry::default().with_fleet(FleetConfig {
+        members: 1,
+        member_budget_bits: Some(budget),
+        enforce: true,
+        ..FleetConfig::default()
+    });
+    // 40 + 40 elems reserve 80 of the 100
+    reg.register("a", ModelSpec::gemv(vec![1; 40], 8, 5)).unwrap();
+    reg.register("c", ModelSpec::gemv(vec![1; 40], 5, 8)).unwrap();
+    // 50 elems against the 20 remaining: denied with exact counts
+    let err = reg
+        .register("b", ModelSpec::gemv(vec![1; 50], 10, 5))
+        .unwrap_err();
+    assert_eq!(
+        err,
+        RegistryError::CapacityExceeded {
+            requested_bits: weight_footprint_bits(50, 8),
+            available_bits: weight_footprint_bits(20, 8),
+        }
+    );
+    // regression: unregister the 40-elem model, then admit a *larger*
+    // one (55 elems) into the freed budget — and the earlier denial
+    // must not have leaked any reservation
+    reg.unregister("a").unwrap();
+    reg.register("big", ModelSpec::gemv(vec![1; 55], 5, 11)).unwrap();
+    assert!(reg.get("big").is_ok());
+    // precision rides the spec into the footprint: 5 elems remain
+    // (80 bits); a 2x4 model at the default 8 bits is 128 bits (denied)
+    // but at 4 bits is 64 bits (admitted)
+    let err = reg
+        .register("q8", ModelSpec::gemv(vec![1; 8], 2, 4))
+        .unwrap_err();
+    assert!(matches!(err, RegistryError::CapacityExceeded { .. }), "{err:?}");
+    reg.register("q4", ModelSpec::gemv(vec![1; 8], 2, 4).precision(4))
+        .unwrap();
+}
+
+/// Eviction/re-admission is transparent and bit-identical: two models
+/// that can never cohabit on the single member alternate requests, so
+/// every dispatch re-places the evicted one — and every response still
+/// matches the host reference exactly.
+#[test]
+fn eviction_and_readmission_stay_bit_identical() {
+    let (m, n) = (16, 16);
+    // budget = exactly one 16x16 model's footprint
+    let budget = weight_footprint_bits((m * n) as u64, 8);
+    let mut rng = XorShift::new(0xE41C7);
+    let wa = rng.vec_i64(m * n, -16, 15);
+    let wb = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default().with_fleet(FleetConfig {
+        members: 1,
+        member_budget_bits: Some(budget),
+        enforce: false, // reservation-over-budget is fine; placement churns
+        ..FleetConfig::default()
+    });
+    reg.register("a", ModelSpec::gemv(wa.clone(), m, n)).unwrap();
+    reg.register("b", ModelSpec::gemv(wb.clone(), m, n)).unwrap();
+    let coord = Coordinator::start(coord_cfg(1), reg);
+    for round in 0..4 {
+        let x = rng.vec_i64(n, -64, 63);
+        let ra = coord.call(Request::new("a", x.clone())).unwrap();
+        assert_eq!(ra.y, host_gemv(&wa, &x, m, n), "round {round}");
+        let rb = coord.call(Request::new("b", x.clone())).unwrap();
+        assert_eq!(rb.y, host_gemv(&wb, &x, m, n), "round {round}");
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed, 0);
+    // the alternation forced placement churn, visible in the lifecycle
+    // counters the coordinator folds in from the planner
+    assert!(snap.evictions >= 2, "{snap:?}");
+    assert!(snap.readmissions >= 1, "{snap:?}");
+}
+
+/// Member-death migration: a seeded worker panic (`panic:group=0`)
+/// kills the model's home member mid-request; the next request marks
+/// the member dead at dispatch, migrates the model to the survivor, and
+/// serves bit-identical results there.
+#[test]
+fn member_death_migrates_and_serves_on_survivor() {
+    let _guard = fault::install_scoped(FaultPlan {
+        panics: vec![0],
+        seed: 23,
+        ..Default::default()
+    });
+    let (m, n) = (16, 16);
+    let mut rng = XorShift::new(0xDEAD1);
+    let w = rng.vec_i64(m * n, -16, 15);
+    // explicit fleet shape: the model is placed at registration, so its
+    // home member is known before the coordinator starts
+    let reg = ModelRegistry::default()
+        .with_fleet(FleetConfig { members: 2, ..FleetConfig::default() });
+    reg.register("m", ModelSpec::gemv(w.clone(), m, n)).unwrap();
+    let id = reg.get("m").unwrap().id();
+    let coord = Coordinator::start(coord_cfg(2), reg);
+    let home = coord.fleet().planner().home(id).expect("placed at registration");
+    // first request: its group is ordinal 0, the worker panics and the
+    // reply channel drops
+    let err = coord.call(Request::new("m", vec![1; n])).unwrap_err();
+    assert!(matches!(err, SubmitError::WorkerLost), "{err:?}");
+    // second request: submit finds the dead queue, marks the member
+    // down, and re-dispatches — served exactly, from the survivor
+    let x = rng.vec_i64(n, -64, 63);
+    let resp = coord.call(Request::new("m", x.clone())).unwrap();
+    assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+    let planner = coord.fleet().planner().clone();
+    assert!(!planner.is_alive(home), "home member must be quarantined");
+    let new_home = planner.home(id).expect("re-placed on a survivor");
+    assert_ne!(new_home, home, "model must migrate off the dead member");
+    let snap = coord.shutdown();
+    assert!(snap.migrations >= 1, "{snap:?}");
+    assert!(snap.readmissions >= 1, "{snap:?}");
+}
+
+/// Legacy-vs-fleet bit-identity: the same request stream served by a
+/// fleet-dispatch coordinator and a legacy (pure name-hash) one returns
+/// identical vectors — placement moves models between members, it never
+/// changes arithmetic.
+#[test]
+fn fleet_and_legacy_dispatch_are_bit_identical() {
+    let mut rng = XorShift::new(0x1DE57);
+    let shapes = [(16usize, 16usize), (48, 64), (768, 48)];
+    let weights: Vec<Vec<i64>> =
+        shapes.iter().map(|&(m, n)| rng.vec_i64(m * n, -16, 15)).collect();
+    let build = |mode: PlacementMode| {
+        let reg = ModelRegistry::default().with_fleet(FleetConfig {
+            members: 2,
+            mode,
+            ..FleetConfig::default()
+        });
+        for (i, (&(m, n), w)) in shapes.iter().zip(&weights).enumerate() {
+            reg.register(&format!("m{i}"), ModelSpec::gemv(w.clone(), m, n))
+                .unwrap();
+        }
+        Coordinator::start(coord_cfg(2), reg)
+    };
+    let fleet = build(PlacementMode::Fleet);
+    let legacy = build(PlacementMode::Legacy);
+    for round in 0..3 {
+        for (i, &(m, n)) in shapes.iter().enumerate() {
+            let x = rng.vec_i64(n, -64, 63);
+            let name = format!("m{i}");
+            let yf = fleet.call(Request::new(name.clone(), x.clone())).unwrap().y;
+            let yl = legacy.call(Request::new(name, x.clone())).unwrap().y;
+            assert_eq!(yf, yl, "round {round}, model m{i}");
+            assert_eq!(yf, host_gemv(&weights[i], &x, m, n), "round {round}");
+        }
+    }
+    let (sf, sl) = (fleet.shutdown(), legacy.shutdown());
+    assert_eq!(sf.completed, 9);
+    assert_eq!(sl.completed, 9);
+    assert_eq!((sf.failed, sl.failed), (0, 0));
+}
+
+/// The router-drift regression at fleet scope: a shed-heavy workload
+/// (deadlines already expired at scheduling) must leave every member's
+/// outstanding-load counter at zero once the replies are observed — the
+/// old manual accounting leaked one slot per shed group forever.
+#[test]
+fn shed_heavy_load_leaves_zero_outstanding_load() {
+    let (m, n) = (8, 8);
+    let mut rng = XorShift::new(0x5EED);
+    let w = rng.vec_i64(m * n, -16, 15);
+    let reg = ModelRegistry::default();
+    reg.register("g", ModelSpec::gemv(w.clone(), m, n)).unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(20) },
+            ..Default::default()
+        },
+        reg,
+    );
+    // a batch-window's worth of requests with microscopic deadlines:
+    // all shed before execution
+    let rxs: Vec<_> = (0..8)
+        .map(|_| {
+            coord
+                .submit(Request::new("g", vec![1; n]).with_deadline_us(1))
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, SubmitError::DeadlineExceeded { .. }), "{err:?}");
+    }
+    // load-zero is observable as soon as the replies are: the tokens
+    // were taken before each send
+    for wid in 0..2 {
+        assert_eq!(coord.fleet().load(wid), 0, "member {wid} leaked load");
+    }
+    // ...and the pool still serves normally afterwards
+    let x = rng.vec_i64(n, -64, 63);
+    let resp = coord.call(Request::new("g", x.clone())).unwrap();
+    assert_eq!(resp.y, host_gemv(&w, &x, m, n));
+    let snap = coord.shutdown();
+    assert_eq!(snap.deadline_misses, 8, "{snap:?}");
+    assert_eq!(snap.completed, 1);
+}
+
+/// The acceptance scenario: a model set whose aggregate footprint
+/// exceeds ONE member's capacity (the old per-worker private-pool
+/// ceiling) but fits the two-member fleet registers is admitted, placed
+/// one model per member, and serves resident; a third model over the
+/// aggregate is denied typed with the exact remaining budget.
+#[test]
+fn model_set_over_one_member_fits_the_fleet_and_serves_resident() {
+    let engine = EngineConfig::single_tile();
+    let member_bits = member_capacity_bits(&engine);
+    let (m, n) = (450, 450);
+    let model_bits = weight_footprint_bits((m * n) as u64, 8);
+    // two models exceed one member but fit the two-member aggregate;
+    // three exceed the aggregate
+    assert!(model_bits < member_bits && 2 * model_bits > member_bits);
+    assert!(3 * model_bits > 2 * member_bits);
+    let mut rng = XorShift::new(0xACCE);
+    let wa = rng.vec_i64(m * n, -8, 7);
+    let wb = rng.vec_i64(m * n, -8, 7);
+    let reg = ModelRegistry::default().with_fleet(FleetConfig::enforced(2, engine));
+    reg.register("a", ModelSpec::gemv(wa.clone(), m, n)).unwrap();
+    reg.register("b", ModelSpec::gemv(wb.clone(), m, n)).unwrap();
+    let err = reg
+        .register("c", ModelSpec::gemv(vec![0; m * n], m, n))
+        .unwrap_err();
+    assert_eq!(
+        err,
+        RegistryError::CapacityExceeded {
+            requested_bits: model_bits,
+            available_bits: 2 * member_bits - 2 * model_bits,
+        }
+    );
+    let coord = Coordinator::start(
+        CoordinatorConfig { engine, ..coord_cfg(2) },
+        reg,
+    );
+    let plan = coord.fleet_plan();
+    assert_eq!(plan.unplaced.len(), 0, "{plan:?}");
+    assert!(
+        plan.members.iter().all(|mb| mb.models.len() == 1),
+        "one model per member: {plan:?}"
+    );
+    // both serve bit-identically, and repeat requests hit residency
+    for round in 0..2 {
+        let x = rng.vec_i64(n, -16, 15);
+        let ra = coord.call(Request::new("a", x.clone())).unwrap();
+        assert_eq!(ra.y, host_gemv(&wa, &x, m, n), "round {round}");
+        let rb = coord.call(Request::new("b", x.clone())).unwrap();
+        assert_eq!(rb.y, host_gemv(&wb, &x, m, n), "round {round}");
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.failed, 0);
+    // the second round's groups arrive with their member's shard pool
+    // already staged
+    assert!(snap.residency_hits >= 2, "{snap:?}");
+    // two ~0.69-member models placed: occupancy is well past half
+    assert!(snap.fleet_occupancy_milli > 600, "{snap:?}");
+}

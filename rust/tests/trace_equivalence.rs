@@ -156,7 +156,7 @@ fn cross_check_pairs_trace_against_fused_clean() {
     for name in ["small", "tall"] {
         let model = reg.get(name).unwrap();
         let n = model.input_dim();
-        let prep = xc.prepare(&model).unwrap();
+        let prep = xc.prepare_local(&model).unwrap();
         let xs: Vec<Vec<i64>> = (0..3).map(|_| rng.vec_i64(n, -64, 63)).collect();
         for r in xc.execute_batch(&prep, &xs) {
             let r = r.unwrap();
